@@ -1,0 +1,66 @@
+//! CNN scenario: per-layer vs per-channel PTQ on the CNN family,
+//! including the depthwise (grouped-Gram) path of mobilenet_lite —
+//! the paper's Tab. 3 / Tab. 4 workloads on our trained stand-ins.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quantize_cnn
+//! ```
+
+use anyhow::Result;
+
+use comq::calib::{Dataset, EngineKind};
+use comq::coordinator::{quantize_model, PipelineOptions};
+use comq::manifest::Manifest;
+use comq::model::Model;
+use comq::quant::grid::Scheme;
+use comq::quant::{OrderKind, QuantConfig};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let dataset = Dataset::load(&manifest)?;
+
+    for model_name in ["resnet_lite", "cnn_s", "mobilenet_lite"] {
+        let model = Model::load(&manifest, model_name)?;
+        println!(
+            "\n== {model_name} (fp top1 {:.2}%) ==",
+            model.info.fp_top1 * 100.0
+        );
+
+        // Per-layer quantization (Tab. 3): one shared scale per layer,
+        // cyclic (the paper's COMQ†) vs greedy.
+        for bits in [4u32, 3] {
+            for order in [OrderKind::Cyclic, OrderKind::GreedyPerColumn] {
+                let opts = PipelineOptions {
+                    engine: EngineKind::Pjrt,
+                    calib_size: 1024,
+                    qcfg: QuantConfig {
+                        bits,
+                        scheme: Scheme::PerLayer,
+                        order,
+                        ..Default::default()
+                    },
+                    ..Default::default()
+                };
+                let (_qm, report) = quantize_model(&manifest, &model, &dataset, &opts)?;
+                println!("{}", report.summary());
+            }
+        }
+
+        // Per-channel (Tab. 4), 4/3/2-bit.
+        for bits in [4u32, 3, 2] {
+            let opts = PipelineOptions {
+                engine: EngineKind::Pjrt,
+                calib_size: 1024,
+                qcfg: QuantConfig {
+                    bits,
+                    lam: if bits == 2 { 0.8 } else { 1.0 },
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (_qm, report) = quantize_model(&manifest, &model, &dataset, &opts)?;
+            println!("{}", report.summary());
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! End-to-end driver: quantize a real trained ViT with every method and
+//! evaluate on the real validation workload through the PJRT artifacts.
+//!
+//! This composes the full three-layer system: the L3 coordinator
+//! calibrates through the AOT L2 `calib_stats` graph, quantizes every
+//! linear layer (optionally through the L1 Pallas sweep kernel), and
+//! evaluates the quantized checkpoint through the AOT `forward` graph.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quantize_vit [model]
+//! ```
+
+use anyhow::Result;
+
+use comq::calib::{Dataset, EngineKind};
+use comq::coordinator::{quantize_model, PipelineOptions, QuantEngine};
+use comq::manifest::Manifest;
+use comq::model::Model;
+use comq::quant::QuantConfig;
+
+fn main() -> Result<()> {
+    let model_name = std::env::args().nth(1).unwrap_or_else(|| "vit_s".into());
+    let manifest = Manifest::load("artifacts")?;
+    let model = Model::load(&manifest, &model_name)?;
+    let dataset = Dataset::load(&manifest)?;
+    println!(
+        "model {model_name}: {} params, {} quantizable weights in {} layers (fp top1 {:.2}%)",
+        model.num_params(),
+        model.num_quant_weights(),
+        model.info.quant_layers.len(),
+        model.info.fp_top1 * 100.0
+    );
+
+    println!("\n-- weight-only, per-channel, 4/3/2 bits, all methods --");
+    for bits in [4u32, 3, 2] {
+        for method in ["comq", "comq-cyclic", "obq", "gpfq", "adaround-lite", "rtn"] {
+            let opts = PipelineOptions {
+                method: method.into(),
+                engine: EngineKind::Pjrt,
+                calib_size: 1024,
+                qcfg: QuantConfig {
+                    bits,
+                    lam: if bits == 2 { 0.8 } else { 1.0 },
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let (_qm, report) = quantize_model(&manifest, &model, &dataset, &opts)?;
+            println!("{}", report.summary());
+        }
+    }
+
+    println!("\n-- the same quantization through the L1 Pallas sweep kernel (PJRT) --");
+    let opts = PipelineOptions {
+        engine: EngineKind::Pjrt,
+        quant_engine: QuantEngine::PjrtKernel,
+        calib_size: 1024,
+        qcfg: QuantConfig { bits: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let (_qm, report) = quantize_model(&manifest, &model, &dataset, &opts)?;
+    println!("{}", report.summary());
+
+    println!("\n-- full quantization: W4A4 / W4A8 --");
+    for act_bits in [4u32, 8] {
+        let opts = PipelineOptions {
+            engine: EngineKind::Pjrt,
+            calib_size: 1024,
+            act_bits: Some(act_bits),
+            ..Default::default()
+        };
+        let (_qm, report) = quantize_model(&manifest, &model, &dataset, &opts)?;
+        println!("{}", report.summary());
+    }
+    Ok(())
+}

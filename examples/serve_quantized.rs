@@ -1,0 +1,106 @@
+//! Serving scenario: quantize once, then serve batched classification
+//! requests from the self-contained Rust binary via the PJRT forward
+//! artifact — python is nowhere on this path. Reports per-batch latency
+//! percentiles and end-to-end throughput for the FP and the 4-bit
+//! checkpoints (simulated-quantization inference: same graph, quantized
+//! weights fed as inputs).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_quantized [model]
+//! ```
+
+use anyhow::Result;
+
+use comq::bench::{pct, time_it};
+use comq::calib::{Dataset, EngineKind};
+use comq::coordinator::{quantize_model, PipelineOptions};
+use comq::eval::{evaluate, ActMode};
+use comq::manifest::Manifest;
+use comq::model::Model;
+use comq::runtime::Engine;
+use comq::tensor::Tensor;
+use comq::util::{stats, Rng, Timer};
+
+fn main() -> Result<()> {
+    let model_name = std::env::args().nth(1).unwrap_or_else(|| "vit_b".into());
+    let manifest = Manifest::load("artifacts")?;
+    let model = Model::load(&manifest, &model_name)?;
+    let dataset = Dataset::load(&manifest)?;
+
+    // 1. offline: quantize (the whole PTQ pass is part of the story —
+    //    COMQ's pitch is that this step is seconds, not an hour).
+    let t = Timer::start();
+    let opts = PipelineOptions {
+        engine: EngineKind::Pjrt,
+        calib_size: 1024,
+        skip_eval: true,
+        ..Default::default()
+    };
+    let (qmodel, report) = quantize_model(&manifest, &model, &dataset, &opts)?;
+    println!(
+        "quantized {model_name} to 4-bit in {:.2}s (calib {:.2}s + quant {:.2}s)",
+        t.secs(),
+        report.calib_secs,
+        report.quant_secs
+    );
+
+    // 2. online: serve batches through the compiled forward executable.
+    let engine = Engine::global()?;
+    let art = manifest.path(&model.info.artifacts["forward"]);
+    let exe = engine.load(&art)?;
+    let b = manifest.batch;
+    let mut rng = Rng::new(1);
+    let make_batch = |rng: &mut Rng| {
+        Tensor::new(
+            &[b, manifest.img, manifest.img, 3],
+            rng.normal_vec(b * manifest.img * manifest.img * 3),
+        )
+    };
+
+    for (label, m) in [("fp32", &model), ("comq-4bit", &qmodel)] {
+        let params = m.params_in_order();
+        let batch = make_batch(&mut rng);
+        let mut inputs: Vec<&Tensor> = params.clone();
+        inputs.push(&batch);
+        // latency distribution over 50 request batches
+        let mut lat = Vec::new();
+        for _ in 0..50 {
+            let t = Timer::start();
+            let out = engine.run_exe(&exe, &inputs)?;
+            std::hint::black_box(&out);
+            lat.push(t.secs());
+        }
+        let throughput = b as f64 / stats::mean(&lat);
+        println!(
+            "{label:<10} batch={b}: p50={:.2}ms p95={:.2}ms p99={:.2}ms throughput={:.0} img/s",
+            stats::quantile(&lat, 0.5) * 1e3,
+            stats::quantile(&lat, 0.95) * 1e3,
+            stats::quantile(&lat, 0.99) * 1e3,
+            throughput
+        );
+    }
+
+    // 3. quality check on the real val set.
+    for (label, m) in [("fp32", &model), ("comq-4bit", &qmodel)] {
+        let acc = evaluate(
+            &manifest,
+            m,
+            &dataset.val_images,
+            &dataset.val_labels,
+            EngineKind::Pjrt,
+            &ActMode::Fp,
+        )?;
+        println!("{label:<10} top1={}% top5={}%", pct(acc.top1), pct(acc.top5));
+    }
+
+    // 4. memory story: packed deployment size of the quantized weights.
+    let total_w: usize = model.info.quant_layers.iter().map(|l| l.m * l.n).sum();
+    println!(
+        "\nweights: {:.1} KiB fp32 -> {:.1} KiB packed 4-bit codes (+ {:.2} KiB scales)",
+        total_w as f64 * 4.0 / 1024.0,
+        total_w as f64 * 0.5 / 1024.0,
+        model.info.quant_layers.iter().map(|l| l.n * 8).sum::<usize>() as f64 / 1024.0,
+    );
+    let _ = time_it(0, 1, || {}); // keep bench API exercised in docs builds
+    Ok(())
+}

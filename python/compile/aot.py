@@ -1,0 +1,269 @@
+"""AOT build driver: python runs ONCE here, never on the request path.
+
+    python -m compile.aot --out-dir ../artifacts
+
+Produces, under artifacts/:
+
+    data/synth.cts            calibration + validation images/labels
+    data/<model>.cts          trained checkpoint (flat name -> tensor)
+    data/<model>.meta.json    training metadata (fp val top-1)
+    hlo/<model>.forward.hlo.txt        (params..., x[B]) -> logits
+    hlo/<model>.calib.hlo.txt          (params..., x[B]) -> per-layer (G,mn,mx)
+    hlo/<model>.actq4.hlo.txt          fake-quantized-activation forward (A4)
+    hlo/<model>.actq8.hlo.txt          fake-quantized-activation forward (A8)
+    hlo/sweep_m<m>_n<n>_<pc|pl>.hlo.txt   COMQ sweep (L1 Pallas kernel)
+    manifest.json             everything the Rust coordinator needs
+
+Checkpoints are cached: a model is retrained only if its checkpoint file
+is missing (delete artifacts/data/<model>.cts to force).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as synth
+from . import model as graphs
+from . import train
+from .export import read_cts, write_cts
+from .nets import build_model
+from .nets.cnn import CNN_CONFIGS
+from .nets.cnn import quant_layers as cnn_layers
+from .nets.vit import VIT_CONFIGS
+from .nets.vit import quant_layers as vit_layers
+
+AOT_BATCH = 64
+N_TRAIN, N_CALIB, N_VAL = 8192, 2048, 2048
+SWEEP_MODELS = ("vit_s", "resnet_lite", "cnn_s")  # PJRT-kernel engine targets
+
+ALL_MODELS = list(VIT_CONFIGS) + list(CNN_CONFIGS)
+
+
+def model_meta(name: str):
+    """(family, cfg-dict, quant layer list)"""
+    if name in VIT_CONFIGS:
+        cfg = VIT_CONFIGS[name]
+        layers = vit_layers(cfg)
+        cd = dict(
+            dim=cfg.dim, depth=cfg.depth, heads=cfg.heads, mlp=cfg.mlp,
+            patch=cfg.patch, window=cfg.window, img=cfg.img, classes=cfg.classes,
+        )
+        return "vit", cd, layers
+    cfg = CNN_CONFIGS[name]
+    layers = cnn_layers(cfg)
+    cd = dict(kind=cfg.kind, width=cfg.width, blocks=cfg.blocks, img=cfg.img, classes=cfg.classes)
+    return "cnn", cd, layers
+
+
+def layer_shapes(params: dict, layers: list[str]) -> list[dict]:
+    out = []
+    for nm in layers:
+        w = params[f"{nm}/W"]
+        grouped = nm.endswith("/dw")
+        out.append(
+            dict(name=nm, m=int(w.shape[0]), n=int(w.shape[1]), grouped=grouped)
+        )
+    return out
+
+
+def ensure_checkpoint(name: str, splits, out_data: str, force: bool = False):
+    ckpt = os.path.join(out_data, f"{name}.cts")
+    meta = os.path.join(out_data, f"{name}.meta.json")
+    if not force and os.path.exists(ckpt) and os.path.exists(meta):
+        params = read_cts(ckpt)
+        acc = json.load(open(meta))["fp_top1"]
+        print(f"  [{name}] cached checkpoint (fp_top1={acc:.4f})")
+        return params, acc
+    print(f"  [{name}] training...")
+    params, acc = train.train_model(name, splits["train"], splits["val"])
+    write_cts(ckpt, params)
+    json.dump({"fp_top1": acc, "trained_at": time.time()}, open(meta, "w"))
+    return params, acc
+
+
+def lower_model_graphs(name: str, params: dict, layers: list[str], out_hlo: str) -> dict:
+    names = graphs.param_order(params)
+    specs = [jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in names]
+    xspec = jax.ShapeDtypeStruct((AOT_BATCH, *params_img_shape(name)), jnp.float32)
+    arts = {}
+
+    fwd = graphs.make_forward(name, names)
+    path = f"{name}.forward.hlo.txt"
+    _write(out_hlo, path, graphs.lower_to_text(fwd, (*specs, xspec)))
+    arts["forward"] = f"hlo/{path}"
+
+    stats = graphs.make_calib_stats(name, names, layers)
+    path = f"{name}.calib.hlo.txt"
+    _write(out_hlo, path, graphs.lower_to_text(stats, (*specs, xspec)))
+    arts["calib_stats"] = f"hlo/{path}"
+
+    aspec = jax.ShapeDtypeStruct((len(layers), 2), jnp.float32)
+    for bits in (4, 8):
+        fq = graphs.make_forward_actq(name, names, layers, bits)
+        path = f"{name}.actq{bits}.hlo.txt"
+        _write(out_hlo, path, graphs.lower_to_text(fq, (*specs, aspec, xspec)))
+        arts[f"forward_actq{bits}"] = f"hlo/{path}"
+    return arts
+
+
+def params_img_shape(name: str):
+    _, cd, _ = model_meta(name)
+    return (cd["img"], cd["img"], 3)
+
+
+def _write(d: str, fname: str, text: str):
+    p = os.path.join(d, fname)
+    with open(p, "w") as f:
+        f.write(text)
+    print(f"    wrote {p} ({len(text) // 1024} KiB)")
+
+
+def lower_sweeps(shape_set: set[tuple[int, int]], out_hlo: str) -> list[dict]:
+    arts = []
+    for m, n in sorted(shape_set):
+        for pc in (True, False):
+            fn = graphs.make_sweep(per_channel=pc)
+            g = jax.ShapeDtypeStruct((m, m), jnp.float32)
+            w = jax.ShapeDtypeStruct((m, n), jnp.float32)
+            v = jax.ShapeDtypeStruct((n,), jnp.float32)
+            tag = "pc" if pc else "pl"
+            path = f"sweep_m{m}_n{n}_{tag}.hlo.txt"
+            _write(out_hlo, path, graphs.lower_to_text(fn, (g, w, w, v, v, v)))
+            arts.append(dict(m=m, n=n, per_channel=pc, path=f"hlo/{path}"))
+    return arts
+
+
+def export_fixtures(out_data: str) -> None:
+    """Cross-language parity fixtures: reference COMQ outputs computed by
+    the python oracle (kernels/ref.py) on seeded inputs. The Rust test
+    rust/tests/cross_lang.rs replays the same configs and asserts code-
+    level agreement — the strongest check that the two implementations
+    are the same algorithm."""
+    from .kernels import ref
+
+    path = os.path.join(out_data, "fixtures.cts")
+    if os.path.exists(path):
+        print(f"  cached {path}")
+        return
+    rng = np.random.default_rng(12345)
+    tensors: dict[str, np.ndarray] = {}
+    cases = []
+    for ci, (b, m, n, bits, per_channel, greedy, lam) in enumerate(
+        [
+            (64, 24, 12, 4, True, False, 1.0),
+            (64, 24, 12, 3, True, True, 1.0),
+            (48, 16, 8, 2, True, False, 0.71),
+            (96, 32, 10, 4, False, False, 1.0),
+            (96, 32, 10, 3, False, True, 1.0),
+        ]
+    ):
+        x = rng.standard_normal((b, m)).astype(np.float32)
+        w = (rng.standard_normal((m, n)) * 0.5).astype(np.float32)
+        g = (x.T @ x).astype(np.float32)
+        order = None
+        if greedy:
+            order = ref.greedy_order_per_column(np.diag(g), w)
+        if per_channel:
+            wq, q, delta, z = ref.comq_per_channel_gram(g, w, bits, iters=3, lam=lam, order=order)
+            zv = z
+        else:
+            wq, q, delta, z = ref.comq_per_layer_gram(g, w, bits, iters=3, order=order)
+            delta = np.full(n, delta, np.float32)
+            zv = np.full(n, z, np.float32)
+        pre = f"case{ci}"
+        tensors[f"{pre}/x"] = x
+        tensors[f"{pre}/w"] = w
+        tensors[f"{pre}/q"] = q
+        tensors[f"{pre}/delta"] = np.asarray(delta, np.float32)
+        tensors[f"{pre}/zero"] = np.asarray(zv, np.float32)
+        tensors[f"{pre}/meta"] = np.array(
+            [bits, 1 if per_channel else 0, 1 if greedy else 0, lam], np.float32
+        )
+        cases.append(ci)
+    tensors["num_cases"] = np.array(cases, np.int32)
+    write_cts(path, tensors)
+    print(f"  wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="all", help="comma list or 'all'")
+    ap.add_argument("--retrain", action="store_true")
+    args = ap.parse_args()
+
+    out = args.out_dir
+    out_data = os.path.join(out, "data")
+    out_hlo = os.path.join(out, "hlo")
+    os.makedirs(out_data, exist_ok=True)
+    os.makedirs(out_hlo, exist_ok=True)
+
+    model_names = ALL_MODELS if args.models == "all" else args.models.split(",")
+
+    print("== SynthImageNet ==")
+    splits = synth.splits(n_train=N_TRAIN, n_calib=N_CALIB, n_val=N_VAL)
+    data_path = os.path.join(out_data, "synth.cts")
+    if not os.path.exists(data_path):
+        write_cts(
+            data_path,
+            {
+                "calib/images": splits["calib"][0],
+                "calib/labels": splits["calib"][1],
+                "val/images": splits["val"][0],
+                "val/labels": splits["val"][1],
+            },
+        )
+        print(f"  wrote {data_path}")
+    else:
+        print(f"  cached {data_path}")
+
+    manifest: dict = {
+        "batch": AOT_BATCH,
+        "classes": synth.NUM_CLASSES,
+        "img": synth.IMG,
+        "data": "data/synth.cts",
+        "models": {},
+        "sweeps": [],
+    }
+
+    sweep_shapes: set[tuple[int, int]] = set()
+    for name in model_names:
+        print(f"== {name} ==")
+        family, cfgd, layers = model_meta(name)
+        params, acc = ensure_checkpoint(name, splits, out_data, args.retrain)
+        arts = lower_model_graphs(name, params, layers, out_hlo)
+        shapes = layer_shapes(params, layers)
+        if name in SWEEP_MODELS:
+            for s in shapes:
+                if not s["grouped"]:
+                    sweep_shapes.add((s["m"], s["n"]))
+        manifest["models"][name] = {
+            "family": family,
+            "config": cfgd,
+            "params": graphs.param_order(params),
+            "quant_layers": shapes,
+            "checkpoint": f"data/{name}.cts",
+            "fp_top1": acc,
+            "artifacts": arts,
+        }
+
+    print("== COMQ sweep kernels (L1) ==")
+    manifest["sweeps"] = lower_sweeps(sweep_shapes, out_hlo)
+
+    print("== cross-language fixtures ==")
+    export_fixtures(out_data)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {os.path.join(out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

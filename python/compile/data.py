@@ -1,0 +1,89 @@
+"""SynthImageNet: a deterministic synthetic image-classification dataset.
+
+The COMQ paper calibrates and evaluates on ImageNet-1k. ImageNet is not
+available in this environment, so we substitute a seeded synthetic dataset
+with the properties PTQ actually depends on:
+
+  * a *trained* model produces the calibration features X  (the models in
+    nets/ are trained on this dataset at build time, see train.py);
+  * classes are separable but non-trivial (additive noise, random shifts,
+    flips, per-sample contrast jitter), so the FP model sits well below
+    100% accuracy and quantization damage is measurable;
+  * image statistics are stationary between the calibration and validation
+    splits, as with ImageNet train/val.
+
+Each of the 16 classes is defined by a fixed class prototype: a smoothed
+random RGB field plus a class-specific 2-D sinusoidal grating (orientation
+and frequency indexed by the class id). Samples are prototype + jitter.
+
+Everything is generated with numpy from fixed seeds: the dataset is
+byte-for-byte reproducible across runs, which makes the accuracy numbers in
+EXPERIMENTS.md reproducible too.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG = 16
+CHANNELS = 3
+NUM_CLASSES = 16
+
+
+def _smooth(img: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Cheap separable box-blur smoothing (3 passes ~= Gaussian)."""
+    out = img
+    for _ in range(3):
+        out = (np.roll(out, 1, axis=0) + out + np.roll(out, -1, axis=0)) / 3.0
+        out = (np.roll(out, 1, axis=1) + out + np.roll(out, -1, axis=1)) / 3.0
+    return out
+
+
+def class_prototypes(seed: int = 0) -> np.ndarray:
+    """[NUM_CLASSES, IMG, IMG, 3] float32 prototypes in roughly [-1, 1]."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    protos = np.zeros((NUM_CLASSES, IMG, IMG, CHANNELS), np.float32)
+    for c in range(NUM_CLASSES):
+        base = _smooth(rng.standard_normal((IMG, IMG, CHANNELS)).astype(np.float32), rng)
+        theta = np.pi * (c % 8) / 8.0
+        freq = 2.0 * np.pi * (2 + c // 8) / IMG
+        grating = np.sin(freq * (np.cos(theta) * xx + np.sin(theta) * yy))
+        phase = np.cos(freq * 1.7 * (np.cos(theta + 0.9) * xx + np.sin(theta + 0.9) * yy))
+        pat = 0.9 * base + 0.8 * grating[..., None] + 0.4 * phase[..., None] * np.array(
+            [1.0, -1.0, 0.5], np.float32
+        )
+        protos[c] = pat / (np.abs(pat).max() + 1e-6)
+    return protos
+
+
+def make_split(
+    n: int, seed: int, noise: float = 0.55, proto_seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` samples: returns (images [n,32,32,3] f32, labels [n] i32)."""
+    protos = class_prototypes(proto_seed)
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.int32)
+    imgs = protos[labels].copy()
+    # random cyclic shifts (translation invariance pressure)
+    sh = rng.integers(-2, 3, size=(n, 2))
+    for i in range(n):
+        imgs[i] = np.roll(imgs[i], (sh[i, 0], sh[i, 1]), axis=(0, 1))
+    # random horizontal flips
+    flip = rng.random(n) < 0.5
+    imgs[flip] = imgs[flip, :, ::-1, :]
+    # contrast jitter and additive noise
+    gain = (0.8 + 0.4 * rng.random((n, 1, 1, 1))).astype(np.float32)
+    imgs = imgs * gain + noise * rng.standard_normal(imgs.shape).astype(np.float32)
+    return imgs.astype(np.float32), labels
+
+
+def splits(
+    n_train: int = 8192, n_calib: int = 2048, n_val: int = 2048, seed: int = 7
+) -> dict[str, tuple[np.ndarray, np.ndarray]]:
+    """The canonical train / calibration / validation splits."""
+    return {
+        "train": make_split(n_train, seed=seed),
+        "calib": make_split(n_calib, seed=seed + 1),
+        "val": make_split(n_val, seed=seed + 2),
+    }

@@ -1,0 +1,64 @@
+"""CTS ("Comq Tensor Store") — the python→rust interchange format.
+
+A deliberately minimal, seekable binary container (little-endian):
+
+    magic  b"CTS1"
+    u32    tensor count
+    per tensor:
+        u16  name length, then name bytes (utf-8)
+        u8   dtype   (0 = f32, 1 = i32)
+        u8   ndim
+        u32  dims[ndim]
+        raw  data (dtype, C-contiguous, little-endian)
+
+Mirrored by rust/src/tensorstore/. Property-tested on both sides.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"CTS1"
+DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+DTYPES_INV = {0: np.float32, 1: np.int32}
+
+
+def write_cts(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in DTYPES:
+                if np.issubdtype(arr.dtype, np.floating):
+                    arr = arr.astype(np.float32)
+                elif np.issubdtype(arr.dtype, np.integer):
+                    arr = arr.astype(np.int32)
+                else:
+                    raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes(order="C"))
+
+
+def read_cts(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"{path}: bad magic"
+        (count,) = struct.unpack("<I", f.read(4))
+        out: dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            dt, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            dtype = np.dtype(DTYPES_INV[dt])
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims).copy()
+        return out

@@ -1,0 +1,172 @@
+"""L1: the COMQ coordinate-descent sweep as a Pallas kernel.
+
+One kernel instance performs a full row sweep (the inner ``for i`` of
+Alg. 1 / Alg. 2) for a *tile of output channels*, in the Gram domain:
+
+    P = G (W - Q diag(delta))            (prologue, MXU-shaped matmul)
+    for i in 0..m:                        (sequential; true data dep via P)
+        r_old  = w_i - delta * q_i
+        numer  = P[i,:] - G_ii r_old + G_ii w_i
+        q_i    = clip(round(numer / (G_ii * delta)), z, z + 2^b - 1)
+        P     += g_:,i  (outer)  (r_new - r_old)
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is over
+column tiles TN — columns are independent given delta, so each program
+owns W/Q/P tiles of shape [m, TN] in VMEM plus the shared G panel
+[m, m]; the i-loop is VPU-bound rank-1 updates, the prologue runs on the
+MXU. Greedy ordering is handled by pre-permuting G and W outside the
+kernel (shared order), exactly as the paper describes ("permute ...
+followed by the quantization process ... then inverse permutations").
+
+interpret=True everywhere: this repository runs on the CPU PJRT plugin;
+a real-TPU build would only flip that flag.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS_DIAG = 1e-12
+DEFAULT_TILE = 128
+
+
+def _sweep_kernel(g_ref, w_ref, q_ref, delta_ref, lo_ref, hi_ref, qout_ref, *, m: int):
+    """One full COMQ row sweep over an [m, TN] column tile.
+
+    Clip bounds (lo = z, hi = z + 2^b - 1) are runtime inputs, so a single
+    lowered artifact serves every bit-width for a given layer shape.
+    """
+    g = g_ref[...]  # [m, m] shared Gram panel
+    w = w_ref[...]  # [m, TN]
+    q = q_ref[...]  # [m, TN] current bit-codes (float storage)
+    delta = delta_ref[...]  # [TN]
+    lo = lo_ref[...]  # [TN]
+    hi = hi_ref[...]  # [TN]
+    diag = jnp.diag(g)  # [m]
+
+    # Prologue: residual statistics P = G (W - Q diag(delta)).  MXU matmul.
+    p = jnp.dot(g, w - q * delta[None, :], preferred_element_type=jnp.float32)
+
+    def body(i, carry):
+        p, q = carry
+        w_row = jax.lax.dynamic_slice_in_dim(w, i, 1, 0)[0]  # [TN]
+        q_row = jax.lax.dynamic_slice_in_dim(q, i, 1, 0)[0]
+        p_row = jax.lax.dynamic_slice_in_dim(p, i, 1, 0)[0]
+        dg = jax.lax.dynamic_index_in_dim(diag, i, 0, keepdims=False)  # scalar
+        g_col = jax.lax.dynamic_slice_in_dim(g, i, 1, 1)[:, 0]  # [m]
+
+        r_old = w_row - delta * q_row
+        numer = p_row - dg * r_old + dg * w_row
+        safe_dg = jnp.maximum(dg, EPS_DIAG)
+        q_cd = jnp.clip(jnp.round(numer / safe_dg / delta), lo, hi)
+        q_rtn = jnp.clip(jnp.round(w_row / delta), lo, hi)
+        q_new = jnp.where(dg <= EPS_DIAG, q_rtn, q_cd)
+
+        r_new = w_row - delta * q_new
+        p = p + g_col[:, None] * (r_new - r_old)[None, :]
+        q = jax.lax.dynamic_update_slice_in_dim(q, q_new[None, :], i, 0)
+        return p, q
+
+    _, q = jax.lax.fori_loop(0, m, body, (p, q))
+    qout_ref[...] = q
+
+
+def comq_sweep(
+    g: jnp.ndarray,
+    w: jnp.ndarray,
+    q: jnp.ndarray,
+    delta: jnp.ndarray,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    tile: int = DEFAULT_TILE,
+) -> jnp.ndarray:
+    """One cyclic COMQ sweep; returns the updated bit-code matrix Q.
+
+    g [m, m], w/q [m, n], delta/lo/hi [n]. n must divide into tiles of
+    `tile` (otherwise one tile covers all columns; aot.py lowers per exact
+    layer shape so no padding is needed there).
+    """
+    m, n = w.shape
+    tn = min(tile, n)
+    if n % tn != 0:
+        # fall back to a single tile covering all columns
+        tn = n
+    grid = (n // tn,)
+    kernel = functools.partial(_sweep_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, m), lambda j: (0, 0)),  # G: shared panel
+            pl.BlockSpec((m, tn), lambda j: (0, j)),  # W tile
+            pl.BlockSpec((m, tn), lambda j: (0, j)),  # Q tile
+            pl.BlockSpec((tn,), lambda j: (j,)),  # delta tile
+            pl.BlockSpec((tn,), lambda j: (j,)),  # lo tile
+            pl.BlockSpec((tn,), lambda j: (j,)),  # hi tile
+        ],
+        out_specs=pl.BlockSpec((m, tn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(g, w, q, delta, lo, hi)
+
+
+def delta_update_per_channel(g, w, q, delta):
+    """Eq. 10: delta_j = <X q_j, X w_j> / ||X q_j||^2 via the Gram matrix."""
+    gq = jnp.dot(g, q, preferred_element_type=jnp.float32)
+    num = jnp.sum(gq * w, axis=0)
+    den = jnp.sum(gq * q, axis=0)
+    return jnp.where(den > 0, num / den, delta)
+
+
+def delta_update_per_layer(g, w, q, delta):
+    """Eq. 7: scalar delta = <XQ, XW> / ||XQ||^2 via the Gram matrix."""
+    gq = jnp.dot(g, q, preferred_element_type=jnp.float32)
+    num = jnp.sum(gq * w)
+    den = jnp.sum(gq * q)
+    return jnp.where(den > 0, num / den, delta)
+
+
+def comq_quantize(
+    g: jnp.ndarray,
+    w: jnp.ndarray,
+    bits: int,
+    iters: int = 3,
+    lam: float = 1.0,
+    per_channel: bool = True,
+    tile: int = DEFAULT_TILE,
+):
+    """Full COMQ (init + K sweeps + delta updates), per-channel or
+    per-layer, cyclic order. Greedy shared order is applied by permuting
+    G/W before calling this and un-permuting Q after (see model.py).
+
+    Returns (w_q, q, delta, z); delta/z are [n] vectors in both modes
+    (per-layer broadcasts the shared scalar).
+    """
+    m, n = w.shape
+    levels = jnp.float32(2.0**bits - 1.0)
+    if per_channel:
+        mx = jnp.max(w, axis=0)
+        mn = jnp.min(w, axis=0)
+        delta = lam * (mx - mn) / levels
+        delta = jnp.where(delta <= 0, 1e-8, delta)
+        z = jnp.round(mn / delta)
+    else:
+        d0 = jnp.mean(jnp.max(jnp.abs(w), axis=0)) / 2.0 ** (bits - 1)
+        d0 = jnp.where(d0 <= 0, 1e-8, d0)
+        delta = jnp.full((n,), d0, jnp.float32)
+        z = jnp.full((n,), jnp.round(jnp.min(w) / d0), jnp.float32)
+    q = w / delta[None, :]
+
+    levels = 2.0**bits - 1.0
+    for _ in range(iters):
+        q = comq_sweep(g, w, q, delta, z, z + levels, tile)
+        if per_channel:
+            delta = delta_update_per_channel(g, w, q, delta)
+        else:
+            d = delta_update_per_layer(g, w, q, delta[0])
+            delta = jnp.full((n,), d, jnp.float32)
+    return q * delta[None, :], q, delta, z

@@ -1,0 +1,272 @@
+"""Pure-numpy oracle for COMQ — the correctness ground truth.
+
+Everything here is deliberately written in the most literal possible
+transcription of the paper's equations (Alg. 1 / Alg. 2, Eq. 6/7/9/10),
+with no performance tricks. Both the Pallas kernel (comq_pallas.py) and
+the Rust engines (rust/src/quant/comq.rs) are tested against these
+functions.
+
+Two mathematically equivalent formulations are provided:
+
+  * residual domain — carries U = X (W - W_q)  in R^{b x n}  (Eq. 6/9
+    verbatim);
+  * Gram domain     — carries P = G (W - W_q)  in R^{m x n}  with
+    G = X^T X precomputed. The layer-wise objective depends on X only
+    through G, so the two are identical up to float reassociation.
+
+Rounding is ties-to-even everywhere (numpy/jnp semantics; the Rust side
+uses f32::round_ties_even to match).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+EPS_DIAG = 1e-12  # guard for dead features (||x_i|| == 0)
+
+
+# ---------------------------------------------------------------------------
+# quantization grid helpers
+# ---------------------------------------------------------------------------
+
+
+def init_per_channel(w: np.ndarray, bits: int, lam: float = 1.0):
+    """Per-channel asymmetric init (Sec. 3.2): delta_j, z_j for each column.
+
+    delta_j = lam * (max(w_j) - min(w_j)) / (2^b - 1);  z_j = round(min/delta).
+    """
+    levels = 2.0**bits - 1.0
+    mx = w.max(axis=0)
+    mn = w.min(axis=0)
+    delta = lam * (mx - mn) / levels
+    delta = np.where(delta <= 0, 1e-8, delta).astype(np.float32)
+    z = np.round(mn / delta).astype(np.float32)
+    return delta, z
+
+
+def init_per_layer(w: np.ndarray, bits: int):
+    """Per-layer init (Sec. 3.1): shared scalar delta from the average
+    column-wise infinity norm; shared zero point from min(W)."""
+    delta = float(np.abs(w).max(axis=0).mean() / 2.0 ** (bits - 1))
+    if delta <= 0:
+        delta = 1e-8
+    z = float(np.round(w.min() / delta))
+    return np.float32(delta), np.float32(z)
+
+
+def rtn(w: np.ndarray, bits: int, per_channel: bool = True, lam: float = 1.0):
+    """Round-to-nearest baseline: W_q = delta * clip(round(W/delta))."""
+    if per_channel:
+        delta, z = init_per_channel(w, bits, lam)
+    else:
+        d, zz = init_per_layer(w, bits)
+        delta = np.full(w.shape[1], d, np.float32)
+        z = np.full(w.shape[1], zz, np.float32)
+    q = np.clip(np.round(w / delta), z, z + 2.0**bits - 1.0)
+    return (q * delta).astype(np.float32), q.astype(np.float32), delta, z
+
+
+# ---------------------------------------------------------------------------
+# greedy order (Sec. 3.3)
+# ---------------------------------------------------------------------------
+
+
+def greedy_order_per_column(diag_g: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """[m, n] int32: column j's row-update order, sorted by ||x_i|| * |w_ij|
+    descending. 'cyclic' corresponds to arange(m) for every column."""
+    score = np.sqrt(np.maximum(diag_g, 0.0))[:, None] * np.abs(w)
+    return np.argsort(-score, axis=0, kind="stable").astype(np.int32)
+
+
+def greedy_order_shared(diag_g: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """[m] int32: one order shared by all columns (vectorised variant);
+    score_i = ||x_i|| * mean_j |w_ij|."""
+    score = np.sqrt(np.maximum(diag_g, 0.0)) * np.abs(w).mean(axis=1)
+    return np.argsort(-score, kind="stable").astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# COMQ — residual domain (Eq. 6/9 verbatim)
+# ---------------------------------------------------------------------------
+
+
+def comq_per_channel_residual(
+    x: np.ndarray,
+    w: np.ndarray,
+    bits: int,
+    iters: int = 3,
+    lam: float = 1.0,
+    order: np.ndarray | None = None,
+):
+    """Alg. 2 carried in the residual domain. x [b, m], w [m, n].
+
+    order: [m, n] per-column row orders (greedy) or None (cyclic).
+    Returns (w_q, q, delta, z).
+    """
+    b, m = x.shape
+    n = w.shape[1]
+    levels = 2.0**bits - 1.0
+    delta, z = init_per_channel(w, bits, lam)
+    q = (w / delta).astype(np.float32)  # infeasible start, per the paper
+    norms = (x * x).sum(axis=0)  # ||x_i||^2
+    if order is None:
+        order = np.tile(np.arange(m, dtype=np.int32)[:, None], (1, n))
+    for _ in range(iters):
+        u = x @ (w - q * delta)  # [b, n]
+        for step in range(m):
+            idx = order[step]  # [n] row index per column
+            xg = x[:, idx]  # [b, n] gathered columns
+            w_row = np.take_along_axis(w, idx[None, :], axis=0)[0]
+            q_row = np.take_along_axis(q, idx[None, :], axis=0)[0]
+            r_old = w_row - delta * q_row
+            u1 = u - xg * r_old[None, :]
+            numer = ((u1 + xg * w_row[None, :]) * xg).sum(axis=0)
+            nrm = norms[idx]
+            q_new = np.clip(
+                np.round(numer / np.maximum(nrm, EPS_DIAG) / delta), z, z + levels
+            ).astype(np.float32)
+            q_new = np.where(nrm <= EPS_DIAG, np.clip(np.round(w_row / delta), z, z + levels), q_new)
+            np.put_along_axis(q, idx[None, :], q_new[None, :], axis=0)
+            u = u1 + xg * (w_row - delta * q_new)[None, :]
+        # delta update (Eq. 10)
+        xq = x @ q
+        num = (xq * (x @ w)).sum(axis=0)
+        den = (xq * xq).sum(axis=0)
+        delta = np.where(den > 0, num / den, delta).astype(np.float32)
+    return (q * delta).astype(np.float32), q, delta, z
+
+
+def comq_per_layer_residual(
+    x: np.ndarray,
+    w: np.ndarray,
+    bits: int,
+    iters: int = 3,
+    order: np.ndarray | None = None,
+):
+    """Alg. 1 carried in the residual domain (shared scalar delta/z)."""
+    b, m = x.shape
+    n = w.shape[1]
+    levels = 2.0**bits - 1.0
+    delta, z = init_per_layer(w, bits)
+    q = (w / delta).astype(np.float32)
+    norms = (x * x).sum(axis=0)
+    if order is None:
+        order = np.tile(np.arange(m, dtype=np.int32)[:, None], (1, n))
+    for _ in range(iters):
+        u = x @ (w - q * delta)
+        for step in range(m):
+            idx = order[step]
+            xg = x[:, idx]
+            w_row = np.take_along_axis(w, idx[None, :], axis=0)[0]
+            q_row = np.take_along_axis(q, idx[None, :], axis=0)[0]
+            r_old = w_row - delta * q_row
+            u1 = u - xg * r_old[None, :]
+            numer = ((u1 + xg * w_row[None, :]) * xg).sum(axis=0)
+            nrm = norms[idx]
+            q_new = np.clip(
+                np.round(numer / np.maximum(nrm, EPS_DIAG) / delta), z, z + levels
+            ).astype(np.float32)
+            q_new = np.where(nrm <= EPS_DIAG, np.clip(np.round(w_row / delta), z, z + levels), q_new)
+            np.put_along_axis(q, idx[None, :], q_new[None, :], axis=0)
+            u = u1 + xg * (w_row - delta * q_new)[None, :]
+        xq = x @ q
+        num = float((xq * (x @ w)).sum())
+        den = float((xq * xq).sum())
+        if den > 0:
+            delta = np.float32(num / den)
+    return (q * delta).astype(np.float32), q, delta, z
+
+
+# ---------------------------------------------------------------------------
+# COMQ — Gram domain (the optimized formulation; X enters only via G)
+# ---------------------------------------------------------------------------
+
+
+def comq_per_channel_gram(
+    g: np.ndarray,
+    w: np.ndarray,
+    bits: int,
+    iters: int = 3,
+    lam: float = 1.0,
+    order: np.ndarray | None = None,
+):
+    """Alg. 2 carried in the Gram domain. g = X^T X [m, m], w [m, n]."""
+    m, n = w.shape
+    levels = 2.0**bits - 1.0
+    delta, z = init_per_channel(w, bits, lam)
+    q = (w / delta).astype(np.float32)
+    diag = np.diag(g).copy()
+    if order is None:
+        order = np.tile(np.arange(m, dtype=np.int32)[:, None], (1, n))
+    for _ in range(iters):
+        p = g @ (w - q * delta)  # [m, n]
+        for step in range(m):
+            idx = order[step]  # [n]
+            w_row = np.take_along_axis(w, idx[None, :], axis=0)[0]
+            q_row = np.take_along_axis(q, idx[None, :], axis=0)[0]
+            r_old = w_row - delta * q_row
+            p_row = np.take_along_axis(p, idx[None, :], axis=0)[0]  # P[idx_j, j]
+            dg = diag[idx]
+            numer = p_row - dg * r_old + dg * w_row
+            q_new = np.clip(
+                np.round(numer / np.maximum(dg, EPS_DIAG) / delta), z, z + levels
+            ).astype(np.float32)
+            q_new = np.where(dg <= EPS_DIAG, np.clip(np.round(w_row / delta), z, z + levels), q_new)
+            np.put_along_axis(q, idx[None, :], q_new[None, :], axis=0)
+            r_new = w_row - delta * q_new
+            p += g[:, idx] * (r_new - r_old)[None, :]
+        num = ((g @ q) * w).sum(axis=0)
+        den = ((g @ q) * q).sum(axis=0)
+        delta = np.where(den > 0, num / den, delta).astype(np.float32)
+    return (q * delta).astype(np.float32), q, delta, z
+
+
+def comq_per_layer_gram(
+    g: np.ndarray,
+    w: np.ndarray,
+    bits: int,
+    iters: int = 3,
+    order: np.ndarray | None = None,
+):
+    """Alg. 1 carried in the Gram domain (shared scalar delta/z)."""
+    m, n = w.shape
+    levels = 2.0**bits - 1.0
+    delta, z = init_per_layer(w, bits)
+    q = (w / delta).astype(np.float32)
+    diag = np.diag(g).copy()
+    if order is None:
+        order = np.tile(np.arange(m, dtype=np.int32)[:, None], (1, n))
+    for _ in range(iters):
+        p = g @ (w - q * delta)
+        for step in range(m):
+            idx = order[step]
+            w_row = np.take_along_axis(w, idx[None, :], axis=0)[0]
+            q_row = np.take_along_axis(q, idx[None, :], axis=0)[0]
+            r_old = w_row - delta * q_row
+            p_row = np.take_along_axis(p, idx[None, :], axis=0)[0]
+            dg = diag[idx]
+            numer = p_row - dg * r_old + dg * w_row
+            q_new = np.clip(
+                np.round(numer / np.maximum(dg, EPS_DIAG) / delta), z, z + levels
+            ).astype(np.float32)
+            q_new = np.where(dg <= EPS_DIAG, np.clip(np.round(w_row / delta), z, z + levels), q_new)
+            np.put_along_axis(q, idx[None, :], q_new[None, :], axis=0)
+            r_new = w_row - delta * q_new
+            p += g[:, idx] * (r_new - r_old)[None, :]
+        gq = g @ q
+        num = float((gq * w).sum())
+        den = float((gq * q).sum())
+        if den > 0:
+            delta = np.float32(num / den)
+    return (q * delta).astype(np.float32), q, delta, z
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def recon_error(g: np.ndarray, w: np.ndarray, w_q: np.ndarray) -> float:
+    """||X W_q - X W||^2 computed from the Gram matrix: tr(D^T G D)."""
+    d = (w_q - w).astype(np.float64)
+    return float((d * (g.astype(np.float64) @ d)).sum())

@@ -1,0 +1,132 @@
+"""L2: the JAX graphs that get AOT-lowered to HLO text for the Rust runtime.
+
+Three graph families per model (all lowered with a *fixed* batch size and
+positional parameters in sorted-name order, recorded in the manifest):
+
+  * ``forward``      (params..., x)            -> logits
+  * ``forward_actq`` (params..., actq, x)      -> logits with b-bit
+                     fake-quantized activations at every quantizable
+                     layer input (actq is [L, 2] = (scale, zero) rows)
+  * ``calib_stats``  (params..., x)            -> per-layer
+                     (G = XᵀX, min, max) sufficient statistics; the whole
+                     COMQ objective depends on X only through G, so the
+                     coordinator never materializes raw activations.
+
+Plus the shape-specialized COMQ sweep graphs (``sweep_fn``) that embed the
+L1 Pallas kernel: (G, W, Q, delta, z) -> (Q', delta') for one coordinate-
+descent sweep + scale update.
+
+HLO *text* is the interchange format (not serialized protos) — see
+/opt/xla-example/README.md: jax >= 0.5 emits 64-bit instruction ids that
+xla_extension 0.5.1 rejects; the text parser reassigns ids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import comq_pallas as cp
+from .nets import build_model
+from .nets.common import Tap
+
+
+def param_order(params: dict) -> list[str]:
+    """Canonical positional order for AOT parameter passing."""
+    return sorted(params)
+
+
+def pack_params(params: dict) -> list:
+    return [params[k] for k in param_order(params)]
+
+
+def unpack_params(names: list[str], flat) -> dict:
+    return dict(zip(names, flat))
+
+
+# ---------------------------------------------------------------------------
+# graph builders
+# ---------------------------------------------------------------------------
+
+
+def make_forward(model_name: str, names: list[str]):
+    _, fwd, _ = build_model(model_name)
+
+    def forward(*args):
+        # args = (*params, x)
+        params = unpack_params(names, args[:-1])
+        return (fwd(params, args[-1], Tap()),)
+
+    return forward
+
+
+def make_forward_actq(model_name: str, names: list[str], layers: list[str], bits: int):
+    _, fwd, _ = build_model(model_name)
+
+    def forward(*args):
+        # args = (*params, actq [L, 2], x)
+        params = unpack_params(names, args[:-2])
+        actq, x = args[-2], args[-1]
+        tap = Tap(mode="actq", bits=bits)
+        tap.act_params = {nm: (actq[i, 0], actq[i, 1]) for i, nm in enumerate(layers)}
+        return (fwd(params, x, tap),)
+
+    return forward
+
+
+def make_calib_stats(model_name: str, names: list[str], layers: list[str]):
+    _, fwd, _ = build_model(model_name)
+
+    def stats(*args):
+        params = unpack_params(names, args[:-1])
+        tap = Tap(mode="stats")
+        logits = fwd(params, args[-1], tap)
+        outs = []
+        for nm in layers:
+            g, mn, mx = tap.stats[nm]
+            outs += [g, mn, mx]
+        # Anchor: depend on the logits so XLA cannot dead-code-eliminate
+        # tail parameters (head/W, head/b) from the program signature —
+        # the PJRT caller always feeds the full positional parameter list.
+        outs.append(jnp.sum(logits) * 0.0)
+        return tuple(outs)
+
+    return stats
+
+
+def make_sweep(per_channel: bool):
+    """(G, W, Q, delta, lo, hi) -> (Q', delta'): one sweep + scale update.
+
+    Clip bounds are runtime inputs so one artifact per (shape, mode)
+    serves every bit-width.
+    """
+
+    def sweep(g, w, q, delta, lo, hi):
+        q2 = cp.comq_sweep(g, w, q, delta, lo, hi)
+        if per_channel:
+            d2 = cp.delta_update_per_channel(g, w, q2, delta)
+        else:
+            d = cp.delta_update_per_layer(g, w, q2, delta[0])
+            d2 = jnp.full_like(delta, d)
+        return q2, d2
+
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    return to_hlo_text(lowered)

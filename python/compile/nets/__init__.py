@@ -1,0 +1,4 @@
+"""Raw-JAX model zoo (build-time only): tiny ViT and CNN families."""
+
+from . import cnn, vit  # noqa: F401
+from .common import MODEL_REGISTRY, build_model  # noqa: F401

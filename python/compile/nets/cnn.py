@@ -1,0 +1,239 @@
+"""Tiny CNN family (raw JAX, build-time only).
+
+Stand-ins for the paper's ResNet18 / ResNet50 / MobileNetV2:
+
+  * ``resnet_lite``   — stem conv + 3 residual stages (2 blocks each),
+                        global-average-pool, fc head;
+  * ``cnn_s``         — plain VGG-ish conv stack;
+  * ``mobilenet_lite``— depthwise-separable blocks (dw 3x3 + pw 1x1),
+                        exercising the *grouped* Gram path of the
+                        quantizers.
+
+All convolutions are explicit im2col + matmul (patch order kh, kw, cin)
+so the Rust native forward (rust/src/model/cnn.rs) is an exact mirror.
+No batch-norm: blocks use a residual structure + He init, which trains
+fine at this depth and keeps inference-graph parity trivial.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import Tap, add_linear, conv2d, dwconv2d, he_init, register
+
+IMG = 16
+NUM_CLASSES = 16
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def avgpool2(x):
+    """2x2 average pooling, stride 2 (NHWC)."""
+    b, h, w, c = x.shape
+    return jnp.mean(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    kind: str  # "resnet" | "plain" | "mobile"
+    width: int
+    blocks: int = 2  # residual blocks per stage (resnet)
+    img: int = IMG
+    classes: int = NUM_CLASSES
+
+
+# ---------------------------------------------------------------------------
+# resnet_lite
+# ---------------------------------------------------------------------------
+
+
+def _resnet_init(cfg: CNNConfig, seed: int):
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+    w = cfg.width
+    add_linear(p, rng, "stem", 3 * 3 * 3, w, he_init)
+    cin = w
+    for s in range(3):
+        cout = w * (2**s)
+        for b in range(cfg.blocks):
+            nm = f"s{s}/b{b}"
+            add_linear(p, rng, f"{nm}/conv1", 3 * 3 * cin, cout, he_init)
+            add_linear(p, rng, f"{nm}/conv2", 3 * 3 * cout, cout, he_init)
+            if cin != cout:
+                add_linear(p, rng, f"{nm}/skip", cin, cout, he_init)
+            cin = cout
+    add_linear(p, rng, "head", cin, cfg.classes, he_init)
+    return p
+
+
+def _resnet_forward(cfg: CNNConfig, params, x, tap: Tap):
+    h = relu(conv2d(params, "stem", x, 3, 1, 1, tap))
+    cin = cfg.width
+    for s in range(3):
+        cout = cfg.width * (2**s)
+        for b in range(cfg.blocks):
+            nm = f"s{s}/b{b}"
+            stride = 2 if (s > 0 and b == 0) else 1
+            y = relu(conv2d(params, f"{nm}/conv1", h, 3, stride, 1, tap))
+            y = conv2d(params, f"{nm}/conv2", y, 3, 1, 1, tap)
+            if cin != cout:
+                # 1x1 projection shortcut (strided)
+                sk = h[:, ::stride, ::stride, :]
+                bsz, oh, ow, _ = sk.shape
+                from .common import linear
+
+                sk = linear(params, f"{nm}/skip", sk.reshape(bsz * oh * ow, cin), tap)
+                sk = sk.reshape(bsz, oh, ow, cout)
+            else:
+                sk = h if stride == 1 else h[:, ::stride, ::stride, :]
+            h = relu(y + sk)
+            cin = cout
+    pooled = jnp.mean(h, axis=(1, 2))
+    from .common import linear
+
+    return linear(params, "head", pooled, tap)
+
+
+def _resnet_layers(cfg: CNNConfig) -> list[str]:
+    names = ["stem"]
+    cin = cfg.width
+    for s in range(3):
+        cout = cfg.width * (2**s)
+        for b in range(cfg.blocks):
+            nm = f"s{s}/b{b}"
+            names += [f"{nm}/conv1", f"{nm}/conv2"]
+            if cin != cout:
+                names.append(f"{nm}/skip")
+            cin = cout
+    names.append("head")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# cnn_s (plain)
+# ---------------------------------------------------------------------------
+
+
+def _plain_init(cfg: CNNConfig, seed: int):
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+    w = cfg.width
+    add_linear(p, rng, "conv0", 3 * 3 * 3, w, he_init)
+    add_linear(p, rng, "conv1", 3 * 3 * w, w, he_init)
+    add_linear(p, rng, "conv2", 3 * 3 * w, 2 * w, he_init)
+    add_linear(p, rng, "conv3", 3 * 3 * 2 * w, 2 * w, he_init)
+    add_linear(p, rng, "conv4", 3 * 3 * 2 * w, 4 * w, he_init)
+    add_linear(p, rng, "fc", 4 * w, 2 * w, he_init)
+    add_linear(p, rng, "head", 2 * w, cfg.classes, he_init)
+    return p
+
+
+def _plain_forward(cfg: CNNConfig, params, x, tap: Tap):
+    from .common import linear
+
+    h = relu(conv2d(params, "conv0", x, 3, 1, 1, tap))
+    h = relu(conv2d(params, "conv1", h, 3, 1, 1, tap))
+    h = avgpool2(h)
+    h = relu(conv2d(params, "conv2", h, 3, 1, 1, tap))
+    h = relu(conv2d(params, "conv3", h, 3, 1, 1, tap))
+    h = avgpool2(h)
+    h = relu(conv2d(params, "conv4", h, 3, 1, 1, tap))
+    pooled = jnp.mean(h, axis=(1, 2))
+    h = relu(linear(params, "fc", pooled, tap))
+    return linear(params, "head", h, tap)
+
+
+def _plain_layers(cfg: CNNConfig) -> list[str]:
+    return ["conv0", "conv1", "conv2", "conv3", "conv4", "fc", "head"]
+
+
+# ---------------------------------------------------------------------------
+# mobilenet_lite
+# ---------------------------------------------------------------------------
+
+
+def _mobile_init(cfg: CNNConfig, seed: int):
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+    w = cfg.width
+    add_linear(p, rng, "stem", 3 * 3 * 3, w, he_init)
+    cin = w
+    for i in range(3):
+        cout = w * (2**i)
+        nm = f"dsb{i}"
+        p[f"{nm}/dw/W"] = he_init(rng, 3 * 3, cin)
+        p[f"{nm}/dw/b"] = np.zeros(cin, np.float32)
+        add_linear(p, rng, f"{nm}/pw", cin, cout, he_init)
+        cin = cout
+    add_linear(p, rng, "head", cin, cfg.classes, he_init)
+    return p
+
+
+def _mobile_forward(cfg: CNNConfig, params, x, tap: Tap):
+    from .common import linear
+
+    h = relu(conv2d(params, "stem", x, 3, 2, 1, tap))
+    cin = cfg.width
+    for i in range(3):
+        cout = cfg.width * (2**i)
+        nm = f"dsb{i}"
+        stride = 2 if i > 0 else 1
+        h = relu(dwconv2d(params, f"{nm}/dw", h, 3, stride, 1, tap))
+        bsz, oh, ow, _ = h.shape
+        h = linear(params, f"{nm}/pw", h.reshape(bsz * oh * ow, cin), tap)
+        h = relu(h.reshape(bsz, oh, ow, cout))
+        cin = cout
+    pooled = jnp.mean(h, axis=(1, 2))
+    return linear(params, "head", pooled, tap)
+
+
+def _mobile_layers(cfg: CNNConfig) -> list[str]:
+    names = ["stem"]
+    for i in range(3):
+        names += [f"dsb{i}/dw", f"dsb{i}/pw"]
+    names.append("head")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+CNN_CONFIGS = {
+    "resnet_lite": CNNConfig("resnet_lite", "resnet", width=16),
+    "cnn_s": CNNConfig("cnn_s", "plain", width=16),
+    "mobilenet_lite": CNNConfig("mobilenet_lite", "mobile", width=24),
+}
+
+_KIND = {
+    "resnet": (_resnet_init, _resnet_forward, _resnet_layers),
+    "plain": (_plain_init, _plain_forward, _plain_layers),
+    "mobile": (_mobile_init, _mobile_forward, _mobile_layers),
+}
+
+
+def quant_layers(cfg: CNNConfig) -> list[str]:
+    return _KIND[cfg.kind][2](cfg)
+
+
+def _make(cfg: CNNConfig):
+    init, fwd, _ = _KIND[cfg.kind]
+
+    def factory():
+        return (
+            lambda seed: init(cfg, seed),
+            lambda params, x, tap=None: fwd(cfg, params, x, tap or Tap()),
+            cfg,
+        )
+
+    return factory
+
+
+for _name, _cfg in CNN_CONFIGS.items():
+    register(_name)(_make(_cfg))

@@ -1,0 +1,194 @@
+"""Shared building blocks for the raw-JAX model zoo.
+
+Design rules (all of them exist to keep bit-level parity with the Rust
+native forward in rust/src/model/):
+
+  * every learnable tensor lives in a flat dict ``{name: array}`` with
+    '/'-separated names; the canonical parameter *order* is
+    ``sorted(params)`` and is recorded in the artifact manifest so the
+    Rust runtime can feed PJRT inputs positionally;
+  * convolutions are expressed as explicit im2col + matmul with patch
+    order (kh, kw, cin) — identical to rust/src/tensor/im2col.rs;
+  * GELU uses the tanh approximation (same closed form in Rust);
+  * every quantizable layer routes its 2-D input X through ``Tap`` so a
+    single forward definition serves logits, calibration-statistics
+    capture, and fake-quantized activation evaluation.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Tap: the instrumentation point in front of every quantizable layer.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Tap:
+    """Observes / rewrites the 2-D input of each quantizable layer.
+
+    mode="none"   : identity (plain forward)
+    mode="stats"  : record (G = XᵀX, min, max) per layer  -> .stats
+    mode="actq"   : fake-quantize X with the per-layer (scale, zero) in
+                    .act_params before the matmul (uniform b-bit grid)
+    """
+
+    mode: str = "none"
+    bits: int = 4
+    act_params: dict = field(default_factory=dict)  # name -> (scale, zero)
+    stats: dict = field(default_factory=dict)  # name -> (G, mn, mx)
+    names: list = field(default_factory=list)  # layer visit order
+
+    def __call__(self, name: str, x2d: jnp.ndarray) -> jnp.ndarray:
+        self.names.append(name)
+        if self.mode == "stats":
+            xf = x2d.astype(jnp.float32)
+            self.stats[name] = (xf.T @ xf, jnp.min(xf), jnp.max(xf))
+            return x2d
+        if self.mode == "actq":
+            return self._fake_quant(name, x2d)
+        return x2d
+
+    def grouped(self, name: str, x3d: jnp.ndarray) -> jnp.ndarray:
+        """Grouped (depthwise) layer tap: x3d [rows, groups, kk].
+
+        stats mode records a stacked per-group Gram [groups, kk, kk].
+        """
+        self.names.append(name)
+        if self.mode == "stats":
+            xf = x3d.astype(jnp.float32)
+            g = jnp.einsum("rck,rcl->ckl", xf, xf)
+            self.stats[name] = (g, jnp.min(xf), jnp.max(xf))
+            return x3d
+        if self.mode == "actq":
+            return self._fake_quant(name, x3d)
+        return x3d
+
+    def _fake_quant(self, name: str, x):
+        scale, zero = self.act_params[name]
+        q = jnp.clip(jnp.round(x / scale) - zero, 0.0, 2.0**self.bits - 1.0)
+        return (q + zero) * scale
+
+
+# ---------------------------------------------------------------------------
+# primitive ops
+# ---------------------------------------------------------------------------
+
+
+def gelu(x):
+    """tanh-approximate GELU (mirrored exactly in Rust)."""
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def linear(params, name, x2d, tap: Tap):
+    """x2d [rows, m] @ W [m, n] + b. The tap sees the raw input."""
+    x2d = tap(name, x2d)
+    return x2d @ params[f"{name}/W"] + params[f"{name}/b"]
+
+
+def softmax(x, axis=-1):
+    x = x - jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def im2col(x, k: int, stride: int, pad: int):
+    """NHWC -> [b, oh, ow, k*k*cin], patch order (kh, kw, cin).
+
+    Mirrors rust/src/tensor/im2col.rs exactly.
+    """
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ki in range(k):
+        for kj in range(k):
+            cols.append(x[:, ki : ki + oh * stride : stride, kj : kj + ow * stride : stride, :])
+    return jnp.concatenate(cols, axis=-1), oh, ow
+
+
+def conv2d(params, name, x, k, stride, pad, tap: Tap):
+    """Convolution as im2col + linear; the tap sees the im2col matrix."""
+    patches, oh, ow = im2col(x, k, stride, pad)
+    b = x.shape[0]
+    m = patches.shape[-1]
+    y = linear(params, name, patches.reshape(b * oh * ow, m), tap)
+    return y.reshape(b, oh, ow, -1)
+
+
+def dwconv2d(params, name, x, k, stride, pad, tap: Tap):
+    """Depthwise conv: one k*k filter per channel.
+
+    Implemented as im2col restricted per channel: X [rows, k*k] per channel
+    with a block-diagonal weight; for quantization we expose it as a single
+    linear layer with weight [k*k, c] applied channel-wise (each output
+    channel uses only its own k*k patch block). The tap sees the full
+    [rows*c, k*k] matrix so COMQ reconstructs every channel's filter from
+    its own patches.
+    """
+    b, h, w, c = x.shape
+    patches, oh, ow = im2col(x, k, stride, pad)  # [b,oh,ow,k*k*c], order (kh,kw,c)
+    rows = b * oh * ow
+    x3d = jnp.transpose(patches.reshape(rows, k * k, c), (0, 2, 1))  # [rows, c, k*k]
+    x3d = tap.grouped(name, x3d)
+    wgt = params[f"{name}/W"]  # [k*k, c]
+    y = jnp.einsum("rck,kc->rc", x3d, wgt) + params[f"{name}/b"]
+    return y.reshape(b, oh, ow, c)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def he_init(rng: np.random.Generator, m: int, n: int) -> np.ndarray:
+    return (rng.standard_normal((m, n)) * math.sqrt(2.0 / m)).astype(np.float32)
+
+
+def xavier_init(rng: np.random.Generator, m: int, n: int) -> np.ndarray:
+    return (rng.standard_normal((m, n)) * math.sqrt(1.0 / m)).astype(np.float32)
+
+
+def add_linear(params, rng, name, m, n, init=xavier_init):
+    params[f"{name}/W"] = init(rng, m, n)
+    params[f"{name}/b"] = np.zeros(n, np.float32)
+
+
+def add_ln(params, name, d):
+    params[f"{name}/g"] = np.ones(d, np.float32)
+    params[f"{name}/b"] = np.zeros(d, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# model registry
+# ---------------------------------------------------------------------------
+
+MODEL_REGISTRY: dict[str, Callable] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        MODEL_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def build_model(name: str):
+    """Returns (init_fn(seed)->params, forward_fn(params,x,tap)->logits, cfg)."""
+    return MODEL_REGISTRY[name]()

@@ -1,0 +1,177 @@
+"""Tiny Vision-Transformer family (raw JAX, build-time only).
+
+Scaled-down stand-ins for the paper's ViT-S / ViT-B / DeiT-S / Swin-T:
+same layer types (patch-embed linear, qkv / proj / fc1 / fc2 linears,
+LayerNorm, softmax attention, GELU), sized so that build-time CPU training
+finishes in seconds. `swin_t` uses (shifted-)window attention over the
+token grid, the structural signature of Swin.
+
+The Rust native forward in rust/src/model/vit.rs mirrors these functions
+operation-for-operation.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (
+    Tap,
+    add_linear,
+    add_ln,
+    gelu,
+    im2col,
+    layer_norm,
+    linear,
+    register,
+    softmax,
+    xavier_init,
+)
+
+IMG = 16
+NUM_CLASSES = 16
+
+
+@dataclass(frozen=True)
+class ViTConfig:
+    name: str
+    dim: int
+    depth: int
+    heads: int
+    mlp: int
+    patch: int = 4
+    window: int = 0  # 0 = global attention; >0 = Swin-style windows
+    img: int = IMG
+    classes: int = NUM_CLASSES
+
+    @property
+    def grid(self) -> int:
+        return self.img // self.patch
+
+    @property
+    def tokens(self) -> int:
+        return self.grid * self.grid
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+def init_params(cfg: ViTConfig, seed: int) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    p: dict[str, np.ndarray] = {}
+    add_linear(p, rng, "embed/proj", cfg.patch * cfg.patch * 3, cfg.dim)
+    p["embed/pos"] = (0.02 * rng.standard_normal((cfg.tokens, cfg.dim))).astype(np.float32)
+    for i in range(cfg.depth):
+        b = f"blk{i}"
+        add_ln(p, f"{b}/ln1", cfg.dim)
+        add_linear(p, rng, f"{b}/qkv", cfg.dim, 3 * cfg.dim)
+        add_linear(p, rng, f"{b}/proj", cfg.dim, cfg.dim)
+        add_ln(p, f"{b}/ln2", cfg.dim)
+        add_linear(p, rng, f"{b}/fc1", cfg.dim, cfg.mlp)
+        add_linear(p, rng, f"{b}/fc2", cfg.mlp, cfg.dim)
+    add_ln(p, "norm", cfg.dim)
+    add_linear(p, rng, "head", cfg.dim, cfg.classes)
+    return p
+
+
+def _attention(cfg: ViTConfig, params, name: str, x, tap: Tap):
+    """x: [b, t, d] -> [b, t, d] (global multi-head self-attention)."""
+    b, t, d = x.shape
+    qkv = linear(params, f"{name}/qkv", x.reshape(b * t, d), tap).reshape(b, t, 3, cfg.heads, cfg.head_dim)
+    q = jnp.transpose(qkv[:, :, 0], (0, 2, 1, 3))  # [b, h, t, hd]
+    k = jnp.transpose(qkv[:, :, 1], (0, 2, 1, 3))
+    v = jnp.transpose(qkv[:, :, 2], (0, 2, 1, 3))
+    att = softmax(q @ jnp.swapaxes(k, -1, -2) / math.sqrt(cfg.head_dim))
+    out = jnp.transpose(att @ v, (0, 2, 1, 3)).reshape(b, t, d)
+    return linear(params, f"{name}/proj", out.reshape(b * t, d), tap).reshape(b, t, d)
+
+
+def _window_partition(x, g: int, w: int):
+    """[b, g*g, d] -> [b * (g/w)^2, w*w, d]"""
+    b, t, d = x.shape
+    x = x.reshape(b, g // w, w, g // w, w, d)  # rows split then cols split
+    x = jnp.transpose(x.reshape(b, g // w, w, g // w, w, d), (0, 1, 3, 2, 4, 5))
+    return x.reshape(b * (g // w) * (g // w), w * w, d)
+
+
+def _window_merge(x, b: int, g: int, w: int):
+    nw = g // w
+    d = x.shape[-1]
+    x = x.reshape(b, nw, nw, w, w, d)
+    x = jnp.transpose(x, (0, 1, 3, 2, 4, 5))
+    return x.reshape(b, g * g, d)
+
+
+def _shift(x, g: int, s: int):
+    """Cyclic spatial shift of the token grid by s (Swin SW-MSA)."""
+    b, t, d = x.shape
+    xi = x.reshape(b, g, g, d)
+    xi = jnp.roll(xi, (-s, -s), axis=(1, 2))
+    return xi.reshape(b, t, d)
+
+
+def forward(cfg: ViTConfig, params, x, tap: Tap | None = None):
+    """x: [b, img, img, 3] NHWC -> logits [b, classes]."""
+    tap = tap or Tap()
+    b = x.shape[0]
+    patches, oh, ow = im2col(x, cfg.patch, cfg.patch, 0)
+    t = oh * ow
+    h = linear(params, "embed/proj", patches.reshape(b * t, -1), tap).reshape(b, t, cfg.dim)
+    h = h + params["embed/pos"]
+    for i in range(cfg.depth):
+        nm = f"blk{i}"
+        a_in = layer_norm(h, params[f"{nm}/ln1/g"], params[f"{nm}/ln1/b"])
+        if cfg.window:
+            shift = (cfg.window // 2) if (i % 2 == 1) else 0
+            a = _shift(a_in, cfg.grid, shift) if shift else a_in
+            a = _window_partition(a, cfg.grid, cfg.window)
+            a = _attention(cfg, params, nm, a, tap)
+            a = _window_merge(a, b, cfg.grid, cfg.window)
+            a = _shift(a, cfg.grid, -shift) if shift else a
+        else:
+            a = _attention(cfg, params, nm, a_in, tap)
+        h = h + a
+        m_in = layer_norm(h, params[f"{nm}/ln2/g"], params[f"{nm}/ln2/b"])
+        m = linear(params, f"{nm}/fc1", m_in.reshape(b * t, cfg.dim), tap)
+        m = gelu(m)
+        m = linear(params, f"{nm}/fc2", m, tap).reshape(b, t, cfg.dim)
+        h = h + m
+    h = layer_norm(h, params["norm/g"], params["norm/b"])
+    pooled = jnp.mean(h, axis=1)  # mean pool (no cls token)
+    return linear(params, "head", pooled, tap)
+
+
+def quant_layers(cfg: ViTConfig) -> list[str]:
+    """Names of quantizable (linear) layers in forward-visit order."""
+    names = ["embed/proj"]
+    for i in range(cfg.depth):
+        names += [f"blk{i}/qkv", f"blk{i}/proj", f"blk{i}/fc1", f"blk{i}/fc2"]
+    names.append("head")
+    return names
+
+
+def _make(cfg: ViTConfig):
+    def factory():
+        return (
+            lambda seed: init_params(cfg, seed),
+            lambda params, x, tap=None: forward(cfg, params, x, tap),
+            cfg,
+        )
+
+    return factory
+
+
+VIT_CONFIGS = {
+    "vit_s": ViTConfig("vit_s", dim=96, depth=4, heads=3, mlp=192),
+    "vit_b": ViTConfig("vit_b", dim=192, depth=6, heads=6, mlp=384),
+    "deit_s": ViTConfig("deit_s", dim=128, depth=5, heads=4, mlp=256),
+    "swin_t": ViTConfig("swin_t", dim=96, depth=4, heads=3, mlp=192, window=2),
+    "swin_s": ViTConfig("swin_s", dim=128, depth=6, heads=4, mlp=256, window=2),
+}
+
+for _name, _cfg in VIT_CONFIGS.items():
+    register(_name)(_make(_cfg))

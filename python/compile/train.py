@@ -1,0 +1,116 @@
+"""Build-time training of the model zoo on SynthImageNet.
+
+The COMQ paper starts from pretrained ImageNet checkpoints (PyTorch /
+timm). We substitute build-time training of the tiny zoo on the seeded
+synthetic dataset: the point is that calibration features X come from a
+*really trained* model, so the per-channel weight statistics and outlier
+structure that PTQ sensitivity depends on are genuine.
+
+Hand-rolled Adam (no optax in this environment); jax.grad is used *only*
+here, at build time — the quantizers themselves are backprop-free, which
+is the paper's claim.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as synth
+from .nets import build_model
+from .nets.common import Tap
+
+
+def cross_entropy(logits, labels, smooth: float = 0.0):
+    n_cls = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, n_cls)
+    if smooth > 0:
+        onehot = onehot * (1.0 - smooth) + smooth / n_cls
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def adam_init(params):
+    return (
+        {k: jnp.zeros_like(v) for k, v in params.items()},
+        {k: jnp.zeros_like(v) for k, v in params.items()},
+    )
+
+
+def adam_step(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        m2 = b1 * m[k] + (1 - b1) * grads[k]
+        v2 = b2 * v[k] + (1 - b2) * grads[k] ** 2
+        mh = m2 / (1 - b1**step)
+        vh = v2 / (1 - b2**step)
+        out_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+        out_m[k] = m2
+        out_v[k] = v2
+    return out_p, out_m, out_v
+
+
+# per-model training recipes; DeiT-style entries use label smoothing
+RECIPES = {
+    "vit_s": dict(steps=500, lr=1e-3, smooth=0.0),
+    "vit_b": dict(steps=500, lr=8e-4, smooth=0.0),
+    "deit_s": dict(steps=600, lr=1e-3, smooth=0.1),
+    "swin_t": dict(steps=500, lr=1e-3, smooth=0.0),
+    "swin_s": dict(steps=500, lr=8e-4, smooth=0.1),
+    "resnet_lite": dict(steps=600, lr=2e-3, smooth=0.0),
+    "cnn_s": dict(steps=600, lr=2e-3, smooth=0.0),
+    "mobilenet_lite": dict(steps=700, lr=2e-3, smooth=0.0),
+}
+
+
+def accuracy(forward, params, images, labels, batch: int = 256) -> float:
+    hits = 0
+    for i in range(0, len(images), batch):
+        logits = forward(params, jnp.asarray(images[i : i + batch]), Tap())
+        hits += int((np.argmax(np.asarray(logits), -1) == labels[i : i + batch]).sum())
+    return hits / len(images)
+
+
+def train_model(
+    name: str,
+    train_split,
+    val_split,
+    seed: int = 0,
+    batch: int = 64,
+    verbose: bool = True,
+) -> tuple[dict, float]:
+    """Train one zoo model; returns (numpy params, val top-1)."""
+    init, forward, cfg = build_model(name)
+    recipe = RECIPES[name]
+    params = {k: jnp.asarray(v) for k, v in init(seed).items()}
+    m, v = adam_init(params)
+    imgs, labels = train_split
+
+    def loss_fn(p, x, y):
+        return cross_entropy(forward(p, x, Tap()), y, recipe["smooth"])
+
+    @jax.jit
+    def step_fn(p, m, v, x, y, step, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p2, m2, v2 = adam_step(p, grads, m, v, step, lr)
+        return p2, m2, v2, loss
+
+    rng = np.random.default_rng(seed + 99)
+    steps = recipe["steps"]
+    t0 = time.time()
+    loss = float("nan")
+    for s in range(1, steps + 1):
+        idx = rng.integers(0, len(imgs), batch)
+        lr = recipe["lr"] * 0.5 * (1 + np.cos(np.pi * s / steps))  # cosine decay
+        params, m, v, loss = step_fn(
+            params, m, v, jnp.asarray(imgs[idx]), jnp.asarray(labels[idx]), s, lr
+        )
+        if verbose and s % 200 == 0:
+            print(f"    [{name}] step {s}/{steps} loss={float(loss):.3f}")
+    acc = accuracy(forward, params, *val_split)
+    if verbose:
+        print(f"    [{name}] done in {time.time() - t0:.1f}s val_top1={acc:.4f}")
+    return {k: np.asarray(p) for k, p in params.items()}, acc

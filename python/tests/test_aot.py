@@ -1,0 +1,88 @@
+"""AOT lowering: HLO text emission, parameter-order stability, and the
+anchor that keeps tail parameters in the calib graph signature."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as graphs
+from compile.nets import build_model
+from compile.nets.vit import VIT_CONFIGS, quant_layers
+
+
+def entry_input_arity(hlo_text: str) -> int:
+    """Number of entry-computation inputs in HLO text."""
+    layout = hlo_text.split("entry_computation_layout={(", 1)[1]
+    inputs = layout.split(")->", 1)[0]
+    return inputs.count("f32[")
+
+
+def small_model():
+    name = "vit_s"
+    init, fwd, cfg = build_model(name)
+    params = init(0)
+    return name, params, quant_layers(cfg), cfg
+
+
+def test_param_order_is_sorted():
+    _, params, _, _ = small_model()
+    order = graphs.param_order(params)
+    assert order == sorted(params)
+    flat = graphs.pack_params(params)
+    back = graphs.unpack_params(order, flat)
+    assert set(back) == set(params)
+
+
+def test_forward_graph_lowers_to_hlo_text():
+    name, params, layers, cfg = small_model()
+    names = graphs.param_order(params)
+    specs = [jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in names]
+    xspec = jax.ShapeDtypeStruct((2, cfg.img, cfg.img, 3), jnp.float32)
+    fwd = graphs.make_forward(name, names)
+    text = graphs.lower_to_text(fwd, (*specs, xspec))
+    assert "HloModule" in text
+    assert entry_input_arity(text) == len(names) + 1
+
+
+def test_calib_graph_keeps_all_params():
+    # the anchor output must keep head/W+head/b in the signature (XLA
+    # would otherwise DCE them and the positional feed would break)
+    name, params, layers, cfg = small_model()
+    names = graphs.param_order(params)
+    specs = [jax.ShapeDtypeStruct(params[k].shape, jnp.float32) for k in names]
+    xspec = jax.ShapeDtypeStruct((2, cfg.img, cfg.img, 3), jnp.float32)
+    stats = graphs.make_calib_stats(name, names, layers)
+    text = graphs.lower_to_text(stats, (*specs, xspec))
+    assert entry_input_arity(text) == len(names) + 1
+
+
+def test_sweep_graph_output_shapes():
+    fn = graphs.make_sweep(per_channel=True)
+    m, n = 8, 6
+    g = jnp.eye(m, dtype=jnp.float32) * 2.0
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((m, n)), jnp.float32)
+    delta = jnp.full((n,), 0.1, jnp.float32)
+    lo = jnp.full((n,), -8.0, jnp.float32)
+    hi = jnp.full((n,), 7.0, jnp.float32)
+    q0 = w / delta
+    q1, d1 = fn(g, w, q0, delta, lo, hi)
+    assert q1.shape == (m, n)
+    assert d1.shape == (n,)
+    # with an identity-ish Gram the sweep equals plain rounding
+    expected = np.clip(np.round(np.asarray(w) / 0.1), -8, 7)
+    np.testing.assert_array_equal(np.asarray(q1), expected)
+
+
+def test_actq_graph_distinct_from_fp():
+    name, params, layers, cfg = small_model()
+    names = graphs.param_order(params)
+    fwd_fp = graphs.make_forward(name, names)
+    fwd_q = graphs.make_forward_actq(name, names, layers, bits=2)
+    flat = [jnp.asarray(v) for v in graphs.pack_params(params)]
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, cfg.img, cfg.img, 3)), jnp.float32)
+    actq = jnp.tile(jnp.asarray([[0.25, -2.0]], jnp.float32), (len(layers), 1))
+    out_fp = fwd_fp(*flat, x)[0]
+    out_q = fwd_q(*flat, actq, x)[0]
+    assert not np.allclose(np.asarray(out_fp), np.asarray(out_q))

@@ -1,0 +1,63 @@
+"""CTS interchange format: python-side round-trip + hypothesis fuzzing.
+
+The Rust reader (rust/src/tensorstore) parses the same bytes; its tests
+include a hand-written fixture matching this writer.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.export import read_cts, write_cts
+
+
+def test_roundtrip_basic(tmp_path):
+    p = str(tmp_path / "t.cts")
+    tensors = {
+        "a/W": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "labels": np.array([1, -2, 3], np.int32),
+        "scalarish": np.array([3.5], np.float32),
+    }
+    write_cts(p, tensors)
+    back = read_cts(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    ndim=st.integers(1, 4),
+    seed=st.integers(0, 1000),
+    dtype=st.sampled_from(["f32", "i32"]),
+)
+def test_roundtrip_fuzz(ndim, seed, dtype):
+    import tempfile
+
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 5, ndim))
+    if dtype == "f32":
+        arr = rng.standard_normal(shape).astype(np.float32)
+    else:
+        arr = rng.integers(-1000, 1000, shape).astype(np.int32)
+    with tempfile.TemporaryDirectory() as d:
+        p = f"{d}/fuzz{seed}.cts"
+        write_cts(p, {"x": arr})
+        back = read_cts(p)["x"]
+    np.testing.assert_array_equal(back, arr)
+    assert back.shape == arr.shape
+
+
+def test_rejects_bad_magic(tmp_path):
+    p = str(tmp_path / "bad.cts")
+    with open(p, "wb") as f:
+        f.write(b"NOPE\x00\x00\x00\x00")
+    with pytest.raises(AssertionError):
+        read_cts(p)
+
+
+def test_float64_coerced(tmp_path):
+    p = str(tmp_path / "f64.cts")
+    write_cts(p, {"x": np.array([1.0, 2.0])})  # float64 input
+    assert read_cts(p)["x"].dtype == np.float32

@@ -1,0 +1,90 @@
+"""L2 model zoo: shapes, tap coverage, and training-free sanity."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import data as synth
+from compile.nets import MODEL_REGISTRY, build_model
+from compile.nets.cnn import CNN_CONFIGS
+from compile.nets.cnn import quant_layers as cnn_layers
+from compile.nets.common import Tap
+from compile.nets.vit import VIT_CONFIGS
+from compile.nets.vit import quant_layers as vit_layers
+
+ALL = list(VIT_CONFIGS) + list(CNN_CONFIGS)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_shapes(name):
+    init, fwd, cfg = build_model(name)
+    params = {k: jnp.asarray(v) for k, v in init(0).items()}
+    x = jnp.zeros((2, cfg.img, cfg.img, 3), jnp.float32)
+    logits = fwd(params, x, Tap())
+    assert logits.shape == (2, cfg.classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_stats_tap_visits_every_quant_layer(name):
+    init, fwd, cfg = build_model(name)
+    params = {k: jnp.asarray(v) for k, v in init(0).items()}
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, cfg.img, cfg.img, 3)), jnp.float32)
+    tap = Tap(mode="stats")
+    fwd(params, x, tap)
+    expected = vit_layers(cfg) if name in VIT_CONFIGS else cnn_layers(cfg)
+    assert set(tap.stats) == set(expected)
+    # Gram dims match the weight rows
+    for nm in expected:
+        g = np.asarray(tap.stats[nm][0])
+        w = np.asarray(params[f"{nm}/W"])
+        if g.ndim == 3:  # grouped (depthwise)
+            assert g.shape[1] == w.shape[0]
+            assert g.shape[0] == w.shape[1]
+        else:
+            assert g.shape == (w.shape[0], w.shape[0])
+
+
+@pytest.mark.parametrize("name", ["vit_s", "resnet_lite", "mobilenet_lite"])
+def test_actq_tap_changes_output(name):
+    init, fwd, cfg = build_model(name)
+    params = {k: jnp.asarray(v) for k, v in init(0).items()}
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, cfg.img, cfg.img, 3)), jnp.float32)
+    layers = vit_layers(cfg) if name in VIT_CONFIGS else cnn_layers(cfg)
+    tap = Tap(mode="actq", bits=2)
+    tap.act_params = {nm: (jnp.float32(0.5), jnp.float32(-2.0)) for nm in layers}
+    out_q = fwd(params, x, tap)
+    out_fp = fwd(params, x, Tap())
+    assert not np.allclose(np.asarray(out_q), np.asarray(out_fp))
+    assert np.isfinite(np.asarray(out_q)).all()
+
+
+def test_registry_complete():
+    for name in ALL:
+        assert name in MODEL_REGISTRY
+
+
+def test_dataset_determinism_and_balance():
+    a = synth.make_split(256, seed=5)
+    b = synth.make_split(256, seed=5)
+    assert (a[0] == b[0]).all() and (a[1] == b[1]).all()
+    c = synth.make_split(256, seed=6)
+    assert not (a[0] == c[0]).all()
+    # all classes appear in a reasonably sized split
+    assert len(np.unique(a[1])) == synth.NUM_CLASSES
+
+
+def test_swin_windowing_changes_attention():
+    # same dims but window vs global must differ after random init
+    from compile.nets.vit import ViTConfig, forward, init_params
+
+    cfg_g = ViTConfig("g", dim=32, depth=2, heads=2, mlp=64, window=0)
+    cfg_w = ViTConfig("w", dim=32, depth=2, heads=2, mlp=64, window=2)
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg_g, 0).items()}
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 3)), jnp.float32)
+    out_g = forward(cfg_g, params, x, Tap())
+    out_w = forward(cfg_w, params, x, Tap())
+    assert not np.allclose(np.asarray(out_g), np.asarray(out_w))

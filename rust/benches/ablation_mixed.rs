@@ -1,0 +1,61 @@
+//! Ablation (paper's future-work extension): mixed-precision bit
+//! allocation vs uniform bit-widths at matched average weight budgets.
+//! The design-choice question from DESIGN.md: does the greedy
+//! marginal-utility allocator beat uniform COMQ at the same footprint?
+
+use comq::bench::suite::Suite;
+use comq::bench::{pct, Table};
+use comq::coordinator::mixed_precision_quantize;
+use comq::eval::{evaluate, ActMode};
+use comq::calib::EngineKind;
+use comq::quant::QuantConfig;
+
+const MODELS: &[&str] = &["vit_s", "resnet_lite"];
+const BUDGETS: &[f64] = &[2.5, 3.0, 3.5, 4.0];
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::load()?;
+    let mut table = Table::new(
+        "ablation — mixed-precision allocation vs uniform COMQ (top-1 %)",
+        &["model", "avg bits", "uniform", "mixed", "mixed err/uniform err"],
+    );
+    for mname in MODELS {
+        let model = suite.model(mname)?;
+        let (stats, _) = suite.stats(&model, 1024)?;
+        for &budget in BUDGETS {
+            // uniform at the nearest integer width
+            let uni_bits = budget.round() as u32;
+            let uni = suite.run(
+                &model,
+                "comq",
+                uni_bits,
+                comq::quant::grid::Scheme::PerChannel,
+                comq::quant::OrderKind::GreedyPerColumn,
+                Suite::default_lam(uni_bits),
+                1024,
+                None,
+            )?;
+            let base = QuantConfig { lam: if budget <= 2.5 { 0.8 } else { 1.0 }, ..Default::default() };
+            let (qm, rep) =
+                mixed_precision_quantize(&suite.manifest, &model, &stats, &base, budget)?;
+            let acc = evaluate(
+                &suite.manifest,
+                &qm,
+                &suite.dataset.val_images,
+                &suite.dataset.val_labels,
+                EngineKind::Pjrt,
+                &ActMode::Fp,
+            )?;
+            table.row(vec![
+                mname.to_string(),
+                format!("{budget:.1} (uni {uni_bits})"),
+                pct(uni.top1),
+                pct(acc.top1),
+                format!("{:.3}", rep.total_err / uni.total_err().max(1e-12)),
+            ]);
+        }
+    }
+    table.print();
+    table.save_json("ablation_mixed");
+    Ok(())
+}

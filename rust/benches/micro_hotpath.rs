@@ -1,0 +1,139 @@
+//! Hot-path microbenchmarks (the §Perf instrument):
+//!
+//!  * COMQ sweep ns/coordinate — residual-domain vs Gram-domain engine
+//!    at the paper's layer shapes and calibration sizes (the Gram
+//!    reformulation removes the batch dimension from the hot loop);
+//!  * Gram build (XᵀX) throughput;
+//!  * threading scaling of the column-parallel sweep;
+//!  * PJRT sweep-kernel dispatch overhead vs native.
+
+use comq::bench::{time_budget, Table};
+use comq::quant::grid::Scheme;
+use comq::quant::{comq_gram, comq_residual, GramSet, OrderKind, QuantConfig};
+use comq::tensor::{matmul_at_a, Tensor};
+use comq::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = QuantConfig {
+        bits: 4,
+        scheme: Scheme::PerChannel,
+        order: OrderKind::GreedyPerColumn,
+        iters: 3,
+        lam: 1.0,
+    };
+
+    // -- engine comparison across (b, m, n) ------------------------------
+    let mut table = Table::new(
+        "micro — COMQ engines, ns per coordinate-update (K=3)",
+        &["shape (b,m,n)", "residual ns/coord", "gram ns/coord", "speedup"],
+    );
+    for &(b, m, n) in &[
+        (256usize, 48usize, 96usize),
+        (1024, 96, 288),
+        (4096, 96, 288),
+        (4096, 192, 384),
+        (16384, 144, 32),
+    ] {
+        let mut rng = Rng::new(1);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n)).scale(0.4);
+        let gram = GramSet::Shared(matmul_at_a(&x));
+        let coords = (cfg.iters * m * n) as f64;
+
+        let t_res = time_budget(0.5, 20, || {
+            std::hint::black_box(comq_residual(&x, &w, &cfg));
+        });
+        let t_gram = time_budget(0.5, 50, || {
+            std::hint::black_box(comq_gram(&gram, &w, &cfg));
+        });
+        table.row(vec![
+            format!("({b},{m},{n})"),
+            format!("{:.1}", t_res.mean * 1e9 / coords),
+            format!("{:.1}", t_gram.mean * 1e9 / coords),
+            format!("{:.1}x", t_res.mean / t_gram.mean),
+        ]);
+    }
+    table.print();
+    table.save_json("micro_engines");
+
+    // -- Gram build throughput -------------------------------------------
+    let mut table = Table::new(
+        "micro — calibration Gram build G = XᵀX",
+        &["shape (b,m)", "ms", "GFLOP/s"],
+    );
+    for &(b, m) in &[(2048usize, 96usize), (8192, 144), (16384, 288), (65536, 144)] {
+        let mut rng = Rng::new(2);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let t = time_budget(0.5, 30, || {
+            std::hint::black_box(matmul_at_a(&x));
+        });
+        let flops = b as f64 * m as f64 * m as f64; // symmetric: ~b·m²
+        table.row(vec![
+            format!("({b},{m})"),
+            format!("{:.2}", t.mean * 1e3),
+            format!("{:.2}", flops / t.mean / 1e9),
+        ]);
+    }
+    table.print();
+    table.save_json("micro_gram");
+
+    // -- thread scaling ----------------------------------------------------
+    let mut table = Table::new(
+        "micro — sweep thread scaling (m=192, n=384)",
+        &["threads", "ms/quantize", "speedup"],
+    );
+    {
+        let (b, m, n) = (4096usize, 192usize, 384usize);
+        let mut rng = Rng::new(3);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n)).scale(0.4);
+        let gram = GramSet::Shared(matmul_at_a(&x));
+        let mut base = 0.0;
+        for threads in [1usize, 2, 4, 8] {
+            std::env::set_var("COMQ_THREADS", threads.to_string());
+            let t = time_budget(0.5, 50, || {
+                std::hint::black_box(comq_gram(&gram, &w, &cfg));
+            });
+            if threads == 1 {
+                base = t.mean;
+            }
+            table.row(vec![
+                threads.to_string(),
+                format!("{:.2}", t.mean * 1e3),
+                format!("{:.2}x", base / t.mean),
+            ]);
+        }
+        std::env::remove_var("COMQ_THREADS");
+    }
+    table.print();
+    table.save_json("micro_threads");
+
+    // -- PJRT kernel dispatch vs native ------------------------------------
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if root.join("manifest.json").exists() {
+        let manifest = comq::manifest::Manifest::load(&root)?;
+        if let Some(sw) = manifest.sweeps.iter().find(|s| s.per_channel && s.m >= 96) {
+            let mut table = Table::new(
+                &format!("micro — COMQ full quantize, native vs PJRT Pallas kernel (m={}, n={})", sw.m, sw.n),
+                &["engine", "ms/layer"],
+            );
+            let mut rng = Rng::new(4);
+            let x = Tensor::new(&[1024, sw.m], rng.normal_vec(1024 * sw.m));
+            let w = Tensor::new(&[sw.m, sw.n], rng.normal_vec(sw.m * sw.n)).scale(0.4);
+            let gram = GramSet::Shared(matmul_at_a(&x));
+            let t_nat = time_budget(0.5, 50, || {
+                std::hint::black_box(comq_gram(&gram, &w, &cfg));
+            });
+            let t_pjrt = time_budget(1.0, 20, || {
+                std::hint::black_box(
+                    comq::coordinator::pjrt_kernel::comq_pjrt(&manifest, &gram, &w, &cfg).unwrap(),
+                );
+            });
+            table.row(vec!["native (gram)".into(), format!("{:.2}", t_nat.mean * 1e3)]);
+            table.row(vec!["pjrt-kernel".into(), format!("{:.2}", t_pjrt.mean * 1e3)]);
+            table.print();
+            table.save_json("micro_pjrt_kernel");
+        }
+    }
+    Ok(())
+}

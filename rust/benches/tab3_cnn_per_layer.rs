@@ -1,0 +1,57 @@
+//! Paper Table 3: CNNs with *per-layer* weight-only uniform quantization
+//! at 4/3 bits. "Ours†" is cyclic COMQ, "Ours" greedy COMQ, compared to
+//! the calibration-free (rtn) and Hessian-based (obq) baselines standing
+//! in for Bit-split/AdaQuant.
+
+use comq::bench::suite::Suite;
+use comq::bench::{pct, Table};
+use comq::quant::grid::Scheme;
+use comq::quant::OrderKind;
+
+const MODELS: &[&str] = &["resnet_lite", "cnn_s", "mobilenet_lite"];
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::load()?;
+    let mut headers = vec!["Method".to_string(), "WBit".to_string()];
+    headers.extend(MODELS.iter().map(|m| m.to_string()));
+    let mut table = Table::new(
+        "Tab.3 — CNNs, per-layer weight-only top-1 (%)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    let mut row = vec!["Baseline".into(), "32".into()];
+    for m in MODELS {
+        row.push(pct(suite.manifest.model(m)?.fp_top1));
+    }
+    table.row(row);
+
+    for bits in [4u32, 3] {
+        for (label, method, order) in [
+            ("rtn", "rtn", OrderKind::Cyclic),
+            ("bitsplit", "bitsplit", OrderKind::Cyclic),
+            ("obq", "obq", OrderKind::Cyclic),
+            ("Ours† (cyclic)", "comq", OrderKind::Cyclic),
+            ("Ours (greedy)", "comq", OrderKind::GreedyPerColumn),
+        ] {
+            let mut row = vec![label.to_string(), bits.to_string()];
+            for mname in MODELS {
+                let model = suite.model(mname)?;
+                let rep = suite.run(
+                    &model,
+                    method,
+                    bits,
+                    Scheme::PerLayer,
+                    order,
+                    1.0,
+                    2048,
+                    None,
+                )?;
+                row.push(pct(rep.top1));
+            }
+            table.row(row);
+        }
+    }
+    table.print();
+    table.save_json("tab3_cnn_per_layer");
+    Ok(())
+}

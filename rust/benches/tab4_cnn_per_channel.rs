@@ -1,0 +1,51 @@
+//! Paper Table 4: CNNs with *per-channel* weight-only quantization at
+//! 4/3/2 bits — COMQ vs the full baseline set (stand-ins for Bit-split /
+//! AdaRound / FlexRound / BRECQ / OBQ).
+
+use comq::bench::suite::Suite;
+use comq::bench::{pct, Table};
+use comq::quant::grid::Scheme;
+use comq::quant::OrderKind;
+
+const MODELS: &[&str] = &["resnet_lite", "cnn_s", "mobilenet_lite"];
+const METHODS: &[&str] = &["rtn", "bitsplit", "adaround-lite", "gpfq", "obq", "comq"];
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::load()?;
+    let mut headers = vec!["Method".to_string(), "Bit (W/A)".to_string()];
+    headers.extend(MODELS.iter().map(|m| m.to_string()));
+    let mut table = Table::new(
+        "Tab.4 — CNNs, per-channel weight-only top-1 (%)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    let mut row = vec!["Baseline".into(), "32/32".into()];
+    for m in MODELS {
+        row.push(pct(suite.manifest.model(m)?.fp_top1));
+    }
+    table.row(row);
+
+    for bits in [4u32, 3, 2] {
+        for method in METHODS {
+            let mut row = vec![method.to_string(), format!("{bits}/32")];
+            for mname in MODELS {
+                let model = suite.model(mname)?;
+                let rep = suite.run(
+                    &model,
+                    method,
+                    bits,
+                    Scheme::PerChannel,
+                    OrderKind::GreedyPerColumn,
+                    Suite::default_lam(bits),
+                    2048,
+                    None,
+                )?;
+                row.push(pct(rep.top1));
+            }
+            table.row(row);
+        }
+    }
+    table.print();
+    table.save_json("tab4_cnn_per_channel");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Paper Table 5: CNNs under full per-channel quantization (W4A4):
+//! weights by each method + shared 4-bit activation quantization.
+
+use comq::bench::suite::Suite;
+use comq::bench::{pct, Table};
+use comq::quant::grid::Scheme;
+use comq::quant::OrderKind;
+
+const MODELS: &[&str] = &["resnet_lite", "cnn_s", "mobilenet_lite"];
+const METHODS: &[&str] = &["rtn", "adaround-lite", "gpfq", "obq", "comq"];
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::load()?;
+    let mut headers = vec!["Method".to_string(), "Bit (W/A)".to_string()];
+    headers.extend(MODELS.iter().map(|m| m.to_string()));
+    let mut table = Table::new(
+        "Tab.5 — CNNs, per-channel full quantization top-1 (%)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    let mut row = vec!["Baseline".into(), "32/32".into()];
+    for m in MODELS {
+        row.push(pct(suite.manifest.model(m)?.fp_top1));
+    }
+    table.row(row);
+
+    for method in METHODS {
+        let mut row = vec![method.to_string(), "4/4".into()];
+        for mname in MODELS {
+            let model = suite.model(mname)?;
+            let rep = suite.run(
+                &model,
+                method,
+                4,
+                Scheme::PerChannel,
+                OrderKind::GreedyPerColumn,
+                1.0,
+                2048,
+                Some(4),
+            )?;
+            row.push(pct(rep.top1));
+        }
+        table.row(row);
+    }
+    table.print();
+    table.save_json("tab5_cnn_full_quant");
+    Ok(())
+}

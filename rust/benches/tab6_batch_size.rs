@@ -1,0 +1,45 @@
+//! Paper Table 6: accuracy vs calibration batch size, 4W32A per-channel
+//! COMQ. The claim: COMQ is robust down to small calibration sets (its
+//! per-coordinate updates only need well-conditioned Gram statistics).
+
+use comq::bench::suite::Suite;
+use comq::bench::{pct, Table};
+use comq::quant::grid::Scheme;
+use comq::quant::OrderKind;
+
+const MODELS: &[&str] = &["resnet_lite", "cnn_s", "vit_b"];
+const SIZES: &[usize] = &[128, 256, 512, 1024, 2048];
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::load()?;
+    let mut headers = vec!["Model".to_string()];
+    headers.extend(SIZES.iter().map(|s| s.to_string()));
+    headers.push("FP".into());
+    let mut table = Table::new(
+        "Tab.6 — top-1 (%) vs calibration batch size (4W32A per-channel COMQ)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    for mname in MODELS {
+        let model = suite.model(mname)?;
+        let mut row = vec![mname.to_string()];
+        for &sz in SIZES {
+            let rep = suite.run(
+                &model,
+                "comq",
+                4,
+                Scheme::PerChannel,
+                OrderKind::GreedyPerColumn,
+                1.0,
+                sz,
+                None,
+            )?;
+            row.push(pct(rep.top1));
+        }
+        row.push(pct(model.info.fp_top1));
+        table.row(row);
+    }
+    table.print();
+    table.save_json("tab6_batch_size");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Paper Table 7: accuracy vs COMQ iteration count K (4W32A per-layer).
+//! The claim: K = 3–4 is where the coordinate descent converges; more
+//! sweeps do not keep helping.
+
+use comq::bench::suite::Suite;
+use comq::bench::{pct, Table};
+use comq::calib::EngineKind;
+use comq::coordinator::{quantize_model, PipelineOptions};
+use comq::quant::grid::Scheme;
+use comq::quant::{OrderKind, QuantConfig};
+
+const MODELS: &[&str] = &["resnet_lite", "cnn_s"];
+const KS: &[usize] = &[1, 2, 3, 4, 5];
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::load()?;
+    let mut headers = vec!["Model".to_string()];
+    headers.extend(KS.iter().map(|k| format!("K={k}")));
+    headers.push("FP".into());
+    let mut table = Table::new(
+        "Tab.7 — top-1 (%) vs iteration count K (4W32A per-layer COMQ)",
+        &headers.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    for mname in MODELS {
+        let model = suite.model(mname)?;
+        let mut row = vec![mname.to_string()];
+        for &k in KS {
+            let opts = PipelineOptions {
+                engine: EngineKind::Pjrt,
+                calib_size: 2048,
+                qcfg: QuantConfig {
+                    bits: 4,
+                    scheme: Scheme::PerLayer,
+                    order: OrderKind::GreedyPerColumn,
+                    iters: k,
+                    lam: 1.0,
+                },
+                ..Default::default()
+            };
+            let (_qm, rep) = quantize_model(&suite.manifest, &model, &suite.dataset, &opts)?;
+            row.push(pct(rep.top1));
+        }
+        row.push(pct(model.info.fp_top1));
+        table.row(row);
+    }
+    table.print();
+    table.save_json("tab7_iterations");
+    Ok(())
+}

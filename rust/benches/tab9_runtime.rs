@@ -1,0 +1,68 @@
+//! Paper Table 9 (appendix): wall-clock runtime of the quantization pass
+//! per method on the ResNet stand-in (4W32A per-channel). The paper's
+//! claim is a ~5x gap (COMQ 12 min vs OBQ 65 min / AdaRound 55 min on
+//! their testbed); here every method runs on identical calibration
+//! statistics so the ratio isolates algorithmic cost.
+//!
+//! Also reports the COMQ sweep through the PJRT Pallas kernel path.
+
+use comq::bench::suite::Suite;
+use comq::bench::Table;
+use comq::calib::EngineKind;
+use comq::coordinator::{quantize_model, PipelineOptions, QuantEngine};
+use comq::quant::QuantConfig;
+use comq::util::stats;
+
+const METHODS: &[&str] = &["adaround-lite", "gpfq", "obq", "comq", "comq-cyclic"];
+const REPS: usize = 5;
+
+fn main() -> anyhow::Result<()> {
+    let suite = Suite::load()?;
+    let model = suite.model("resnet_lite")?;
+    let mut table = Table::new(
+        "Tab.9 — quantization runtime, resnet_lite 4W32A per-channel",
+        &["Method", "quant secs (median)", "± std", "vs comq"],
+    );
+
+    let run = |method: &str, qe: QuantEngine| -> anyhow::Result<Vec<f64>> {
+        let mut secs = Vec::new();
+        for _ in 0..REPS {
+            let opts = PipelineOptions {
+                method: method.into(),
+                engine: EngineKind::Pjrt,
+                quant_engine: qe,
+                calib_size: 2048,
+                skip_eval: true,
+                qcfg: QuantConfig { bits: 4, ..Default::default() },
+                ..Default::default()
+            };
+            let (_qm, rep) = quantize_model(&suite.manifest, &model, &suite.dataset, &opts)?;
+            secs.push(rep.quant_secs);
+        }
+        Ok(secs)
+    };
+
+    let comq_med = stats::quantile(&run("comq", QuantEngine::Native)?, 0.5);
+    for method in METHODS {
+        let secs = run(method, QuantEngine::Native)?;
+        let med = stats::quantile(&secs, 0.5);
+        table.row(vec![
+            method.to_string(),
+            format!("{med:.3}"),
+            format!("{:.3}", stats::std_dev(&secs)),
+            format!("{:.2}x", med / comq_med),
+        ]);
+    }
+    let secs = run("comq", QuantEngine::PjrtKernel)?;
+    let med = stats::quantile(&secs, 0.5);
+    table.row(vec![
+        "comq (pjrt-kernel)".into(),
+        format!("{med:.3}"),
+        format!("{:.3}", stats::std_dev(&secs)),
+        format!("{:.2}x", med / comq_med),
+    ]);
+
+    table.print();
+    table.save_json("tab9_runtime");
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! In-tree micro/macro benchmark harness (criterion is not in the
+//! offline vendor set). Used by every `rust/benches/*` binary.
+//!
+//! Two facilities:
+//! * `time_it` — warmup + repeated timing with mean/std/p50/p95;
+//! * `Table`   — aligned table printing matching the paper's table rows,
+//!   plus JSON dumping so EXPERIMENTS.md entries are regenerable.
+
+pub mod suite;
+
+use crate::util::{stats, Json, Timer};
+
+/// Timing summary in seconds.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub iters: usize,
+}
+
+impl Timing {
+    pub fn fmt_ms(&self) -> String {
+        format!("{:.3} ms ± {:.3} (p95 {:.3})", self.mean * 1e3, self.std * 1e3, self.p95 * 1e3)
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs then `iters` recorded ones.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    Timing {
+        mean: stats::mean(&samples),
+        std: stats::std_dev(&samples),
+        p50: stats::quantile(&samples, 0.5),
+        p95: stats::quantile(&samples, 0.95),
+        iters,
+    }
+}
+
+/// Adaptive variant: runs until `min_secs` of samples or `max_iters`.
+pub fn time_budget<F: FnMut()>(min_secs: f64, max_iters: usize, mut f: F) -> Timing {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    while total.secs() < min_secs && samples.len() < max_iters {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    Timing {
+        mean: stats::mean(&samples),
+        std: stats::std_dev(&samples),
+        p50: stats::quantile(&samples, 0.5),
+        p95: stats::quantile(&samples, 0.95),
+        iters: samples.len(),
+    }
+}
+
+/// A paper-style results table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Dump to bench_results/<slug>.json for EXPERIMENTS.md regeneration.
+    pub fn save_json(&self, slug: &str) {
+        let dir = std::path::Path::new("bench_results");
+        let _ = std::fs::create_dir_all(dir);
+        let j = Json::obj_from(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ]);
+        let path = dir.join(format!("{slug}.json"));
+        let _ = std::fs::write(&path, j.to_string_pretty(1));
+        println!("[saved {}]", path.display());
+    }
+}
+
+/// Format an accuracy as the tables do.
+pub fn pct(x: f64) -> String {
+    if x.is_nan() {
+        "-".into()
+    } else {
+        format!("{:.2}", x * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_runs() {
+        let t = time_it(1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.mean >= 0.0);
+        assert!(t.p95 >= t.p50);
+    }
+
+    #[test]
+    fn budget_stops() {
+        let t = time_budget(0.01, 3, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(t.iters <= 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.9234), "92.34");
+        assert_eq!(pct(f64::NAN), "-");
+    }
+}

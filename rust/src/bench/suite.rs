@@ -1,0 +1,103 @@
+//! Shared scaffolding for the paper-table bench binaries
+//! (rust/benches/tab*.rs, fig3_layer_errors.rs).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::calib::{collect_stats, Dataset, EngineKind};
+use crate::coordinator::{quantize_model_with_stats, PipelineOptions, QuantReport};
+use crate::manifest::Manifest;
+use crate::model::{LayerStats, Model};
+use crate::quant::grid::Scheme;
+use crate::quant::{OrderKind, QuantConfig};
+
+type StatsMap = BTreeMap<String, LayerStats>;
+
+/// Everything a table bench needs, loaded once. Calibration statistics
+/// are cached per (model, calib size) — the table sweeps reuse one
+/// calibration pass across every method/bit configuration, exactly as a
+/// real deployment pipeline would.
+pub struct Suite {
+    pub manifest: Manifest,
+    pub dataset: Dataset,
+    stats_cache: RefCell<HashMap<(String, usize), (Rc<StatsMap>, f64)>>,
+}
+
+impl Suite {
+    /// Loads artifacts/ relative to the crate root; panics with a clear
+    /// message when `make artifacts` has not been run (benches are not
+    /// skip-silent — a bench with no data is a failure).
+    pub fn load() -> Result<Suite> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        anyhow::ensure!(
+            root.join("manifest.json").exists(),
+            "artifacts missing — run `make artifacts` first"
+        );
+        let manifest = Manifest::load(&root)?;
+        let dataset = Dataset::load(&manifest)?;
+        Ok(Suite { manifest, dataset, stats_cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn model(&self, name: &str) -> Result<Model> {
+        Model::load(&self.manifest, name)
+    }
+
+    /// Calibration statistics for (model, size), computed once (PJRT).
+    pub fn stats(&self, model: &Model, calib_size: usize) -> Result<(Rc<StatsMap>, f64)> {
+        let key = (model.info.name.clone(), calib_size);
+        if let Some(hit) = self.stats_cache.borrow().get(&key) {
+            return Ok(hit.clone());
+        }
+        let t = crate::util::Timer::start();
+        let imgs = self.dataset.calib_subset(calib_size);
+        let stats = collect_stats(&self.manifest, model, &imgs, EngineKind::Pjrt)?;
+        let entry = (Rc::new(stats), t.secs());
+        self.stats_cache.borrow_mut().insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// One full pipeline run with the common knobs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        model: &Model,
+        method: &str,
+        bits: u32,
+        scheme: Scheme,
+        order: OrderKind,
+        lam: f32,
+        calib_size: usize,
+        act_bits: Option<u32>,
+    ) -> Result<QuantReport> {
+        let opts = PipelineOptions {
+            method: method.into(),
+            engine: EngineKind::Pjrt,
+            calib_size,
+            act_bits,
+            qcfg: QuantConfig { bits, scheme, order, iters: 3, lam },
+            ..Default::default()
+        };
+        let (stats, calib_secs) = self.stats(model, calib_size)?;
+        let (_qm, report) = quantize_model_with_stats(
+            &self.manifest,
+            model,
+            &self.dataset,
+            &opts,
+            &stats,
+            calib_secs,
+        )?;
+        Ok(report)
+    }
+
+    /// Default λ used by the tables at each bit-width (Tab. 10: λ<1 at 2-bit).
+    pub fn default_lam(bits: u32) -> f32 {
+        if bits <= 2 {
+            0.8
+        } else {
+            1.0
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Calibration manager: turns raw calibration images into the per-layer
+//! sufficient statistics every quantizer consumes.
+//!
+//! Two capture engines, cross-checked by the integration tests:
+//!
+//! * **pjrt**   — runs the AOT `calib_stats` artifact (L2 graph, which
+//!   computes G = XᵀX *inside* XLA so raw activations never cross the
+//!   runtime boundary) in batches and accumulates;
+//! * **native** — runs the Rust mirror forward with a `Stats` tap.
+//!
+//! The dataset itself (SynthImageNet calib/val splits) lives in one .cts
+//! file referenced by the manifest.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::Manifest;
+use crate::model::{collect_stats_native, LayerStats, Model};
+use crate::quant::GramSet;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+use crate::tensorstore;
+
+/// Which execution engine to use for calibration & evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    Native,
+    Pjrt,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" => Some(EngineKind::Native),
+            "pjrt" => Some(EngineKind::Pjrt),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// The calibration + validation dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub calib_images: Tensor,
+    pub calib_labels: Vec<i32>,
+    pub val_images: Tensor,
+    pub val_labels: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn load(manifest: &Manifest) -> Result<Dataset> {
+        let store = tensorstore::read_store(&manifest.path(&manifest.data))
+            .context("loading dataset")?;
+        let get_t = |k: &str| -> Result<Tensor> {
+            Ok(store
+                .get(k)
+                .ok_or_else(|| anyhow!("dataset missing '{k}'"))?
+                .tensor()?
+                .clone())
+        };
+        let get_i = |k: &str| -> Result<Vec<i32>> {
+            Ok(store
+                .get(k)
+                .ok_or_else(|| anyhow!("dataset missing '{k}'"))?
+                .ints()?
+                .to_vec())
+        };
+        Ok(Dataset {
+            calib_images: get_t("calib/images")?,
+            calib_labels: get_i("calib/labels")?,
+            val_images: get_t("val/images")?,
+            val_labels: get_i("val/labels")?,
+        })
+    }
+
+    /// First `n` calibration images (paper Tab. 6 sweeps this).
+    pub fn calib_subset(&self, n: usize) -> Tensor {
+        let total = self.calib_images.shape()[0];
+        let n = n.min(total);
+        let elems: usize = self.calib_images.shape()[1..].iter().product();
+        let mut shape = self.calib_images.shape().to_vec();
+        shape[0] = n;
+        Tensor::new(&shape, self.calib_images.data()[..n * elems].to_vec())
+    }
+
+    /// Data-free calibration stand-in (DFQ/ZeroQ context): Gaussian
+    /// noise matched to the real calibration set's mean/std. The
+    /// ablation bench measures how much COMQ actually depends on *real*
+    /// calibration data versus merely well-scaled inputs.
+    pub fn gaussian_calib(&self, n: usize, seed: u64) -> Tensor {
+        let elems: usize = self.calib_images.shape()[1..].iter().product();
+        let d = self.calib_images.data();
+        let mean = d.iter().map(|&x| x as f64).sum::<f64>() / d.len() as f64;
+        let var = d.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / d.len() as f64;
+        let (mean, std) = (mean as f32, (var.sqrt()) as f32);
+        let mut rng = crate::util::Rng::new(seed);
+        let mut shape = self.calib_images.shape().to_vec();
+        shape[0] = n;
+        let data = (0..n * elems).map(|_| mean + std * rng.normal()).collect();
+        Tensor::new(&shape, data)
+    }
+}
+
+/// Collect per-layer calibration statistics.
+pub fn collect_stats(
+    manifest: &Manifest,
+    model: &Model,
+    images: &Tensor,
+    engine: EngineKind,
+) -> Result<BTreeMap<String, LayerStats>> {
+    match engine {
+        EngineKind::Native => collect_stats_native(model, images, manifest.batch),
+        EngineKind::Pjrt => collect_stats_pjrt(manifest, model, images),
+    }
+}
+
+/// PJRT path: run the `calib_stats` artifact per batch; outputs are
+/// 3 per layer (G, min, max) in manifest layer order. The batch dimension
+/// is baked into the artifact, so the last partial batch is zero-padded
+/// and its padding rows contribute zero to G (zero images produce zero
+/// patch rows for every layer input... they do NOT — biases/LN make
+/// nonzero activations). We therefore drop a partial final batch instead
+/// of padding; calibration sizes are multiples of the AOT batch in
+/// practice (128..2048 vs batch 64).
+pub fn collect_stats_pjrt(
+    manifest: &Manifest,
+    model: &Model,
+    images: &Tensor,
+) -> Result<BTreeMap<String, LayerStats>> {
+    let engine = Engine::global()?;
+    let art = model
+        .info
+        .artifacts
+        .get("calib_stats")
+        .ok_or_else(|| anyhow!("model has no calib_stats artifact"))?;
+    let path = manifest.path(art);
+    let b = manifest.batch;
+    let n = images.shape()[0];
+    if n < b {
+        bail!("need at least {b} calibration images, got {n}");
+    }
+    let img_elems: usize = images.shape()[1..].iter().product();
+    let layers = &model.info.quant_layers;
+    let mut stats: BTreeMap<String, LayerStats> = BTreeMap::new();
+    let params = model.params_in_order();
+    let mut i = 0;
+    while i + b <= n {
+        let chunk = Tensor::new(
+            &[b, images.shape()[1], images.shape()[2], images.shape()[3]],
+            images.data()[i * img_elems..(i + b) * img_elems].to_vec(),
+        );
+        let mut inputs: Vec<&Tensor> = params.clone();
+        inputs.push(&chunk);
+        let outs = engine.run(&path, &inputs)?;
+        // +1: the anchor output that pins head params into the signature
+        if outs.len() != 3 * layers.len() + 1 {
+            bail!(
+                "calib_stats returned {} outputs, expected {}",
+                outs.len(),
+                3 * layers.len() + 1
+            );
+        }
+        for (li, l) in layers.iter().enumerate() {
+            let g = outs[3 * li].clone();
+            let mn = outs[3 * li + 1].data()[0];
+            let mx = outs[3 * li + 2].data()[0];
+            let gram = if l.grouped {
+                // [groups, kk, kk] stacked
+                let (c, kk) = (g.shape()[0], g.shape()[1]);
+                let mut groups = Vec::with_capacity(c);
+                for ch in 0..c {
+                    groups.push(Tensor::new(
+                        &[kk, kk],
+                        g.data()[ch * kk * kk..(ch + 1) * kk * kk].to_vec(),
+                    ));
+                }
+                GramSet::Grouped(groups)
+            } else {
+                GramSet::Shared(g)
+            };
+            match stats.get_mut(&l.name) {
+                Some(st) => {
+                    st.gram.accumulate(&gram);
+                    st.min = st.min.min(mn);
+                    st.max = st.max.max(mx);
+                    st.rows += b;
+                }
+                None => {
+                    stats.insert(
+                        l.name.clone(),
+                        LayerStats { gram, min: mn, max: mx, rows: b },
+                    );
+                }
+            }
+        }
+        i += b;
+    }
+    Ok(stats)
+}

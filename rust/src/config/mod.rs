@@ -1,0 +1,234 @@
+//! Run configuration: CLI flags layered over optional TOML-lite files.
+//!
+//! The TOML subset (hand-rolled; no external crates available) supports
+//! `[sections]`, `key = value` with string/int/float/bool values, and
+//! `#` comments — enough for reproducible run configs like
+//! examples/configs/*.toml.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::calib::EngineKind;
+use crate::coordinator::{PipelineOptions, QuantEngine};
+use crate::quant::grid::Scheme;
+use crate::quant::{OrderKind, QuantConfig};
+
+/// Parsed TOML-lite document: section -> key -> raw value.
+#[derive(Debug, Clone, Default)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Toml> {
+        let mut doc = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section '{raw}'", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                let mut val = line[eq + 1..].trim().to_string();
+                if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+                    || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+                {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                if key.is_empty() {
+                    bail!("line {}: empty key", lineno + 1);
+                }
+                doc.sections.entry(section.clone()).or_default().insert(key, val);
+            } else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &str) -> Result<Toml> {
+        Self::parse(&std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive: '#' outside quotes ends the line
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' | '\'' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Everything a `comq quantize` run needs.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts: String,
+    pub model: String,
+    pub opts: PipelineOptions,
+    pub report_path: Option<String>,
+    pub save_path: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts: "artifacts".into(),
+            model: "vit_s".into(),
+            opts: PipelineOptions::default(),
+            report_path: None,
+            save_path: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Layer a TOML-lite file (sections [run] and [quant]) over defaults.
+    pub fn apply_toml(&mut self, doc: &Toml) -> Result<()> {
+        if let Some(v) = doc.get("run", "artifacts") {
+            self.artifacts = v.into();
+        }
+        if let Some(v) = doc.get("run", "model") {
+            self.model = v.into();
+        }
+        if let Some(v) = doc.get("run", "engine") {
+            self.opts.engine =
+                EngineKind::parse(v).ok_or_else(|| anyhow!("bad engine '{v}'"))?;
+        }
+        if let Some(v) = doc.get("run", "quant_engine") {
+            self.opts.quant_engine =
+                QuantEngine::parse(v).ok_or_else(|| anyhow!("bad quant_engine '{v}'"))?;
+        }
+        if let Some(v) = doc.get("run", "calib_size") {
+            self.opts.calib_size = v.parse()?;
+        }
+        if let Some(v) = doc.get("run", "workers") {
+            self.opts.workers = v.parse()?;
+        }
+        if let Some(v) = doc.get("run", "report") {
+            self.report_path = Some(v.into());
+        }
+        if let Some(v) = doc.get("quant", "method") {
+            self.opts.method = v.into();
+        }
+        if let Some(v) = doc.get("quant", "bits") {
+            self.opts.qcfg.bits = v.parse()?;
+        }
+        if let Some(v) = doc.get("quant", "scheme") {
+            self.opts.qcfg.scheme =
+                Scheme::parse(v).ok_or_else(|| anyhow!("bad scheme '{v}'"))?;
+        }
+        if let Some(v) = doc.get("quant", "order") {
+            self.opts.qcfg.order =
+                OrderKind::parse(v).ok_or_else(|| anyhow!("bad order '{v}'"))?;
+        }
+        if let Some(v) = doc.get("quant", "iters") {
+            self.opts.qcfg.iters = v.parse()?;
+        }
+        if let Some(v) = doc.get("quant", "lam") {
+            self.opts.qcfg.lam = v.parse()?;
+        }
+        if let Some(v) = doc.get("quant", "act_bits") {
+            self.opts.act_bits = Some(v.parse()?);
+        }
+        if let Some(v) = doc.get("quant", "act_clip") {
+            self.opts.act_clip = v.parse()?;
+        }
+        if let Some(v) = doc.get("quant", "skip_layers") {
+            self.opts.skip_layers = v.split(',').map(|s| s.trim().to_string()).collect();
+        }
+        Ok(())
+    }
+
+    /// Build a QuantConfig override quickly (tests & benches).
+    pub fn qcfg(&self) -> &QuantConfig {
+        &self.opts.qcfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_basics() {
+        let doc = Toml::parse(
+            r#"
+# comment
+[run]
+model = "vit_s"     # inline comment
+calib_size = 512
+
+[quant]
+method = 'comq'
+bits = 3
+lam = 0.71
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("run", "model"), Some("vit_s"));
+        assert_eq!(doc.get("run", "calib_size"), Some("512"));
+        assert_eq!(doc.get("quant", "lam"), Some("0.71"));
+        assert_eq!(doc.get("quant", "missing"), None);
+    }
+
+    #[test]
+    fn toml_rejects_garbage() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue").is_err());
+        assert!(Toml::parse("= 3").is_err());
+    }
+
+    #[test]
+    fn layered_config() {
+        let mut rc = RunConfig::default();
+        let doc = Toml::parse(
+            r#"
+[run]
+model = "resnet_lite"
+engine = "native"
+workers = 4
+[quant]
+method = "obq"
+bits = 2
+scheme = "per-layer"
+order = "cyclic"
+act_bits = 4
+skip_layers = "head, embed/proj"
+"#,
+        )
+        .unwrap();
+        rc.apply_toml(&doc).unwrap();
+        assert_eq!(rc.model, "resnet_lite");
+        assert_eq!(rc.opts.method, "obq");
+        assert_eq!(rc.opts.qcfg.bits, 2);
+        assert_eq!(rc.opts.qcfg.scheme, Scheme::PerLayer);
+        assert_eq!(rc.opts.qcfg.order, OrderKind::Cyclic);
+        assert_eq!(rc.opts.act_bits, Some(4));
+        assert_eq!(rc.opts.workers, 4);
+        assert_eq!(rc.opts.skip_layers, vec!["head".to_string(), "embed/proj".to_string()]);
+    }
+
+    #[test]
+    fn bad_enum_values_error() {
+        let mut rc = RunConfig::default();
+        let doc = Toml::parse("[quant]\nscheme = \"per-banana\"").unwrap();
+        assert!(rc.apply_toml(&doc).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! The L3 coordinator: the PTQ pipeline that ties everything together.
+//!
+//! ```text
+//! checkpoint ─┐
+//! calib data ─┤→ calibration pass (G, min, max per layer; PJRT or native)
+//!             │→ layer-job scheduler (independent layers on a worker pool)
+//!             │     each job: quantizer (COMQ / baseline) on (G_l, W_l)
+//!             │→ assemble quantized model (+ activation scales)
+//!             └→ evaluation (top-1/top-5) + per-layer JSON report
+//! ```
+
+pub mod mixed;
+pub mod pipeline;
+pub mod pjrt_kernel;
+pub mod report;
+pub mod scheduler;
+
+pub use mixed::{mixed_precision_quantize, MixedReport};
+pub use pipeline::{quantize_model, quantize_model_with_stats, PipelineOptions, QuantEngine};
+pub use report::{LayerReport, QuantReport};

@@ -1,0 +1,267 @@
+//! The end-to-end PTQ pipeline (calibrate → schedule layer jobs →
+//! quantize → assemble → evaluate → report).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::calib::{self, Dataset, EngineKind};
+use crate::eval::{self, ActMode};
+use crate::manifest::Manifest;
+use crate::model::{LayerStats, Model};
+use crate::quant::actq::ActQuant;
+use crate::quant::rtn::rtn;
+use crate::quant::{make_quantizer, QuantConfig};
+use crate::util::Timer;
+
+use super::pjrt_kernel::comq_pjrt;
+use super::report::{LayerReport, QuantReport};
+use super::scheduler::run_jobs;
+
+/// Which engine executes the COMQ coordinate sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantEngine {
+    /// The in-crate Gram-domain engine (default; fastest).
+    Native,
+    /// The AOT Pallas sweep artifacts via PJRT (the L1 kernel path);
+    /// layers without a matching artifact fall back to native.
+    PjrtKernel,
+}
+
+impl QuantEngine {
+    pub fn parse(s: &str) -> Option<QuantEngine> {
+        match s {
+            "native" => Some(QuantEngine::Native),
+            "pjrt-kernel" | "pjrt" => Some(QuantEngine::PjrtKernel),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantEngine::Native => "native",
+            QuantEngine::PjrtKernel => "pjrt-kernel",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineOptions {
+    /// Quantizer registry name ("comq", "rtn", "gpfq", "obq", ...).
+    pub method: String,
+    pub qcfg: QuantConfig,
+    /// Engine for calibration capture and evaluation.
+    pub engine: EngineKind,
+    /// Engine for the COMQ sweeps themselves.
+    pub quant_engine: QuantEngine,
+    /// Number of calibration images (Tab. 6 sweeps this).
+    pub calib_size: usize,
+    /// Activation quantization bits (None = weight-only).
+    pub act_bits: Option<u32>,
+    /// Activation range clipping ratio (RepQ-style; 1.0 = full range).
+    pub act_clip: f32,
+    /// Layer names to keep in full precision.
+    pub skip_layers: Vec<String>,
+    /// Parallel layer jobs (1 = deterministic sequential).
+    pub workers: usize,
+    /// Skip the final evaluation (error-only runs in benches).
+    pub skip_eval: bool,
+}
+
+impl Default for PipelineOptions {
+    fn default() -> Self {
+        PipelineOptions {
+            method: "comq".into(),
+            qcfg: QuantConfig::default(),
+            engine: EngineKind::Native,
+            quant_engine: QuantEngine::Native,
+            calib_size: 1024,
+            act_bits: None,
+            act_clip: 0.95,
+            skip_layers: Vec::new(),
+            workers: 1,
+            skip_eval: false,
+        }
+    }
+}
+
+/// Run the full pipeline; returns the quantized model and its report.
+pub fn quantize_model(
+    manifest: &Manifest,
+    model: &Model,
+    dataset: &Dataset,
+    opts: &PipelineOptions,
+) -> Result<(Model, QuantReport)> {
+    // 1. calibration statistics
+    let t_calib = Timer::start();
+    let calib_images = dataset.calib_subset(opts.calib_size);
+    let stats = calib::collect_stats(manifest, model, &calib_images, opts.engine)?;
+    let calib_secs = t_calib.secs();
+    quantize_model_with_stats(manifest, model, dataset, opts, &stats, calib_secs)
+}
+
+/// Full pipeline output (the packed layers feed `deploy::save_packed`).
+pub struct QuantOutput {
+    pub model: Model,
+    pub report: QuantReport,
+    pub packed: Vec<crate::deploy::PackedLayer>,
+}
+
+/// Pipeline core with precomputed calibration statistics (bench sweeps
+/// reuse one calibration pass across many method/bit configurations).
+pub fn quantize_model_with_stats(
+    manifest: &Manifest,
+    model: &Model,
+    dataset: &Dataset,
+    opts: &PipelineOptions,
+    stats: &BTreeMap<String, LayerStats>,
+    calib_secs: f64,
+) -> Result<(Model, QuantReport)> {
+    let out = quantize_model_full(manifest, model, dataset, opts, stats, calib_secs)?;
+    Ok((out.model, out.report))
+}
+
+/// Pipeline core returning the packed deployment layers as well.
+pub fn quantize_model_full(
+    manifest: &Manifest,
+    model: &Model,
+    dataset: &Dataset,
+    opts: &PipelineOptions,
+    stats: &BTreeMap<String, LayerStats>,
+    calib_secs: f64,
+) -> Result<QuantOutput> {
+    let quantizer = make_quantizer(&opts.method)
+        .ok_or_else(|| anyhow!("unknown method '{}' (have {:?})", opts.method, crate::quant::QUANTIZER_NAMES))?;
+
+    // 2. layer jobs
+    let t_quant = Timer::start();
+    let jobs: Vec<_> = model
+        .info
+        .quant_layers
+        .iter()
+        .filter(|l| !opts.skip_layers.contains(&l.name))
+        .collect();
+    let results = run_jobs(jobs.len(), opts.workers, |i| {
+        let layer = jobs[i];
+        let t = Timer::start();
+        let st = &stats[&layer.name];
+        let w = model.weight(&layer.name);
+        let lq = match opts.quant_engine {
+            QuantEngine::PjrtKernel if !layer.grouped && opts.method.starts_with("comq") => {
+                match comq_pjrt(manifest, &st.gram, w, &opts.qcfg) {
+                    Ok(lq) => lq,
+                    Err(e) => {
+                        log::debug!("pjrt-kernel fallback for {}: {e}", layer.name);
+                        quantizer.quantize(&st.gram, w, &opts.qcfg)
+                    }
+                }
+            }
+            _ => quantizer.quantize(&st.gram, w, &opts.qcfg),
+        };
+        let wq = lq.dequant();
+        let err = st.gram.recon_error(w, &wq);
+        let err_rtn = st.gram.recon_error(w, &rtn(w, &opts.qcfg).dequant());
+        let packed = crate::deploy::PackedLayer::from_quant(&layer.name, &lq, opts.qcfg.bits);
+        (
+            wq,
+            packed,
+            LayerReport {
+                name: layer.name.clone(),
+                m: layer.m,
+                n: layer.n,
+                err,
+                err_rtn,
+                secs: t.secs(),
+            },
+        )
+    });
+    let mut qmodel = model.clone();
+    let mut layer_reports = Vec::with_capacity(results.len());
+    let mut packed_layers = Vec::with_capacity(results.len());
+    for (job, (wq, packed, rep)) in jobs.iter().zip(results) {
+        qmodel.set_weight(&job.name, wq);
+        layer_reports.push(rep);
+        packed_layers.push(packed);
+    }
+    let quant_secs = t_quant.secs();
+
+    // 3. activation quantization parameters (from the same calibration)
+    let act_mode = match opts.act_bits {
+        None => ActMode::Fp,
+        Some(bits) => ActMode::Quant {
+            bits,
+            params: act_params(stats, &model.info.quant_layers, bits, opts.act_clip),
+        },
+    };
+
+    // 4. evaluation
+    let t_eval = Timer::start();
+    let (top1, top5) = if opts.skip_eval {
+        (f64::NAN, f64::NAN)
+    } else {
+        let acc = eval::evaluate(
+            manifest,
+            &qmodel,
+            &dataset.val_images,
+            &dataset.val_labels,
+            opts.engine,
+            &act_mode,
+        )?;
+        (acc.top1, acc.top5)
+    };
+    let eval_secs = t_eval.secs();
+
+    let report = QuantReport {
+        model: model.info.name.clone(),
+        method: opts.method.clone(),
+        bits: opts.qcfg.bits,
+        scheme: opts.qcfg.scheme.name().into(),
+        order: opts.qcfg.order.name().into(),
+        iters: opts.qcfg.iters,
+        lam: opts.qcfg.lam,
+        calib_size: opts.calib_size,
+        act_bits: opts.act_bits,
+        engine: opts.engine.name().into(),
+        quant_engine: opts.quant_engine.name().into(),
+        fp_top1: model.info.fp_top1,
+        top1,
+        top5,
+        calib_secs,
+        quant_secs,
+        eval_secs,
+        layers: layer_reports,
+    };
+    Ok(QuantOutput { model: qmodel, report, packed: packed_layers })
+}
+
+/// Derive per-layer activation fake-quant parameters (manifest order).
+pub fn act_params(
+    stats: &BTreeMap<String, LayerStats>,
+    layers: &[crate::manifest::LayerInfo],
+    bits: u32,
+    clip: f32,
+) -> Vec<ActQuant> {
+    layers
+        .iter()
+        .map(|l| {
+            let st = &stats[&l.name];
+            ActQuant::from_range(st.min, st.max, bits, clip)
+        })
+        .collect()
+}
+
+/// Evaluate the unmodified FP model (baseline row of every table).
+pub fn eval_fp(
+    manifest: &Manifest,
+    model: &Model,
+    dataset: &Dataset,
+    engine: EngineKind,
+) -> Result<eval::Accuracy> {
+    eval::evaluate(
+        manifest,
+        model,
+        &dataset.val_images,
+        &dataset.val_labels,
+        engine,
+        &ActMode::Fp,
+    )
+}

@@ -1,0 +1,138 @@
+//! COMQ through the AOT Pallas sweep artifacts (the L1 kernel path).
+//!
+//! The Rust side owns the algorithm structure — grid init, the K-sweep
+//! loop, greedy permutation, dequantization — and dispatches each row
+//! sweep (+ scale update) to the PJRT executable lowered from
+//! python/compile/kernels/comq_pallas.py for the exact layer shape.
+//!
+//! Clip bounds are runtime inputs, so one artifact per (shape, scheme)
+//! serves every bit-width. Greedy (shared) order is realized exactly as
+//! the paper describes: permute the rows of W and both axes of G, run the
+//! cyclic kernel, inverse-permute the codes.
+
+use anyhow::{anyhow, Result};
+
+use crate::manifest::Manifest;
+use crate::quant::grid::{init_grid, LayerQuant, QuantConfig, Scheme};
+use crate::quant::order::{invert, shared_order, OrderKind};
+use crate::quant::GramSet;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+/// Quantize one (non-grouped) layer via the PJRT sweep artifact.
+pub fn comq_pjrt(
+    manifest: &Manifest,
+    gram: &GramSet,
+    w: &Tensor,
+    cfg: &QuantConfig,
+) -> Result<LayerQuant> {
+    let g = gram.shared()?;
+    let (m, n) = (w.rows(), w.cols());
+    let per_channel = cfg.scheme == Scheme::PerChannel;
+    let sweep = manifest
+        .sweep_for(m, n, per_channel)
+        .ok_or_else(|| anyhow!("no sweep artifact for shape ({m},{n},{})", cfg.scheme.name()))?;
+    let engine = Engine::global()?;
+    let path = manifest.path(&sweep.path);
+
+    // greedy-shared: pre-permute; per-column greedy is not expressible in
+    // the column-tiled kernel, so it maps to the shared variant here.
+    let perm: Option<Vec<u32>> = match cfg.order {
+        OrderKind::Cyclic => None,
+        OrderKind::GreedyShared | OrderKind::GreedyPerColumn => {
+            let diag: Vec<f32> = (0..m).map(|i| g.at2(i, i)).collect();
+            Some(shared_order(&diag, w))
+        }
+    };
+    let (gp, wp) = match &perm {
+        None => (g.clone(), w.clone()),
+        Some(p) => (permute_sym(g, p), permute_rows(w, p)),
+    };
+
+    let (delta0, zero) = init_grid(&wp, cfg);
+    let levels = cfg.levels();
+    // Q0 = W / δ (infeasible float start, same as the native engine)
+    let mut q = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            q.data_mut()[i * n + j] = wp.at2(i, j) / delta0[j];
+        }
+    }
+    let mut delta = Tensor::from_vec(delta0);
+    let lo = Tensor::from_vec(zero.clone());
+    let hi = Tensor::from_vec(zero.iter().map(|z| z + levels).collect());
+
+    for _k in 0..cfg.iters {
+        let outs = engine.run(&path, &[&gp, &wp, &q, &delta, &lo, &hi])?;
+        let mut it = outs.into_iter();
+        q = it.next().ok_or_else(|| anyhow!("sweep returned no Q"))?;
+        delta = it.next().ok_or_else(|| anyhow!("sweep returned no delta"))?;
+    }
+
+    // undo the permutation on the codes
+    let q = match &perm {
+        None => q,
+        Some(p) => permute_rows(&q, &invert(p)),
+    };
+    Ok(LayerQuant { q, delta: delta.data().to_vec(), zero })
+}
+
+/// Rows of `t` gathered by `perm`: out[i, :] = t[perm[i], :].
+fn permute_rows(t: &Tensor, perm: &[u32]) -> Tensor {
+    let (m, n) = (t.rows(), t.cols());
+    assert_eq!(perm.len(), m);
+    let mut out = Tensor::zeros(&[m, n]);
+    for (i, &p) in perm.iter().enumerate() {
+        out.data_mut()[i * n..(i + 1) * n].copy_from_slice(t.row(p as usize));
+    }
+    out
+}
+
+/// Symmetric permutation of a square matrix: out[i, j] = g[perm[i], perm[j]].
+fn permute_sym(g: &Tensor, perm: &[u32]) -> Tensor {
+    let m = g.rows();
+    let mut out = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        let pi = perm[i] as usize;
+        for j in 0..m {
+            out.data_mut()[i * m + j] = g.at2(pi, perm[j] as usize);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn permutations() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::new(&[4, 2], rng.normal_vec(8));
+        let perm = vec![2u32, 0, 3, 1];
+        let p = permute_rows(&t, &perm);
+        assert_eq!(p.row(0), t.row(2));
+        let back = permute_rows(&p, &invert(&perm));
+        assert_eq!(back, t);
+
+        let g0 = Tensor::new(&[4, 4], rng.normal_vec(16));
+        // symmetrize
+        let mut g = Tensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            for j in 0..4 {
+                let v = 0.5 * (g0.at2(i, j) + g0.at2(j, i));
+                g.data_mut()[i * 4 + j] = v;
+            }
+        }
+        let gp = permute_sym(&g, &perm);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(gp.at2(i, j), g.at2(perm[i] as usize, perm[j] as usize));
+                assert_eq!(gp.at2(i, j), gp.at2(j, i));
+            }
+        }
+        let back = permute_sym(&gp, &invert(&perm));
+        assert_eq!(back, g);
+    }
+}

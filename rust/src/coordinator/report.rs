@@ -1,0 +1,171 @@
+//! Structured run reports: per-layer reconstruction errors, timings, and
+//! end-to-end accuracy, serialized to JSON for the bench harness and
+//! EXPERIMENTS.md.
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    /// ‖X W_q − X W‖² after quantization.
+    pub err: f64,
+    /// Same error for plain RTN on the same grid (context for Fig. 3).
+    pub err_rtn: f64,
+    pub secs: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    pub model: String,
+    pub method: String,
+    pub bits: u32,
+    pub scheme: String,
+    pub order: String,
+    pub iters: usize,
+    pub lam: f32,
+    pub calib_size: usize,
+    pub act_bits: Option<u32>,
+    pub engine: String,
+    pub quant_engine: String,
+    pub fp_top1: f64,
+    pub top1: f64,
+    pub top5: f64,
+    pub calib_secs: f64,
+    pub quant_secs: f64,
+    pub eval_secs: f64,
+    pub layers: Vec<LayerReport>,
+}
+
+impl QuantReport {
+    pub fn total_err(&self) -> f64 {
+        self.layers.iter().map(|l| l.err).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj_from(vec![
+                    ("name", Json::Str(l.name.clone())),
+                    ("m", Json::Num(l.m as f64)),
+                    ("n", Json::Num(l.n as f64)),
+                    ("err", Json::Num(l.err)),
+                    ("err_rtn", Json::Num(l.err_rtn)),
+                    ("secs", Json::Num(l.secs)),
+                ])
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("bits", Json::Num(self.bits as f64)),
+            ("scheme", Json::Str(self.scheme.clone())),
+            ("order", Json::Str(self.order.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("lam", Json::Num(self.lam as f64)),
+            ("calib_size", Json::Num(self.calib_size as f64)),
+            (
+                "act_bits",
+                self.act_bits.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+            ),
+            ("engine", Json::Str(self.engine.clone())),
+            ("quant_engine", Json::Str(self.quant_engine.clone())),
+            ("fp_top1", Json::Num(self.fp_top1)),
+            ("top1", Json::Num(self.top1)),
+            ("top5", Json::Num(self.top5)),
+            ("calib_secs", Json::Num(self.calib_secs)),
+            ("quant_secs", Json::Num(self.quant_secs)),
+            ("eval_secs", Json::Num(self.eval_secs)),
+            ("total_err", Json::Num(self.total_err())),
+            ("layers", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty(1))?;
+        Ok(())
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<14} {:<13} {}W{} {:<11} {:<7} top1={:.2}% (fp {:.2}%, drop {:+.2}) err={:.4e} quant={:.2}s",
+            self.model,
+            self.method,
+            self.bits,
+            self.act_bits.map(|b| format!("A{b}")).unwrap_or_else(|| "A32".into()),
+            self.scheme,
+            self.order,
+            self.top1 * 100.0,
+            self.fp_top1 * 100.0,
+            (self.top1 - self.fp_top1) * 100.0,
+            self.total_err(),
+            self.quant_secs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> QuantReport {
+        QuantReport {
+            model: "vit_s".into(),
+            method: "comq".into(),
+            bits: 4,
+            scheme: "per-channel".into(),
+            order: "greedy".into(),
+            iters: 3,
+            lam: 1.0,
+            calib_size: 1024,
+            act_bits: None,
+            engine: "native".into(),
+            quant_engine: "native".into(),
+            fp_top1: 0.92,
+            top1: 0.91,
+            top5: 0.99,
+            calib_secs: 1.0,
+            quant_secs: 0.5,
+            eval_secs: 2.0,
+            layers: vec![LayerReport {
+                name: "head".into(),
+                m: 96,
+                n: 16,
+                err: 0.125,
+                err_rtn: 0.5,
+                secs: 0.01,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let r = sample();
+        let j = r.to_json();
+        let txt = j.to_string_pretty(1);
+        let back = Json::parse(&txt).unwrap();
+        assert_eq!(back.get("model").unwrap().str().unwrap(), "vit_s");
+        assert_eq!(back.get("top1").unwrap().num().unwrap(), 0.91);
+        assert_eq!(back.get("act_bits").unwrap(), &Json::Null);
+        assert_eq!(
+            back.get("layers").unwrap().arr().unwrap()[0]
+                .get("err")
+                .unwrap()
+                .num()
+                .unwrap(),
+            0.125
+        );
+    }
+
+    #[test]
+    fn summary_readable() {
+        let s = sample().summary();
+        assert!(s.contains("vit_s"));
+        assert!(s.contains("4W"));
+        assert!(s.contains("top1=91.00%"));
+    }
+}

@@ -1,0 +1,72 @@
+//! Layer-job scheduler: layer-wise PTQ jobs are mutually independent
+//! (layer l's calibration features come from the *full-precision* model,
+//! per the paper: "the matrix input X ... does not depend on the
+//! quantized weights from the previous layer"), so they run concurrently
+//! on a small worker pool with work-stealing via an atomic cursor.
+//!
+//! Each quantizer already parallelizes across output channels internally,
+//! so the default worker count is deliberately small; `workers = 1`
+//! degenerates to a deterministic sequential loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `job(i)` for i in 0..n on `workers` threads; results returned in
+/// index order. Panics in jobs are propagated.
+pub fn run_jobs<T, F>(n: usize, workers: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 {
+        return (0..n).map(&job).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = job(i);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("job did not complete"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = run_jobs(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sequential_path() {
+        let out = run_jobs(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty() {
+        let out: Vec<usize> = run_jobs(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = run_jobs(2, 16, |i| i);
+        assert_eq!(out, vec![0, 1]);
+    }
+}

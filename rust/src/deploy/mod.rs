@@ -1,0 +1,201 @@
+//! Deployment: packed quantized checkpoints (.cqm).
+//!
+//! After PTQ the coordinator holds a dequantized `Model` (f32 weights on
+//! grid points — fine for simulated-quantization evaluation). For
+//! deployment the codes themselves are the artifact: this module packs
+//! each quantized layer to its b-bit offset-binary bitstream plus the
+//! per-column (δ, z) vectors and every non-quantized parameter in f32,
+//! all inside a single CTS container with a small JSON header entry:
+//!
+//! ```text
+//! __meta__            i32[3]  = [version, bits, n_layers]
+//! __model__           f32 utf8-bytes? -> stored in header json instead
+//! q/<layer>/codes     i32[ceil(m*n*b/32)]  packed little-endian bits
+//! q/<layer>/delta     f32[n]
+//! q/<layer>/zero      f32[n]
+//! fp/<name>           f32[...] every parameter not covered by a packed layer
+//! ```
+//!
+//! Loading reconstructs a `Model` byte-exactly equal (in W_q) to the one
+//! that was saved — asserted by tests — so accuracy of a served packed
+//! model is identical to the pipeline's report.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::manifest::Manifest;
+use crate::model::Model;
+use crate::quant::grid::LayerQuant;
+use crate::tensor::Tensor;
+use crate::tensorstore::{self, Entry, Store};
+
+pub const VERSION: i32 = 1;
+
+/// One packed layer ready for serialization.
+pub struct PackedLayer {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub bits: u32,
+    pub codes: Vec<u8>,
+    pub delta: Vec<f32>,
+    pub zero: Vec<f32>,
+}
+
+impl PackedLayer {
+    pub fn from_quant(name: &str, lq: &LayerQuant, bits: u32) -> PackedLayer {
+        PackedLayer {
+            name: name.to_string(),
+            m: lq.q.rows(),
+            n: lq.q.cols(),
+            bits,
+            codes: lq.pack_codes(bits),
+            delta: lq.delta.clone(),
+            zero: lq.zero.clone(),
+        }
+    }
+
+    /// Reconstruct the dequantized weight W_q [m, n].
+    pub fn dequant(&self) -> Tensor {
+        let q = LayerQuant::unpack_codes(&self.codes, self.bits, self.m, self.n, &self.zero);
+        let lq = LayerQuant { q, delta: self.delta.clone(), zero: self.zero.clone() };
+        lq.dequant()
+    }
+
+    /// Packed size in bytes (codes + scales + zero points).
+    pub fn packed_bytes(&self) -> usize {
+        self.codes.len() + 8 * self.n
+    }
+}
+
+/// Save a quantized model: `layers` are the packed quantized layers; all
+/// other parameters of `model` are stored in f32.
+pub fn save_packed(
+    path: &str,
+    model: &Model,
+    layers: &[PackedLayer],
+    bits: u32,
+) -> Result<()> {
+    let mut store = Store::new();
+    store.insert(
+        "__meta__".into(),
+        Entry::I32 { shape: vec![3], data: vec![VERSION, bits as i32, layers.len() as i32] },
+    );
+    let covered: std::collections::BTreeSet<String> =
+        layers.iter().map(|l| format!("{}/W", l.name)).collect();
+    for l in layers {
+        // pad the byte stream to a whole number of i32 words
+        let mut words = vec![0i32; l.codes.len().div_ceil(4)];
+        for (i, b) in l.codes.iter().enumerate() {
+            words[i / 4] |= (*b as i32 & 0xff) << (8 * (i % 4));
+        }
+        store.insert(
+            format!("q/{}/codes", l.name),
+            Entry::I32 { shape: vec![words.len()], data: words },
+        );
+        store.insert(
+            format!("q/{}/shape", l.name),
+            Entry::I32 { shape: vec![3], data: vec![l.m as i32, l.n as i32, l.bits as i32] },
+        );
+        store.insert(format!("q/{}/delta", l.name), Entry::F32(Tensor::from_vec(l.delta.clone())));
+        store.insert(format!("q/{}/zero", l.name), Entry::F32(Tensor::from_vec(l.zero.clone())));
+    }
+    for (name, t) in &model.params {
+        if !covered.contains(name) {
+            store.insert(format!("fp/{name}"), Entry::F32(t.clone()));
+        }
+    }
+    tensorstore::write_store(path, &store)
+}
+
+/// Load a packed checkpoint into a ready-to-run `Model` (manifest
+/// supplies the architecture; the checkpoint supplies the weights).
+pub fn load_packed(manifest: &Manifest, model_name: &str, path: &str) -> Result<Model> {
+    let store = tensorstore::read_store(path).with_context(|| format!("loading {path}"))?;
+    let meta = store
+        .get("__meta__")
+        .ok_or_else(|| anyhow!("{path}: missing __meta__"))?
+        .ints()?;
+    if meta[0] != VERSION {
+        bail!("{path}: unsupported version {}", meta[0]);
+    }
+    let info = manifest.model(model_name)?.clone();
+    let mut params = std::collections::BTreeMap::new();
+    for (key, entry) in &store {
+        if let Some(name) = key.strip_prefix("fp/") {
+            params.insert(name.to_string(), entry.tensor()?.clone());
+        }
+    }
+    // unpack quantized layers
+    for l in &info.quant_layers {
+        let pre = format!("q/{}", l.name);
+        let Some(shape) = store.get(&format!("{pre}/shape")) else {
+            continue; // layer kept FP (skip-layers) — already under fp/
+        };
+        let sh = shape.ints()?;
+        let (m, n, bits) = (sh[0] as usize, sh[1] as usize, sh[2] as u32);
+        let words = store[&format!("{pre}/codes")].ints()?;
+        let mut bytes = Vec::with_capacity(words.len() * 4);
+        for w in words {
+            bytes.extend_from_slice(&(*w as u32).to_le_bytes());
+        }
+        bytes.truncate((m * n * bits as usize).div_ceil(8));
+        let delta = store[&format!("{pre}/delta")].tensor()?.data().to_vec();
+        let zero = store[&format!("{pre}/zero")].tensor()?.data().to_vec();
+        let pl = PackedLayer { name: l.name.clone(), m, n, bits, codes: bytes, delta, zero };
+        params.insert(format!("{}/W", l.name), pl.dequant());
+    }
+    // validate completeness
+    for p in &info.params {
+        if !params.contains_key(p) {
+            bail!("{path}: missing parameter '{p}' after unpacking");
+        }
+    }
+    Ok(Model { info, params })
+}
+
+/// Total packed footprint of a layer set vs its f32 footprint.
+pub fn footprint(layers: &[PackedLayer]) -> (usize, usize) {
+    let packed = layers.iter().map(|l| l.packed_bytes()).sum();
+    let fp32 = layers.iter().map(|l| 4 * l.m * l.n).sum();
+    (packed, fp32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{comq_gram, GramSet, QuantConfig};
+    use crate::tensor::matmul_at_a;
+    use crate::util::Rng;
+
+    #[test]
+    fn packed_layer_roundtrip() {
+        let mut rng = Rng::new(40);
+        let x = Tensor::new(&[64, 20], rng.normal_vec(64 * 20));
+        let w = Tensor::new(&[20, 12], rng.normal_vec(240));
+        let gram = GramSet::Shared(matmul_at_a(&x));
+        for bits in [2u32, 3, 4, 8] {
+            let cfg = QuantConfig { bits, ..Default::default() };
+            let lq = comq_gram(&gram, &w, &cfg);
+            let pl = PackedLayer::from_quant("test", &lq, bits);
+            let back = pl.dequant();
+            assert_eq!(back, lq.dequant(), "bits={bits}");
+            assert!(pl.packed_bytes() < 4 * 20 * 12, "bits={bits} not smaller than f32");
+        }
+    }
+
+    #[test]
+    fn footprint_math() {
+        let pl = PackedLayer {
+            name: "x".into(),
+            m: 16,
+            n: 8,
+            bits: 4,
+            codes: vec![0u8; 64],
+            delta: vec![0.1; 8],
+            zero: vec![0.0; 8],
+        };
+        let (packed, fp32) = footprint(&[pl]);
+        assert_eq!(fp32, 512);
+        assert_eq!(packed, 64 + 64);
+    }
+}

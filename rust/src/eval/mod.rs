@@ -1,0 +1,218 @@
+//! Evaluation harness: top-1 / top-5 accuracy of (quantized) models on
+//! the validation split, through either execution engine.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::calib::EngineKind;
+use crate::manifest::Manifest;
+use crate::model::{Model, Tap};
+use crate::quant::actq::ActQuant;
+use crate::runtime::Engine;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Accuracy {
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+/// Activation-quantization mode for evaluation.
+#[derive(Debug, Clone)]
+pub enum ActMode {
+    /// Full-precision activations (weight-only tables).
+    Fp,
+    /// Fake-quantize every quantizable layer input with these params
+    /// (manifest layer order).
+    Quant { bits: u32, params: Vec<ActQuant> },
+}
+
+/// Evaluate a model on (images, labels).
+pub fn evaluate(
+    manifest: &Manifest,
+    model: &Model,
+    images: &Tensor,
+    labels: &[i32],
+    engine: EngineKind,
+    act: &ActMode,
+) -> Result<Accuracy> {
+    let logits = match engine {
+        EngineKind::Native => forward_native(manifest, model, images, act)?,
+        EngineKind::Pjrt => forward_pjrt(manifest, model, images, act)?,
+    };
+    score(&logits, labels)
+}
+
+/// Native engine forward over all images (batched to bound memory).
+fn forward_native(
+    manifest: &Manifest,
+    model: &Model,
+    images: &Tensor,
+    act: &ActMode,
+) -> Result<Tensor> {
+    let n = images.shape()[0];
+    let b = manifest.batch;
+    let classes = manifest.classes;
+    let img_elems: usize = images.shape()[1..].iter().product();
+    let mut logits = Tensor::zeros(&[n, classes]);
+    let actq_map = build_actq_map(model, act);
+    let mut i = 0;
+    while i < n {
+        let hi = (i + b).min(n);
+        let chunk = Tensor::new(
+            &[hi - i, images.shape()[1], images.shape()[2], images.shape()[3]],
+            images.data()[i * img_elems..hi * img_elems].to_vec(),
+        );
+        let out = match &actq_map {
+            Some(map) => model.forward(&chunk, &mut Tap::ActQ(map)),
+            None => model.forward(&chunk, &mut Tap::None),
+        };
+        logits.data_mut()[i * classes..hi * classes].copy_from_slice(out.data());
+        i = hi;
+    }
+    Ok(logits)
+}
+
+fn build_actq_map(
+    model: &Model,
+    act: &ActMode,
+) -> Option<std::collections::BTreeMap<String, ActQuant>> {
+    match act {
+        ActMode::Fp => None,
+        ActMode::Quant { params, .. } => {
+            let mut map = std::collections::BTreeMap::new();
+            for (l, aq) in model.info.quant_layers.iter().zip(params) {
+                map.insert(l.name.clone(), *aq);
+            }
+            Some(map)
+        }
+    }
+}
+
+/// PJRT engine forward: the `forward` artifact (or `forward_actq{bits}`)
+/// with parameters fed positionally. The artifact batch is fixed; the
+/// last partial batch is padded and the padded rows discarded.
+fn forward_pjrt(
+    manifest: &Manifest,
+    model: &Model,
+    images: &Tensor,
+    act: &ActMode,
+) -> Result<Tensor> {
+    let engine = Engine::global()?;
+    let (art_key, act_rows) = match act {
+        ActMode::Fp => ("forward".to_string(), None),
+        ActMode::Quant { bits, params } => {
+            let key = format!("forward_actq{bits}");
+            let rows: Vec<f32> = params.iter().flat_map(|a| a.as_row()).collect();
+            (key, Some(Tensor::new(&[params.len(), 2], rows)))
+        }
+    };
+    let art = model
+        .info
+        .artifacts
+        .get(&art_key)
+        .ok_or_else(|| anyhow!("model has no '{art_key}' artifact"))?;
+    let path = manifest.path(art);
+    let b = manifest.batch;
+    let n = images.shape()[0];
+    let classes = manifest.classes;
+    let img_elems: usize = images.shape()[1..].iter().product();
+    let params = model.params_in_order();
+    let mut logits = Tensor::zeros(&[n, classes]);
+    let mut i = 0;
+    while i < n {
+        let hi = (i + b).min(n);
+        // pad the final partial batch with zeros
+        let mut chunk_data = images.data()[i * img_elems..hi * img_elems].to_vec();
+        chunk_data.resize(b * img_elems, 0.0);
+        let chunk = Tensor::new(
+            &[b, images.shape()[1], images.shape()[2], images.shape()[3]],
+            chunk_data,
+        );
+        let mut inputs: Vec<&Tensor> = params.clone();
+        if let Some(ar) = &act_rows {
+            inputs.push(ar);
+        }
+        inputs.push(&chunk);
+        let outs = engine.run(&path, &inputs)?;
+        let out = &outs[0];
+        if out.cols() != classes {
+            bail!("forward artifact returned {} classes, expected {classes}", out.cols());
+        }
+        logits.data_mut()[i * classes..hi * classes]
+            .copy_from_slice(&out.data()[..(hi - i) * classes]);
+        i = hi;
+    }
+    Ok(logits)
+}
+
+/// Top-1 / top-5 from logits.
+pub fn score(logits: &Tensor, labels: &[i32]) -> Result<Accuracy> {
+    let n = logits.rows();
+    if n != labels.len() {
+        bail!("logits rows {n} vs labels {}", labels.len());
+    }
+    let c = logits.cols();
+    let k = 5.min(c);
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    for (i, &lbl) in labels.iter().enumerate() {
+        let row = logits.row(i);
+        let lbl = lbl as usize;
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == lbl {
+            top1 += 1;
+        }
+        // top-5: count entries strictly greater than label's score
+        let lscore = row[lbl];
+        let better = row.iter().filter(|&&v| v > lscore).count();
+        if better < k {
+            top5 += 1;
+        }
+    }
+    Ok(Accuracy { top1: top1 as f64 / n as f64, top5: top5 as f64 / n as f64, n })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_perfect_and_zero() {
+        // 3 classes, identity logits
+        let logits = Tensor::new(&[3, 3], vec![9., 0., 0., 0., 9., 0., 0., 0., 9.]);
+        let acc = score(&logits, &[0, 1, 2]).unwrap();
+        assert_eq!(acc.top1, 1.0);
+        assert_eq!(acc.top5, 1.0);
+        let acc2 = score(&logits, &[1, 2, 0]).unwrap();
+        assert_eq!(acc2.top1, 0.0);
+        assert_eq!(acc2.top5, 1.0); // only 3 classes, all within top-5
+    }
+
+    #[test]
+    fn top5_counts_rank() {
+        // 8 classes; label ranked 6th -> top1 no, top5 no
+        let mut row = vec![0.0f32; 8];
+        for (i, v) in row.iter_mut().enumerate() {
+            *v = (8 - i) as f32;
+        }
+        // label 5 has score 3; entries greater: 5 -> not top5
+        let logits = Tensor::new(&[1, 8], row);
+        let acc = score(&logits, &[5]).unwrap();
+        assert_eq!(acc.top1, 0.0);
+        assert_eq!(acc.top5, 0.0);
+        let acc2 = score(&logits, &[4]).unwrap();
+        assert_eq!(acc2.top5, 1.0);
+    }
+
+    #[test]
+    fn mismatched_lengths_error() {
+        let logits = Tensor::zeros(&[2, 3]);
+        assert!(score(&logits, &[0]).is_err());
+    }
+}

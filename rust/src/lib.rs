@@ -1,0 +1,30 @@
+//! COMQ: backpropagation-free post-training quantization.
+//!
+//! A three-layer reproduction of *COMQ: A Backpropagation-Free Algorithm
+//! for Post-Training Quantization* (Zhang et al., 2024):
+//!
+//! * **L3 (this crate)** — the PTQ pipeline coordinator: checkpoint store,
+//!   calibration manager, layer-job scheduler, quantizer registry (COMQ +
+//!   baselines), PJRT runtime, evaluation harness, CLI.
+//! * **L2 (python/compile, build-time)** — JAX model zoo + AOT-lowered
+//!   forward / calibration-statistics graphs.
+//! * **L1 (python/compile/kernels, build-time)** — the COMQ coordinate-
+//!   descent sweep as a Pallas kernel, lowered into the same HLO
+//!   artifacts this crate executes via PJRT.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod bench;
+pub mod calib;
+pub mod config;
+pub mod coordinator;
+pub mod deploy;
+pub mod eval;
+pub mod manifest;
+pub mod model;
+pub mod proptest;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod tensorstore;
+pub mod util;

@@ -1,0 +1,410 @@
+//! `comq` — CLI for the COMQ post-training-quantization coordinator.
+//!
+//! ```text
+//! comq models [--artifacts DIR]
+//! comq eval     --model M [--engine native|pjrt]
+//! comq quantize --model M --method comq --bits 4 --scheme per-channel
+//!               [--order greedy|cyclic] [--iters K] [--lam F]
+//!               [--engine native|pjrt] [--quant-engine native|pjrt-kernel]
+//!               [--calib-size N] [--act-bits B] [--workers W]
+//!               [--config FILE.toml] [--report OUT.json]
+//! ```
+//!
+//! Argument parsing is hand-rolled (no clap in the offline vendor set).
+
+use anyhow::{anyhow, bail, Result};
+
+use comq::calib::{Dataset, EngineKind};
+use comq::config::{RunConfig, Toml};
+use comq::coordinator::QuantEngine;
+use comq::manifest::Manifest;
+use comq::model::Model;
+use comq::quant::grid::Scheme;
+use comq::quant::{OrderKind, QUANTIZER_NAMES};
+
+
+fn main() {
+    env_logger_lite();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_logger_lite() {
+    // minimal logger: COMQ_LOG=debug|info (default info)
+    struct L(log::Level);
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= self.0
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level().as_str().to_lowercase(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let level = match std::env::var("COMQ_LOG").as_deref() {
+        Ok("debug") => log::Level::Debug,
+        Ok("trace") => log::Level::Trace,
+        Ok("warn") => log::Level::Warn,
+        _ => log::Level::Info,
+    };
+    let _ = log::set_boxed_logger(Box::new(L(level)));
+    log::set_max_level(level.to_level_filter());
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+            }
+        } else {
+            positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(Args { positional, flags })
+}
+
+fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = parse_args(&argv)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "models" => cmd_models(&args),
+        "eval" => cmd_eval(&args),
+        "quantize" => cmd_quantize(&args),
+        "run-packed" => cmd_run_packed(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        c => bail!("unknown command '{c}' (try `comq help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "comq — backpropagation-free post-training quantization (COMQ, Zhang et al. 2024)
+
+USAGE:
+  comq models   [--artifacts DIR]
+  comq eval     --model NAME [--engine native|pjrt] [--artifacts DIR]
+  comq quantize --model NAME [options]
+  comq run-packed --model NAME --packed FILE.cqm [--engine native|pjrt]
+  comq inspect --model NAME [--calib-size N]   calibration diagnostics
+
+QUANTIZE OPTIONS:
+  --method M         {}  (default comq)
+  --bits B           weight bits, default 4
+  --scheme S         per-channel | per-layer   (default per-channel)
+  --order O          greedy | greedy-shared | cyclic (default greedy)
+  --iters K          COMQ sweeps, default 3
+  --lam F            per-channel init shrink, default 1.0
+  --act-bits B       also fake-quantize activations (4 or 8)
+  --act-clip F       activation range clip ratio, default 0.95
+  --calib-size N     calibration images, default 1024
+  --engine E         eval/calibration engine: native | pjrt (default native)
+  --quant-engine E   sweep engine: native | pjrt-kernel (default native)
+  --workers N        parallel layer jobs, default 1
+  --skip-layers L    comma-separated layer names to keep FP
+  --mixed-budget B   mixed-precision mode: allocate per-layer bits under
+                     an average budget of B bits/weight (extension)
+  --config FILE      TOML config (CLI flags override)
+  --report FILE      write the JSON run report here
+  --save FILE.cqm    write the packed (bit-stream) quantized checkpoint
+  --artifacts DIR    artifact root (default ./artifacts)",
+        QUANTIZER_NAMES.join(" | ")
+    );
+}
+
+fn build_config(args: &Args) -> Result<RunConfig> {
+    let mut rc = RunConfig::default();
+    if let Some(cfg) = args.flags.get("config") {
+        rc.apply_toml(&Toml::parse_file(cfg)?)?;
+    }
+    let f = &args.flags;
+    if let Some(v) = f.get("artifacts") {
+        rc.artifacts = v.clone();
+    }
+    if let Some(v) = f.get("model") {
+        rc.model = v.clone();
+    }
+    if let Some(v) = f.get("method") {
+        rc.opts.method = v.clone();
+    }
+    if let Some(v) = f.get("bits") {
+        rc.opts.qcfg.bits = v.parse()?;
+    }
+    if let Some(v) = f.get("scheme") {
+        rc.opts.qcfg.scheme = Scheme::parse(v).ok_or_else(|| anyhow!("bad --scheme '{v}'"))?;
+    }
+    if let Some(v) = f.get("order") {
+        rc.opts.qcfg.order = OrderKind::parse(v).ok_or_else(|| anyhow!("bad --order '{v}'"))?;
+    }
+    if let Some(v) = f.get("iters") {
+        rc.opts.qcfg.iters = v.parse()?;
+    }
+    if let Some(v) = f.get("lam") {
+        rc.opts.qcfg.lam = v.parse()?;
+    }
+    if let Some(v) = f.get("act-bits") {
+        rc.opts.act_bits = Some(v.parse()?);
+    }
+    if let Some(v) = f.get("act-clip") {
+        rc.opts.act_clip = v.parse()?;
+    }
+    if let Some(v) = f.get("calib-size") {
+        rc.opts.calib_size = v.parse()?;
+    }
+    if let Some(v) = f.get("engine") {
+        rc.opts.engine = EngineKind::parse(v).ok_or_else(|| anyhow!("bad --engine '{v}'"))?;
+    }
+    if let Some(v) = f.get("quant-engine") {
+        rc.opts.quant_engine =
+            QuantEngine::parse(v).ok_or_else(|| anyhow!("bad --quant-engine '{v}'"))?;
+    }
+    if let Some(v) = f.get("workers") {
+        rc.opts.workers = v.parse()?;
+    }
+    if let Some(v) = f.get("skip-layers") {
+        rc.opts.skip_layers = v.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if let Some(v) = f.get("report") {
+        rc.report_path = Some(v.clone());
+    }
+    if let Some(v) = f.get("save") {
+        rc.save_path = Some(v.clone());
+    }
+    Ok(rc)
+}
+
+fn cmd_models(args: &Args) -> Result<()> {
+    let rc = build_config(args)?;
+    let manifest = Manifest::load(&rc.artifacts)?;
+    println!(
+        "{:<16} {:<7} {:>8} {:>8} {:>7}  artifacts",
+        "model", "family", "params", "q-wts", "fp-top1"
+    );
+    for (name, info) in &manifest.models {
+        let model = Model::load(&manifest, name)?;
+        println!(
+            "{:<16} {:<7} {:>8} {:>8} {:>6.2}%  {}",
+            name,
+            match info.config {
+                comq::manifest::ModelConfig::ViT(_) => "vit",
+                comq::manifest::ModelConfig::Cnn(_) => "cnn",
+            },
+            model.num_params(),
+            model.num_quant_weights(),
+            info.fp_top1 * 100.0,
+            info.artifacts.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+    }
+    println!("\nsweep kernels: {} shapes", manifest.sweeps.len());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rc = build_config(args)?;
+    let manifest = Manifest::load(&rc.artifacts)?;
+    let model = Model::load(&manifest, &rc.model)?;
+    let dataset = Dataset::load(&manifest)?;
+    let t = comq::util::Timer::start();
+    let acc = comq::coordinator::pipeline::eval_fp(&manifest, &model, &dataset, rc.opts.engine)?;
+    println!(
+        "{}: top1={:.2}% top5={:.2}% (n={}, engine={}, {:.2}s; manifest fp_top1={:.2}%)",
+        rc.model,
+        acc.top1 * 100.0,
+        acc.top5 * 100.0,
+        acc.n,
+        rc.opts.engine.name(),
+        t.secs(),
+        model.info.fp_top1 * 100.0,
+    );
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let rc = build_config(args)?;
+    let manifest = Manifest::load(&rc.artifacts)?;
+    let model = Model::load(&manifest, &rc.model)?;
+    let dataset = Dataset::load(&manifest)?;
+    if let Some(budget) = args.flags.get("mixed-budget") {
+        return cmd_quantize_mixed(&rc, &manifest, &model, &dataset, budget.parse()?);
+    }
+    log::info!(
+        "quantizing {} with {} ({}W{}, {}, {})",
+        rc.model,
+        rc.opts.method,
+        rc.opts.qcfg.bits,
+        rc.opts.act_bits.map(|b| format!("A{b}")).unwrap_or_else(|| "A32".into()),
+        rc.opts.qcfg.scheme.name(),
+        rc.opts.qcfg.order.name()
+    );
+    let imgs = dataset.calib_subset(rc.opts.calib_size);
+    let t_calib = comq::util::Timer::start();
+    let stats = comq::calib::collect_stats(&manifest, &model, &imgs, rc.opts.engine)?;
+    let out = comq::coordinator::pipeline::quantize_model_full(
+        &manifest, &model, &dataset, &rc.opts, &stats, t_calib.secs(),
+    )?;
+    let report = out.report;
+    println!("{}", report.summary());
+    if let Some(path) = &rc.save_path {
+        comq::deploy::save_packed(path, &out.model, &out.packed, rc.opts.qcfg.bits)?;
+        let (packed, fp32) = comq::deploy::footprint(&out.packed);
+        log::info!(
+            "packed checkpoint written to {path} ({:.1} KiB quantized weights vs {:.1} KiB f32)",
+            packed as f64 / 1024.0,
+            fp32 as f64 / 1024.0
+        );
+    }
+    for l in &report.layers {
+        log::debug!(
+            "  {:<16} [{:>4}x{:<4}] err={:.4e} (rtn {:.4e}) {:.3}s",
+            l.name,
+            l.m,
+            l.n,
+            l.err,
+            l.err_rtn,
+            l.secs
+        );
+    }
+    if let Some(path) = &rc.report_path {
+        report.save(path)?;
+        log::info!("report written to {path}");
+    }
+    Ok(())
+}
+
+/// Mixed-precision mode (paper future-work extension): allocate per-layer
+/// bit-widths under an average-bits budget, then quantize + evaluate.
+fn cmd_quantize_mixed(
+    rc: &RunConfig,
+    manifest: &Manifest,
+    model: &Model,
+    dataset: &Dataset,
+    budget: f64,
+) -> Result<()> {
+    use comq::coordinator::mixed_precision_quantize;
+    let imgs = dataset.calib_subset(rc.opts.calib_size);
+    let stats = comq::calib::collect_stats(manifest, model, &imgs, rc.opts.engine)?;
+    let t = comq::util::Timer::start();
+    let (qmodel, rep) =
+        mixed_precision_quantize(manifest, model, &stats, &rc.opts.qcfg, budget)?;
+    let quant_secs = t.secs();
+    let acc = comq::eval::evaluate(
+        manifest,
+        &qmodel,
+        &dataset.val_images,
+        &dataset.val_labels,
+        rc.opts.engine,
+        &comq::eval::ActMode::Fp,
+    )?;
+    println!(
+        "{} mixed-precision: budget {:.2} bits -> achieved {:.3} bits, top1={:.2}% (fp {:.2}%), err={:.4e}, quant={:.2}s",
+        rc.model,
+        rep.budget_bits,
+        rep.achieved_bits,
+        acc.top1 * 100.0,
+        model.info.fp_top1 * 100.0,
+        rep.total_err,
+        quant_secs,
+    );
+    for l in &rep.layers {
+        println!("  {:<16} {} bits ({} weights, err {:.3e})", l.name, l.bits, l.weights, l.err);
+    }
+    Ok(())
+}
+
+/// Load a packed (.cqm) checkpoint and evaluate it — the deployment path.
+fn cmd_run_packed(args: &Args) -> Result<()> {
+    let rc = build_config(args)?;
+    let packed_path = args
+        .flags
+        .get("packed")
+        .ok_or_else(|| anyhow!("run-packed needs --packed FILE.cqm"))?;
+    let manifest = Manifest::load(&rc.artifacts)?;
+    let dataset = Dataset::load(&manifest)?;
+    let model = comq::deploy::load_packed(&manifest, &rc.model, packed_path)?;
+    let t = comq::util::Timer::start();
+    let acc = comq::eval::evaluate(
+        &manifest,
+        &model,
+        &dataset.val_images,
+        &dataset.val_labels,
+        rc.opts.engine,
+        &comq::eval::ActMode::Fp,
+    )?;
+    println!(
+        "{} (packed {packed_path}): top1={:.2}% top5={:.2}% (n={}, {:.2}s)",
+        rc.model,
+        acc.top1 * 100.0,
+        acc.top5 * 100.0,
+        acc.n,
+        t.secs()
+    );
+    Ok(())
+}
+
+/// Calibration diagnostics: per-layer Gram conditioning, dead features,
+/// activation ranges — what to look at before quantizing a new model.
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rc = build_config(args)?;
+    let manifest = Manifest::load(&rc.artifacts)?;
+    let model = Model::load(&manifest, &rc.model)?;
+    let dataset = Dataset::load(&manifest)?;
+    let imgs = dataset.calib_subset(rc.opts.calib_size);
+    let stats = comq::calib::collect_stats(&manifest, &model, &imgs, rc.opts.engine)?;
+    println!(
+        "{:<16} {:>5} {:>5} {:>12} {:>12} {:>6} {:>18}",
+        "layer", "m", "n", "tr(G)/m", "diag min", "dead", "act range"
+    );
+    for l in &model.info.quant_layers {
+        let st = &stats[&l.name];
+        // diagnostics over the (first) Gram
+        let g = st.gram.for_col(0);
+        let m = g.rows();
+        let mut tr = 0.0f64;
+        let mut dmin = f64::INFINITY;
+        let mut dead = 0usize;
+        for i in 0..m {
+            let d = g.at2(i, i) as f64;
+            tr += d;
+            dmin = dmin.min(d);
+            if d <= 1e-12 {
+                dead += 1;
+            }
+        }
+        println!(
+            "{:<16} {:>5} {:>5} {:>12.4e} {:>12.4e} {:>6} [{:>7.2}, {:>7.2}]",
+            l.name,
+            l.m,
+            l.n,
+            tr / m as f64,
+            dmin,
+            dead,
+            st.min,
+            st.max
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,228 @@
+//! Typed view of `artifacts/manifest.json` (written by python/compile/aot.py).
+//!
+//! The manifest is the single source of truth tying the build-time python
+//! world to the runtime rust world: model configs, canonical parameter
+//! order for positional PJRT inputs, quantizable layer shapes, checkpoint
+//! and HLO artifact paths, and the FP reference accuracy.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// One quantizable layer's shape metadata.
+#[derive(Debug, Clone)]
+pub struct LayerInfo {
+    pub name: String,
+    /// Input features (rows of W; k*k for grouped/depthwise layers).
+    pub m: usize,
+    /// Output channels (columns of W).
+    pub n: usize,
+    /// Depthwise layer: per-column Gram, weight [kk, n].
+    pub grouped: bool,
+}
+
+/// ViT-family architecture hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ViTConfig {
+    pub dim: usize,
+    pub depth: usize,
+    pub heads: usize,
+    pub mlp: usize,
+    pub patch: usize,
+    /// 0 = global attention; >0 = Swin-style windows of this side length.
+    pub window: usize,
+    pub img: usize,
+    pub classes: usize,
+}
+
+/// CNN-family architecture hyperparameters.
+#[derive(Debug, Clone)]
+pub struct CnnConfig {
+    pub kind: String, // resnet | plain | mobile
+    pub width: usize,
+    pub blocks: usize,
+    pub img: usize,
+    pub classes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub enum ModelConfig {
+    ViT(ViTConfig),
+    Cnn(CnnConfig),
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub config: ModelConfig,
+    /// Canonical positional parameter order for PJRT graphs.
+    pub params: Vec<String>,
+    pub quant_layers: Vec<LayerInfo>,
+    pub checkpoint: String,
+    pub fp_top1: f64,
+    /// Artifact kind -> relative HLO path ("forward", "calib_stats",
+    /// "forward_actq4", "forward_actq8").
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// A lowered COMQ sweep kernel artifact (L1 Pallas) for one layer shape.
+#[derive(Debug, Clone)]
+pub struct SweepInfo {
+    pub m: usize,
+    pub n: usize,
+    pub per_channel: bool,
+    pub path: String,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub batch: usize,
+    pub classes: usize,
+    pub img: usize,
+    pub data: String,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub sweeps: Vec<SweepInfo>,
+}
+
+impl Manifest {
+    /// Load from `<root>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let j = Json::parse_file(&path.to_string_lossy())
+            .with_context(|| "did you run `make artifacts`?")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.obj()? {
+            models.insert(name.clone(), parse_model(name, mj)?);
+        }
+        let mut sweeps = Vec::new();
+        for sj in j.get("sweeps")?.arr()? {
+            sweeps.push(SweepInfo {
+                m: sj.get("m")?.usize()?,
+                n: sj.get("n")?.usize()?,
+                per_channel: sj.get("per_channel")?.boolean()?,
+                path: sj.get("path")?.str()?.to_string(),
+            });
+        }
+        Ok(Manifest {
+            root,
+            batch: j.get("batch")?.usize()?,
+            classes: j.get("classes")?.usize()?,
+            img: j.get("img")?.usize()?,
+            data: j.get("data")?.str()?.to_string(),
+            models,
+            sweeps,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys()))
+    }
+
+    /// Absolute path of a manifest-relative artifact path.
+    pub fn path(&self, rel: &str) -> String {
+        self.root.join(rel).to_string_lossy().to_string()
+    }
+
+    /// Find the sweep artifact for an exact layer shape, if lowered.
+    pub fn sweep_for(&self, m: usize, n: usize, per_channel: bool) -> Option<&SweepInfo> {
+        self.sweeps
+            .iter()
+            .find(|s| s.m == m && s.n == n && s.per_channel == per_channel)
+    }
+}
+
+fn parse_model(name: &str, mj: &Json) -> Result<ModelInfo> {
+    let family = mj.get("family")?.str()?.to_string();
+    let cj = mj.get("config")?;
+    let config = match family.as_str() {
+        "vit" => ModelConfig::ViT(ViTConfig {
+            dim: cj.get("dim")?.usize()?,
+            depth: cj.get("depth")?.usize()?,
+            heads: cj.get("heads")?.usize()?,
+            mlp: cj.get("mlp")?.usize()?,
+            patch: cj.get("patch")?.usize()?,
+            window: cj.get("window")?.usize()?,
+            img: cj.get("img")?.usize()?,
+            classes: cj.get("classes")?.usize()?,
+        }),
+        "cnn" => ModelConfig::Cnn(CnnConfig {
+            kind: cj.get("kind")?.str()?.to_string(),
+            width: cj.get("width")?.usize()?,
+            blocks: cj.get("blocks")?.usize()?,
+            img: cj.get("img")?.usize()?,
+            classes: cj.get("classes")?.usize()?,
+        }),
+        f => anyhow::bail!("unknown model family '{f}'"),
+    };
+    let params = mj
+        .get("params")?
+        .arr()?
+        .iter()
+        .map(|p| p.str().map(str::to_string))
+        .collect::<Result<Vec<_>>>()?;
+    let mut quant_layers = Vec::new();
+    for lj in mj.get("quant_layers")?.arr()? {
+        quant_layers.push(LayerInfo {
+            name: lj.get("name")?.str()?.to_string(),
+            m: lj.get("m")?.usize()?,
+            n: lj.get("n")?.usize()?,
+            grouped: lj.get("grouped")?.boolean()?,
+        });
+    }
+    let mut artifacts = BTreeMap::new();
+    for (k, v) in mj.get("artifacts")?.obj()? {
+        artifacts.insert(k.clone(), v.str()?.to_string());
+    }
+    Ok(ModelInfo {
+        name: name.to_string(),
+        config,
+        params,
+        quant_layers,
+        checkpoint: mj.get("checkpoint")?.str()?.to_string(),
+        fp_top1: mj.get("fp_top1")?.num()?,
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Integration test against the real artifacts (skipped when absent).
+    #[test]
+    fn loads_real_manifest() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&root).unwrap();
+        assert!(m.models.contains_key("vit_s"));
+        assert!(m.batch > 0);
+        let vit = m.model("vit_s").unwrap();
+        assert!(!vit.params.is_empty());
+        assert!(!vit.quant_layers.is_empty());
+        assert!(vit.fp_top1 > 0.5);
+        // every artifact file exists
+        for rel in vit.artifacts.values() {
+            assert!(
+                std::path::Path::new(&m.path(rel)).exists(),
+                "missing artifact {rel}"
+            );
+        }
+        // sweeps exist for vit_s layer shapes
+        for l in &vit.quant_layers {
+            if !l.grouped {
+                assert!(m.sweep_for(l.m, l.n, true).is_some(), "no sweep for {l:?}");
+            }
+        }
+        assert!(m.model("bogus").is_err());
+    }
+}

@@ -1,0 +1,281 @@
+//! In-memory model graph + native forward pass.
+//!
+//! The native forward is an operation-for-operation mirror of the JAX
+//! models in python/compile/nets/ (same im2col patch order, same GELU
+//! closed form, same LayerNorm epsilon). It serves three purposes:
+//!
+//! 1. cross-checking the PJRT artifacts (parity tests assert the two
+//!    paths agree to float tolerance on the real checkpoints);
+//! 2. a fast evaluation engine for the bench sweeps (no per-batch PJRT
+//!    dispatch overhead at these tiny model sizes);
+//! 3. calibration-statistics capture via `Tap::Stats`, mirroring the
+//!    `calib_stats` artifact.
+//!
+//! Both engines are exposed behind `eval::Evaluator`; the CLI's
+//! `--engine {native,pjrt}` flips between them.
+
+mod cnn;
+mod vit;
+
+pub use cnn::cnn_forward;
+pub use vit::vit_forward;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::manifest::{Manifest, ModelConfig, ModelInfo};
+use crate::quant::actq::ActQuant;
+use crate::quant::GramSet;
+use crate::tensor::Tensor;
+use crate::tensorstore;
+
+/// Per-layer calibration statistics captured by a `Stats` tap.
+#[derive(Debug, Clone)]
+pub struct LayerStats {
+    pub gram: GramSet,
+    pub min: f32,
+    pub max: f32,
+    /// Number of feature rows accumulated (for averaging diagnostics).
+    pub rows: usize,
+}
+
+/// Instrumentation at every quantizable layer input, mirroring
+/// python/compile/nets/common.py::Tap.
+pub enum Tap<'a> {
+    /// Plain forward.
+    None,
+    /// Record (G = XᵀX, min, max) per layer.
+    Stats(&'a mut BTreeMap<String, LayerStats>),
+    /// Fake-quantize layer inputs (full W/A quantization).
+    ActQ(&'a BTreeMap<String, ActQuant>),
+}
+
+impl Tap<'_> {
+    /// Observe/rewrite a 2-D layer input [rows, m].
+    pub fn tap2(&mut self, name: &str, x: Tensor) -> Tensor {
+        match self {
+            Tap::None => x,
+            Tap::Stats(map) => {
+                accumulate(map, name, GramSet::from_features(&x), &x);
+                x
+            }
+            Tap::ActQ(params) => apply_actq(params, name, x),
+        }
+    }
+
+    /// Observe/rewrite a grouped (depthwise) input [rows, groups, kk].
+    pub fn tap_grouped(&mut self, name: &str, x: Tensor) -> Tensor {
+        match self {
+            Tap::None => x,
+            Tap::Stats(map) => {
+                accumulate(map, name, GramSet::from_grouped_features(&x), &x);
+                x
+            }
+            Tap::ActQ(params) => apply_actq(params, name, x),
+        }
+    }
+}
+
+fn accumulate(
+    map: &mut BTreeMap<String, LayerStats>,
+    name: &str,
+    gram: GramSet,
+    x: &Tensor,
+) {
+    let (mn, mx) = (x.min(), x.max());
+    let rows = x.shape()[0];
+    match map.get_mut(name) {
+        Some(st) => {
+            st.gram.accumulate(&gram);
+            st.min = st.min.min(mn);
+            st.max = st.max.max(mx);
+            st.rows += rows;
+        }
+        None => {
+            map.insert(name.to_string(), LayerStats { gram, min: mn, max: mx, rows });
+        }
+    }
+}
+
+fn apply_actq(params: &BTreeMap<String, ActQuant>, name: &str, mut x: Tensor) -> Tensor {
+    if let Some(aq) = params.get(name) {
+        aq.apply_tensor(&mut x);
+    }
+    x
+}
+
+/// A loaded model: manifest metadata + named parameter tensors.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub info: ModelInfo,
+    pub params: BTreeMap<String, Tensor>,
+}
+
+impl Model {
+    /// Load a model's checkpoint through the manifest.
+    pub fn load(manifest: &Manifest, name: &str) -> Result<Model> {
+        let info = manifest.model(name)?.clone();
+        let params = tensorstore::read_tensors(&manifest.path(&info.checkpoint))
+            .with_context(|| format!("loading checkpoint for {name}"))?;
+        // validate against the canonical parameter list
+        for p in &info.params {
+            if !params.contains_key(p) {
+                anyhow::bail!("checkpoint missing parameter '{p}'");
+            }
+        }
+        Ok(Model { info, params })
+    }
+
+    pub fn param(&self, name: &str) -> &Tensor {
+        &self.params[name]
+    }
+
+    /// Layer weight (W) of a quantizable layer.
+    pub fn weight(&self, layer: &str) -> &Tensor {
+        &self.params[&format!("{layer}/W")]
+    }
+
+    /// Replace a layer's weight (after quantization).
+    pub fn set_weight(&mut self, layer: &str, w: Tensor) {
+        let key = format!("{layer}/W");
+        let old = self.params.get(&key).expect("unknown layer");
+        assert_eq!(old.shape(), w.shape(), "weight shape mismatch for {layer}");
+        self.params.insert(key, w);
+    }
+
+    /// Parameters in canonical (manifest) order — the PJRT input order.
+    pub fn params_in_order(&self) -> Vec<&Tensor> {
+        self.info.params.iter().map(|k| &self.params[k]).collect()
+    }
+
+    /// Native forward: x [b, img, img, 3] -> logits [b, classes].
+    pub fn forward(&self, x: &Tensor, tap: &mut Tap) -> Tensor {
+        match &self.info.config {
+            ModelConfig::ViT(cfg) => vit_forward(cfg, &self.params, x, tap),
+            ModelConfig::Cnn(cfg) => cnn_forward(cfg, &self.params, x, tap),
+        }
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.params.values().map(|t| t.len()).sum()
+    }
+
+    /// Quantizable weight count (what the bit-width applies to).
+    pub fn num_quant_weights(&self) -> usize {
+        self.info.quant_layers.iter().map(|l| l.m * l.n).sum()
+    }
+}
+
+/// Linear layer: y = tap(x) @ W + b (mirrors nets/common.py::linear).
+pub fn linear(
+    params: &BTreeMap<String, Tensor>,
+    name: &str,
+    x: Tensor,
+    tap: &mut Tap,
+) -> Tensor {
+    let x = tap.tap2(name, x);
+    let w = params
+        .get(&format!("{name}/W"))
+        .unwrap_or_else(|| panic!("missing {name}/W"));
+    let b = params
+        .get(&format!("{name}/b"))
+        .unwrap_or_else(|| panic!("missing {name}/b"));
+    let mut y = crate::tensor::matmul(&x, w);
+    crate::tensor::ops::add_bias(&mut y, b.data());
+    y
+}
+
+/// Convolution as im2col + linear (mirrors nets/common.py::conv2d).
+pub fn conv2d(
+    params: &BTreeMap<String, Tensor>,
+    name: &str,
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    tap: &mut Tap,
+) -> Tensor {
+    let b = x.shape()[0];
+    let (patches, oh, ow) = crate::tensor::im2col(x, k, stride, pad);
+    let y = linear(params, name, patches, tap);
+    let n = y.cols();
+    y.reshape(&[b, oh, ow, n])
+}
+
+/// Depthwise convolution (mirrors nets/common.py::dwconv2d):
+/// weight [k*k, c], per-channel filters over grouped patches.
+pub fn dwconv2d(
+    params: &BTreeMap<String, Tensor>,
+    name: &str,
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    tap: &mut Tap,
+) -> Tensor {
+    let b = x.shape()[0];
+    let c = x.shape()[3];
+    let (x3, oh, ow) = crate::tensor::im2col_grouped(x, k, stride, pad);
+    let x3 = tap.tap_grouped(name, x3);
+    let w = &params[&format!("{name}/W")]; // [kk, c]
+    let bias = &params[&format!("{name}/b")];
+    let kk = k * k;
+    let rows = b * oh * ow;
+    let mut out = Tensor::zeros(&[rows, c]);
+    for r in 0..rows {
+        let xr = &x3.data()[r * c * kk..(r + 1) * c * kk];
+        let orow = &mut out.data_mut()[r * c..(r + 1) * c];
+        for ch in 0..c {
+            let xc = &xr[ch * kk..(ch + 1) * kk];
+            let mut s = 0.0f32;
+            for p in 0..kk {
+                s += xc[p] * w.at2(p, ch);
+            }
+            orow[ch] = s + bias.data()[ch];
+        }
+    }
+    out.reshape(&[b, oh, ow, c])
+}
+
+/// Fetch LayerNorm affine params (g, b).
+pub fn ln_params<'p>(
+    params: &'p BTreeMap<String, Tensor>,
+    name: &str,
+) -> (&'p [f32], &'p [f32]) {
+    (
+        params[&format!("{name}/g")].data(),
+        params[&format!("{name}/b")].data(),
+    )
+}
+
+/// Collect calibration statistics by running `images` through the model
+/// natively in batches.
+pub fn collect_stats_native(
+    model: &Model,
+    images: &Tensor,
+    batch: usize,
+) -> Result<BTreeMap<String, LayerStats>> {
+    let n = images.shape()[0];
+    let img_elems: usize = images.shape()[1..].iter().product();
+    let mut stats = BTreeMap::new();
+    let mut i = 0;
+    while i < n {
+        let hi = (i + batch).min(n);
+        let chunk = Tensor::new(
+            &[hi - i, images.shape()[1], images.shape()[2], images.shape()[3]],
+            images.data()[i * img_elems..hi * img_elems].to_vec(),
+        );
+        let mut tap = Tap::Stats(&mut stats);
+        let _ = model.forward(&chunk, &mut tap);
+        i = hi;
+    }
+    // sanity: every quantizable layer was visited
+    for l in &model.info.quant_layers {
+        if !stats.contains_key(&l.name) {
+            return Err(anyhow!("layer '{}' not visited by forward", l.name));
+        }
+    }
+    Ok(stats)
+}

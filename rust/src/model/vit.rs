@@ -1,0 +1,221 @@
+//! Native ViT forward — operation-for-operation mirror of
+//! python/compile/nets/vit.py (including Swin-style shifted windows).
+
+use std::collections::BTreeMap;
+
+use crate::manifest::ViTConfig;
+use crate::tensor::ops::{gelu_inplace, layer_norm, mean_axis1, shift_tokens, softmax_lastdim};
+use crate::tensor::{im2col, matmul_into, Tensor};
+
+use super::{linear, ln_params, Tap};
+
+/// x [b, img, img, 3] -> logits [b, classes].
+pub fn vit_forward(
+    cfg: &ViTConfig,
+    params: &BTreeMap<String, Tensor>,
+    x: &Tensor,
+    tap: &mut Tap,
+) -> Tensor {
+    let b = x.shape()[0];
+    let grid = cfg.img / cfg.patch;
+    let t = grid * grid;
+    let (patches, oh, ow) = im2col(x, cfg.patch, cfg.patch, 0);
+    debug_assert_eq!(oh * ow, t);
+    // embed
+    let mut h = linear(params, "embed/proj", patches, tap); // [b*t, dim]
+    let pos = &params["embed/pos"]; // [t, dim]
+    for bt in 0..b * t {
+        let ti = bt % t;
+        let hrow = &mut h.data_mut()[bt * cfg.dim..(bt + 1) * cfg.dim];
+        for (hv, pv) in hrow.iter_mut().zip(pos.row(ti)) {
+            *hv += pv;
+        }
+    }
+    let mut h = h.reshape(&[b, t, cfg.dim]);
+
+    for i in 0..cfg.depth {
+        let nm = format!("blk{i}");
+        // -- attention sublayer --
+        let mut a_in = h.clone();
+        let (g, be) = ln_params(params, &format!("{nm}/ln1"));
+        layer_norm(&mut a_in, g, be);
+        let a = if cfg.window > 0 {
+            let shift = if i % 2 == 1 { cfg.window / 2 } else { 0 };
+            let mut a = if shift > 0 {
+                shift_tokens(&a_in, grid, shift as isize)
+            } else {
+                a_in
+            };
+            a = window_partition(&a, grid, cfg.window);
+            a = attention(cfg, params, &nm, &a, tap);
+            a = window_merge(&a, b, grid, cfg.window);
+            if shift > 0 {
+                a = shift_tokens(&a, grid, -(shift as isize));
+            }
+            a
+        } else {
+            attention(cfg, params, &nm, &a_in, tap)
+        };
+        h.add_assign(&a);
+        // -- MLP sublayer --
+        let mut m_in = h.clone();
+        let (g, be) = ln_params(params, &format!("{nm}/ln2"));
+        layer_norm(&mut m_in, g, be);
+        let m_in = m_in.reshape(&[b * t, cfg.dim]);
+        let mut mlp = linear(params, &format!("{nm}/fc1"), m_in, tap);
+        gelu_inplace(&mut mlp);
+        let mlp = linear(params, &format!("{nm}/fc2"), mlp, tap).reshape(&[b, t, cfg.dim]);
+        h.add_assign(&mlp);
+    }
+
+    let (g, be) = ln_params(params, "norm");
+    layer_norm(&mut h, g, be);
+    let pooled = mean_axis1(&h);
+    linear(params, "head", pooled, tap)
+}
+
+/// Multi-head self-attention on x [b, t, d] (global within each "batch"
+/// element — window attention passes window-batched tokens).
+fn attention(
+    cfg: &ViTConfig,
+    params: &BTreeMap<String, Tensor>,
+    name: &str,
+    x: &Tensor,
+    tap: &mut Tap,
+) -> Tensor {
+    let (b, t, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let hd = cfg.dim / cfg.heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let qkv = linear(
+        params,
+        &format!("{name}/qkv"),
+        x.clone().reshape(&[b * t, d]),
+        tap,
+    ); // [b*t, 3d]
+    // split into per-head q, k, v: qkv[bt, 3, heads, hd]. All scratch is
+    // preallocated once and reused across (batch, head) — the per-head
+    // Tensor allocations were a measurable cost on the native eval path
+    // (EXPERIMENTS.md §Perf iteration #5).
+    let mut out = Tensor::zeros(&[b, t, d]);
+    let qkvd = qkv.data();
+    let mut q = vec![0.0f32; t * hd];
+    let mut kt = vec![0.0f32; hd * t]; // k transposed: [hd, t]
+    let mut v = vec![0.0f32; t * hd];
+    let mut att = Tensor::zeros(&[t, t]);
+    let mut o = vec![0.0f32; t * hd];
+    for bi in 0..b {
+        for hi in 0..cfg.heads {
+            for ti in 0..t {
+                let base = (bi * t + ti) * 3 * d;
+                let qoff = base + hi * hd;
+                let koff = base + d + hi * hd;
+                let voff = base + 2 * d + hi * hd;
+                q[ti * hd..(ti + 1) * hd].copy_from_slice(&qkvd[qoff..qoff + hd]);
+                v[ti * hd..(ti + 1) * hd].copy_from_slice(&qkvd[voff..voff + hd]);
+                for e in 0..hd {
+                    kt[e * t + ti] = qkvd[koff + e];
+                }
+            }
+            // att = softmax(q kᵀ * scale) [t, t]
+            att.data_mut().fill(0.0);
+            matmul_into(&q, &kt, att.data_mut(), t, hd, t);
+            for x in att.data_mut() {
+                *x *= scale;
+            }
+            softmax_lastdim(&mut att);
+            o.fill(0.0);
+            matmul_into(att.data(), &v, &mut o, t, t, hd);
+            for ti in 0..t {
+                let dst = &mut out.data_mut()[((bi * t + ti) * d + hi * hd)..][..hd];
+                dst.copy_from_slice(&o[ti * hd..(ti + 1) * hd]);
+            }
+        }
+    }
+    let proj = linear(
+        params,
+        &format!("{name}/proj"),
+        out.reshape(&[b * t, d]),
+        tap,
+    );
+    proj.reshape(&[b, t, d])
+}
+
+/// [b, g*g, d] -> [b*(g/w)², w*w, d]  (mirrors vit.py::_window_partition).
+fn window_partition(x: &Tensor, g: usize, w: usize) -> Tensor {
+    let (b, t, d) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    debug_assert_eq!(t, g * g);
+    let nw = g / w;
+    let mut out = Tensor::zeros(&[b * nw * nw, w * w, d]);
+    for bi in 0..b {
+        for wy in 0..nw {
+            for wx in 0..nw {
+                let widx = (bi * nw + wy) * nw + wx;
+                for iy in 0..w {
+                    for ix in 0..w {
+                        let src_tok = (wy * w + iy) * g + (wx * w + ix);
+                        let src = &x.data()[(bi * t + src_tok) * d..][..d];
+                        let dst_tok = iy * w + ix;
+                        let dst =
+                            &mut out.data_mut()[(widx * w * w + dst_tok) * d..][..d];
+                        dst.copy_from_slice(src);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of `window_partition`.
+fn window_merge(x: &Tensor, b: usize, g: usize, w: usize) -> Tensor {
+    let d = x.shape()[2];
+    let nw = g / w;
+    let mut out = Tensor::zeros(&[b, g * g, d]);
+    for bi in 0..b {
+        for wy in 0..nw {
+            for wx in 0..nw {
+                let widx = (bi * nw + wy) * nw + wx;
+                for iy in 0..w {
+                    for ix in 0..w {
+                        let dst_tok = (wy * w + iy) * g + (wx * w + ix);
+                        let src_tok = iy * w + ix;
+                        let src = &x.data()[(widx * w * w + src_tok) * d..][..d];
+                        let dst = &mut out.data_mut()[(bi * g * g + dst_tok) * d..][..d];
+                        dst.copy_from_slice(src);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn window_partition_roundtrip() {
+        let mut rng = Rng::new(1);
+        let (b, g, w, d) = (2, 4, 2, 3);
+        let x = Tensor::new(&[b, g * g, d], rng.normal_vec(b * g * g * d));
+        let p = window_partition(&x, g, w);
+        assert_eq!(p.shape(), &[b * 4, w * w, d]);
+        let m = window_merge(&p, b, g, w);
+        assert_eq!(m, x);
+    }
+
+    #[test]
+    fn window_partition_layout() {
+        // g=4, w=2: token grid indices, single batch & channel
+        let x = Tensor::new(&[1, 16, 1], (0..16).map(|i| i as f32).collect());
+        let p = window_partition(&x, 4, 2);
+        // window (0,0) holds tokens 0,1,4,5
+        assert_eq!(&p.data()[0..4], &[0., 1., 4., 5.]);
+        // window (0,1) holds tokens 2,3,6,7
+        assert_eq!(&p.data()[4..8], &[2., 3., 6., 7.]);
+        // window (1,1) holds tokens 10,11,14,15
+        assert_eq!(&p.data()[12..16], &[10., 11., 14., 15.]);
+    }
+}

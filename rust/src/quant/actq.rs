@@ -1,0 +1,123 @@
+//! Activation quantization (Tab. 2 / Tab. 5 "full quantization").
+//!
+//! Per-tensor asymmetric uniform fake-quant on each quantizable layer's
+//! input, with scales calibrated from the (min, max) activation
+//! statistics the calibration pass collects. A RepQ-ViT-style clipping
+//! ratio tightens the range before the scale is derived (post-Softmax /
+//! post-GELU tails are long; clipping them is what makes A4 usable —
+//! the paper adopts [27]'s reparameterization for the same reason).
+
+use crate::tensor::Tensor;
+
+/// Per-layer activation quantization parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ActQuant {
+    pub scale: f32,
+    pub zero: f32,
+    pub bits: u32,
+}
+
+impl ActQuant {
+    /// Derive from calibrated activation range, shrinking each bound
+    /// *toward zero* by `clip` (1.0 = full observed range). Shrinking
+    /// toward zero — never past it — keeps exact 0 representable, which
+    /// matters enormously for post-ReLU inputs where most of the mass
+    /// sits at 0: clipping that moved `lo` above 0 would add a systematic
+    /// DC bias to every activation (observed: resnet A8 collapsing to
+    /// chance while A4 survived by a zero-point rounding accident).
+    pub fn from_range(mut mn: f32, mut mx: f32, bits: u32, clip: f32) -> ActQuant {
+        if !(mn.is_finite() && mx.is_finite()) || mn > mx {
+            (mn, mx) = (0.0, 1.0);
+        }
+        let lo = if mn < 0.0 { mn * clip } else { mn };
+        let hi = if mx > 0.0 { mx * clip } else { mx };
+        let levels = (1u64 << bits) as f32 - 1.0;
+        let mut scale = (hi - lo) / levels;
+        if scale <= 0.0 {
+            scale = 1e-8;
+        }
+        let zero = (lo / scale).round_ties_even();
+        ActQuant { scale, zero, bits }
+    }
+
+    /// Fake-quantize one value.
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        let levels = (1u64 << self.bits) as f32 - 1.0;
+        let q = (x / self.scale).round_ties_even() - self.zero;
+        let q = q.clamp(0.0, levels);
+        (q + self.zero) * self.scale
+    }
+
+    /// Fake-quantize a tensor in place.
+    pub fn apply_tensor(&self, t: &mut Tensor) {
+        for x in t.data_mut() {
+            *x = self.apply(*x);
+        }
+    }
+
+    /// As the (scale, zero) row the PJRT actq graph expects.
+    pub fn as_row(&self) -> [f32; 2] {
+        [self.scale, self.zero]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_on_grid_points() {
+        let aq = ActQuant::from_range(0.0, 15.0, 4, 1.0);
+        for v in 0..=15 {
+            let x = v as f32;
+            assert!((aq.apply(x) - x).abs() < 1e-5, "{x}");
+        }
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        let aq = ActQuant::from_range(0.0, 1.0, 4, 1.0);
+        assert!(aq.apply(100.0) <= 1.0 + aq.scale);
+        assert!(aq.apply(-100.0) >= -aq.scale);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let aq = ActQuant::from_range(-2.0, 2.0, 8, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = rng.range_f32(-2.0, 2.0);
+            assert!((aq.apply(x) - x).abs() <= aq.scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn degenerate_range_guarded() {
+        let aq = ActQuant::from_range(3.0, 3.0, 4, 1.0);
+        assert!(aq.scale > 0.0);
+        assert!(aq.apply(3.0).is_finite());
+        let aq2 = ActQuant::from_range(f32::NAN, 1.0, 4, 1.0);
+        assert!(aq2.apply(0.5).is_finite());
+    }
+
+    #[test]
+    fn clipping_tightens_scale() {
+        let full = ActQuant::from_range(-10.0, 10.0, 4, 1.0);
+        let clipped = ActQuant::from_range(-10.0, 10.0, 4, 0.5);
+        assert!(clipped.scale < full.scale);
+    }
+
+    #[test]
+    fn tensor_apply_matches_scalar() {
+        let aq = ActQuant::from_range(-1.0, 1.0, 4, 0.9);
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(64);
+        let mut t = Tensor::from_vec(v.clone());
+        aq.apply_tensor(&mut t);
+        for (a, b) in t.data().iter().zip(&v) {
+            assert_eq!(*a, aq.apply(*b));
+        }
+    }
+}

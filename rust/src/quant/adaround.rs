@@ -1,0 +1,162 @@
+//! AdaRound-lite: adaptive rounding fitted *without* gradients.
+//!
+//! AdaRound (Nagel et al. 2020) learns a per-weight up/down rounding mask
+//! by SGD on the layer reconstruction error. The published method needs
+//! backprop; this baseline keeps the search space (q_i ∈ {⌊w/δ⌋, ⌈w/δ⌉},
+//! scale fixed at init) but fits the mask by the same closed-form
+//! coordinate descent machinery as COMQ — i.e. it is COMQ restricted to
+//! the two adjacent grid points with a frozen δ. The gap between this and
+//! full COMQ in the tables isolates the value of (a) the wider code range
+//! and (b) the learned scale.
+
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_ranges;
+
+use super::comq::EPS_DIAG;
+use super::gram::GramSet;
+use super::grid::{init_grid, LayerQuant, QuantConfig};
+
+pub fn adaround_lite(gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+    let (m, n) = (w.rows(), w.cols());
+    let (delta, zero) = init_grid(w, cfg);
+    let levels = cfg.levels();
+    let mut q = Tensor::zeros(&[m, n]);
+    // init at floor
+    for i in 0..m {
+        let wrow = w.row(i);
+        let qrow = q.row_mut(i);
+        for j in 0..n {
+            qrow[j] = (wrow[j] / delta[j]).floor().clamp(zero[j], zero[j] + levels);
+        }
+    }
+    let q_ptr = QPtr(q.data_mut().as_mut_ptr());
+    parallel_ranges(n, 4, |_, cols| {
+        let mut p = vec![0.0f32; m];
+        let mut wcol = vec![0.0f32; m];
+        let mut qcol = vec![0.0f32; m];
+        for j in cols {
+            let g = gram.for_col(j);
+            let dj = delta[j];
+            let zj = zero[j];
+            let qd = unsafe { std::slice::from_raw_parts_mut(q_ptr.ptr(), m * n) };
+            for i in 0..m {
+                wcol[i] = w.at2(i, j);
+                qcol[i] = qd[i * n + j];
+            }
+            // p = G (w − δ q)
+            for i in 0..m {
+                let mut s = 0.0f32;
+                let grow = g.row(i);
+                for t in 0..m {
+                    s += grow[t] * (wcol[t] - dj * qcol[t]);
+                }
+                p[i] = s;
+            }
+            for _sweep in 0..cfg.iters {
+                for i in 0..m {
+                    let gii = g.at2(i, i);
+                    if gii <= EPS_DIAG {
+                        continue;
+                    }
+                    let lo = (wcol[i] / dj).floor().clamp(zj, zj + levels);
+                    let hi = (lo + 1.0).min(zj + levels);
+                    let r_old = wcol[i] - dj * qcol[i];
+                    // continuous optimum, then snap to the nearer of {lo, hi}
+                    let cont = (p[i] - gii * r_old + gii * wcol[i]) / gii / dj;
+                    let q_new = if (cont - lo).abs() <= (cont - hi).abs() { lo } else { hi };
+                    if q_new != qcol[i] {
+                        let dr = (wcol[i] - dj * q_new) - r_old;
+                        let grow = g.row(i);
+                        for (pt, gt) in p.iter_mut().zip(grow) {
+                            *pt += gt * dr;
+                        }
+                        qcol[i] = q_new;
+                    }
+                }
+            }
+            for i in 0..m {
+                qd[i * n + j] = qcol[i];
+            }
+        }
+    });
+    LayerQuant { q, delta, zero }
+}
+
+struct QPtr(*mut f32);
+unsafe impl Send for QPtr {}
+unsafe impl Sync for QPtr {}
+impl QPtr {
+    #[inline]
+    fn ptr(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::rtn;
+    use crate::quant::{comq_gram, OrderKind, Scheme};
+    use crate::util::Rng;
+
+    fn cfg(bits: u32) -> QuantConfig {
+        QuantConfig {
+            bits,
+            scheme: Scheme::PerChannel,
+            order: OrderKind::Cyclic,
+            iters: 3,
+            lam: 1.0,
+        }
+    }
+
+    fn setup(seed: u64) -> (Tensor, GramSet) {
+        let mut rng = Rng::new(seed);
+        let (b, m, n) = (96, 24, 12);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n)).scale(0.4);
+        (w, GramSet::from_features(&x))
+    }
+
+    #[test]
+    fn beats_rtn() {
+        let (w, g) = setup(60);
+        for bits in [3u32, 4] {
+            let c = cfg(bits);
+            let e_ada = g.recon_error(&w, &adaround_lite(&g, &w, &c).dequant());
+            let e_rtn = g.recon_error(&w, &rtn(&w, &c).dequant());
+            assert!(e_ada < e_rtn, "bits={bits}: ada {e_ada} vs rtn {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn comq_at_least_as_good() {
+        // COMQ searches the full range with learned δ; AdaRound-lite can't win
+        let mut tot_a = 0.0;
+        let mut tot_c = 0.0;
+        for seed in 0..5 {
+            let (w, g) = setup(70 + seed);
+            let c = cfg(2);
+            tot_a += g.recon_error(&w, &adaround_lite(&g, &w, &c).dequant());
+            tot_c += g.recon_error(&w, &comq_gram(&g, &w, &c).dequant());
+        }
+        assert!(tot_c <= tot_a * 1.05, "comq {tot_c} vs adaround {tot_a}");
+    }
+
+    #[test]
+    fn stays_adjacent_to_rtn_grid() {
+        // every code is floor or ceil of w/δ (clamped)
+        let (w, g) = setup(80);
+        let c = cfg(4);
+        let lq = adaround_lite(&g, &w, &c);
+        assert!(lq.codes_feasible(4));
+        for i in 0..w.rows() {
+            for j in 0..w.cols() {
+                let raw = w.at2(i, j) / lq.delta[j];
+                let q = lq.q.at2(i, j);
+                let lo = raw.floor().clamp(lq.zero[j], lq.zero[j] + 15.0);
+                let hi = (lo + 1.0).min(lq.zero[j] + 15.0);
+                assert!(q == lo || q == hi, "({i},{j}): q={q} raw={raw}");
+            }
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Bit-split & stitching baseline (Wang et al., ICML 2020 / TPAMI 2022),
+//! adapted to the Gram-domain layer objective.
+//!
+//! The published method decomposes each b-bit code into bit planes,
+//! optimizes one plane at a time against the layer reconstruction error
+//! (a binary problem per coordinate given the other planes), then
+//! "stitches" the planes back into integer codes. We keep exactly that
+//! structure — offset-binary planes q = z + Σ_p 2^p u_p, u_p ∈ {0,1},
+//! optimized MSB→LSB with closed-form binary coordinate updates — and
+//! reuse the residual bookkeeping of the COMQ engine (P = G(W − W_q)).
+//! The scale is fixed at init (the published method derives it from the
+//! weight range too); the gap to COMQ in the tables therefore isolates
+//! the value of full-range coordinate moves + the learned δ.
+
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_ranges;
+
+use super::comq::EPS_DIAG;
+use super::gram::GramSet;
+use super::grid::{init_grid, qround, LayerQuant, QuantConfig};
+
+pub fn bitsplit(gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+    let (m, n) = (w.rows(), w.cols());
+    let (delta, zero) = init_grid(w, cfg);
+    let levels = cfg.levels();
+    // init at RTN codes (the stitching start point)
+    let mut q = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let wrow = w.row(i);
+        let qrow = q.row_mut(i);
+        for j in 0..n {
+            qrow[j] = qround(wrow[j] / delta[j], zero[j], levels);
+        }
+    }
+    let q_ptr = QPtr(q.data_mut().as_mut_ptr());
+    parallel_ranges(n, 4, |_, cols| {
+        let mut p = vec![0.0f32; m];
+        let mut wcol = vec![0.0f32; m];
+        let mut qcol = vec![0.0f32; m];
+        for j in cols {
+            let g = gram.for_col(j);
+            let dj = delta[j];
+            let zj = zero[j];
+            let qd = unsafe { std::slice::from_raw_parts_mut(q_ptr.ptr(), m * n) };
+            for i in 0..m {
+                wcol[i] = w.at2(i, j);
+                qcol[i] = qd[i * n + j];
+            }
+            // residual statistics p = G (w − δ q)
+            for i in 0..m {
+                let grow = g.row(i);
+                let mut s = 0.0f32;
+                for t in 0..m {
+                    s += grow[t] * (wcol[t] - dj * qcol[t]);
+                }
+                p[i] = s;
+            }
+            // plane-wise passes, MSB -> LSB, repeated `iters` times
+            for _pass in 0..cfg.iters {
+                for plane in (0..cfg.bits).rev() {
+                    let step = (1u64 << plane) as f32;
+                    for i in 0..m {
+                        let gii = g.at2(i, i);
+                        if gii <= EPS_DIAG {
+                            continue;
+                        }
+                        // binary choice: bit of `plane` in (q - z) set or
+                        // cleared; candidates stay within the code range
+                        let u = qcol[i] - zj;
+                        let bit_set = ((u as u64) >> plane) & 1 == 1;
+                        let cand = if bit_set { qcol[i] - step } else { qcol[i] + step };
+                        if cand < zj || cand > zj + levels {
+                            continue;
+                        }
+                        // continuous optimum along this coordinate
+                        let r_old = wcol[i] - dj * qcol[i];
+                        let opt = (p[i] - gii * r_old + gii * wcol[i]) / gii / dj;
+                        // pick the nearer of {current, candidate} to opt
+                        let q_new = if (opt - cand).abs() < (opt - qcol[i]).abs() {
+                            cand
+                        } else {
+                            qcol[i]
+                        };
+                        if q_new != qcol[i] {
+                            let dr = (wcol[i] - dj * q_new) - r_old;
+                            let grow = g.row(i);
+                            for (pt, gt) in p.iter_mut().zip(grow) {
+                                *pt += gt * dr;
+                            }
+                            qcol[i] = q_new;
+                        }
+                    }
+                }
+            }
+            for i in 0..m {
+                qd[i * n + j] = qcol[i];
+            }
+        }
+    });
+    LayerQuant { q, delta, zero }
+}
+
+struct QPtr(*mut f32);
+unsafe impl Send for QPtr {}
+unsafe impl Sync for QPtr {}
+impl QPtr {
+    #[inline]
+    fn ptr(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::rtn;
+    use crate::quant::{comq_gram, OrderKind, Scheme};
+    use crate::util::Rng;
+
+    fn cfg(bits: u32) -> QuantConfig {
+        QuantConfig {
+            bits,
+            scheme: Scheme::PerChannel,
+            order: OrderKind::Cyclic,
+            iters: 3,
+            lam: 1.0,
+        }
+    }
+
+    fn setup(seed: u64) -> (Tensor, GramSet) {
+        let mut rng = Rng::new(seed);
+        let (b, m, n) = (96, 24, 12);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n)).scale(0.4);
+        (w, GramSet::from_features(&x))
+    }
+
+    #[test]
+    fn beats_rtn() {
+        for seed in [90u64, 91] {
+            let (w, g) = setup(seed);
+            for bits in [3u32, 4] {
+                let c = cfg(bits);
+                let e_bs = g.recon_error(&w, &bitsplit(&g, &w, &c).dequant());
+                let e_rtn = g.recon_error(&w, &rtn(&w, &c).dequant());
+                assert!(e_bs < e_rtn, "seed={seed} bits={bits}: {e_bs} vs rtn {e_rtn}");
+            }
+        }
+    }
+
+    #[test]
+    fn codes_feasible_all_bits() {
+        let (w, g) = setup(92);
+        for bits in [2u32, 3, 4, 8] {
+            let lq = bitsplit(&g, &w, &cfg(bits));
+            assert!(lq.codes_feasible(bits), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn comq_no_worse_on_average() {
+        // COMQ's moves are a superset (any integer step + learned δ)
+        let mut tot_b = 0.0;
+        let mut tot_c = 0.0;
+        for seed in 95..100u64 {
+            let (w, g) = setup(seed);
+            let c = cfg(3);
+            tot_b += g.recon_error(&w, &bitsplit(&g, &w, &c).dequant());
+            tot_c += g.recon_error(&w, &comq_gram(&g, &w, &c).dequant());
+        }
+        assert!(tot_c <= tot_b * 1.02, "comq {tot_c} vs bitsplit {tot_b}");
+    }
+
+    #[test]
+    fn handles_dead_features() {
+        let (w, _) = setup(97);
+        let g = GramSet::Shared(Tensor::zeros(&[24, 24]));
+        let lq = bitsplit(&g, &w, &cfg(4));
+        assert!(lq.q.data().iter().all(|v| v.is_finite()));
+        assert!(lq.codes_feasible(4));
+    }
+}

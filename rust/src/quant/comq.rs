@@ -1,0 +1,491 @@
+//! COMQ: coordinate-wise minimization of the layer-wise reconstruction
+//! error (the paper's Alg. 1 / Alg. 2).
+//!
+//! Two engines, mathematically identical (tests assert agreement):
+//!
+//! * `comq_residual` — the literal Eq. 6/9 transcription carrying
+//!   U = X(W − W_q) ∈ R^{b×n}; needs raw features X; O(K·m·b) per column.
+//! * `comq_gram`     — the optimized engine carrying P = G(W − W_q)
+//!   column-wise with G = XᵀX precomputed; O(K·m²) per column and no
+//!   batch dimension in the hot loop. This is what the coordinator uses.
+//!
+//! Columns are independent given the scale, so both engines process
+//! columns in parallel; per-layer mode synchronizes only at the δ-update
+//! (Eq. 7), per-channel mode never does (Eq. 10 is per-column).
+
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_ranges;
+
+use super::gram::GramSet;
+use super::grid::{init_grid, qround, LayerQuant, QuantConfig, Scheme};
+use super::order::order_for_column;
+
+/// Dead-feature guard: ‖x_i‖² below this falls back to plain rounding.
+pub const EPS_DIAG: f32 = 1e-12;
+
+// ---------------------------------------------------------------------------
+// Gram-domain engine (the production path)
+// ---------------------------------------------------------------------------
+
+/// Quantize one layer with COMQ using Gram statistics.
+pub fn comq_gram(gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+    let (m, n) = (w.rows(), w.cols());
+    assert_eq!(gram.m(), m, "Gram dimension {} vs weight rows {m}", gram.m());
+    let (mut delta, zero) = init_grid(w, cfg);
+    // infeasible float start Q0 = W / δ (made feasible by the first sweep)
+    let mut q = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let wrow = w.row(i);
+        let qrow = q.row_mut(i);
+        for j in 0..n {
+            qrow[j] = wrow[j] / delta[j];
+        }
+    }
+
+    let levels = cfg.levels();
+    for _k in 0..cfg.iters {
+        // -- Q-update: sweep every column (parallel; columns independent) --
+        let new_deltas = sweep_columns_gram(gram, w, &mut q, &delta, &zero, levels, cfg);
+        // -- δ-update --
+        match cfg.scheme {
+            Scheme::PerChannel => {
+                for (d, nd) in delta.iter_mut().zip(&new_deltas) {
+                    if nd.1 > 0.0 {
+                        *d = nd.0 / nd.1;
+                    }
+                }
+            }
+            Scheme::PerLayer => {
+                let num: f64 = new_deltas.iter().map(|p| p.0 as f64).sum();
+                let den: f64 = new_deltas.iter().map(|p| p.1 as f64).sum();
+                if den > 0.0 {
+                    let d = (num / den) as f32;
+                    delta.iter_mut().for_each(|x| *x = d);
+                }
+            }
+        }
+    }
+    LayerQuant { q, delta, zero }
+}
+
+/// One full sweep over all columns. Returns per-column (num, den) for the
+/// δ-update: num_j = q_jᵀ G w_j, den_j = q_jᵀ G q_j.
+fn sweep_columns_gram(
+    gram: &GramSet,
+    w: &Tensor,
+    q: &mut Tensor,
+    delta: &[f32],
+    zero: &[f32],
+    levels: f32,
+    cfg: &QuantConfig,
+) -> Vec<(f32, f32)> {
+    let (m, n) = (w.rows(), w.cols());
+    // Shared-Gram fast path: compute P = G (W − Q diag δ) for ALL columns
+    // as one blocked matmul instead of n separate gemvs (perf iteration
+    // #6 in EXPERIMENTS.md §Perf — the gemvs were ~2/3 of sweep FLOPs
+    // and the blocked kernel has far better cache behaviour).
+    let p_all: Option<Tensor> = match gram {
+        GramSet::Shared(g) => {
+            let mut r = Tensor::zeros(&[m, n]);
+            for i in 0..m {
+                let wrow = w.row(i);
+                let qrow = q.row(i);
+                let rrow = r.row_mut(i);
+                for j in 0..n {
+                    rrow[j] = wrow[j] - delta[j] * qrow[j];
+                }
+            }
+            Some(crate::tensor::matmul(g, &r))
+        }
+        GramSet::Grouped(_) => None,
+    };
+    let mut out = vec![(0.0f32, 0.0f32); n];
+    let q_ptr = SendPtr(q.data_mut().as_mut_ptr());
+    let out_ptr = SendPtrPair(out.as_mut_ptr());
+    // Columns are fully independent within a sweep; partition them.
+    parallel_ranges(n, 4, |_, cols| {
+        // scratch reused across this thread's columns
+        let mut wcol = vec![0.0f32; m];
+        let mut qcol = vec![0.0f32; m];
+        let mut p = vec![0.0f32; m];
+        let mut diag = vec![0.0f32; m];
+        for j in cols {
+            let g = gram.for_col(j);
+            let qd = unsafe { std::slice::from_raw_parts_mut(q_ptr.ptr(), m * n) };
+            for i in 0..m {
+                wcol[i] = w.at2(i, j);
+                qcol[i] = qd[i * n + j];
+                diag[i] = g.at2(i, i);
+            }
+            let dj = delta[j];
+            let zj = zero[j];
+            let order = order_for_column(cfg.order, &diag, w, j);
+            // p = G (w − δ q): column slice of the batched P, or per-
+            // column gemv for grouped layers
+            match &p_all {
+                Some(pa) => {
+                    for i in 0..m {
+                        p[i] = pa.at2(i, j);
+                    }
+                }
+                None => gemv_diff(g, &wcol, &qcol, dj, &mut p),
+            }
+            for &oi in &order {
+                let i = oi as usize;
+                let gii = g.at2(i, i);
+                let r_old = wcol[i] - dj * qcol[i];
+                let q_new = if gii <= EPS_DIAG {
+                    qround(wcol[i] / dj, zj, levels)
+                } else {
+                    let numer = p[i] - gii * r_old + gii * wcol[i];
+                    qround(numer / gii / dj, zj, levels)
+                };
+                let r_new = wcol[i] - dj * q_new;
+                let dr = r_new - r_old;
+                if dr != 0.0 {
+                    let grow = g.row(i); // symmetric: column i == row i
+                    for (pt, gt) in p.iter_mut().zip(grow) {
+                        *pt += gt * dr;
+                    }
+                }
+                qcol[i] = q_new;
+            }
+            // write back
+            for i in 0..m {
+                qd[i * n + j] = qcol[i];
+            }
+            // δ-update statistics: grouped layers compute their own gemv
+            // here; the shared case batches G·Q below (one matmul).
+            if p_all.is_none() {
+                let mut gq = vec![0.0f32; m];
+                gemv(g, &qcol, &mut gq);
+                let mut num = 0.0f64;
+                let mut den = 0.0f64;
+                for i in 0..m {
+                    num += gq[i] as f64 * wcol[i] as f64;
+                    den += gq[i] as f64 * qcol[i] as f64;
+                }
+                let od = unsafe { std::slice::from_raw_parts_mut(out_ptr.ptr(), n) };
+                od[j] = (num as f32, den as f32);
+            }
+        }
+    });
+    if let GramSet::Shared(g) = gram {
+        // batched δ statistics: GQ = G·Q, then per-column dots
+        let gq = crate::tensor::matmul(g, q);
+        let mut num = vec![0.0f64; n];
+        let mut den = vec![0.0f64; n];
+        for i in 0..m {
+            let gqr = gq.row(i);
+            let wr = w.row(i);
+            let qr = q.row(i);
+            for j in 0..n {
+                num[j] += gqr[j] as f64 * wr[j] as f64;
+                den[j] += gqr[j] as f64 * qr[j] as f64;
+            }
+        }
+        for j in 0..n {
+            out[j] = (num[j] as f32, den[j] as f32);
+        }
+    }
+    out
+}
+
+/// p = G (w − δ q)
+fn gemv_diff(g: &Tensor, w: &[f32], q: &[f32], delta: f32, p: &mut [f32]) {
+    let m = w.len();
+    let r: Vec<f32> = (0..m).map(|i| w[i] - delta * q[i]).collect();
+    gemv(g, &r, p);
+}
+
+/// p = G v (G symmetric [m, m]); 8-way unrolled dot so the compiler
+/// vectorizes with independent accumulator lanes (same shape as the
+/// matmul axpy kernel — perf iteration #3 in EXPERIMENTS.md §Perf).
+fn gemv(g: &Tensor, v: &[f32], p: &mut [f32]) {
+    let m = v.len();
+    let gd = g.data();
+    for (i, pi) in p.iter_mut().enumerate() {
+        *pi = dot(&gd[i * m..(i + 1) * m], v);
+    }
+}
+
+/// 8-lane unrolled dot product.
+#[inline]
+pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let split = n - n % 8;
+    let mut acc = [0.0f32; 8];
+    for (a8, b8) in a[..split].chunks_exact(8).zip(b[..split].chunks_exact(8)) {
+        for l in 0..8 {
+            acc[l] += a8[l] * b8[l];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
+        s += x * y;
+    }
+    s
+}
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    #[inline]
+    fn ptr(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+struct SendPtrPair(*mut (f32, f32));
+unsafe impl Send for SendPtrPair {}
+unsafe impl Sync for SendPtrPair {}
+impl SendPtrPair {
+    #[inline]
+    fn ptr(&self) -> *mut (f32, f32) {
+        self.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Residual-domain engine (Eq. 6/9 verbatim; the reference path)
+// ---------------------------------------------------------------------------
+
+/// Quantize one layer with COMQ carrying raw residuals U = X(W − W_q).
+/// Requires raw calibration features x [b, m]. Used for validation and
+/// for the residual-vs-Gram perf ablation (micro_hotpath bench).
+pub fn comq_residual(x: &Tensor, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+    let (b, m) = (x.rows(), x.cols());
+    let n = w.cols();
+    assert_eq!(w.rows(), m);
+    let (mut delta, zero) = init_grid(w, cfg);
+    let mut q = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            q.data_mut()[i * n + j] = w.at2(i, j) / delta[j];
+        }
+    }
+    // precompute ‖x_i‖² and columns of X
+    let norms: Vec<f32> = (0..m)
+        .map(|i| (0..b).map(|r| x.at2(r, i) * x.at2(r, i)).sum())
+        .collect();
+    let xt = x.transpose2(); // [m, b]: row i = x_i
+
+    let levels = cfg.levels();
+    for _k in 0..cfg.iters {
+        let mut stats = vec![(0.0f64, 0.0f64); n];
+        for j in 0..n {
+            let dj = delta[j];
+            let zj = zero[j];
+            let wcol: Vec<f32> = (0..m).map(|i| w.at2(i, j)).collect();
+            let mut qcol: Vec<f32> = (0..m).map(|i| q.at2(i, j)).collect();
+            // u = X (w − δ q)
+            let mut u = vec![0.0f32; b];
+            for i in 0..m {
+                let r = wcol[i] - dj * qcol[i];
+                if r == 0.0 {
+                    continue;
+                }
+                let xi = xt.row(i);
+                for (us, xs) in u.iter_mut().zip(xi) {
+                    *us += xs * r;
+                }
+            }
+            let order = order_for_column(cfg.order, &norms, w, j);
+            for &oi in &order {
+                let i = oi as usize;
+                let xi = xt.row(i);
+                let r_old = wcol[i] - dj * qcol[i];
+                // u1 = u − x_i r_old;  numer = <u1 + x_i w_i, x_i>
+                let mut dot = 0.0f32;
+                for (us, xs) in u.iter().zip(xi) {
+                    dot += (us - xs * r_old + xs * wcol[i]) * xs;
+                }
+                let q_new = if norms[i] <= EPS_DIAG {
+                    qround(wcol[i] / dj, zj, levels)
+                } else {
+                    qround(dot / norms[i] / dj, zj, levels)
+                };
+                let r_new = wcol[i] - dj * q_new;
+                let dr = r_new - r_old;
+                if dr != 0.0 {
+                    for (us, xs) in u.iter_mut().zip(xi) {
+                        *us += xs * dr;
+                    }
+                }
+                qcol[i] = q_new;
+            }
+            // δ statistics from raw X: num = <Xq, Xw>, den = ‖Xq‖²
+            let mut xq = vec![0.0f32; b];
+            let mut xw = vec![0.0f32; b];
+            for i in 0..m {
+                let xi = xt.row(i);
+                for r in 0..b {
+                    xq[r] += xi[r] * qcol[i];
+                    xw[r] += xi[r] * wcol[i];
+                }
+            }
+            let num: f64 = xq.iter().zip(&xw).map(|(a, c)| *a as f64 * *c as f64).sum();
+            let den: f64 = xq.iter().map(|a| *a as f64 * *a as f64).sum();
+            stats[j] = (num, den);
+            for i in 0..m {
+                q.data_mut()[i * n + j] = qcol[i];
+            }
+        }
+        match cfg.scheme {
+            Scheme::PerChannel => {
+                for (j, d) in delta.iter_mut().enumerate() {
+                    if stats[j].1 > 0.0 {
+                        *d = (stats[j].0 / stats[j].1) as f32;
+                    }
+                }
+            }
+            Scheme::PerLayer => {
+                let num: f64 = stats.iter().map(|s| s.0).sum();
+                let den: f64 = stats.iter().map(|s| s.1).sum();
+                if den > 0.0 {
+                    let d = (num / den) as f32;
+                    delta.iter_mut().for_each(|x| *x = d);
+                }
+            }
+        }
+    }
+    LayerQuant { q, delta, zero }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::gram::recon_error_from_x;
+    use crate::quant::rtn::rtn;
+    use crate::util::Rng;
+
+    fn setup(b: usize, m: usize, n: usize, seed: u64) -> (Tensor, Tensor, GramSet) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n)).scale(0.5);
+        let g = GramSet::from_features(&x);
+        (x, w, g)
+    }
+
+    #[test]
+    fn gram_matches_residual_engine() {
+        let (x, w, g) = setup(64, 24, 12, 10);
+        for bits in [2u32, 3, 4] {
+            for scheme in [Scheme::PerChannel, Scheme::PerLayer] {
+                let cfg = QuantConfig { bits, scheme, order: OrderKind::Cyclic, iters: 3, lam: 1.0 };
+                let a = comq_gram(&g, &w, &cfg);
+                let b2 = comq_residual(&x, &w, &cfg);
+                // identical codes on well-conditioned random input
+                let same = a
+                    .q
+                    .data()
+                    .iter()
+                    .zip(b2.q.data())
+                    .filter(|(p, q)| p == q)
+                    .count();
+                let frac = same as f64 / a.q.len() as f64;
+                assert!(frac > 0.98, "bits={bits} {scheme:?}: only {frac} codes agree");
+                let ea = g.recon_error(&w, &a.dequant());
+                let eb = g.recon_error(&w, &b2.dequant());
+                assert!(
+                    (ea - eb).abs() <= 0.05 * ea.max(1e-6),
+                    "bits={bits} {scheme:?}: {ea} vs {eb}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn beats_rtn() {
+        let (x, w, g) = setup(128, 32, 16, 11);
+        for bits in [2u32, 3, 4] {
+            let cfg = QuantConfig { bits, ..Default::default() };
+            let lq = comq_gram(&g, &w, &cfg);
+            let r = rtn(&w, &cfg);
+            let e_comq = recon_error_from_x(&x, &w, &lq.dequant());
+            let e_rtn = recon_error_from_x(&x, &w, &r.dequant());
+            assert!(
+                e_comq < e_rtn,
+                "bits={bits}: comq {e_comq} not better than rtn {e_rtn}"
+            );
+        }
+    }
+
+    #[test]
+    fn codes_feasible_all_modes() {
+        let (_, w, g) = setup(48, 16, 8, 12);
+        for scheme in [Scheme::PerChannel, Scheme::PerLayer] {
+            for order in [OrderKind::Cyclic, OrderKind::GreedyShared, OrderKind::GreedyPerColumn] {
+                let cfg = QuantConfig { bits: 3, scheme, order, iters: 2, lam: 0.9 };
+                let lq = comq_gram(&g, &w, &cfg);
+                assert!(lq.codes_feasible(3), "{scheme:?} {order:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_no_worse_than_cyclic_on_average() {
+        // Aggregate over seeds: greedy should win or tie in total error
+        let mut tot_c = 0.0;
+        let mut tot_g = 0.0;
+        for seed in 0..5 {
+            let (_, w, g) = setup(96, 24, 12, 100 + seed);
+            let base = QuantConfig { bits: 3, iters: 3, ..Default::default() };
+            let c = comq_gram(&g, &w, &QuantConfig { order: OrderKind::Cyclic, ..base });
+            let gr = comq_gram(&g, &w, &QuantConfig { order: OrderKind::GreedyPerColumn, ..base });
+            tot_c += g.recon_error(&w, &c.dequant());
+            tot_g += g.recon_error(&w, &gr.dequant());
+        }
+        assert!(tot_g <= tot_c * 1.02, "greedy {tot_g} vs cyclic {tot_c}");
+    }
+
+    #[test]
+    fn iterations_monotone_early() {
+        // error(K=3) <= error(K=1) (paper Tab. 7: a few sweeps help)
+        let (_, w, g) = setup(64, 20, 10, 42);
+        let e1 = {
+            let cfg = QuantConfig { bits: 4, iters: 1, ..Default::default() };
+            g.recon_error(&w, &comq_gram(&g, &w, &cfg).dequant())
+        };
+        let e3 = {
+            let cfg = QuantConfig { bits: 4, iters: 3, ..Default::default() };
+            g.recon_error(&w, &comq_gram(&g, &w, &cfg).dequant())
+        };
+        assert!(e3 <= e1 * 1.001, "K=3 {e3} vs K=1 {e1}");
+    }
+
+    #[test]
+    fn grouped_layers_quantize() {
+        let mut rng = Rng::new(13);
+        let (rows, c, kk) = (40, 6, 9);
+        let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+        let g = GramSet::from_grouped_features(&x3);
+        let w = Tensor::new(&[kk, c], rng.normal_vec(kk * c)).scale(0.3);
+        let cfg = QuantConfig { bits: 4, ..Default::default() };
+        let lq = comq_gram(&g, &w, &cfg);
+        assert!(lq.codes_feasible(4));
+        let e = g.recon_error(&w, &lq.dequant());
+        let e_rtn = g.recon_error(&w, &rtn(&w, &cfg).dequant());
+        assert!(e <= e_rtn + 1e-9, "grouped comq {e} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn handles_dead_features() {
+        // zero out a feature column of X: its Gram row/col is zero
+        let mut rng = Rng::new(14);
+        let (b, m, n) = (32, 10, 4);
+        let mut xd = rng.normal_vec(b * m);
+        for r in 0..b {
+            xd[r * m + 3] = 0.0;
+        }
+        let x = Tensor::new(&[b, m], xd);
+        let g = GramSet::from_features(&x);
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n));
+        let cfg = QuantConfig::default();
+        let lq = comq_gram(&g, &w, &cfg);
+        assert!(lq.codes_feasible(4));
+        assert!(lq.q.data().iter().all(|v| v.is_finite()));
+    }
+}

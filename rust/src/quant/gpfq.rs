@@ -1,0 +1,128 @@
+//! GPFQ: greedy path-following quantization (Zhang, Zhou & Saab 2023).
+//!
+//! A single sequential pass: each coordinate is quantized to absorb the
+//! *accumulated residual* of all previously quantized coordinates,
+//!
+//! ```text
+//!     u_0 = 0
+//!     q_i = quant( ⟨x_i, w_i x_i + u_{i-1}⟩ / (δ ‖x_i‖²) )
+//!     u_i = u_{i-1} + (w_i − δ q_i) x_i
+//! ```
+//!
+//! Unlike COMQ there is no revisiting (one pass, path-following) and the
+//! scale δ is fixed at init — the paper notes GPFQ needs trial-and-error
+//! to pick scales, which is exactly what the tables show at low bits.
+//!
+//! Gram-domain: ⟨x_i, u⟩ = Σ_{t<i} r_t G_{t,i}, maintained incrementally
+//! as s ← s + r_i g_i after each step (O(m) per coordinate).
+
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_ranges;
+
+use super::comq::EPS_DIAG;
+use super::gram::GramSet;
+use super::grid::{init_grid, qround, LayerQuant, QuantConfig};
+
+pub fn gpfq(gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+    let (m, n) = (w.rows(), w.cols());
+    assert_eq!(gram.m(), m);
+    let (delta, zero) = init_grid(w, cfg);
+    let levels = cfg.levels();
+    let mut q = Tensor::zeros(&[m, n]);
+    let q_ptr = QPtr(q.data_mut().as_mut_ptr());
+    parallel_ranges(n, 4, |_, cols| {
+        let mut s = vec![0.0f32; m]; // s_i = <x_i, u>
+        for j in cols {
+            let g = gram.for_col(j);
+            let dj = delta[j];
+            let zj = zero[j];
+            s.iter_mut().for_each(|v| *v = 0.0);
+            let qd = unsafe { std::slice::from_raw_parts_mut(q_ptr.ptr(), m * n) };
+            for i in 0..m {
+                let gii = g.at2(i, i);
+                let wi = w.at2(i, j);
+                let qv = if gii <= EPS_DIAG {
+                    qround(wi / dj, zj, levels)
+                } else {
+                    qround((wi * gii + s[i]) / (dj * gii), zj, levels)
+                };
+                qd[i * n + j] = qv;
+                let r = wi - dj * qv;
+                if r != 0.0 {
+                    let grow = g.row(i);
+                    for (st, gt) in s.iter_mut().zip(grow) {
+                        *st += r * gt;
+                    }
+                }
+            }
+        }
+    });
+    LayerQuant { q, delta, zero }
+}
+
+struct QPtr(*mut f32);
+unsafe impl Send for QPtr {}
+unsafe impl Sync for QPtr {}
+impl QPtr {
+    #[inline]
+    fn ptr(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::rtn;
+    use crate::quant::{comq_gram, OrderKind, Scheme};
+    use crate::util::Rng;
+
+    fn cfg(bits: u32) -> QuantConfig {
+        QuantConfig {
+            bits,
+            scheme: Scheme::PerChannel,
+            order: OrderKind::Cyclic,
+            iters: 3,
+            lam: 1.0,
+        }
+    }
+
+    fn setup(seed: u64) -> (Tensor, GramSet) {
+        let mut rng = Rng::new(seed);
+        let (b, m, n) = (96, 24, 12);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n)).scale(0.4);
+        (w, GramSet::from_features(&x))
+    }
+
+    #[test]
+    fn beats_rtn_at_4bit() {
+        let (w, g) = setup(30);
+        let c = cfg(4);
+        let e_gpfq = g.recon_error(&w, &gpfq(&g, &w, &c).dequant());
+        let e_rtn = g.recon_error(&w, &rtn(&w, &c).dequant());
+        assert!(e_gpfq < e_rtn, "gpfq {e_gpfq} vs rtn {e_rtn}");
+    }
+
+    #[test]
+    fn comq_beats_gpfq_on_average() {
+        // COMQ revisits coordinates and learns δ; GPFQ does neither.
+        let mut tot_g = 0.0;
+        let mut tot_c = 0.0;
+        for seed in 0..5 {
+            let (w, g) = setup(40 + seed);
+            let c = cfg(3);
+            tot_g += g.recon_error(&w, &gpfq(&g, &w, &c).dequant());
+            tot_c += g.recon_error(&w, &comq_gram(&g, &w, &c).dequant());
+        }
+        assert!(tot_c < tot_g, "comq {tot_c} vs gpfq {tot_g}");
+    }
+
+    #[test]
+    fn codes_feasible() {
+        let (w, g) = setup(50);
+        for bits in [2u32, 3, 4] {
+            assert!(gpfq(&g, &w, &cfg(bits)).codes_feasible(bits));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Calibration sufficient statistics.
+//!
+//! The layer-wise objective ‖X W_q − X W‖² depends on the calibration
+//! features X only through the Gram matrix G = XᵀX (and the init only on
+//! W), so the calibration manager stores G instead of raw activations —
+//! O(m²) instead of O(b·m) memory, and the COMQ hot loop drops the batch
+//! dimension entirely (see DESIGN.md §4).
+//!
+//! Depthwise (grouped) layers get one small Gram per group: output
+//! channel j only sees its own k·k patch block.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{matmul, matmul_at_a, Tensor};
+
+/// Gram statistics for one layer.
+#[derive(Debug, Clone)]
+pub enum GramSet {
+    /// All columns share G = XᵀX [m, m].
+    Shared(Tensor),
+    /// Column j uses its own G_j (depthwise conv): `groups[j]` is [kk, kk].
+    Grouped(Vec<Tensor>),
+}
+
+impl GramSet {
+    /// Build from raw features X [b, m].
+    pub fn from_features(x: &Tensor) -> GramSet {
+        GramSet::Shared(matmul_at_a(x))
+    }
+
+    /// Build from grouped features X3 [rows, groups, kk].
+    pub fn from_grouped_features(x3: &Tensor) -> GramSet {
+        assert_eq!(x3.ndim(), 3);
+        let (rows, c, kk) = (x3.shape()[0], x3.shape()[1], x3.shape()[2]);
+        let mut groups = Vec::with_capacity(c);
+        for ch in 0..c {
+            // gather [rows, kk] slice for channel ch
+            let mut xc = Tensor::zeros(&[rows, kk]);
+            for r in 0..rows {
+                let src = &x3.data()[(r * c + ch) * kk..(r * c + ch + 1) * kk];
+                xc.data_mut()[r * kk..(r + 1) * kk].copy_from_slice(src);
+            }
+            groups.push(matmul_at_a(&xc));
+        }
+        GramSet::Grouped(groups)
+    }
+
+    /// Row dimension m of the weight this Gram calibrates.
+    pub fn m(&self) -> usize {
+        match self {
+            GramSet::Shared(g) => g.rows(),
+            GramSet::Grouped(gs) => gs[0].rows(),
+        }
+    }
+
+    pub fn is_grouped(&self) -> bool {
+        matches!(self, GramSet::Grouped(_))
+    }
+
+    /// The Gram used by column j.
+    pub fn for_col(&self, j: usize) -> &Tensor {
+        match self {
+            GramSet::Shared(g) => g,
+            GramSet::Grouped(gs) => &gs[j],
+        }
+    }
+
+    /// diag of the shared Gram (column norms² of X).
+    pub fn shared(&self) -> Result<&Tensor> {
+        match self {
+            GramSet::Shared(g) => Ok(g),
+            GramSet::Grouped(_) => bail!("layer is grouped; no shared Gram"),
+        }
+    }
+
+    /// Accumulate another batch's statistics (same shape).
+    pub fn accumulate(&mut self, other: &GramSet) {
+        match (self, other) {
+            (GramSet::Shared(a), GramSet::Shared(b)) => a.add_assign(b),
+            (GramSet::Grouped(a), GramSet::Grouped(b)) => {
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter_mut().zip(b) {
+                    x.add_assign(y);
+                }
+            }
+            _ => panic!("mismatched GramSet variants"),
+        }
+    }
+
+    /// ‖X W_q − X W‖² = Σ_j d_jᵀ G_j d_j  with d = w_q − w (f64 accumulate).
+    pub fn recon_error(&self, w: &Tensor, wq: &Tensor) -> f64 {
+        assert_eq!(w.shape(), wq.shape());
+        let (m, n) = (w.rows(), w.cols());
+        let mut total = 0.0f64;
+        for j in 0..n {
+            let g = self.for_col(j);
+            let d: Vec<f32> = (0..m).map(|i| wq.at2(i, j) - w.at2(i, j)).collect();
+            // dᵀ G d
+            let gd = g.rows();
+            debug_assert_eq!(gd, m);
+            for i in 0..m {
+                if d[i] == 0.0 {
+                    continue;
+                }
+                let grow = g.row(i);
+                let mut s = 0.0f64;
+                for t in 0..m {
+                    s += grow[t] as f64 * d[t] as f64;
+                }
+                total += d[i] as f64 * s;
+            }
+        }
+        total.max(0.0)
+    }
+
+    /// Per-layer error decomposed per column (for Fig. 3 reporting).
+    pub fn recon_error_per_col(&self, w: &Tensor, wq: &Tensor) -> Vec<f64> {
+        let (m, n) = (w.rows(), w.cols());
+        (0..n)
+            .map(|j| {
+                let g = self.for_col(j);
+                let d: Vec<f64> =
+                    (0..m).map(|i| (wq.at2(i, j) - w.at2(i, j)) as f64).collect();
+                let mut e = 0.0f64;
+                for i in 0..m {
+                    if d[i] == 0.0 {
+                        continue;
+                    }
+                    let grow = g.row(i);
+                    let s: f64 = (0..m).map(|t| grow[t] as f64 * d[t]).sum();
+                    e += d[i] * s;
+                }
+                e.max(0.0)
+            })
+            .collect()
+    }
+}
+
+/// Reference implementation of the reconstruction error straight from X
+/// (used by tests to validate the Gram identity).
+pub fn recon_error_from_x(x: &Tensor, w: &Tensor, wq: &Tensor) -> f64 {
+    let d = matmul(x, &wq.sub(w));
+    d.frob_norm_sq()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn gram_identity() {
+        let mut rng = Rng::new(4);
+        let (b, m, n) = (32, 10, 6);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n));
+        let wq = Tensor::new(&[m, n], rng.normal_vec(m * n));
+        let gs = GramSet::from_features(&x);
+        let e_gram = gs.recon_error(&w, &wq);
+        let e_x = recon_error_from_x(&x, &w, &wq);
+        assert!((e_gram - e_x).abs() < 1e-2 * e_x.max(1.0), "{e_gram} vs {e_x}");
+        // per-column decomposition sums to total
+        let per: f64 = gs.recon_error_per_col(&w, &wq).iter().sum();
+        assert!((per - e_gram).abs() < 1e-6 * e_gram.max(1.0));
+    }
+
+    #[test]
+    fn accumulate_equals_concat() {
+        let mut rng = Rng::new(5);
+        let (b, m) = (16, 8);
+        let x1 = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let x2 = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let mut cat = x1.data().to_vec();
+        cat.extend_from_slice(x2.data());
+        let xc = Tensor::new(&[2 * b, m], cat);
+        let mut g = GramSet::from_features(&x1);
+        g.accumulate(&GramSet::from_features(&x2));
+        let gc = GramSet::from_features(&xc);
+        match (&g, &gc) {
+            (GramSet::Shared(a), GramSet::Shared(b)) => {
+                assert!(a.max_abs_diff(b) < 1e-3);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn grouped_from_features() {
+        let mut rng = Rng::new(6);
+        let (rows, c, kk) = (20, 3, 4);
+        let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+        let gs = GramSet::from_grouped_features(&x3);
+        assert!(gs.is_grouped());
+        assert_eq!(gs.m(), kk);
+        match &gs {
+            GramSet::Grouped(groups) => {
+                assert_eq!(groups.len(), c);
+                // each group's Gram is PSD: diag >= 0
+                for g in groups {
+                    for i in 0..kk {
+                        assert!(g.at2(i, i) >= 0.0);
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn zero_diff_zero_error() {
+        let mut rng = Rng::new(7);
+        let x = Tensor::new(&[8, 4], rng.normal_vec(32));
+        let w = Tensor::new(&[4, 3], rng.normal_vec(12));
+        let gs = GramSet::from_features(&x);
+        assert_eq!(gs.recon_error(&w, &w), 0.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Asymmetric uniform quantization grids (Sec. 3 preliminaries).
+//!
+//! A b-bit grid is the code set S = {z, z+1, ..., z + 2^b - 1} with a
+//! floating-point scale δ:  w ≈ δ·q, q ∈ S. Per-layer quantization shares
+//! (δ, z) across the whole weight matrix; per-channel gives every output
+//! column its own pair. Codes are stored as f32 during optimization (they
+//! are exact small integers) and packed to u8/bitstream for deployment.
+
+use crate::tensor::Tensor;
+
+/// Quantization scheme granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    PerLayer,
+    PerChannel,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "per-layer" | "per_layer" | "pl" => Some(Scheme::PerLayer),
+            "per-channel" | "per_channel" | "pc" => Some(Scheme::PerChannel),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::PerLayer => "per-layer",
+            Scheme::PerChannel => "per-channel",
+        }
+    }
+}
+
+/// Full quantizer configuration (shared by COMQ and all baselines).
+#[derive(Debug, Clone, Copy)]
+pub struct QuantConfig {
+    pub bits: u32,
+    pub scheme: Scheme,
+    pub order: super::OrderKind,
+    /// COMQ iteration count K (paper Tab. 7: 3–4 is optimal).
+    pub iters: usize,
+    /// Per-channel init shrink λ (paper Tab. 10: λ<1 matters at 2-bit).
+    pub lam: f32,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig {
+            bits: 4,
+            scheme: Scheme::PerChannel,
+            order: super::OrderKind::GreedyPerColumn,
+            iters: 3,
+            lam: 1.0,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn levels(&self) -> f32 {
+        (1u64 << self.bits) as f32 - 1.0
+    }
+}
+
+/// Result of quantizing one layer: W_q = Q · diag(δ) with codes in
+/// [zero, zero + 2^b - 1] per column.
+#[derive(Debug, Clone)]
+pub struct LayerQuant {
+    /// Bit-codes (exact integers stored as f32), shape [m, n].
+    pub q: Tensor,
+    /// Per-column scales (per-layer mode stores the shared value n times).
+    pub delta: Vec<f32>,
+    /// Per-column zero points.
+    pub zero: Vec<f32>,
+}
+
+impl LayerQuant {
+    /// Reconstruct the dequantized weight W_q [m, n].
+    pub fn dequant(&self) -> Tensor {
+        let (m, n) = (self.q.rows(), self.q.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            let qrow = self.q.row(i);
+            let orow = &mut out.data_mut()[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] = qrow[j] * self.delta[j];
+            }
+        }
+        out
+    }
+
+    /// All codes within their column grids (invariant check).
+    pub fn codes_feasible(&self, bits: u32) -> bool {
+        let levels = (1u64 << bits) as f32 - 1.0;
+        let n = self.q.cols();
+        self.q.data().iter().enumerate().all(|(idx, &q)| {
+            let j = idx % n;
+            q.fract() == 0.0 && q >= self.zero[j] && q <= self.zero[j] + levels
+        })
+    }
+
+    /// Pack codes into an unsigned offset-binary byte stream (b <= 8):
+    /// stored value = q - zero ∈ [0, 2^b - 1], bit-packed little-endian.
+    pub fn pack_codes(&self, bits: u32) -> Vec<u8> {
+        assert!(bits as usize <= 8);
+        let n = self.q.cols();
+        let total = self.q.len();
+        let mut out = vec![0u8; (total * bits as usize).div_ceil(8)];
+        for (idx, &q) in self.q.data().iter().enumerate() {
+            let j = idx % n;
+            let u = (q - self.zero[j]) as u64 & ((1 << bits) - 1);
+            let bitpos = idx * bits as usize;
+            let (byte, off) = (bitpos / 8, bitpos % 8);
+            out[byte] |= (u << off) as u8;
+            if off + bits as usize > 8 {
+                out[byte + 1] |= (u >> (8 - off)) as u8;
+            }
+        }
+        out
+    }
+
+    /// Inverse of `pack_codes`.
+    pub fn unpack_codes(packed: &[u8], bits: u32, m: usize, n: usize, zero: &[f32]) -> Tensor {
+        assert!(bits as usize <= 8);
+        let mut data = vec![0.0f32; m * n];
+        let mask = (1u64 << bits) - 1;
+        for (idx, d) in data.iter_mut().enumerate() {
+            let bitpos = idx * bits as usize;
+            let (byte, off) = (bitpos / 8, bitpos % 8);
+            let mut u = (packed[byte] as u64) >> off;
+            if off + bits as usize > 8 {
+                u |= (packed[byte + 1] as u64) << (8 - off);
+            }
+            *d = (u & mask) as f32 + zero[idx % n];
+        }
+        Tensor::new(&[m, n], data)
+    }
+}
+
+/// Per-channel init (Sec. 3.2): δ_j = λ (max w_j - min w_j) / (2^b - 1),
+/// z_j = round(min w_j / δ_j). Returns (delta, zero).
+pub fn init_per_channel(w: &Tensor, bits: u32, lam: f32) -> (Vec<f32>, Vec<f32>) {
+    let levels = (1u64 << bits) as f32 - 1.0;
+    let (mins, maxs) = w.col_min_max();
+    let mut delta = Vec::with_capacity(mins.len());
+    let mut zero = Vec::with_capacity(mins.len());
+    for (&mn, &mx) in mins.iter().zip(&maxs) {
+        let mut d = lam * (mx - mn) / levels;
+        if d <= 0.0 {
+            d = 1e-8;
+        }
+        delta.push(d);
+        zero.push((mn / d).round_ties_even());
+    }
+    (delta, zero)
+}
+
+/// Per-layer init (Sec. 3.1): shared δ = mean_j ||w_j||_∞ / 2^(b-1),
+/// shared z = round(min W / δ). Returns (delta, zero) scalars.
+pub fn init_per_layer(w: &Tensor, bits: u32) -> (f32, f32) {
+    let inf = w.col_inf_norm();
+    let mut d = inf.iter().sum::<f32>() / inf.len() as f32 / (1u64 << (bits - 1)) as f32;
+    if d <= 0.0 {
+        d = 1e-8;
+    }
+    let z = (w.min() / d).round_ties_even();
+    (d, z)
+}
+
+/// Initialize (delta, zero) vectors per the config.
+pub fn init_grid(w: &Tensor, cfg: &QuantConfig) -> (Vec<f32>, Vec<f32>) {
+    match cfg.scheme {
+        Scheme::PerChannel => init_per_channel(w, cfg.bits, cfg.lam),
+        Scheme::PerLayer => {
+            let (d, z) = init_per_layer(w, cfg.bits);
+            (vec![d; w.cols()], vec![z; w.cols()])
+        }
+    }
+}
+
+/// clip(round(x), z, z + levels) — the scalar quantization step, with
+/// ties-to-even rounding to match numpy/jnp exactly.
+#[inline]
+pub fn qround(x: f32, zero: f32, levels: f32) -> f32 {
+    x.round_ties_even().clamp(zero, zero + levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn per_channel_init_covers_range() {
+        let w = Tensor::new(&[3, 2], vec![-1.0, 0.0, 0.5, 2.0, 1.0, 4.0]);
+        let (d, z) = init_per_channel(&w, 4, 1.0);
+        // column 0: range [-1, 1], delta = 2/15
+        assert!((d[0] - 2.0 / 15.0).abs() < 1e-6);
+        assert!((z[0] - (-1.0 / d[0]).round_ties_even()).abs() < 1e-6);
+        // column 1: range [0, 4]
+        assert!((d[1] - 4.0 / 15.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_column_guard() {
+        let w = Tensor::new(&[2, 1], vec![3.0, 3.0]); // zero range
+        let (d, _z) = init_per_channel(&w, 4, 1.0);
+        assert!(d[0] > 0.0);
+        let (d2, _) = init_per_layer(&Tensor::zeros(&[2, 2]), 4);
+        assert!(d2 > 0.0);
+    }
+
+    #[test]
+    fn qround_ties_even() {
+        assert_eq!(qround(0.5, -10.0, 20.0), 0.0); // ties to even like numpy
+        assert_eq!(qround(1.5, -10.0, 20.0), 2.0);
+        assert_eq!(qround(2.5, -10.0, 20.0), 2.0);
+        assert_eq!(qround(100.0, 0.0, 15.0), 15.0); // clipped
+        assert_eq!(qround(-3.0, 0.0, 15.0), 0.0);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(9);
+        for bits in [2u32, 3, 4, 8] {
+            let levels = (1u64 << bits) as f32 - 1.0;
+            let (m, n) = (13, 7);
+            let zero: Vec<f32> = (0..n).map(|_| (rng.below(9) as f32) - 4.0).collect();
+            let mut q = Tensor::zeros(&[m, n]);
+            for idx in 0..m * n {
+                let j = idx % n;
+                q.data_mut()[idx] = zero[j] + rng.below(levels as usize + 1) as f32;
+            }
+            let lq = LayerQuant { q: q.clone(), delta: vec![0.1; n], zero: zero.clone() };
+            assert!(lq.codes_feasible(bits));
+            let packed = lq.pack_codes(bits);
+            assert_eq!(packed.len(), (m * n * bits as usize).div_ceil(8));
+            let un = LayerQuant::unpack_codes(&packed, bits, m, n, &zero);
+            assert_eq!(un, q, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn dequant_multiplies_per_column() {
+        let lq = LayerQuant {
+            q: Tensor::new(&[2, 2], vec![1., 2., 3., 4.]),
+            delta: vec![0.5, 2.0],
+            zero: vec![0.0, 0.0],
+        };
+        assert_eq!(lq.dequant().data(), &[0.5, 4.0, 1.5, 8.0]);
+    }
+
+    #[test]
+    fn infeasible_codes_detected() {
+        let lq = LayerQuant {
+            q: Tensor::new(&[1, 1], vec![17.0]),
+            delta: vec![1.0],
+            zero: vec![0.0],
+        };
+        assert!(!lq.codes_feasible(4)); // 17 > 15
+        let lq2 = LayerQuant {
+            q: Tensor::new(&[1, 1], vec![1.5]),
+            delta: vec![1.0],
+            zero: vec![0.0],
+        };
+        assert!(!lq2.codes_feasible(4)); // non-integer
+    }
+}

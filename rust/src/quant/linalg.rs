@@ -1,0 +1,129 @@
+//! Dense symmetric positive-definite linear algebra for the OBQ baseline:
+//! Cholesky factorization and SPD inversion, with diagonal damping.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Lower Cholesky factor L of an SPD matrix A = L Lᵀ (in-place layout).
+pub fn cholesky(a: &Tensor) -> Result<Tensor> {
+    let m = a.rows();
+    assert_eq!(a.cols(), m);
+    let mut l = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        for j in 0..=i {
+            let mut s = a.at2(i, j) as f64;
+            for k in 0..j {
+                s -= l.at2(i, k) as f64 * l.at2(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (s={s})");
+                }
+                l.data_mut()[i * m + j] = (s.sqrt()) as f32;
+            } else {
+                l.data_mut()[i * m + j] = (s / l.at2(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn invert_spd(a: &Tensor) -> Result<Tensor> {
+    let m = a.rows();
+    let l = cholesky(a)?;
+    // Invert lower-triangular L
+    let mut linv = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        linv.data_mut()[i * m + i] = 1.0 / l.at2(i, i);
+        for j in 0..i {
+            let mut s = 0.0f64;
+            for k in j..i {
+                s += l.at2(i, k) as f64 * linv.at2(k, j) as f64;
+            }
+            linv.data_mut()[i * m + j] = (-s / l.at2(i, i) as f64) as f32;
+        }
+    }
+    // A⁻¹ = Linvᵀ Linv
+    let mut out = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        for j in 0..m {
+            let mut s = 0.0f64;
+            for k in i.max(j)..m {
+                s += linv.at2(k, i) as f64 * linv.at2(k, j) as f64;
+            }
+            out.data_mut()[i * m + j] = s as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// A + λ·mean(diag)·I — the damping OBQ/GPTQ uses to keep H invertible.
+pub fn damped(a: &Tensor, lam: f64) -> Tensor {
+    let m = a.rows();
+    let mean_diag: f64 =
+        (0..m).map(|i| a.at2(i, i) as f64).sum::<f64>() / m as f64;
+    let add = (lam * mean_diag.max(1e-12)) as f32;
+    let mut out = a.clone();
+    for i in 0..m {
+        out.data_mut()[i * m + i] += add;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_at_a};
+    use crate::util::Rng;
+
+    fn random_spd(m: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let a = Tensor::new(&[m + 4, m], rng.normal_vec((m + 4) * m));
+        damped(&matmul_at_a(&a), 0.01)
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        for m in [1, 3, 8, 20] {
+            let a = random_spd(m, m as u64);
+            let l = cholesky(&a).unwrap();
+            let rec = matmul(&l, &l.transpose2());
+            assert!(rec.max_abs_diff(&a) < 1e-2, "m={m}");
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        for m in [2, 5, 16] {
+            let a = random_spd(m, 100 + m as u64);
+            let inv = invert_spd(&a).unwrap();
+            let prod = matmul(&a, &inv);
+            for i in 0..m {
+                for j in 0..m {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (prod.at2(i, j) - expect).abs() < 1e-2,
+                        "m={m} ({i},{j}) = {}",
+                        prod.at2(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn damping_fixes_singular() {
+        let a = Tensor::zeros(&[3, 3]); // singular
+        let d = damped(&a, 0.01);
+        // mean diag is 0 -> floor kicks in; still PD after damping floor
+        assert!(cholesky(&d).is_ok());
+    }
+}

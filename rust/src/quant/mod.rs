@@ -1,0 +1,36 @@
+//! The quantization core: COMQ (the paper's contribution) plus every
+//! baseline the paper compares against, all backpropagation-free and all
+//! consuming the same calibration interface (`GramSet`).
+//!
+//! Layout:
+//! * `grid`     — asymmetric uniform b-bit grids, bit-code packing
+//! * `gram`     — calibration sufficient statistics (G = XᵀX)
+//! * `order`    — cyclic vs greedy coordinate orders (Sec. 3.3)
+//! * `comq`     — Alg. 1 / Alg. 2, residual- and Gram-domain engines
+//! * `rtn`      — round-to-nearest baseline
+//! * `gpfq`     — greedy path-following quantization (Zhang et al.)
+//! * `obq`      — OBQ/GPTQ-style Hessian-based baseline
+//! * `adaround` — gradient-free adaptive-rounding baseline
+//! * `bitsplit` — plane-wise bit-split & stitching baseline (Wang et al.)
+//! * `actq`     — activation quantization (scales from calib min/max)
+//! * `linalg`   — Cholesky factorization/inversion for `obq`
+//! * `traits`   — the `Quantizer` object interface + registry names
+
+pub mod actq;
+pub mod adaround;
+pub mod bitsplit;
+pub mod comq;
+pub mod gpfq;
+pub mod gram;
+pub mod grid;
+pub mod linalg;
+pub mod obq;
+pub mod order;
+pub mod rtn;
+pub mod traits;
+
+pub use comq::{comq_gram, comq_residual};
+pub use gram::GramSet;
+pub use grid::{LayerQuant, QuantConfig, Scheme};
+pub use order::OrderKind;
+pub use traits::{make_quantizer, Quantizer, QUANTIZER_NAMES};

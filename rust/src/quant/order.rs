@@ -1,0 +1,144 @@
+//! Coordinate update orders (Sec. 3.3).
+//!
+//! COMQ's greedy rule updates the most "important" coordinates first:
+//! importance of row i for column j is ‖x_i‖·|w_ij| (the magnitude of the
+//! rank-1 term w_ij·x_i in the column's reconstruction). Three variants:
+//!
+//! * `Cyclic`          — plain index order (QuantEase-style; the paper's †)
+//! * `GreedyShared`    — one order shared by every column, score
+//!                       ‖x_i‖·mean_j|w_ij| (the paper's vectorized form;
+//!                       also what the Pallas kernel uses via permutation)
+//! * `GreedyPerColumn` — each column sorts independently (strict rule)
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrderKind {
+    Cyclic,
+    GreedyShared,
+    GreedyPerColumn,
+}
+
+impl OrderKind {
+    pub fn parse(s: &str) -> Option<OrderKind> {
+        match s {
+            "cyclic" => Some(OrderKind::Cyclic),
+            "greedy" | "greedy-per-column" => Some(OrderKind::GreedyPerColumn),
+            "greedy-shared" => Some(OrderKind::GreedyShared),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrderKind::Cyclic => "cyclic",
+            OrderKind::GreedyShared => "greedy-shared",
+            OrderKind::GreedyPerColumn => "greedy",
+        }
+    }
+}
+
+/// Stable argsort descending.
+fn argsort_desc(scores: &[f32]) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b as usize]
+            .partial_cmp(&scores[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Row-update order for column j. `diag` = diag(G) (= ‖x_i‖²).
+pub fn order_for_column(kind: OrderKind, diag: &[f32], w: &Tensor, j: usize) -> Vec<u32> {
+    let m = w.rows();
+    match kind {
+        OrderKind::Cyclic => (0..m as u32).collect(),
+        OrderKind::GreedyPerColumn => {
+            let scores: Vec<f32> = (0..m)
+                .map(|i| diag[i].max(0.0).sqrt() * w.at2(i, j).abs())
+                .collect();
+            argsort_desc(&scores)
+        }
+        OrderKind::GreedyShared => shared_order(diag, w),
+    }
+}
+
+/// The shared greedy order: score_i = ‖x_i‖ · mean_j |w_ij|.
+pub fn shared_order(diag: &[f32], w: &Tensor) -> Vec<u32> {
+    let (m, n) = (w.rows(), w.cols());
+    let scores: Vec<f32> = (0..m)
+        .map(|i| {
+            let mean_abs = w.row(i).iter().map(|v| v.abs()).sum::<f32>() / n as f32;
+            diag[i].max(0.0).sqrt() * mean_abs
+        })
+        .collect();
+    argsort_desc(&scores)
+}
+
+/// Inverse permutation: out[perm[i]] = i.
+pub fn invert(perm: &[u32]) -> Vec<u32> {
+    let mut inv = vec![0u32; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p as usize] = i as u32;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_is_identity() {
+        let w = Tensor::zeros(&[4, 2]);
+        let o = order_for_column(OrderKind::Cyclic, &[1.0; 4], &w, 0);
+        assert_eq!(o, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn greedy_sorts_by_magnitude() {
+        // column 0 weights: [1, 3, 2]; uniform diag -> order 1, 2, 0
+        let w = Tensor::new(&[3, 1], vec![1.0, -3.0, 2.0]);
+        let o = order_for_column(OrderKind::GreedyPerColumn, &[1.0; 3], &w, 0);
+        assert_eq!(o, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn greedy_weighs_feature_norm() {
+        // same |w| everywhere; diag differs -> order by diag
+        let w = Tensor::new(&[3, 1], vec![1.0, 1.0, 1.0]);
+        let o = order_for_column(OrderKind::GreedyPerColumn, &[1.0, 9.0, 4.0], &w, 0);
+        assert_eq!(o, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn orders_are_permutations() {
+        let w = Tensor::new(&[5, 3], (0..15).map(|i| ((i * 7) % 5) as f32 - 2.0).collect());
+        let diag = [0.5, 2.0, 0.0, 1.0, 3.0];
+        for kind in [OrderKind::Cyclic, OrderKind::GreedyShared, OrderKind::GreedyPerColumn] {
+            for j in 0..3 {
+                let mut o = order_for_column(kind, &diag, &w, j);
+                o.sort();
+                assert_eq!(o, vec![0, 1, 2, 3, 4], "{kind:?} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn stable_on_ties() {
+        let w = Tensor::new(&[3, 1], vec![1.0, 1.0, 1.0]);
+        let o = order_for_column(OrderKind::GreedyPerColumn, &[1.0; 3], &w, 0);
+        assert_eq!(o, vec![0, 1, 2]); // ties keep index order
+    }
+
+    #[test]
+    fn invert_roundtrip() {
+        let perm = vec![2u32, 0, 3, 1];
+        let inv = invert(&perm);
+        for (i, &p) in perm.iter().enumerate() {
+            assert_eq!(inv[p as usize], i as u32);
+        }
+    }
+}

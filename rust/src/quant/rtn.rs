@@ -1,0 +1,86 @@
+//! RTN: round-to-nearest, the calibration-free baseline.
+//!
+//! W_q = δ · clip(round(W/δ), z, z + 2^b − 1) with the same grid init as
+//! COMQ (so differences in the tables isolate the *optimization*, not the
+//! grid). This is what "min-max uniform quantization" means in the
+//! paper's comparison tables.
+
+use crate::tensor::Tensor;
+
+use super::grid::{init_grid, qround, LayerQuant, QuantConfig};
+
+pub fn rtn(w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+    let (m, n) = (w.rows(), w.cols());
+    let (delta, zero) = init_grid(w, cfg);
+    let levels = cfg.levels();
+    let mut q = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let wrow = w.row(i);
+        let qrow = q.row_mut(i);
+        for j in 0..n {
+            qrow[j] = qround(wrow[j] / delta[j], zero[j], levels);
+        }
+    }
+    LayerQuant { q, delta, zero }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::grid::Scheme;
+    use crate::quant::OrderKind;
+    use crate::util::Rng;
+
+    fn cfg(bits: u32, scheme: Scheme) -> QuantConfig {
+        QuantConfig { bits, scheme, order: OrderKind::Cyclic, iters: 1, lam: 1.0 }
+    }
+
+    #[test]
+    fn codes_feasible() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::new(&[16, 8], rng.normal_vec(128));
+        for bits in [2u32, 3, 4, 8] {
+            for scheme in [Scheme::PerChannel, Scheme::PerLayer] {
+                let lq = rtn(&w, &cfg(bits, scheme));
+                assert!(lq.codes_feasible(bits), "bits={bits} {scheme:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn high_bits_near_lossless() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::new(&[32, 8], rng.normal_vec(256));
+        let lq = rtn(&w, &cfg(8, Scheme::PerChannel));
+        let err = w.max_abs_diff(&lq.dequant());
+        // max error <= delta/2 <= range/(2*255)
+        assert!(err < 0.02, "8-bit rtn max err {err}");
+    }
+
+    #[test]
+    fn per_channel_beats_per_layer_on_skewed_columns() {
+        // one tiny column + one huge column: shared scale murders the tiny one
+        let mut w = Tensor::zeros(&[16, 2]);
+        let mut rng = Rng::new(3);
+        for i in 0..16 {
+            w.data_mut()[i * 2] = rng.normal() * 0.01;
+            w.data_mut()[i * 2 + 1] = rng.normal() * 10.0;
+        }
+        let pc = rtn(&w, &cfg(4, Scheme::PerChannel)).dequant();
+        let pl = rtn(&w, &cfg(4, Scheme::PerLayer)).dequant();
+        let err_col0 = |wq: &Tensor| -> f32 {
+            (0..16).map(|i| (wq.at2(i, 0) - w.at2(i, 0)).abs()).sum()
+        };
+        assert!(err_col0(&pc) < err_col0(&pl));
+    }
+
+    #[test]
+    fn exact_grid_points_roundtrip() {
+        // weights already on the grid stay put
+        let cfgc = cfg(4, Scheme::PerChannel);
+        let w = Tensor::new(&[4, 1], vec![0.0, 0.5, 1.0, 1.5]);
+        let lq = rtn(&w, &cfgc);
+        let wq = lq.dequant();
+        assert!(w.max_abs_diff(&wq) < 1e-6);
+    }
+}

@@ -1,0 +1,146 @@
+//! The object-safe quantizer interface + name registry used by the
+//! coordinator's config system and the benches.
+
+use crate::tensor::Tensor;
+
+use super::adaround::adaround_lite;
+use super::bitsplit::bitsplit;
+use super::comq::comq_gram;
+use super::gpfq::gpfq;
+use super::gram::GramSet;
+use super::grid::{LayerQuant, QuantConfig};
+use super::obq::obq;
+use super::order::OrderKind;
+use super::rtn::rtn;
+
+/// A weight quantization method operating on (Gram, W).
+pub trait Quantizer: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant;
+    /// Whether the method reads the calibration Gram at all.
+    fn uses_calibration(&self) -> bool {
+        true
+    }
+}
+
+pub struct ComqQuantizer;
+pub struct ComqCyclicQuantizer;
+pub struct RtnQuantizer;
+pub struct GpfqQuantizer;
+pub struct ObqQuantizer;
+pub struct AdaRoundLiteQuantizer;
+pub struct BitSplitQuantizer;
+
+impl Quantizer for ComqQuantizer {
+    fn name(&self) -> &'static str {
+        "comq"
+    }
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        comq_gram(gram, w, cfg)
+    }
+}
+
+impl Quantizer for ComqCyclicQuantizer {
+    fn name(&self) -> &'static str {
+        "comq-cyclic"
+    }
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        let cfg = QuantConfig { order: OrderKind::Cyclic, ..*cfg };
+        comq_gram(gram, w, &cfg)
+    }
+}
+
+impl Quantizer for RtnQuantizer {
+    fn name(&self) -> &'static str {
+        "rtn"
+    }
+    fn quantize(&self, _gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        rtn(w, cfg)
+    }
+    fn uses_calibration(&self) -> bool {
+        false
+    }
+}
+
+impl Quantizer for GpfqQuantizer {
+    fn name(&self) -> &'static str {
+        "gpfq"
+    }
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        gpfq(gram, w, cfg)
+    }
+}
+
+impl Quantizer for ObqQuantizer {
+    fn name(&self) -> &'static str {
+        "obq"
+    }
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        obq(gram, w, cfg)
+    }
+}
+
+impl Quantizer for AdaRoundLiteQuantizer {
+    fn name(&self) -> &'static str {
+        "adaround-lite"
+    }
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        adaround_lite(gram, w, cfg)
+    }
+}
+
+impl Quantizer for BitSplitQuantizer {
+    fn name(&self) -> &'static str {
+        "bitsplit"
+    }
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        bitsplit(gram, w, cfg)
+    }
+}
+
+/// Every registered quantizer name (CLI/docs).
+pub const QUANTIZER_NAMES: &[&str] =
+    &["comq", "comq-cyclic", "rtn", "gpfq", "obq", "adaround-lite", "bitsplit"];
+
+/// Factory.
+pub fn make_quantizer(name: &str) -> Option<Box<dyn Quantizer>> {
+    match name {
+        "comq" => Some(Box::new(ComqQuantizer)),
+        "comq-cyclic" => Some(Box::new(ComqCyclicQuantizer)),
+        "rtn" => Some(Box::new(RtnQuantizer)),
+        "gpfq" => Some(Box::new(GpfqQuantizer)),
+        "obq" => Some(Box::new(ObqQuantizer)),
+        "adaround-lite" => Some(Box::new(AdaRoundLiteQuantizer)),
+        "bitsplit" => Some(Box::new(BitSplitQuantizer)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn registry_complete() {
+        for name in QUANTIZER_NAMES {
+            let q = make_quantizer(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(q.name(), *name);
+        }
+        assert!(make_quantizer("nope").is_none());
+    }
+
+    #[test]
+    fn all_quantizers_produce_feasible_codes() {
+        let mut rng = Rng::new(33);
+        let x = Tensor::new(&[48, 12], rng.normal_vec(48 * 12));
+        let w = Tensor::new(&[12, 6], rng.normal_vec(72));
+        let g = GramSet::from_features(&x);
+        let cfg = QuantConfig::default();
+        for name in QUANTIZER_NAMES {
+            let lq = make_quantizer(name).unwrap().quantize(&g, &w, &cfg);
+            assert!(lq.codes_feasible(cfg.bits), "{name}");
+            assert_eq!(lq.q.shape(), w.shape(), "{name}");
+        }
+    }
+}

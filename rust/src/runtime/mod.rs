@@ -1,0 +1,163 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them on the CPU PJRT client. This is the only place the `xla` crate is
+//! touched; everything above works in `Tensor`s.
+//!
+//! HLO *text* is the interchange format (python emits it via
+//! `mlir_module_to_xla_computation(...).as_hlo_text()`): jax ≥ 0.5 emits
+//! serialized protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids. See
+//! /opt/xla-example/README.md.
+//!
+//! Executables are compiled once per artifact path and cached; the
+//! compile cache is the runtime analogue of a serving system's model
+//! registry.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use once_cell::sync::OnceCell;
+
+use crate::tensor::Tensor;
+
+/// Lazily-initialized process-wide PJRT engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The xla crate wraps thread-safe C++ objects (PJRT is internally
+// synchronized); the raw pointers just aren't marked. Executions from
+// multiple coordinator threads are serialized per-executable by PJRT.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+static ENGINE: OnceCell<Engine> = OnceCell::new();
+
+impl Engine {
+    /// The process-wide engine (CPU PJRT client).
+    pub fn global() -> Result<&'static Engine> {
+        ENGINE.get_or_try_init(|| {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+            log::info!(
+                "PJRT client: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+        })
+    }
+
+    /// Compile (or fetch from cache) the HLO-text artifact at `path`.
+    pub fn load(&self, path: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(path.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute an artifact with `Tensor` inputs; returns all tuple outputs.
+    /// (All our graphs are lowered with `return_tuple=True`.)
+    pub fn run(&self, path: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let exe = self.load(path)?;
+        self.run_exe(&exe, inputs).with_context(|| format!("executing {path}"))
+    }
+
+    /// Execute an already-loaded executable.
+    pub fn run_exe(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| tensor_to_literal(t))
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("PJRT execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        parts.into_iter().map(|l| literal_to_tensor(&l)).collect()
+    }
+}
+
+/// Tensor (row-major f32) -> xla::Literal of the same shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(t.data());
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    flat.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e:?}"))
+}
+
+/// xla::Literal (f32) -> Tensor.
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec (dtype {:?}): {e:?}", shape.ty()))?;
+    let dims = if dims.is_empty() { vec![1] } else { dims };
+    Ok(Tensor::new(&dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> Option<std::path::PathBuf> {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        root.join("manifest.json").exists().then_some(root)
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn sweep_artifact_runs() {
+        // Smallest end-to-end PJRT check: run a COMQ sweep artifact and
+        // verify shapes + cache behaviour. (Numerical parity with the rust
+        // engine is covered by the integration tests.)
+        let Some(root) = artifacts_root() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let m = crate::manifest::Manifest::load(&root).unwrap();
+        let Some(sw) = m.sweeps.first() else { return };
+        let eng = Engine::global().unwrap();
+        let g = Tensor::zeros(&[sw.m, sw.m]);
+        let w = Tensor::zeros(&[sw.m, sw.n]);
+        let q = Tensor::zeros(&[sw.m, sw.n]);
+        let d = Tensor::full(&[sw.n], 1.0);
+        let lo = Tensor::full(&[sw.n], 0.0);
+        let hi = Tensor::full(&[sw.n], 15.0);
+        let outs = eng.run(&m.path(&sw.path), &[&g, &w, &q, &d, &lo, &hi]).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].shape(), &[sw.m, sw.n]);
+        assert_eq!(outs[1].shape(), &[sw.n]);
+        let before = eng.cache_len();
+        let _ = eng.run(&m.path(&sw.path), &[&g, &w, &q, &d, &lo, &hi]).unwrap();
+        assert_eq!(eng.cache_len(), before, "second run must hit the cache");
+    }
+}

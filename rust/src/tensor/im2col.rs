@@ -1,0 +1,124 @@
+//! im2col: convolution -> matmul reduction, mirroring
+//! python/compile/nets/common.py::im2col exactly.
+//!
+//! Input is NHWC; the patch axis is ordered (kh, kw, cin). This is the
+//! identity that lets the paper treat "a convolutional layer ... as a
+//! linear layer" for layer-wise PTQ: the conv weight [k*k*cin, cout]
+//! multiplies the im2col matrix [b*oh*ow, k*k*cin].
+
+use super::Tensor;
+
+/// x [b, h, w, c] -> ([b*oh*ow, k*k*c], oh, ow) with patch order (kh, kw, c).
+pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, usize, usize) {
+    assert_eq!(x.ndim(), 4, "im2col expects NHWC, got {:?}", x.shape());
+    let (b, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let m = k * k * c;
+    let xd = x.data();
+    let mut out = vec![0.0f32; b * oh * ow * m];
+    for bi in 0..b {
+        let xb = &xd[bi * h * w * c..(bi + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = &mut out[((bi * oh + oy) * ow + ox) * m..((bi * oh + oy) * ow + ox + 1) * m];
+                for ki in 0..k {
+                    let iy = (oy * stride + ki) as isize - pad as isize;
+                    for kj in 0..k {
+                        let ix = (ox * stride + kj) as isize - pad as isize;
+                        let dst = &mut row[(ki * k + kj) * c..(ki * k + kj + 1) * c];
+                        if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                            let src = &xb[(iy as usize * w + ix as usize) * c..][..c];
+                            dst.copy_from_slice(src);
+                        }
+                        // else: zero padding (already zeroed)
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::new(&[b * oh * ow, m], out), oh, ow)
+}
+
+/// Grouped (depthwise) im2col: x [b,h,w,c] -> [rows, c, k*k] flattened as a
+/// 3-D tensor, matching nets/common.py::dwconv2d (x3d layout [rows, c, kk]).
+pub fn im2col_grouped(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, usize, usize) {
+    let (full, oh, ow) = im2col(x, k, stride, pad);
+    let rows = full.rows();
+    let c = x.shape()[3];
+    let kk = k * k;
+    // full rows are (kh, kw, c); regroup to [rows, c, kk]
+    let fd = full.data();
+    let mut out = vec![0.0f32; rows * c * kk];
+    for r in 0..rows {
+        let src = &fd[r * kk * c..(r + 1) * kk * c];
+        let dst = &mut out[r * c * kk..(r + 1) * c * kk];
+        for p in 0..kk {
+            for ch in 0..c {
+                dst[ch * kk + p] = src[p * c + ch];
+            }
+        }
+    }
+    (Tensor::new(&[rows, c, kk], out), oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1() {
+        // k=1 stride=1 pad=0: im2col is just a reshape
+        let x = Tensor::new(&[1, 2, 2, 3], (0..12).map(|i| i as f32).collect());
+        let (cols, oh, ow) = im2col(&x, 1, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(cols.shape(), &[4, 3]);
+        assert_eq!(cols.data(), x.data());
+    }
+
+    #[test]
+    fn known_3x3_padded() {
+        // 3x3 single-channel image, k=3 pad=1: center patch = whole image
+        let x = Tensor::new(&[1, 3, 3, 1], (1..=9).map(|i| i as f32).collect());
+        let (cols, oh, ow) = im2col(&x, 3, 1, 1);
+        assert_eq!((oh, ow), (3, 3));
+        assert_eq!(cols.shape(), &[9, 9]);
+        // center output position (1,1) sees the full image in (kh,kw) order
+        assert_eq!(cols.row(4), &[1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        // top-left position (0,0): first row/col padded with zeros
+        assert_eq!(cols.row(0), &[0., 0., 0., 0., 1., 2., 0., 4., 5.]);
+    }
+
+    #[test]
+    fn stride_2() {
+        let x = Tensor::new(&[1, 4, 4, 1], (0..16).map(|i| i as f32).collect());
+        let (cols, oh, ow) = im2col(&x, 2, 2, 0);
+        assert_eq!((oh, ow), (2, 2));
+        // patch at (0,0): pixels (0,0),(0,1),(1,0),(1,1) = 0,1,4,5
+        assert_eq!(cols.row(0), &[0., 1., 4., 5.]);
+        // patch at (1,1): pixels (2,2),(2,3),(3,2),(3,3) = 10,11,14,15
+        assert_eq!(cols.row(3), &[10., 11., 14., 15.]);
+    }
+
+    #[test]
+    fn grouped_layout() {
+        let x = Tensor::new(&[1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let (g, oh, ow) = im2col_grouped(&x, 1, 1, 0);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(g.shape(), &[4, 2, 1]);
+        // row 0 = pixel (0,0): channels (0, 1)
+        assert_eq!(&g.data()[0..2], &[0., 1.]);
+    }
+
+    #[test]
+    fn batch_independence() {
+        let x1 = Tensor::new(&[1, 3, 3, 1], (0..9).map(|i| i as f32).collect());
+        let x2 = Tensor::new(&[1, 3, 3, 1], (9..18).map(|i| i as f32).collect());
+        let mut both = x1.data().to_vec();
+        both.extend_from_slice(x2.data());
+        let xb = Tensor::new(&[2, 3, 3, 1], both);
+        let (c1, _, _) = im2col(&x1, 3, 1, 1);
+        let (cb, _, _) = im2col(&xb, 3, 1, 1);
+        assert_eq!(&cb.data()[..c1.len()], c1.data());
+    }
+}

@@ -1,0 +1,185 @@
+//! Blocked, threaded f32 matrix multiplication.
+//!
+//! The kernel computes C[i,:] += A[i,k] * B[k,:] row-major with k-blocking
+//! so that the B panel stays in L1/L2 and the inner loop vectorizes (the
+//! compiler auto-vectorizes the fused multiply-add over contiguous rows).
+//! Rows of C are partitioned across threads — no synchronization needed.
+
+use super::Tensor;
+use crate::util::pool::parallel_ranges;
+
+const KB: usize = 256; // k-panel
+const MIN_FLOPS_PER_THREAD: usize = 1 << 20;
+
+/// C = A @ B; A [m, k], B [k, n] -> [m, n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n);
+    out
+}
+
+/// C (pre-zeroed or accumulated into) = A @ B on raw slices.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let flops = 2 * m * k * n;
+    let min_rows = (MIN_FLOPS_PER_THREAD / (2 * k * n).max(1)).max(1);
+    // Partition rows of C across threads; each thread owns c[lo..hi].
+    let c_ptr = SendPtr(c.as_mut_ptr());
+    parallel_ranges(m, min_rows, |_, rows| {
+        let c = unsafe { std::slice::from_raw_parts_mut(c_ptr.ptr(), m * n) };
+        for k0 in (0..k).step_by(KB) {
+            let k1 = (k0 + KB).min(k);
+            for i in rows.clone() {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    axpy(av, brow, crow);
+                }
+            }
+        }
+    });
+    let _ = flops;
+}
+
+/// crow += av * brow  (the vectorizable inner kernel).
+#[inline]
+fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
+    let n = crow.len();
+    let (bc, bt) = brow.split_at(n - n % 8);
+    let (cc, ct) = crow.split_at_mut(n - n % 8);
+    for (c8, b8) in cc.chunks_exact_mut(8).zip(bc.chunks_exact(8)) {
+        for l in 0..8 {
+            c8[l] += av * b8[l];
+        }
+    }
+    for (c1, b1) in ct.iter_mut().zip(bt) {
+        *c1 += av * b1;
+    }
+}
+
+/// G = Aᵀ A for A [r, m] -> [m, m] (the calibration Gram kernel).
+/// Symmetric; computes the upper triangle in f64 accumulation and mirrors.
+pub fn matmul_at_a(a: &Tensor) -> Tensor {
+    let (r, m) = (a.rows(), a.cols());
+    let ad = a.data();
+    let mut g = Tensor::zeros(&[m, m]);
+    let g_ptr = SendPtr(g.data_mut().as_mut_ptr());
+    parallel_ranges(m, 8, |_, cols| {
+        let gd = unsafe { std::slice::from_raw_parts_mut(g_ptr.ptr(), m * m) };
+        for i in cols {
+            // row i of G: sum_r a[r,i] * a[r, i..]
+            let gi = &mut gd[i * m..(i + 1) * m];
+            for row in 0..r {
+                let arow = &ad[row * m..(row + 1) * m];
+                let ai = arow[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                axpy(ai, &arow[i..], &mut gi[i..]);
+            }
+        }
+    });
+    // mirror upper -> lower
+    for i in 0..m {
+        for j in 0..i {
+            let v = g.data()[j * m + i];
+            g.data_mut()[i * m + j] = v;
+        }
+    }
+    g
+}
+
+/// Shared mutable pointer for disjoint-range writes across scoped threads.
+/// Callers guarantee each thread writes a disjoint row range.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    #[inline]
+    fn ptr(&self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k, n) = (a.rows(), a.cols(), b.cols());
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for l in 0..k {
+                    s += a.at2(i, l) as f64 * b.at2(l, j) as f64;
+                }
+                c.data_mut()[i * n + j] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 48, 96), (100, 1, 50)] {
+            let a = Tensor::new(&[m, k], rng.normal_vec(m * k));
+            let b = Tensor::new(&[k, n], rng.normal_vec(k * n));
+            let c = matmul(&a, &b);
+            let expect = naive(&a, &b);
+            assert!(
+                c.max_abs_diff(&expect) < 1e-3 * (k as f32).sqrt(),
+                "shape ({m},{k},{n})"
+            );
+        }
+    }
+
+    #[test]
+    fn at_a_matches_explicit() {
+        let mut rng = Rng::new(2);
+        for &(r, m) in &[(10, 4), (64, 33), (7, 129)] {
+            let a = Tensor::new(&[r, m], rng.normal_vec(r * m));
+            let g = matmul_at_a(&a);
+            let expect = matmul(&a.transpose2(), &a);
+            assert!(g.max_abs_diff(&expect) < 1e-3, "shape ({r},{m})");
+            // symmetry is exact by construction
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(g.at2(i, j), g.at2(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identity() {
+        let n = 16;
+        let mut eye = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            eye.data_mut()[i * n + i] = 1.0;
+        }
+        let mut rng = Rng::new(3);
+        let b = Tensor::new(&[n, 5], rng.normal_vec(n * 5));
+        assert_eq!(matmul(&eye, &b), b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        matmul(&Tensor::zeros(&[2, 3]), &Tensor::zeros(&[4, 2]));
+    }
+}

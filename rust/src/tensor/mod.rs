@@ -1,0 +1,286 @@
+//! Dense f32 tensor substrate.
+//!
+//! Deliberately minimal: row-major contiguous storage, 1–4 dims, the ops
+//! the model forward passes and quantizers actually need. Matmul is
+//! blocked + threaded (see `matmul.rs`); convolution is expressed through
+//! `im2col.rs` with patch order (kh, kw, cin) to match the JAX side
+//! exactly.
+
+mod im2col;
+mod matmul;
+pub mod ops;
+
+pub use im2col::{im2col, im2col_grouped};
+pub use matmul::{matmul, matmul_at_a, matmul_into};
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "rows() needs a 2-D tensor, got {:?}", self.shape);
+        self.shape[0]
+    }
+
+    /// Columns of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2, "cols() needs a 2-D tensor, got {:?}", self.shape);
+        self.shape[1]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let n = self.cols();
+        &self.data[i * n..(i + 1) * n]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let n = self.cols();
+        &mut self.data[i * n..(i + 1) * n]
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    // -- shape manipulation ---------------------------------------------
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?} invalid",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn try_reshape(self, shape: &[usize]) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("reshape {:?} -> {:?} invalid", self.shape, shape);
+        }
+        Ok(self.reshape(shape))
+    }
+
+    /// 2-D transpose (copying).
+    pub fn transpose2(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for i0 in (0..m).step_by(B) {
+            for j0 in (0..n).step_by(B) {
+                for i in i0..(i0 + B).min(m) {
+                    for j in j0..(j0 + B).min(n) {
+                        out[j * m + i] = self.data[i * n + j];
+                    }
+                }
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Extract column j of a 2-D tensor.
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        let (m, n) = (self.rows(), self.cols());
+        (0..m).map(|i| self.data[i * n + j]).collect()
+    }
+
+    // -- reductions & norms -----------------------------------------------
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    /// Per-column min/max of a 2-D tensor: returns (mins, maxs).
+    pub fn col_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        let (m, n) = (self.rows(), self.cols());
+        let mut mins = vec![f32::INFINITY; n];
+        let mut maxs = vec![f32::NEG_INFINITY; n];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                mins[j] = mins[j].min(row[j]);
+                maxs[j] = maxs[j].max(row[j]);
+            }
+        }
+        (mins, maxs)
+    }
+
+    /// Per-column infinity norm of a 2-D tensor.
+    pub fn col_inf_norm(&self) -> Vec<f32> {
+        let (mins, maxs) = self.col_min_max();
+        mins.iter().zip(&maxs).map(|(a, b)| a.abs().max(b.abs())).collect()
+    }
+
+    // -- elementwise ------------------------------------------------------
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn scale(mut self, s: f32) -> Tensor {
+        for x in &mut self.data {
+            *x *= s;
+        }
+        self
+    }
+
+    /// Max absolute elementwise difference (for parity tests).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |acc, (a, b)| acc.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose2();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+        assert_eq!(tt.transpose2(), t);
+    }
+
+    #[test]
+    fn col_min_max() {
+        let t = Tensor::new(&[2, 2], vec![1., -5., 3., 2.]);
+        let (mins, maxs) = t.col_min_max();
+        assert_eq!(mins, vec![1., -5.]);
+        assert_eq!(maxs, vec![3., 2.]);
+        assert_eq!(t.col_inf_norm(), vec![3., 5.]);
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::new(&[2], vec![1., 2.]);
+        let b = Tensor::new(&[2], vec![0.5, 1.0]);
+        assert_eq!(a.sub(&b).data(), &[0.5, 1.0]);
+        assert_eq!(a.clone().scale(2.0).data(), &[2., 4.]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c.data(), &[1.5, 3.0]);
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::zeros(&[4, 2]);
+        assert_eq!(t.clone().reshape(&[2, 4]).shape(), &[2, 4]);
+        assert!(t.try_reshape(&[3, 3]).is_err());
+    }
+}

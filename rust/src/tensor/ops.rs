@@ -1,0 +1,239 @@
+//! Neural-net forward ops mirroring python/compile/nets/common.py.
+//!
+//! Each op is an exact operational mirror of its JAX counterpart (same
+//! GELU closed form, same LayerNorm epsilon, same softmax shift) so the
+//! native forward and the PJRT forward agree to float tolerance.
+
+use super::Tensor;
+
+/// tanh-approximate GELU (same constant as nets/common.py::gelu).
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu_inplace(t: &mut Tensor) {
+    for x in t.data_mut() {
+        *x = gelu(*x);
+    }
+}
+
+pub fn relu_inplace(t: &mut Tensor) {
+    for x in t.data_mut() {
+        *x = x.max(0.0);
+    }
+}
+
+/// LayerNorm over the last axis with affine (gamma, beta); eps = 1e-5.
+pub fn layer_norm(t: &mut Tensor, gamma: &[f32], beta: &[f32]) {
+    let d = *t.shape().last().expect("layer_norm needs >=1 dim");
+    assert_eq!(gamma.len(), d);
+    assert_eq!(beta.len(), d);
+    const EPS: f32 = 1e-5;
+    for row in t.data_mut().chunks_exact_mut(d) {
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + EPS).sqrt();
+        for (x, (g, b)) in row.iter_mut().zip(gamma.iter().zip(beta)) {
+            *x = (*x - mean) * inv * g + b;
+        }
+    }
+}
+
+/// Softmax over the last axis (shift-stabilized, matching nets/common.py).
+pub fn softmax_lastdim(t: &mut Tensor) {
+    let d = *t.shape().last().expect("softmax needs >=1 dim");
+    for row in t.data_mut().chunks_exact_mut(d) {
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Add a bias row vector to every row of a 2-D tensor.
+pub fn add_bias(t: &mut Tensor, bias: &[f32]) {
+    let n = t.cols();
+    assert_eq!(bias.len(), n);
+    for row in t.data_mut().chunks_exact_mut(n) {
+        for (x, b) in row.iter_mut().zip(bias) {
+            *x += b;
+        }
+    }
+}
+
+/// Mean over axis 1 of [b, t, d] -> [b, d].
+pub fn mean_axis1(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 3);
+    let (b, tt, d) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+    let mut out = Tensor::zeros(&[b, d]);
+    let inv = 1.0 / tt as f32;
+    for bi in 0..b {
+        let dst = &mut out.data_mut()[bi * d..(bi + 1) * d];
+        for ti in 0..tt {
+            let src = &t.data()[(bi * tt + ti) * d..(bi * tt + ti + 1) * d];
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o += s * inv;
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool over spatial dims of NHWC [b, h, w, c] -> [b, c].
+pub fn global_avg_pool(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 4);
+    let (b, h, w, c) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = Tensor::zeros(&[b, c]);
+    for bi in 0..b {
+        let dst = &mut out.data_mut()[bi * c..(bi + 1) * c];
+        for p in 0..h * w {
+            let src = &t.data()[(bi * h * w + p) * c..(bi * h * w + p + 1) * c];
+            for (o, s) in dst.iter_mut().zip(src) {
+                *o += s * inv;
+            }
+        }
+    }
+    out
+}
+
+/// 2x2 average pool, stride 2, NHWC (matching nets/cnn.py::avgpool2).
+pub fn avg_pool2(t: &Tensor) -> Tensor {
+    assert_eq!(t.ndim(), 4);
+    let (b, h, w, c) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst_idx = ((bi * oh + oy) * ow + ox) * c;
+                for (dy, dx) in [(0, 0), (0, 1), (1, 0), (1, 1)] {
+                    let src_idx = ((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * c;
+                    for ch in 0..c {
+                        out.data_mut()[dst_idx + ch] += 0.25 * t.data()[src_idx + ch];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Strided spatial subsample x[:, ::s, ::s, :] (resnet shortcut path).
+pub fn stride_slice(t: &Tensor, s: usize) -> Tensor {
+    assert_eq!(t.ndim(), 4);
+    let (b, h, w, c) = (t.shape()[0], t.shape()[1], t.shape()[2], t.shape()[3]);
+    let (oh, ow) = (h.div_ceil(s), w.div_ceil(s));
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = &t.data()[((bi * h + oy * s) * w + ox * s) * c..][..c];
+                let dst = &mut out.data_mut()[((bi * oh + oy) * ow + ox) * c..][..c];
+                dst.copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+/// Cyclic roll of the [g, g] token grid of [b, g*g, d] by (-s, -s)
+/// (Swin shifted windows; matches jnp.roll with negative shift).
+pub fn shift_tokens(t: &Tensor, g: usize, s: isize) -> Tensor {
+    assert_eq!(t.ndim(), 3);
+    let (b, tok, d) = (t.shape()[0], t.shape()[1], t.shape()[2]);
+    assert_eq!(tok, g * g);
+    let mut out = Tensor::zeros(&[b, tok, d]);
+    let sm = s.rem_euclid(g as isize) as usize;
+    for bi in 0..b {
+        for y in 0..g {
+            for x in 0..g {
+                // jnp.roll(xi, (-s, -s)): out[y, x] = in[(y + s) mod g, (x + s) mod g]
+                let sy = (y + sm) % g;
+                let sx = (x + sm) % g;
+                let src = &t.data()[((bi * tok) + sy * g + sx) * d..][..d];
+                let dst = &mut out.data_mut()[((bi * tok) + y * g + x) * d..][..d];
+                dst.copy_from_slice(src);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gelu_known_values() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        // large |x| saturates to x or 0
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let mut t = Tensor::new(&[2, 4], vec![1., 2., 3., 4., -1., 0., 1., 2.]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        layer_norm(&mut t, &g, &b);
+        for row in t.data().chunks(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut t = Tensor::new(&[2, 3], vec![1., 2., 3., -10., 0., 10.]);
+        softmax_lastdim(&mut t);
+        for row in t.data().chunks(3) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            assert!(row.iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn pools() {
+        let t = Tensor::new(&[1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        assert_eq!(avg_pool2(&t).data(), &[2.5]);
+        assert_eq!(global_avg_pool(&t).data(), &[2.5]);
+    }
+
+    #[test]
+    fn mean_axis1_works() {
+        let t = Tensor::new(&[1, 2, 2], vec![1., 2., 3., 4.]);
+        assert_eq!(mean_axis1(&t).data(), &[2., 3.]);
+    }
+
+    #[test]
+    fn stride_slice_works() {
+        let t = Tensor::new(&[1, 4, 4, 1], (0..16).map(|i| i as f32).collect());
+        let s = stride_slice(&t, 2);
+        assert_eq!(s.shape(), &[1, 2, 2, 1]);
+        assert_eq!(s.data(), &[0., 2., 8., 10.]);
+    }
+
+    #[test]
+    fn shift_roundtrip() {
+        let g = 4;
+        let t = Tensor::new(&[1, 16, 1], (0..16).map(|i| i as f32).collect());
+        let shifted = shift_tokens(&t, g, 1);
+        let back = shift_tokens(&shifted, g, -1);
+        assert_eq!(back, t);
+        // out[0,0] = in[1,1] = 5
+        assert_eq!(shifted.data()[0], 5.0);
+    }
+}

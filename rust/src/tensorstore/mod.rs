@@ -1,0 +1,244 @@
+//! CTS ("Comq Tensor Store") reader/writer — the python→rust interchange
+//! format for checkpoints, calibration and validation data.
+//!
+//! Mirrors python/compile/export.py byte-for-byte:
+//!
+//! ```text
+//! magic  b"CTS1"
+//! u32    tensor count                       (little-endian throughout)
+//! per tensor:
+//!     u16  name length, then utf-8 name bytes
+//!     u8   dtype   (0 = f32, 1 = i32)
+//!     u8   ndim
+//!     u32  dims[ndim]
+//!     raw  data (C-contiguous)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Write;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"CTS1";
+
+/// One stored tensor: f32 payloads become `Tensor`; i32 payloads (labels)
+/// are kept as raw vectors.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Entry {
+    F32(Tensor),
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Entry {
+    pub fn tensor(&self) -> Result<&Tensor> {
+        match self {
+            Entry::F32(t) => Ok(t),
+            Entry::I32 { .. } => bail!("entry is i32, expected f32 tensor"),
+        }
+    }
+
+    pub fn ints(&self) -> Result<&[i32]> {
+        match self {
+            Entry::I32 { data, .. } => Ok(data),
+            Entry::F32(_) => bail!("entry is f32, expected i32"),
+        }
+    }
+}
+
+/// An ordered name -> tensor map.
+pub type Store = BTreeMap<String, Entry>;
+
+pub fn read_store(path: &str) -> Result<Store> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    parse_store(&bytes).with_context(|| format!("parsing {path}"))
+}
+
+pub fn parse_store(bytes: &[u8]) -> Result<Store> {
+    let mut r = Cursor { b: bytes, i: 0 };
+    if r.take(4)? != MAGIC {
+        bail!("bad magic");
+    }
+    let count = r.u32()? as usize;
+    let mut out = Store::new();
+    for _ in 0..count {
+        let nlen = r.u16()? as usize;
+        let name = std::str::from_utf8(r.take(nlen)?)
+            .map_err(|e| anyhow!("bad tensor name: {e}"))?
+            .to_string();
+        let dtype = r.u8()?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let numel: usize = shape.iter().product::<usize>().max(1);
+        let entry = match dtype {
+            0 => {
+                let raw = r.take(numel * 4)?;
+                let mut data = vec![0.0f32; numel];
+                for (i, c) in raw.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                let shp = if shape.is_empty() { vec![1] } else { shape };
+                Entry::F32(Tensor::new(&shp, data))
+            }
+            1 => {
+                let raw = r.take(numel * 4)?;
+                let mut data = vec![0i32; numel];
+                for (i, c) in raw.chunks_exact(4).enumerate() {
+                    data[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+                Entry::I32 { shape, data }
+            }
+            d => bail!("unknown dtype {d} for '{name}'"),
+        };
+        if out.insert(name.clone(), entry).is_some() {
+            bail!("duplicate tensor '{name}'");
+        }
+    }
+    if r.i != bytes.len() {
+        bail!("{} trailing bytes", bytes.len() - r.i);
+    }
+    Ok(out)
+}
+
+pub fn write_store(path: &str, store: &Store) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(store.len() as u32).to_le_bytes())?;
+    for (name, entry) in store {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        match entry {
+            Entry::F32(t) => {
+                f.write_all(&[0u8, t.ndim() as u8])?;
+                for &d in t.shape() {
+                    f.write_all(&(d as u32).to_le_bytes())?;
+                }
+                for &x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Entry::I32 { shape, data } => {
+                f.write_all(&[1u8, shape.len() as u8])?;
+                for &d in shape {
+                    f.write_all(&(d as u32).to_le_bytes())?;
+                }
+                for &x in data {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated file at byte {} (wanted {n} more)", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+}
+
+/// Read a store but keep only f32 tensors (checkpoint convenience).
+pub fn read_tensors(path: &str) -> Result<BTreeMap<String, Tensor>> {
+    let store = read_store(path)?;
+    let mut out = BTreeMap::new();
+    for (k, v) in store {
+        if let Entry::F32(t) = v {
+            out.insert(k, t);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> String {
+        let dir = std::env::temp_dir().join("comq_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().to_string()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut s = Store::new();
+        s.insert("a/W".into(), Entry::F32(Tensor::new(&[2, 3], vec![1., -2., 3., 0.5, 0., 9.])));
+        s.insert(
+            "labels".into(),
+            Entry::I32 { shape: vec![4], data: vec![1, 2, 3, -7] },
+        );
+        let p = tmpfile("roundtrip.cts");
+        write_store(&p, &s).unwrap();
+        let r = read_store(&p).unwrap();
+        assert_eq!(r, s);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_store(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut s = Store::new();
+        s.insert("t".into(), Entry::F32(Tensor::new(&[8], vec![0.0; 8])));
+        let p = tmpfile("trunc.cts");
+        write_store(&p, &s).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        for cut in [3, 8, 12, bytes.len() - 1] {
+            assert!(parse_store(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(parse_store(&extra).is_err());
+    }
+
+    #[test]
+    fn python_written_fixture() {
+        // Byte layout written by hand matching export.py
+        let mut b: Vec<u8> = b"CTS1".to_vec();
+        b.extend(1u32.to_le_bytes());
+        b.extend(1u16.to_le_bytes());
+        b.extend(b"x");
+        b.push(0); // f32
+        b.push(1); // ndim 1
+        b.extend(2u32.to_le_bytes());
+        b.extend(1.5f32.to_le_bytes());
+        b.extend((-0.25f32).to_le_bytes());
+        let s = parse_store(&b).unwrap();
+        let t = s["x"].tensor().unwrap();
+        assert_eq!(t.data(), &[1.5, -0.25]);
+    }
+}

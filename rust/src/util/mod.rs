@@ -1,0 +1,13 @@
+//! Substrate utilities built in-tree (this build is fully offline; only the
+//! `xla` crate's dependency closure is available, so JSON, RNG, stats,
+//! timing and the worker pool are all implemented here).
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,117 @@
+//! Scoped data-parallel helpers over std threads.
+//!
+//! No rayon in the vendored set, so the coordinator and the tensor layer
+//! parallelize with `std::thread::scope`. The helpers here keep that
+//! boilerplate (chunking, fallback to inline execution for small work)
+//! in one place.
+
+/// Number of worker threads to use: respects COMQ_THREADS, defaults to
+/// available parallelism capped at 16.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("COMQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Run `f(chunk_index, item_range)` over `n` items split into contiguous
+/// ranges across up to `num_threads()` threads. Runs inline when the work
+/// is too small to amortize thread spawn.
+pub fn parallel_ranges<F>(n: usize, min_per_thread: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = num_threads().min(n / min_per_thread.max(1)).max(1);
+    if threads <= 1 || n == 0 {
+        f(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(t, lo..hi));
+        }
+    });
+}
+
+/// Map over mutable disjoint chunks of `data` (each `chunk_len` long) in
+/// parallel: `f(chunk_index, chunk_slice)`.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, min_chunks_per_thread: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0 && data.len() % chunk_len == 0, "data must divide into chunks");
+    let n_chunks = data.len() / chunk_len;
+    let threads = num_threads().min(n_chunks / min_chunks_per_thread.max(1)).max(1);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let per = n_chunks.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, block) in data.chunks_mut(per * chunk_len).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (i, c) in block.chunks_mut(chunk_len).enumerate() {
+                    f(t * per + i, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_ranges(1000, 10, |_, r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn ranges_small_runs_inline() {
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(3, 100, |t, r| {
+            assert_eq!(t, 0);
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn chunks_mut_disjoint() {
+        let mut v = vec![0usize; 64 * 8];
+        parallel_chunks_mut(&mut v, 8, 1, |i, c| {
+            for x in c.iter_mut() {
+                *x = i;
+            }
+        });
+        for (i, c) in v.chunks(8).enumerate() {
+            assert!(c.iter().all(|&x| x == i));
+        }
+    }
+
+    #[test]
+    fn zero_items() {
+        parallel_ranges(0, 1, |_, r| assert!(r.is_empty()));
+    }
+}

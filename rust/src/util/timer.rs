@@ -1,0 +1,40 @@
+//! Wall-clock timing helper.
+
+use std::time::Instant;
+
+/// Simple scope timer: `let t = Timer::start(); ...; t.secs()`.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    pub fn micros(&self) -> f64 {
+        self.secs() * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.secs() >= 0.002);
+        assert!(t.millis() >= 2.0);
+    }
+}

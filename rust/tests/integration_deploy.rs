@@ -1,0 +1,144 @@
+//! Integration: packed-checkpoint deployment, mixed precision, and
+//! data-free calibration — the extension features — over real artifacts.
+
+use comq::calib::{collect_stats, Dataset, EngineKind};
+use comq::coordinator::pipeline::quantize_model_full;
+use comq::coordinator::{mixed_precision_quantize, PipelineOptions};
+use comq::deploy::{footprint, load_packed, save_packed};
+use comq::eval::{evaluate, ActMode};
+use comq::manifest::Manifest;
+use comq::model::Model;
+use comq::quant::QuantConfig;
+
+fn setup() -> Option<(Manifest, Dataset)> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some((Manifest::load(&root).unwrap(), Dataset::load(&Manifest::load(&root).unwrap()).unwrap()))
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("comq_deploy_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().to_string()
+}
+
+#[test]
+fn packed_checkpoint_roundtrips_accuracy() {
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "cnn_s").unwrap();
+    let imgs = dataset.calib_subset(256);
+    let stats = collect_stats(&manifest, &model, &imgs, EngineKind::Native).unwrap();
+    let opts = PipelineOptions {
+        engine: EngineKind::Native,
+        calib_size: 256,
+        qcfg: QuantConfig { bits: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let out = quantize_model_full(&manifest, &model, &dataset, &opts, &stats, 0.0).unwrap();
+    let path = tmp("cnn_s_3bit.cqm");
+    save_packed(&path, &out.model, &out.packed, 3).unwrap();
+
+    let loaded = load_packed(&manifest, "cnn_s", &path).unwrap();
+    // weights byte-identical after pack -> unpack
+    for l in &model.info.quant_layers {
+        assert_eq!(
+            loaded.weight(&l.name),
+            out.model.weight(&l.name),
+            "layer {} differs after packed roundtrip",
+            l.name
+        );
+    }
+    // non-quantized params preserved
+    for p in &model.info.params {
+        assert!(loaded.params.contains_key(p), "missing {p}");
+    }
+    // footprint really is ~3/32 of f32 (+ scale overhead)
+    let (packed, fp32) = footprint(&out.packed);
+    assert!(packed * 8 < fp32, "packed {packed} vs fp32 {fp32}");
+    // identical accuracy
+    let n = 512;
+    let elems: usize = dataset.val_images.shape()[1..].iter().product();
+    let imgs = comq::tensor::Tensor::new(
+        &[n, manifest.img, manifest.img, 3],
+        dataset.val_images.data()[..n * elems].to_vec(),
+    );
+    let a = evaluate(&manifest, &out.model, &imgs, &dataset.val_labels[..n], EngineKind::Native, &ActMode::Fp).unwrap();
+    let b = evaluate(&manifest, &loaded, &imgs, &dataset.val_labels[..n], EngineKind::Native, &ActMode::Fp).unwrap();
+    assert_eq!(a.top1, b.top1);
+}
+
+#[test]
+fn packed_rejects_wrong_version() {
+    let Some((manifest, _)) = setup() else { return };
+    let path = tmp("bogus.cqm");
+    let mut store = comq::tensorstore::Store::new();
+    store.insert(
+        "__meta__".into(),
+        comq::tensorstore::Entry::I32 { shape: vec![3], data: vec![99, 4, 0] },
+    );
+    comq::tensorstore::write_store(&path, &store).unwrap();
+    assert!(load_packed(&manifest, "cnn_s", &path).is_err());
+}
+
+#[test]
+fn mixed_precision_beats_uniform_at_budget() {
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "vit_s").unwrap();
+    let imgs = dataset.calib_subset(512);
+    let stats = collect_stats(&manifest, &model, &imgs, EngineKind::Pjrt).unwrap();
+    let base = QuantConfig::default();
+    let (qm, rep) = mixed_precision_quantize(&manifest, &model, &stats, &base, 3.0).unwrap();
+    assert!(rep.achieved_bits <= 3.0 + 1e-6, "budget exceeded: {}", rep.achieved_bits);
+    assert!(rep.achieved_bits > 2.0, "allocator failed to spend budget");
+    // every layer got one of the candidate widths
+    for l in &rep.layers {
+        assert!([2, 3, 4, 8].contains(&l.bits), "{l:?}");
+    }
+    // accuracy at least as good as uniform 3-bit on total error
+    let uni_opts = PipelineOptions {
+        engine: EngineKind::Pjrt,
+        calib_size: 512,
+        skip_eval: true,
+        qcfg: QuantConfig { bits: 3, ..Default::default() },
+        ..Default::default()
+    };
+    let uni = quantize_model_full(&manifest, &model, &dataset, &uni_opts, &stats, 0.0).unwrap();
+    assert!(
+        rep.total_err <= uni.report.total_err() * 1.05,
+        "mixed err {} vs uniform {}",
+        rep.total_err,
+        uni.report.total_err()
+    );
+    let acc = evaluate(
+        &manifest,
+        &qm,
+        &dataset.val_images,
+        &dataset.val_labels,
+        EngineKind::Pjrt,
+        &ActMode::Fp,
+    )
+    .unwrap();
+    assert!(acc.top1 > 0.85, "mixed 3-bit top1 {}", acc.top1);
+}
+
+#[test]
+fn gaussian_calibration_usable_at_4bit() {
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "resnet_lite").unwrap();
+    let noise = dataset.gaussian_calib(256, 7);
+    assert_eq!(noise.shape()[0], 256);
+    let stats = collect_stats(&manifest, &model, &noise, EngineKind::Native).unwrap();
+    let opts = PipelineOptions {
+        engine: EngineKind::Native,
+        calib_size: 256,
+        ..Default::default()
+    };
+    let (_m, rep) =
+        comq::coordinator::quantize_model_with_stats(&manifest, &model, &dataset, &opts, &stats, 0.0)
+            .unwrap();
+    // moment-matched noise calibration stays within a few points at 4-bit
+    assert!(rep.top1 > rep.fp_top1 - 0.05, "gaussian 4-bit top1 {}", rep.top1);
+}

@@ -1,0 +1,214 @@
+//! End-to-end integration over the real artifacts: pipeline runs,
+//! engine parity (native ↔ PJRT), and accuracy guardrails mirroring the
+//! paper's headline claims. All tests skip gracefully when artifacts are
+//! missing (run `make artifacts` first).
+
+use comq::calib::{collect_stats, Dataset, EngineKind};
+use comq::coordinator::{quantize_model, PipelineOptions, QuantEngine};
+use comq::eval::ActMode;
+use comq::manifest::Manifest;
+use comq::model::Model;
+use comq::quant::grid::Scheme;
+use comq::quant::{OrderKind, QuantConfig};
+
+fn setup() -> Option<(Manifest, Dataset)> {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !root.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let manifest = Manifest::load(&root).unwrap();
+    let dataset = Dataset::load(&manifest).unwrap();
+    Some((manifest, dataset))
+}
+
+#[test]
+fn native_and_pjrt_eval_agree() {
+    let Some((manifest, dataset)) = setup() else { return };
+    for name in ["vit_s", "resnet_lite", "mobilenet_lite"] {
+        let model = Model::load(&manifest, name).unwrap();
+        // small val slice for speed
+        let n = 256;
+        let elems: usize = dataset.val_images.shape()[1..].iter().product();
+        let imgs = comq::tensor::Tensor::new(
+            &[n, manifest.img, manifest.img, 3],
+            dataset.val_images.data()[..n * elems].to_vec(),
+        );
+        let labels = &dataset.val_labels[..n];
+        let a = comq::eval::evaluate(&manifest, &model, &imgs, labels, EngineKind::Native, &ActMode::Fp)
+            .unwrap();
+        let b = comq::eval::evaluate(&manifest, &model, &imgs, labels, EngineKind::Pjrt, &ActMode::Fp)
+            .unwrap();
+        assert!(
+            (a.top1 - b.top1).abs() < 0.01,
+            "{name}: native {} vs pjrt {}",
+            a.top1,
+            b.top1
+        );
+    }
+}
+
+#[test]
+fn native_and_pjrt_calibration_agree() {
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "vit_s").unwrap();
+    let imgs = dataset.calib_subset(128);
+    let sa = collect_stats(&manifest, &model, &imgs, EngineKind::Native).unwrap();
+    let sb = collect_stats(&manifest, &model, &imgs, EngineKind::Pjrt).unwrap();
+    for (name, a) in &sa {
+        let b = &sb[name];
+        let (ga, gb) = match (&a.gram, &b.gram) {
+            (comq::quant::GramSet::Shared(x), comq::quant::GramSet::Shared(y)) => (x, y),
+            _ => continue,
+        };
+        // relative Frobenius difference
+        let diff = ga.sub(gb).frob_norm_sq().sqrt();
+        let norm = ga.frob_norm_sq().sqrt().max(1e-9);
+        assert!(diff / norm < 1e-3, "{name}: relative gram diff {}", diff / norm);
+        assert!((a.min - b.min).abs() < 1e-2, "{name} min");
+        assert!((a.max - b.max).abs() < 1e-2, "{name} max");
+    }
+}
+
+#[test]
+fn comq_4bit_near_lossless_on_vit() {
+    // Paper: 4-bit ViT within ~1% of FP.
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "vit_s").unwrap();
+    let opts = PipelineOptions {
+        engine: EngineKind::Pjrt,
+        calib_size: 512,
+        ..Default::default()
+    };
+    let (_qm, report) = quantize_model(&manifest, &model, &dataset, &opts).unwrap();
+    let drop = report.fp_top1 - report.top1;
+    assert!(drop < 0.02, "4-bit drop too large: {drop}");
+    assert!(report.top5 > 0.95);
+}
+
+#[test]
+fn comq_beats_rtn_at_2bit() {
+    // Paper: RTN collapses at 2-bit, COMQ stays usable.
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "vit_s").unwrap();
+    let base = PipelineOptions {
+        engine: EngineKind::Pjrt,
+        calib_size: 512,
+        qcfg: QuantConfig { bits: 2, lam: 0.8, ..Default::default() },
+        ..Default::default()
+    };
+    let (_q1, comq) = quantize_model(&manifest, &model, &dataset, &base).unwrap();
+    let rtn_opts = PipelineOptions { method: "rtn".into(), ..base };
+    let (_q2, rtn) = quantize_model(&manifest, &model, &dataset, &rtn_opts).unwrap();
+    assert!(
+        comq.top1 > rtn.top1 + 0.10,
+        "2-bit: comq {} vs rtn {} — gap should be large",
+        comq.top1,
+        rtn.top1
+    );
+    assert!(comq.total_err() < rtn.total_err());
+}
+
+#[test]
+fn pjrt_kernel_engine_end_to_end() {
+    // The L1 Pallas path must produce the same accuracy as the native
+    // engine (same algorithm, different executor).
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "vit_s").unwrap();
+    let mk = |qe| PipelineOptions {
+        engine: EngineKind::Pjrt,
+        quant_engine: qe,
+        calib_size: 256,
+        qcfg: QuantConfig { bits: 3, order: OrderKind::GreedyShared, ..Default::default() },
+        ..Default::default()
+    };
+    let (_a, ra) = quantize_model(&manifest, &model, &dataset, &mk(QuantEngine::Native)).unwrap();
+    let (_b, rb) =
+        quantize_model(&manifest, &model, &dataset, &mk(QuantEngine::PjrtKernel)).unwrap();
+    assert!(
+        (ra.top1 - rb.top1).abs() < 0.01,
+        "native {} vs pjrt-kernel {}",
+        ra.top1,
+        rb.top1
+    );
+    let (ea, eb) = (ra.total_err(), rb.total_err());
+    assert!((ea - eb).abs() <= 0.02 * ea.max(eb), "err {ea} vs {eb}");
+}
+
+#[test]
+fn full_quant_w4a4_works() {
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "resnet_lite").unwrap();
+    let opts = PipelineOptions {
+        engine: EngineKind::Pjrt,
+        calib_size: 256,
+        act_bits: Some(4),
+        ..Default::default()
+    };
+    let (_qm, report) = quantize_model(&manifest, &model, &dataset, &opts).unwrap();
+    // A4 hurts but must stay far above chance (1/16)
+    assert!(report.top1 > 0.5, "W4A4 top1 {}", report.top1);
+    // and A8 should be better than A4
+    let opts8 = PipelineOptions { act_bits: Some(8), ..opts };
+    let (_qm8, r8) = quantize_model(&manifest, &model, &dataset, &opts8).unwrap();
+    assert!(r8.top1 >= report.top1 - 0.01, "A8 {} < A4 {}", r8.top1, report.top1);
+}
+
+#[test]
+fn parallel_workers_match_sequential() {
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "cnn_s").unwrap();
+    let mk = |workers| PipelineOptions {
+        engine: EngineKind::Native,
+        calib_size: 128,
+        workers,
+        skip_eval: true,
+        ..Default::default()
+    };
+    let (qa, ra) = quantize_model(&manifest, &model, &dataset, &mk(1)).unwrap();
+    let (qb, rb) = quantize_model(&manifest, &model, &dataset, &mk(4)).unwrap();
+    assert_eq!(ra.layers.len(), rb.layers.len());
+    for l in &model.info.quant_layers {
+        let wa = qa.weight(&l.name);
+        let wb = qb.weight(&l.name);
+        assert_eq!(wa, wb, "layer {} differs across worker counts", l.name);
+    }
+}
+
+#[test]
+fn skip_layers_respected() {
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "cnn_s").unwrap();
+    let opts = PipelineOptions {
+        engine: EngineKind::Native,
+        calib_size: 128,
+        skip_layers: vec!["head".into()],
+        skip_eval: true,
+        ..Default::default()
+    };
+    let (qm, report) = quantize_model(&manifest, &model, &dataset, &opts).unwrap();
+    assert_eq!(qm.weight("head"), model.weight("head"), "head must stay FP");
+    assert!(report.layers.iter().all(|l| l.name != "head"));
+}
+
+#[test]
+fn per_channel_beats_per_layer() {
+    // Sec. 3.2's motivation: per-channel scales -> smaller error.
+    let Some((manifest, dataset)) = setup() else { return };
+    let model = Model::load(&manifest, "resnet_lite").unwrap();
+    let mk = |scheme| PipelineOptions {
+        engine: EngineKind::Native,
+        calib_size: 256,
+        skip_eval: true,
+        qcfg: QuantConfig { bits: 3, scheme, ..Default::default() },
+        ..Default::default()
+    };
+    let (_a, pc) = quantize_model(&manifest, &model, &dataset, &mk(Scheme::PerChannel)).unwrap();
+    let (_b, pl) = quantize_model(&manifest, &model, &dataset, &mk(Scheme::PerLayer)).unwrap();
+    assert!(
+        pc.total_err() < pl.total_err(),
+        "per-channel {} vs per-layer {}",
+        pc.total_err(),
+        pl.total_err()
+    );
+}

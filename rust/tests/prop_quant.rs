@@ -1,0 +1,164 @@
+//! Property-based tests on quantizer invariants (in-tree harness;
+//! see rust/src/proptest).
+
+use comq::proptest::forall;
+use comq::quant::grid::{LayerQuant, Scheme};
+use comq::quant::{comq_gram, comq_residual, make_quantizer, GramSet, OrderKind, QuantConfig, QUANTIZER_NAMES};
+use comq::tensor::{matmul_at_a, Tensor};
+
+fn random_case(g: &mut comq::proptest::Gen) -> (Tensor, Tensor, GramSet, QuantConfig) {
+    let b = g.usize_in(4, 64);
+    let m = g.usize_in(2, 32);
+    let n = g.usize_in(1, 16);
+    let x = g.tensor(&[b, m], 1.0);
+    let w = g.tensor_with_outliers(&[m, n], 0.5, 0.05);
+    let gram = GramSet::Shared(matmul_at_a(&x));
+    let cfg = QuantConfig {
+        bits: *g.choice(&[2u32, 3, 4, 8]),
+        scheme: *g.choice(&[Scheme::PerChannel, Scheme::PerLayer]),
+        order: *g.choice(&[OrderKind::Cyclic, OrderKind::GreedyShared, OrderKind::GreedyPerColumn]),
+        iters: g.usize_in(1, 4),
+        lam: g.f32_in(0.5, 1.0),
+    };
+    (x, w, gram, cfg)
+}
+
+#[test]
+fn all_methods_always_feasible_and_finite() {
+    forall(60, 0xC0301, |g| {
+        let (_x, w, gram, cfg) = random_case(g);
+        for name in QUANTIZER_NAMES {
+            let lq = make_quantizer(name).unwrap().quantize(&gram, &w, &cfg);
+            assert!(lq.codes_feasible(cfg.bits), "{name} cfg={cfg:?}");
+            assert!(lq.q.data().iter().all(|v| v.is_finite()), "{name}");
+            assert!(lq.delta.iter().all(|d| d.is_finite() && *d != 0.0), "{name}");
+            assert_eq!(lq.q.shape(), w.shape(), "{name}");
+        }
+    });
+}
+
+#[test]
+fn comq_never_worse_than_rtn() {
+    forall(60, 0xC0302, |g| {
+        let (_x, w, gram, cfg) = random_case(g);
+        let comq = comq_gram(&gram, &w, &cfg);
+        let rtn = make_quantizer("rtn").unwrap().quantize(&gram, &w, &cfg);
+        let e_comq = gram.recon_error(&w, &comq.dequant());
+        let e_rtn = gram.recon_error(&w, &rtn.dequant());
+        // COMQ starts from the RTN-equivalent grid and coordinate descent
+        // only ever reduces the objective within a sweep; the δ-update is
+        // also monotone. Tiny float slack allowed.
+        assert!(
+            e_comq <= e_rtn * 1.001 + 1e-6,
+            "comq {e_comq} > rtn {e_rtn} (cfg {cfg:?})"
+        );
+    });
+}
+
+#[test]
+fn gram_equals_residual_engine() {
+    forall(40, 0xC0303, |g| {
+        let (x, w, gram, cfg) = random_case(g);
+        let a = comq_gram(&gram, &w, &cfg);
+        let b = comq_residual(&x, &w, &cfg);
+        let agree = a
+            .q
+            .data()
+            .iter()
+            .zip(b.q.data())
+            .filter(|(p, q)| p == q)
+            .count() as f64
+            / a.q.len() as f64;
+        assert!(agree > 0.95, "only {agree:.3} agreement (cfg {cfg:?})");
+        let ea = gram.recon_error(&w, &a.dequant());
+        let eb = gram.recon_error(&w, &b.dequant());
+        let tol = 0.05 * ea.max(eb).max(1e-6);
+        assert!((ea - eb).abs() <= tol, "gram {ea} vs residual {eb}");
+    });
+}
+
+#[test]
+fn more_bits_never_hurt() {
+    forall(40, 0xC0304, |g| {
+        let (_x, w, gram, mut cfg) = random_case(g);
+        cfg.lam = 1.0;
+        let mut errs = Vec::new();
+        for bits in [2u32, 4, 8] {
+            cfg.bits = bits;
+            let lq = comq_gram(&gram, &w, &cfg);
+            errs.push(gram.recon_error(&w, &lq.dequant()));
+        }
+        assert!(
+            errs[0] * 1.001 + 1e-9 >= errs[1] && errs[1] * 1.001 + 1e-9 >= errs[2],
+            "errors not monotone in bits: {errs:?}"
+        );
+    });
+}
+
+#[test]
+fn pack_unpack_identity_all_quantizers() {
+    forall(30, 0xC0305, |g| {
+        let (_x, w, gram, cfg) = random_case(g);
+        let lq = comq_gram(&gram, &w, &cfg);
+        if cfg.bits > 8 {
+            return;
+        }
+        let packed = lq.pack_codes(cfg.bits);
+        let un = LayerQuant::unpack_codes(&packed, cfg.bits, w.rows(), w.cols(), &lq.zero);
+        assert_eq!(un, lq.q);
+    });
+}
+
+#[test]
+fn grid_points_are_rounding_fixed_points() {
+    // Dequantized weights are exact fixed points of rounding *on the
+    // same grid* (re-deriving the grid from W_q is NOT an invariant:
+    // COMQ's optimal codes may not span the full code range, so the
+    // re-initialized δ legitimately differs).
+    forall(30, 0xC0306, |g| {
+        let (_x, w, gram, cfg) = random_case(g);
+        let lq = comq_gram(&gram, &w, &cfg);
+        let wq = lq.dequant();
+        let levels = (1u64 << cfg.bits) as f32 - 1.0;
+        for i in 0..wq.rows() {
+            for j in 0..wq.cols() {
+                let q2 = comq::quant::grid::qround(
+                    wq.at2(i, j) / lq.delta[j],
+                    lq.zero[j],
+                    levels,
+                );
+                assert_eq!(q2, lq.q.at2(i, j), "({i},{j}) cfg={cfg:?}");
+            }
+        }
+    });
+}
+
+#[test]
+fn scale_invariance_per_channel() {
+    // scaling a column of W scales its quantization commensurately:
+    // relative error is invariant
+    forall(30, 0xC0307, |g| {
+        let b = g.usize_in(8, 48);
+        let m = g.usize_in(2, 24);
+        let x = g.tensor(&[b, m], 1.0);
+        let w = g.tensor(&[m, 1], 0.5);
+        let gram = GramSet::Shared(matmul_at_a(&x));
+        let cfg = QuantConfig {
+            bits: 4,
+            scheme: Scheme::PerChannel,
+            order: OrderKind::Cyclic,
+            iters: 2,
+            lam: 1.0,
+        };
+        let e1 = gram.recon_error(&w, &comq_gram(&gram, &w, &cfg).dequant());
+        let k = 16.0f32;
+        let wk = w.clone().scale(k);
+        let ek = gram.recon_error(&wk, &comq_gram(&gram, &wk, &cfg).dequant());
+        // errors scale by k² (same codes, scaled delta)
+        let expect = e1 * (k as f64) * (k as f64);
+        assert!(
+            (ek - expect).abs() <= 0.02 * expect.max(1e-9) + 1e-9,
+            "e1={e1} ek={ek} expect={expect}"
+        );
+    });
+}
