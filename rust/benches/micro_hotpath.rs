@@ -1,15 +1,21 @@
 //! Hot-path microbenchmarks (the §Perf instrument):
 //!
-//!  * COMQ sweep ns/coordinate — residual-domain vs Gram-domain engine
-//!    at the paper's layer shapes and calibration sizes (the Gram
-//!    reformulation removes the batch dimension from the hot loop);
+//!  * COMQ sweep ns/coordinate — residual-domain vs Gram-domain vs
+//!    column-major workspace engine at the paper's layer shapes and
+//!    calibration sizes (the Gram reformulation removes the batch
+//!    dimension from the hot loop; the workspace packing removes the
+//!    stride-`n` gathers and per-sweep argsorts from the Gram loop);
 //!  * Gram build (XᵀX) throughput;
-//!  * threading scaling of the column-parallel sweep;
+//!  * threading scaling of the column-parallel sweep (persistent pool);
 //!  * PJRT sweep-kernel dispatch overhead vs native.
+//!
+//! Every table is also collected into `BENCH_micro_hotpath.json` at the
+//! repo root (see `bench::Report`) — the machine-readable perf
+//! trajectory that EXPERIMENTS.md §Perf quotes.
 
-use comq::bench::{time_budget, Table};
+use comq::bench::{time_budget, Report, Table};
 use comq::quant::grid::Scheme;
-use comq::quant::{comq_gram, comq_residual, GramSet, OrderKind, QuantConfig};
+use comq::quant::{comq_gram, comq_residual, comq_workspace, GramSet, OrderKind, QuantConfig};
 use comq::tensor::{matmul_at_a, Tensor};
 use comq::util::Rng;
 
@@ -21,11 +27,12 @@ fn main() -> anyhow::Result<()> {
         iters: 3,
         lam: 1.0,
     };
+    let mut report = Report::new("micro_hotpath");
 
     // -- engine comparison across (b, m, n) ------------------------------
     let mut table = Table::new(
         "micro — COMQ engines, ns per coordinate-update (K=3)",
-        &["shape (b,m,n)", "residual ns/coord", "gram ns/coord", "speedup"],
+        &["shape (b,m,n)", "residual ns/coord", "gram ns/coord", "workspace ns/coord", "ws vs gram"],
     );
     for &(b, m, n) in &[
         (256usize, 48usize, 96usize),
@@ -46,15 +53,20 @@ fn main() -> anyhow::Result<()> {
         let t_gram = time_budget(0.5, 50, || {
             std::hint::black_box(comq_gram(&gram, &w, &cfg));
         });
+        let t_ws = time_budget(0.5, 50, || {
+            std::hint::black_box(comq_workspace(&gram, &w, &cfg));
+        });
         table.row(vec![
             format!("({b},{m},{n})"),
             format!("{:.1}", t_res.mean * 1e9 / coords),
             format!("{:.1}", t_gram.mean * 1e9 / coords),
-            format!("{:.1}x", t_res.mean / t_gram.mean),
+            format!("{:.1}", t_ws.mean * 1e9 / coords),
+            format!("{:.2}x", t_gram.mean / t_ws.mean),
         ]);
     }
     table.print();
     table.save_json("micro_engines");
+    report.add(&table);
 
     // -- Gram build throughput -------------------------------------------
     let mut table = Table::new(
@@ -76,10 +88,11 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     table.save_json("micro_gram");
+    report.add(&table);
 
-    // -- thread scaling ----------------------------------------------------
+    // -- thread scaling (production workspace engine) ----------------------
     let mut table = Table::new(
-        "micro — sweep thread scaling (m=192, n=384)",
+        "micro — workspace sweep thread scaling (m=192, n=384)",
         &["threads", "ms/quantize", "speedup"],
     );
     {
@@ -92,7 +105,7 @@ fn main() -> anyhow::Result<()> {
         for threads in [1usize, 2, 4, 8] {
             std::env::set_var("COMQ_THREADS", threads.to_string());
             let t = time_budget(0.5, 50, || {
-                std::hint::black_box(comq_gram(&gram, &w, &cfg));
+                std::hint::black_box(comq_workspace(&gram, &w, &cfg));
             });
             if threads == 1 {
                 base = t.mean;
@@ -107,6 +120,7 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     table.save_json("micro_threads");
+    report.add(&table);
 
     // -- PJRT kernel dispatch vs native ------------------------------------
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -121,19 +135,26 @@ fn main() -> anyhow::Result<()> {
             let x = Tensor::new(&[1024, sw.m], rng.normal_vec(1024 * sw.m));
             let w = Tensor::new(&[sw.m, sw.n], rng.normal_vec(sw.m * sw.n)).scale(0.4);
             let gram = GramSet::Shared(matmul_at_a(&x));
-            let t_nat = time_budget(0.5, 50, || {
+            let t_gram = time_budget(0.5, 50, || {
                 std::hint::black_box(comq_gram(&gram, &w, &cfg));
+            });
+            let t_ws = time_budget(0.5, 50, || {
+                std::hint::black_box(comq_workspace(&gram, &w, &cfg));
             });
             let t_pjrt = time_budget(1.0, 20, || {
                 std::hint::black_box(
                     comq::coordinator::pjrt_kernel::comq_pjrt(&manifest, &gram, &w, &cfg).unwrap(),
                 );
             });
-            table.row(vec!["native (gram)".into(), format!("{:.2}", t_nat.mean * 1e3)]);
+            table.row(vec!["native (gram)".into(), format!("{:.2}", t_gram.mean * 1e3)]);
+            table.row(vec!["native (workspace)".into(), format!("{:.2}", t_ws.mean * 1e3)]);
             table.row(vec!["pjrt-kernel".into(), format!("{:.2}", t_pjrt.mean * 1e3)]);
             table.print();
             table.save_json("micro_pjrt_kernel");
+            report.add(&table);
         }
     }
+
+    report.write_repo_root()?;
     Ok(())
 }

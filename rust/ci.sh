@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the rust/ crate: build, tests, formatting, lints.
+# Perf refactors (ISSUE 2 and onward) must keep this green — run it
+# before every PR. Usage: ./ci.sh [--no-clippy]
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+cargo test -q
+
+if command -v rustfmt >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "ci.sh: rustfmt not installed, skipping format check" >&2
+fi
+
+if [[ "${1:-}" != "--no-clippy" ]] && cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy -- -D warnings
+else
+    echo "ci.sh: clippy unavailable or disabled, skipping lints" >&2
+fi
+
+echo "ci.sh: all checks passed"

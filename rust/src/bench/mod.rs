@@ -108,11 +108,8 @@ impl Table {
         }
     }
 
-    /// Dump to bench_results/<slug>.json for EXPERIMENTS.md regeneration.
-    pub fn save_json(&self, slug: &str) {
-        let dir = std::path::Path::new("bench_results");
-        let _ = std::fs::create_dir_all(dir);
-        let j = Json::obj_from(vec![
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
             ("title", Json::Str(self.title.clone())),
             (
                 "headers",
@@ -127,10 +124,55 @@ impl Table {
                         .collect(),
                 ),
             ),
-        ]);
+        ])
+    }
+
+    /// Dump to bench_results/<slug>.json for EXPERIMENTS.md regeneration.
+    pub fn save_json(&self, slug: &str) {
+        let dir = std::path::Path::new("bench_results");
+        let _ = std::fs::create_dir_all(dir);
         let path = dir.join(format!("{slug}.json"));
-        let _ = std::fs::write(&path, j.to_string_pretty(1));
+        let _ = std::fs::write(&path, self.to_json().to_string_pretty(1));
         println!("[saved {}]", path.display());
+    }
+}
+
+/// A whole bench run as one machine-readable artifact. `bench_results/`
+/// holds per-table snapshots of whatever ran last; a `Report` instead
+/// collects every table of a run and lands at a *stable, committed* path
+/// — `BENCH_<slug>.json` at the repo root — so the perf trajectory in
+/// EXPERIMENTS.md §Perf stays diffable across PRs.
+pub struct Report {
+    pub slug: String,
+    tables: Vec<Json>,
+}
+
+impl Report {
+    pub fn new(slug: &str) -> Report {
+        Report { slug: slug.to_string(), tables: Vec::new() }
+    }
+
+    /// Record a finished table (call after the last `row`).
+    pub fn add(&mut self, table: &Table) {
+        self.tables.push(table.to_json());
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("bench", Json::Str(self.slug.clone())),
+            ("tables", Json::Arr(self.tables.clone())),
+        ])
+    }
+
+    /// Write `BENCH_<slug>.json` at the repo root (one level above the
+    /// crate manifest), the stable path EXPERIMENTS.md points at.
+    pub fn write_repo_root(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join(format!("BENCH_{}.json", self.slug));
+        std::fs::write(&path, self.to_json().to_string_pretty(1))?;
+        println!("[saved {}]", path.display());
+        Ok(path)
     }
 }
 
@@ -174,5 +216,20 @@ mod tests {
     fn pct_formats() {
         assert_eq!(pct(0.9234), "92.34");
         assert_eq!(pct(f64::NAN), "-");
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let mut t = Table::new("engines", &["shape", "ns"]);
+        t.row(vec!["(4096,192,384)".into(), "9.2".into()]);
+        let mut rep = Report::new("micro_hotpath");
+        rep.add(&t);
+        let j = Json::parse(&rep.to_json().to_string_pretty(1)).unwrap();
+        assert_eq!(j.get("bench").unwrap().str().unwrap(), "micro_hotpath");
+        let tables = j.get("tables").unwrap().arr().unwrap();
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].get("title").unwrap().str().unwrap(), "engines");
+        let rows = tables[0].get("rows").unwrap().arr().unwrap();
+        assert_eq!(rows[0].arr().unwrap()[1].str().unwrap(), "9.2");
     }
 }

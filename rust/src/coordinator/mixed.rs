@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use crate::manifest::Manifest;
 use crate::model::{LayerStats, Model};
-use crate::quant::{comq_gram, QuantConfig};
+use crate::quant::{comq_workspace, QuantConfig};
 use crate::tensor::Tensor;
 
 pub const CANDIDATE_BITS: &[u32] = &[2, 3, 4, 8];
@@ -62,7 +62,7 @@ pub fn mixed_precision_quantize(
         let mut per_bits = Vec::with_capacity(CANDIDATE_BITS.len());
         for &bits in CANDIDATE_BITS {
             let cfg = QuantConfig { bits, ..*base };
-            let lq = comq_gram(&st.gram, w, &cfg);
+            let lq = comq_workspace(&st.gram, w, &cfg);
             let wq = lq.dequant();
             let err = st.gram.recon_error(w, &wq);
             per_bits.push((err, wq));
@@ -174,7 +174,7 @@ mod tests {
                 .iter()
                 .map(|&bits| {
                     let cfg = QuantConfig { bits, ..base };
-                    st.gram.recon_error(w, &comq_gram(&st.gram, w, &cfg).dequant())
+                    st.gram.recon_error(w, &comq_workspace(&st.gram, w, &cfg).dequant())
                 })
                 .collect();
             // error monotone non-increasing in bits

@@ -56,6 +56,30 @@ impl Gen {
         }
         t
     }
+
+    /// Random shared-Gram calibration for an [m, n] layer: returns
+    /// (W, GramSet::Shared) with `b` calibration rows. Occasionally
+    /// (p=1/8) zeroes a feature column so the EPS_DIAG dead-feature path
+    /// is exercised by default.
+    pub fn shared_layer(&mut self, b: usize, m: usize, n: usize) -> (Tensor, crate::quant::GramSet) {
+        let mut x = self.tensor(&[b, m], 1.0);
+        if m > 1 && self.rng.below(8) == 0 {
+            let dead = self.rng.below(m);
+            for r in 0..b {
+                x.data_mut()[r * m + dead] = 0.0;
+            }
+        }
+        let w = self.tensor_with_outliers(&[m, n], 0.5, 0.05);
+        (w, crate::quant::GramSet::from_features(&x))
+    }
+
+    /// Random grouped (depthwise) calibration: returns (W [k, c],
+    /// GramSet::Grouped) from features [rows, c, k].
+    pub fn grouped_layer(&mut self, rows: usize, c: usize, k: usize) -> (Tensor, crate::quant::GramSet) {
+        let x3 = self.tensor(&[rows, c, k], 1.0);
+        let w = self.tensor(&[k, c], 0.4);
+        (w, crate::quant::GramSet::from_grouped_features(&x3))
+    }
 }
 
 /// Run `prop` over `cases` seeded cases; panics with the failing case
@@ -107,6 +131,17 @@ mod tests {
         forall(5, 3, |g| v2.lock().unwrap().push(g.usize_in(0, 1000)));
         // NB: closure side effects run in order; same seeds -> same values
         assert_eq!(*v1.lock().unwrap(), *v2.lock().unwrap());
+    }
+
+    #[test]
+    fn layer_generators_shapes() {
+        let mut g = Gen { rng: Rng::new(9), case: 0 };
+        let (w, gram) = g.shared_layer(16, 6, 4);
+        assert_eq!(w.shape(), &[6, 4]);
+        assert_eq!(gram.m(), 6);
+        let (wg, gg) = g.grouped_layer(12, 3, 5);
+        assert_eq!(wg.shape(), &[5, 3]);
+        assert_eq!(gg.m(), 5);
     }
 
     #[test]

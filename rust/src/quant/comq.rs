@@ -1,24 +1,39 @@
 //! COMQ: coordinate-wise minimization of the layer-wise reconstruction
 //! error (the paper's Alg. 1 / Alg. 2).
 //!
-//! Two engines, mathematically identical (tests assert agreement):
+//! Three engines, mathematically identical (tests assert agreement —
+//! gram vs workspace is asserted *bit*-identical):
 //!
-//! * `comq_residual` — the literal Eq. 6/9 transcription carrying
-//!   U = X(W − W_q) ∈ R^{b×n}; needs raw features X; O(K·m·b) per column.
-//! * `comq_gram`     — the optimized engine carrying P = G(W − W_q)
-//!   column-wise with G = XᵀX precomputed; O(K·m²) per column and no
-//!   batch dimension in the hot loop. This is what the coordinator uses.
+//! * `comq_residual` (this file) — the literal Eq. 6/9 transcription
+//!   carrying U = X(W − W_q) ∈ R^{b×n}; needs raw features X; O(K·m·b)
+//!   per column and a batch dimension in the hot loop. Kept as the
+//!   readable reference + the residual-vs-Gram perf ablation; never the
+//!   production path.
+//! * `comq_gram` (this file) — the Gram-domain engine carrying
+//!   P = G(W − W_q) column-wise with G = XᵀX precomputed; O(K·m²) per
+//!   column, no batch dimension. Row-major layout: every column visit
+//!   gathers stride-`n` slices of W/Q into scratch and scatters Q back.
+//!   Kept as the layout-agnostic second opinion the workspace engine is
+//!   verified against.
+//! * `comq_workspace` (quant/workspace.rs) — the production engine.
+//!   Same math and *bit-identical codes* as `comq_gram`, but W/Q/P are
+//!   packed column-major once per layer (one transpose in, one out), the
+//!   batched panels P = G·R and G·Q run through the packed register-
+//!   tiled matmul, greedy orders are computed once per layer instead of
+//!   once per column per sweep, and all scratch is reused. Strictly
+//!   faster; use it unless you are cross-checking engines.
 //!
-//! Columns are independent given the scale, so both engines process
-//! columns in parallel; per-layer mode synchronizes only at the δ-update
-//! (Eq. 7), per-channel mode never does (Eq. 10 is per-column).
+//! Columns are independent given the scale, so all engines process
+//! columns in parallel (via the persistent pool in util/pool.rs);
+//! per-layer mode synchronizes only at the δ-update (Eq. 7), per-channel
+//! mode never does (Eq. 10 is per-column).
 
-use crate::tensor::Tensor;
-use crate::util::pool::parallel_ranges;
+use crate::tensor::{axpy, Tensor};
+use crate::util::pool::{parallel_ranges, SendPtr};
 
 use super::gram::GramSet;
 use super::grid::{init_grid, qround, LayerQuant, QuantConfig, Scheme};
-use super::order::order_for_column;
+use super::order::{order_for_column, order_for_column_into, shared_order, OrderKind};
 
 /// Dead-feature guard: ‖x_i‖² below this falls back to plain rounding.
 pub const EPS_DIAG: f32 = 1e-12;
@@ -99,9 +114,22 @@ fn sweep_columns_gram(
         }
         GramSet::Grouped(_) => None,
     };
+    // Column-invariant work hoisted out of the per-column loop: the
+    // shared diag(G), and the update order when it does not depend on j
+    // (Cyclic always; GreedyShared whenever the Gram is shared — grouped
+    // layers have per-column diags, so their "shared" order still varies).
+    let diag_shared: Option<Vec<f32>> = match gram {
+        GramSet::Shared(g) => Some((0..m).map(|i| g.at2(i, i)).collect()),
+        GramSet::Grouped(_) => None,
+    };
+    let hoisted_order: Option<Vec<u32>> = match cfg.order {
+        OrderKind::Cyclic => Some((0..m as u32).collect()),
+        OrderKind::GreedyShared => diag_shared.as_ref().map(|d| shared_order(d, w)),
+        OrderKind::GreedyPerColumn => None,
+    };
     let mut out = vec![(0.0f32, 0.0f32); n];
-    let q_ptr = SendPtr(q.data_mut().as_mut_ptr());
-    let out_ptr = SendPtrPair(out.as_mut_ptr());
+    let q_ptr = SendPtr::new(q.data_mut().as_mut_ptr());
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
     // Columns are fully independent within a sweep; partition them.
     parallel_ranges(n, 4, |_, cols| {
         // scratch reused across this thread's columns
@@ -109,17 +137,35 @@ fn sweep_columns_gram(
         let mut qcol = vec![0.0f32; m];
         let mut p = vec![0.0f32; m];
         let mut diag = vec![0.0f32; m];
+        let mut gq = vec![0.0f32; m];
+        let mut r_scratch = vec![0.0f32; m];
+        let mut scores = Vec::new();
+        let mut ord_scratch: Vec<u32> = Vec::new();
         for j in cols {
             let g = gram.for_col(j);
             let qd = unsafe { std::slice::from_raw_parts_mut(q_ptr.ptr(), m * n) };
             for i in 0..m {
                 wcol[i] = w.at2(i, j);
                 qcol[i] = qd[i * n + j];
-                diag[i] = g.at2(i, i);
             }
+            let diag: &[f32] = match &diag_shared {
+                Some(d) => d,
+                None => {
+                    for i in 0..m {
+                        diag[i] = g.at2(i, i);
+                    }
+                    &diag
+                }
+            };
             let dj = delta[j];
             let zj = zero[j];
-            let order = order_for_column(cfg.order, &diag, w, j);
+            let order: &[u32] = match &hoisted_order {
+                Some(o) => o,
+                None => {
+                    order_for_column_into(cfg.order, diag, w, j, &mut scores, &mut ord_scratch);
+                    &ord_scratch
+                }
+            };
             // p = G (w − δ q): column slice of the batched P, or per-
             // column gemv for grouped layers
             match &p_all {
@@ -128,28 +174,9 @@ fn sweep_columns_gram(
                         p[i] = pa.at2(i, j);
                     }
                 }
-                None => gemv_diff(g, &wcol, &qcol, dj, &mut p),
+                None => gemv_diff(g, &wcol, &qcol, dj, &mut p, &mut r_scratch),
             }
-            for &oi in &order {
-                let i = oi as usize;
-                let gii = g.at2(i, i);
-                let r_old = wcol[i] - dj * qcol[i];
-                let q_new = if gii <= EPS_DIAG {
-                    qround(wcol[i] / dj, zj, levels)
-                } else {
-                    let numer = p[i] - gii * r_old + gii * wcol[i];
-                    qround(numer / gii / dj, zj, levels)
-                };
-                let r_new = wcol[i] - dj * q_new;
-                let dr = r_new - r_old;
-                if dr != 0.0 {
-                    let grow = g.row(i); // symmetric: column i == row i
-                    for (pt, gt) in p.iter_mut().zip(grow) {
-                        *pt += gt * dr;
-                    }
-                }
-                qcol[i] = q_new;
-            }
+            update_column(g, diag, &wcol, &mut qcol, &mut p, order, dj, zj, levels);
             // write back
             for i in 0..m {
                 qd[i * n + j] = qcol[i];
@@ -157,7 +184,6 @@ fn sweep_columns_gram(
             // δ-update statistics: grouped layers compute their own gemv
             // here; the shared case batches G·Q below (one matmul).
             if p_all.is_none() {
-                let mut gq = vec![0.0f32; m];
                 gemv(g, &qcol, &mut gq);
                 let mut num = 0.0f64;
                 let mut den = 0.0f64;
@@ -191,17 +217,57 @@ fn sweep_columns_gram(
     out
 }
 
-/// p = G (w − δ q)
-fn gemv_diff(g: &Tensor, w: &[f32], q: &[f32], delta: f32, p: &mut [f32]) {
+/// The coordinate-descent inner loop for one column (Eq. 6 in Gram
+/// form): visit rows in `order`, re-round each against the current
+/// residual statistics p = G(w − δq), and fold the residual change back
+/// into p with a rank-1 axpy. Shared verbatim by the gram and workspace
+/// engines — their bit-identity rests on this being the same code.
+/// `diag[i]` must equal g[i][i].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn update_column(
+    g: &Tensor,
+    diag: &[f32],
+    wcol: &[f32],
+    qcol: &mut [f32],
+    p: &mut [f32],
+    order: &[u32],
+    dj: f32,
+    zj: f32,
+    levels: f32,
+) {
+    for &oi in order {
+        let i = oi as usize;
+        let gii = diag[i];
+        let r_old = wcol[i] - dj * qcol[i];
+        let q_new = if gii <= EPS_DIAG {
+            qround(wcol[i] / dj, zj, levels)
+        } else {
+            let numer = p[i] - gii * r_old + gii * wcol[i];
+            qround(numer / gii / dj, zj, levels)
+        };
+        let r_new = wcol[i] - dj * q_new;
+        let dr = r_new - r_old;
+        if dr != 0.0 {
+            axpy(dr, g.row(i), p); // symmetric: column i == row i
+        }
+        qcol[i] = q_new;
+    }
+}
+
+/// p = G (w − δ q); `r` is caller-owned scratch (length ≥ m) so the hot
+/// loop makes no per-call allocation.
+pub(crate) fn gemv_diff(g: &Tensor, w: &[f32], q: &[f32], delta: f32, p: &mut [f32], r: &mut [f32]) {
     let m = w.len();
-    let r: Vec<f32> = (0..m).map(|i| w[i] - delta * q[i]).collect();
-    gemv(g, &r, p);
+    for i in 0..m {
+        r[i] = w[i] - delta * q[i];
+    }
+    gemv(g, &r[..m], p);
 }
 
 /// p = G v (G symmetric [m, m]); 8-way unrolled dot so the compiler
 /// vectorizes with independent accumulator lanes (same shape as the
 /// matmul axpy kernel — perf iteration #3 in EXPERIMENTS.md §Perf).
-fn gemv(g: &Tensor, v: &[f32], p: &mut [f32]) {
+pub(crate) fn gemv(g: &Tensor, v: &[f32], p: &mut [f32]) {
     let m = v.len();
     let gd = g.data();
     for (i, pi) in p.iter_mut().enumerate() {
@@ -226,26 +292,6 @@ pub(crate) fn dot(a: &[f32], b: &[f32]) -> f32 {
         s += x * y;
     }
     s
-}
-
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    #[inline]
-    fn ptr(&self) -> *mut f32 {
-        self.0
-    }
-}
-
-struct SendPtrPair(*mut (f32, f32));
-unsafe impl Send for SendPtrPair {}
-unsafe impl Sync for SendPtrPair {}
-impl SendPtrPair {
-    #[inline]
-    fn ptr(&self) -> *mut (f32, f32) {
-        self.0
-    }
 }
 
 // ---------------------------------------------------------------------------

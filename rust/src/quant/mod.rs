@@ -7,6 +7,8 @@
 //! * `gram`     — calibration sufficient statistics (G = XᵀX)
 //! * `order`    — cyclic vs greedy coordinate orders (Sec. 3.3)
 //! * `comq`     — Alg. 1 / Alg. 2, residual- and Gram-domain engines
+//! * `workspace`— column-major sweep workspace (the production engine;
+//!                bit-identical to `comq::comq_gram`, strictly faster)
 //! * `rtn`      — round-to-nearest baseline
 //! * `gpfq`     — greedy path-following quantization (Zhang et al.)
 //! * `obq`      — OBQ/GPTQ-style Hessian-based baseline
@@ -28,8 +30,10 @@ pub mod obq;
 pub mod order;
 pub mod rtn;
 pub mod traits;
+pub mod workspace;
 
 pub use comq::{comq_gram, comq_residual};
+pub use workspace::comq_workspace;
 pub use gram::GramSet;
 pub use grid::{LayerQuant, QuantConfig, Scheme};
 pub use order::OrderKind;

@@ -38,43 +38,75 @@ impl OrderKind {
     }
 }
 
-/// Stable argsort descending.
-fn argsort_desc(scores: &[f32]) -> Vec<u32> {
-    let mut idx: Vec<u32> = (0..scores.len() as u32).collect();
-    idx.sort_by(|&a, &b| {
+/// Stable argsort descending into a reusable buffer (no per-call alloc
+/// once `out` has grown to capacity).
+pub fn argsort_desc_into(scores: &[f32], out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(0..scores.len() as u32);
+    out.sort_by(|&a, &b| {
         scores[b as usize]
             .partial_cmp(&scores[a as usize])
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(a.cmp(&b))
     });
-    idx
 }
 
 /// Row-update order for column j. `diag` = diag(G) (= ‖x_i‖²).
 pub fn order_for_column(kind: OrderKind, diag: &[f32], w: &Tensor, j: usize) -> Vec<u32> {
+    let mut out = Vec::new();
+    let mut scores = Vec::new();
+    order_for_column_into(kind, diag, w, j, &mut scores, &mut out);
+    out
+}
+
+/// Scratch-reusing variant of [`order_for_column`]: identical result,
+/// but `scores`/`out` are caller-owned so the per-column-per-sweep
+/// allocations of the hot loop disappear. Note the greedy scores depend
+/// only on diag(G) and |W| — both sweep-invariant — so callers can also
+/// compute orders once per layer and reuse them across sweeps (the
+/// workspace engine does; see quant/workspace.rs).
+pub fn order_for_column_into(
+    kind: OrderKind,
+    diag: &[f32],
+    w: &Tensor,
+    j: usize,
+    scores: &mut Vec<f32>,
+    out: &mut Vec<u32>,
+) {
     let m = w.rows();
     match kind {
-        OrderKind::Cyclic => (0..m as u32).collect(),
-        OrderKind::GreedyPerColumn => {
-            let scores: Vec<f32> = (0..m)
-                .map(|i| diag[i].max(0.0).sqrt() * w.at2(i, j).abs())
-                .collect();
-            argsort_desc(&scores)
+        OrderKind::Cyclic => {
+            out.clear();
+            out.extend(0..m as u32);
         }
-        OrderKind::GreedyShared => shared_order(diag, w),
+        OrderKind::GreedyPerColumn => {
+            scores.clear();
+            scores.extend((0..m).map(|i| diag[i].max(0.0).sqrt() * w.at2(i, j).abs()));
+            argsort_desc_into(scores, out);
+        }
+        OrderKind::GreedyShared => shared_order_into(diag, w, scores, out),
     }
 }
 
 /// The shared greedy order: score_i = ‖x_i‖ · mean_j |w_ij|.
 pub fn shared_order(diag: &[f32], w: &Tensor) -> Vec<u32> {
+    let mut scores = Vec::new();
+    let mut out = Vec::new();
+    shared_order_into(diag, w, &mut scores, &mut out);
+    out
+}
+
+/// Scratch-reusing variant of [`shared_order`] (the grouped-Gram hot
+/// path recomputes the "shared" order per column because each column
+/// has its own diag).
+pub fn shared_order_into(diag: &[f32], w: &Tensor, scores: &mut Vec<f32>, out: &mut Vec<u32>) {
     let (m, n) = (w.rows(), w.cols());
-    let scores: Vec<f32> = (0..m)
-        .map(|i| {
-            let mean_abs = w.row(i).iter().map(|v| v.abs()).sum::<f32>() / n as f32;
-            diag[i].max(0.0).sqrt() * mean_abs
-        })
-        .collect();
-    argsort_desc(&scores)
+    scores.clear();
+    scores.extend((0..m).map(|i| {
+        let mean_abs = w.row(i).iter().map(|v| v.abs()).sum::<f32>() / n as f32;
+        diag[i].max(0.0).sqrt() * mean_abs
+    }));
+    argsort_desc_into(scores, out);
 }
 
 /// Inverse permutation: out[perm[i]] = i.
@@ -131,6 +163,20 @@ mod tests {
         let w = Tensor::new(&[3, 1], vec![1.0, 1.0, 1.0]);
         let o = order_for_column(OrderKind::GreedyPerColumn, &[1.0; 3], &w, 0);
         assert_eq!(o, vec![0, 1, 2]); // ties keep index order
+    }
+
+    #[test]
+    fn into_variants_match_allocating_api() {
+        let w = Tensor::new(&[6, 3], (0..18).map(|i| ((i * 5) % 7) as f32 - 3.0).collect());
+        let diag = [2.0, 0.5, 0.0, 1.5, 3.0, 0.25];
+        let mut scores = Vec::new();
+        let mut out = Vec::new();
+        for kind in [OrderKind::Cyclic, OrderKind::GreedyShared, OrderKind::GreedyPerColumn] {
+            for j in 0..3 {
+                order_for_column_into(kind, &diag, &w, j, &mut scores, &mut out);
+                assert_eq!(out, order_for_column(kind, &diag, &w, j), "{kind:?} col {j}");
+            }
+        }
     }
 
     #[test]

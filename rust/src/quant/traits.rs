@@ -7,6 +7,7 @@ use super::adaround::adaround_lite;
 use super::bitsplit::bitsplit;
 use super::comq::comq_gram;
 use super::gpfq::gpfq;
+use super::workspace::comq_workspace;
 use super::gram::GramSet;
 use super::grid::{LayerQuant, QuantConfig};
 use super::obq::obq;
@@ -24,6 +25,7 @@ pub trait Quantizer: Send + Sync {
 }
 
 pub struct ComqQuantizer;
+pub struct ComqGramQuantizer;
 pub struct ComqCyclicQuantizer;
 pub struct RtnQuantizer;
 pub struct GpfqQuantizer;
@@ -36,6 +38,19 @@ impl Quantizer for ComqQuantizer {
         "comq"
     }
     fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        // production path: column-major workspace engine (bit-identical
+        // to comq_gram)
+        comq_workspace(gram, w, cfg)
+    }
+}
+
+impl Quantizer for ComqGramQuantizer {
+    fn name(&self) -> &'static str {
+        "comq-gram"
+    }
+    fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+        // row-major Gram-domain engine, kept as the second opinion the
+        // workspace engine is verified against
         comq_gram(gram, w, cfg)
     }
 }
@@ -46,7 +61,7 @@ impl Quantizer for ComqCyclicQuantizer {
     }
     fn quantize(&self, gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
         let cfg = QuantConfig { order: OrderKind::Cyclic, ..*cfg };
-        comq_gram(gram, w, &cfg)
+        comq_workspace(gram, w, &cfg)
     }
 }
 
@@ -100,12 +115,13 @@ impl Quantizer for BitSplitQuantizer {
 
 /// Every registered quantizer name (CLI/docs).
 pub const QUANTIZER_NAMES: &[&str] =
-    &["comq", "comq-cyclic", "rtn", "gpfq", "obq", "adaround-lite", "bitsplit"];
+    &["comq", "comq-gram", "comq-cyclic", "rtn", "gpfq", "obq", "adaround-lite", "bitsplit"];
 
 /// Factory.
 pub fn make_quantizer(name: &str) -> Option<Box<dyn Quantizer>> {
     match name {
         "comq" => Some(Box::new(ComqQuantizer)),
+        "comq-gram" => Some(Box::new(ComqGramQuantizer)),
         "comq-cyclic" => Some(Box::new(ComqCyclicQuantizer)),
         "rtn" => Some(Box::new(RtnQuantizer)),
         "gpfq" => Some(Box::new(GpfqQuantizer)),

@@ -1,0 +1,415 @@
+//! Column-major sweep workspace: the production COMQ engine.
+//!
+//! `comq_gram` (quant/comq.rs) walks columns of row-major W/Q, so every
+//! column visit pays stride-`n` gathers of W, Q and diag(G) into scratch,
+//! a stride-`n` scatter of Q back, and — for the greedy orders — a fresh
+//! score pass + argsort per column *per sweep*, even though the greedy
+//! scores depend only on diag(G) and |W|, which never change between
+//! sweeps. This engine removes all of that by packing the layer into a
+//! [`SweepWorkspace`] once:
+//!
+//! * **Wᵀ, Qᵀ [n, m]** — every column of W/Q is a contiguous slice; the
+//!   inner coordinate loop runs gather/scatter-free, and the batched
+//!   panels below come out already column-major.
+//! * **diag(G)** — packed once (shared Grams; grouped layers gather per
+//!   column, which is unavoidable since each column has its own Gram).
+//! * **order plan** — cyclic/shared orders are one vector; greedy
+//!   per-column orders are one [n × m] u32 table computed once per layer
+//!   (in parallel) and reused across all `cfg.iters` sweeps. The table
+//!   costs the footprint of one extra weight matrix, which is the price
+//!   of turning K·n argsorts into n.
+//! * **Pᵀ = Rᵀ·G and (G·Q)ᵀ = Qᵀ·G panels** — the two batched products
+//!   (≥2/3 of sweep FLOPs) run through the register-tiled matmul against
+//!   a G packed into B-strips once per layer (not once per product) and
+//!   land directly in column-major layout: no per-column panel
+//!   extraction, no transpose per sweep.
+//!
+//! One transpose in, one transpose out, per layer.
+//!
+//! ## Bit-identity contract
+//!
+//! The codes and scales are **bit-identical** to `comq_gram` (tests
+//! enforce it). Three ingredients make that hold:
+//!
+//! 1. the per-coordinate update is the literal same function
+//!    (`update_column` in comq.rs), fed the same values;
+//! 2. the batched panels are computed as `Rᵀ·G` / `Qᵀ·G` instead of
+//!    `(G·R)` / `(G·Q)` — with a bit-symmetric G (all `GramSet`
+//!    constructors mirror exactly) and the skip-free, k-sequential
+//!    matmul kernel, the transposed product is the same sequence of
+//!    commuted multiplications, hence the same f32 sums;
+//! 3. greedy orders are computed by the same scoring/argsort code, and
+//!    reusing them across sweeps is exact because the scores are
+//!    sweep-invariant.
+
+use crate::tensor::{matmul_into_packed, pack_b, Tensor};
+use crate::util::pool::{parallel_ranges, SendPtr};
+
+use super::comq::{gemv, gemv_diff, update_column};
+use super::gram::GramSet;
+use super::grid::{init_grid, LayerQuant, QuantConfig, Scheme};
+use super::order::{order_for_column_into, shared_order, OrderKind};
+
+/// Coordinate-update order plan, fixed for the whole layer.
+enum OrderPlan {
+    /// One order shared by every column (cyclic, or greedy-shared over a
+    /// shared Gram).
+    Uniform(Vec<u32>),
+    /// Per-column orders, column j at `[j*m .. (j+1)*m]`.
+    Table(Vec<u32>),
+}
+
+impl OrderPlan {
+    #[inline]
+    fn col(&self, j: usize, m: usize) -> &[u32] {
+        match self {
+            OrderPlan::Uniform(o) => o,
+            OrderPlan::Table(t) => &t[j * m..(j + 1) * m],
+        }
+    }
+}
+
+/// The packed per-layer state: everything the sweeps touch, laid out
+/// column-major, built once per `comq_workspace` call.
+struct SweepWorkspace {
+    m: usize,
+    n: usize,
+    /// Wᵀ [n, m].
+    wt: Vec<f32>,
+    /// Qᵀ [n, m] (codes as f32, infeasible float start).
+    qt: Vec<f32>,
+    /// diag(G) for shared Grams (grouped layers gather per column).
+    diag: Option<Vec<f32>>,
+    plan: OrderPlan,
+    /// G packed into matmul B-strips once per layer (shared Grams only);
+    /// both batched products per sweep reuse it instead of re-packing.
+    /// Costs one extra Gram-sized buffer.
+    gp: Vec<f32>,
+    /// Rᵀ / Pᵀ / (GQ)ᵀ panels, reused every sweep (shared Grams only).
+    rt: Vec<f32>,
+    pt: Vec<f32>,
+    gqt: Vec<f32>,
+}
+
+impl SweepWorkspace {
+    fn pack(gram: &GramSet, w: &Tensor, cfg: &QuantConfig, delta: &[f32]) -> SweepWorkspace {
+        let (m, n) = (w.rows(), w.cols());
+        let wt = w.transpose2().into_data();
+        // infeasible float start Q0 = W / δ, same scalar op as comq_gram
+        let mut qt = vec![0.0f32; n * m];
+        for j in 0..n {
+            let dj = delta[j];
+            let (wc, qc) = (&wt[j * m..(j + 1) * m], &mut qt[j * m..(j + 1) * m]);
+            for i in 0..m {
+                qc[i] = wc[i] / dj;
+            }
+        }
+        let diag: Option<Vec<f32>> = match gram {
+            GramSet::Shared(g) => Some((0..m).map(|i| g.at2(i, i)).collect()),
+            GramSet::Grouped(_) => None,
+        };
+        let plan = match cfg.order {
+            OrderKind::Cyclic => OrderPlan::Uniform((0..m as u32).collect()),
+            OrderKind::GreedyShared => match &diag {
+                Some(d) => OrderPlan::Uniform(shared_order(d, w)),
+                None => OrderPlan::Table(order_table(gram, w, cfg.order, None)),
+            },
+            OrderKind::GreedyPerColumn => {
+                OrderPlan::Table(order_table(gram, w, cfg.order, diag.as_deref()))
+            }
+        };
+        let (panel, gp) = match gram {
+            GramSet::Shared(g) => (n * m, pack_b(g.data(), m, m)),
+            GramSet::Grouped(_) => (0, Vec::new()),
+        };
+        SweepWorkspace {
+            m,
+            n,
+            wt,
+            qt,
+            diag,
+            plan,
+            gp,
+            rt: vec![0.0f32; panel],
+            pt: vec![0.0f32; panel],
+            gqt: vec![0.0f32; panel],
+        }
+    }
+}
+
+/// Per-column greedy orders for the whole layer, computed in parallel
+/// with per-thread scratch (no per-column allocation). Delegates
+/// scoring/argsort to `order_for_column_into` so the permutations are
+/// exactly the gram engine's.
+fn order_table(gram: &GramSet, w: &Tensor, kind: OrderKind, diag_shared: Option<&[f32]>) -> Vec<u32> {
+    let (m, n) = (w.rows(), w.cols());
+    let mut table = vec![0u32; n * m];
+    let tp = SendPtr::new(table.as_mut_ptr());
+    parallel_ranges(n, 8, |_, cols| {
+        let mut diag_scratch = vec![0.0f32; m];
+        let mut scores = Vec::new();
+        let mut ord: Vec<u32> = Vec::new();
+        for j in cols {
+            let diag: &[f32] = match diag_shared {
+                Some(d) => d,
+                None => {
+                    let g = gram.for_col(j);
+                    for i in 0..m {
+                        diag_scratch[i] = g.at2(i, i);
+                    }
+                    &diag_scratch
+                }
+            };
+            order_for_column_into(kind, diag, w, j, &mut scores, &mut ord);
+            let out = unsafe { std::slice::from_raw_parts_mut(tp.ptr().add(j * m), m) };
+            out.copy_from_slice(&ord);
+        }
+    });
+    table
+}
+
+/// Quantize one layer with COMQ on the column-major workspace.
+/// Bit-identical codes/scales to [`super::comq::comq_gram`]; strictly
+/// faster. This is what the coordinator and the quantizer registry use.
+pub fn comq_workspace(gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQuant {
+    let (m, n) = (w.rows(), w.cols());
+    assert_eq!(gram.m(), m, "Gram dimension {} vs weight rows {m}", gram.m());
+    let (mut delta, zero) = init_grid(w, cfg);
+    let levels = cfg.levels();
+    let mut ws = SweepWorkspace::pack(gram, w, cfg, &delta);
+
+    let mut stats = vec![(0.0f32, 0.0f32); n];
+    for _k in 0..cfg.iters {
+        match gram {
+            GramSet::Shared(g) => sweep_shared(g, &mut ws, &delta, &zero, levels, &mut stats),
+            GramSet::Grouped(_) => sweep_grouped(gram, &mut ws, &delta, &zero, levels, &mut stats),
+        }
+        // -- δ-update (same scalar ops as comq_gram) --
+        match cfg.scheme {
+            Scheme::PerChannel => {
+                for (d, nd) in delta.iter_mut().zip(&stats) {
+                    if nd.1 > 0.0 {
+                        *d = nd.0 / nd.1;
+                    }
+                }
+            }
+            Scheme::PerLayer => {
+                let num: f64 = stats.iter().map(|p| p.0 as f64).sum();
+                let den: f64 = stats.iter().map(|p| p.1 as f64).sum();
+                if den > 0.0 {
+                    let d = (num / den) as f32;
+                    delta.iter_mut().for_each(|x| *x = d);
+                }
+            }
+        }
+    }
+    // unpack: one transpose out
+    let q = Tensor::new(&[n, m], ws.qt).transpose2();
+    LayerQuant { q, delta, zero }
+}
+
+/// One sweep over a shared-Gram layer: batched panels + contiguous
+/// column updates. Returns per-column (num, den) δ-statistics in
+/// `stats`.
+fn sweep_shared(
+    g: &Tensor,
+    ws: &mut SweepWorkspace,
+    delta: &[f32],
+    zero: &[f32],
+    levels: f32,
+    stats: &mut [(f32, f32)],
+) {
+    let (m, n) = (ws.m, ws.n);
+    let diag = ws.diag.as_deref().expect("shared sweep needs packed diag");
+    // Rᵀ = Wᵀ − Qᵀ·diag(δ), contiguous per column
+    for j in 0..n {
+        let dj = delta[j];
+        let wc = &ws.wt[j * m..(j + 1) * m];
+        let qc = &ws.qt[j * m..(j + 1) * m];
+        let rc = &mut ws.rt[j * m..(j + 1) * m];
+        for i in 0..m {
+            rc[i] = wc[i] - dj * qc[i];
+        }
+    }
+    // Pᵀ = Rᵀ·G == (G·R)ᵀ bit-for-bit (G symmetric, kernel skip-free and
+    // k-sequential) — the gram engine's batched P, already column-major.
+    ws.pt.fill(0.0);
+    matmul_into_packed(&ws.rt, &ws.gp, &mut ws.pt, n, m, m);
+    let qt_ptr = SendPtr::new(ws.qt.as_mut_ptr());
+    let pt_ptr = SendPtr::new(ws.pt.as_mut_ptr());
+    let wt = &ws.wt;
+    let plan = &ws.plan;
+    parallel_ranges(n, 4, |_, cols| {
+        for j in cols {
+            let wcol = &wt[j * m..(j + 1) * m];
+            // columns are disjoint slices; threads own disjoint ranges
+            let qcol = unsafe { std::slice::from_raw_parts_mut(qt_ptr.ptr().add(j * m), m) };
+            let p = unsafe { std::slice::from_raw_parts_mut(pt_ptr.ptr().add(j * m), m) };
+            update_column(g, diag, wcol, qcol, p, plan.col(j, m), delta[j], zero[j], levels);
+        }
+    });
+    // δ-statistics: (G·Q)ᵀ = Qᵀ·G, then per-column f64 dots in the same
+    // i-ascending order as the gram engine's row-major accumulation.
+    ws.gqt.fill(0.0);
+    matmul_into_packed(&ws.qt, &ws.gp, &mut ws.gqt, n, m, m);
+    for j in 0..n {
+        let gq = &ws.gqt[j * m..(j + 1) * m];
+        let wc = &ws.wt[j * m..(j + 1) * m];
+        let qc = &ws.qt[j * m..(j + 1) * m];
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..m {
+            num += gq[i] as f64 * wc[i] as f64;
+            den += gq[i] as f64 * qc[i] as f64;
+        }
+        stats[j] = (num as f32, den as f32);
+    }
+}
+
+/// One sweep over a grouped (depthwise) layer: each column owns its own
+/// small Gram, so panels don't batch — per-column gemvs on contiguous
+/// buffers, same ops as the gram engine's grouped path.
+fn sweep_grouped(
+    gram: &GramSet,
+    ws: &mut SweepWorkspace,
+    delta: &[f32],
+    zero: &[f32],
+    levels: f32,
+    stats: &mut [(f32, f32)],
+) {
+    let (m, n) = (ws.m, ws.n);
+    let qt_ptr = SendPtr::new(ws.qt.as_mut_ptr());
+    let stats_ptr = SendPtr::new(stats.as_mut_ptr());
+    let wt = &ws.wt;
+    let plan = &ws.plan;
+    parallel_ranges(n, 4, |_, cols| {
+        let mut p = vec![0.0f32; m];
+        let mut r = vec![0.0f32; m];
+        let mut diag = vec![0.0f32; m];
+        let mut gq = vec![0.0f32; m];
+        for j in cols {
+            let g = gram.for_col(j);
+            for i in 0..m {
+                diag[i] = g.at2(i, i);
+            }
+            let wcol = &wt[j * m..(j + 1) * m];
+            let qcol = unsafe { std::slice::from_raw_parts_mut(qt_ptr.ptr().add(j * m), m) };
+            gemv_diff(g, wcol, qcol, delta[j], &mut p, &mut r);
+            update_column(g, &diag, wcol, qcol, &mut p, plan.col(j, m), delta[j], zero[j], levels);
+            gemv(g, qcol, &mut gq);
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for i in 0..m {
+                num += gq[i] as f64 * wcol[i] as f64;
+                den += gq[i] as f64 * qcol[i] as f64;
+            }
+            let st = unsafe { std::slice::from_raw_parts_mut(stats_ptr.ptr(), n) };
+            st[j] = (num as f32, den as f32);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::comq::comq_gram;
+    use crate::quant::rtn::rtn;
+    use crate::util::Rng;
+
+    fn setup(b: usize, m: usize, n: usize, seed: u64) -> (Tensor, GramSet) {
+        let mut rng = Rng::new(seed);
+        let x = Tensor::new(&[b, m], rng.normal_vec(b * m));
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n)).scale(0.5);
+        (w, GramSet::from_features(&x))
+    }
+
+    fn assert_bit_identical(a: &LayerQuant, b: &LayerQuant, ctx: &str) {
+        assert_eq!(a.q.shape(), b.q.shape(), "{ctx}: shape");
+        for (i, (x, y)) in a.q.data().iter().zip(b.q.data()).enumerate() {
+            assert!(x == y, "{ctx}: code {i} differs: {x} vs {y}");
+        }
+        for (j, (x, y)) in a.delta.iter().zip(&b.delta).enumerate() {
+            assert!(x == y, "{ctx}: delta {j} differs: {x} vs {y}");
+        }
+        assert_eq!(a.zero, b.zero, "{ctx}: zero");
+    }
+
+    #[test]
+    fn bit_identical_to_gram_engine_all_modes() {
+        // the ISSUE acceptance grid: bits × schemes × orders
+        let (w, g) = setup(64, 24, 12, 10);
+        for bits in [2u32, 3, 4] {
+            for scheme in [Scheme::PerChannel, Scheme::PerLayer] {
+                for order in
+                    [OrderKind::Cyclic, OrderKind::GreedyShared, OrderKind::GreedyPerColumn]
+                {
+                    let cfg = QuantConfig { bits, scheme, order, iters: 3, lam: 1.0 };
+                    let a = comq_gram(&g, &w, &cfg);
+                    let b = comq_workspace(&g, &w, &cfg);
+                    assert_bit_identical(&a, &b, &format!("bits={bits} {scheme:?} {order:?}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_on_grouped_layers() {
+        let mut rng = Rng::new(13);
+        let (rows, c, kk) = (40, 6, 9);
+        let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+        let g = GramSet::from_grouped_features(&x3);
+        let w = Tensor::new(&[kk, c], rng.normal_vec(kk * c)).scale(0.3);
+        for order in [OrderKind::Cyclic, OrderKind::GreedyShared, OrderKind::GreedyPerColumn] {
+            let cfg = QuantConfig { bits: 4, order, ..Default::default() };
+            let a = comq_gram(&g, &w, &cfg);
+            let b = comq_workspace(&g, &w, &cfg);
+            assert_bit_identical(&a, &b, &format!("grouped {order:?}"));
+        }
+    }
+
+    #[test]
+    fn bit_identical_with_dead_features() {
+        // zeroed feature column => zero Gram row/col => EPS_DIAG fallback
+        let mut rng = Rng::new(14);
+        let (b, m, n) = (32, 10, 4);
+        let mut xd = rng.normal_vec(b * m);
+        for r in 0..b {
+            xd[r * m + 3] = 0.0;
+        }
+        let x = Tensor::new(&[b, m], xd);
+        let g = GramSet::from_features(&x);
+        let w = Tensor::new(&[m, n], rng.normal_vec(m * n));
+        let cfg = QuantConfig::default();
+        let a = comq_gram(&g, &w, &cfg);
+        let bq = comq_workspace(&g, &w, &cfg);
+        assert_bit_identical(&a, &bq, "dead features");
+        assert!(bq.q.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn beats_rtn() {
+        let (w, g) = setup(128, 32, 16, 11);
+        for bits in [2u32, 3, 4] {
+            let cfg = QuantConfig { bits, ..Default::default() };
+            let lq = comq_workspace(&g, &w, &cfg);
+            assert!(lq.codes_feasible(bits));
+            let e_comq = g.recon_error(&w, &lq.dequant());
+            let e_rtn = g.recon_error(&w, &rtn(&w, &cfg).dequant());
+            assert!(e_comq < e_rtn, "bits={bits}: {e_comq} vs {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn single_column_and_single_row_edges() {
+        for &(m, n) in &[(1usize, 4usize), (8, 1), (1, 1)] {
+            let mut rng = Rng::new(21);
+            let x = Tensor::new(&[16, m], rng.normal_vec(16 * m));
+            let w = Tensor::new(&[m, n], rng.normal_vec(m * n));
+            let g = GramSet::from_features(&x);
+            let cfg = QuantConfig { iters: 2, ..Default::default() };
+            let a = comq_gram(&g, &w, &cfg);
+            let b = comq_workspace(&g, &w, &cfg);
+            assert_bit_identical(&a, &b, &format!("edge ({m},{n})"));
+        }
+    }
+}

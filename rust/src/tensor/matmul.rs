@@ -1,14 +1,24 @@
-//! Blocked, threaded f32 matrix multiplication.
+//! Packed, register-tiled, threaded f32 matrix multiplication.
 //!
-//! The kernel computes C[i,:] += A[i,k] * B[k,:] row-major with k-blocking
-//! so that the B panel stays in L1/L2 and the inner loop vectorizes (the
-//! compiler auto-vectorizes the fused multiply-add over contiguous rows).
-//! Rows of C are partitioned across threads — no synchronization needed.
+//! The kernel packs B once into zero-padded column strips of width `NR`
+//! (k-contiguous, so the inner loop streams one cache line of B per
+//! step), then computes `MR × NR` blocks of C with the accumulators held
+//! in registers for the whole k extent — C is written once per block
+//! instead of once per (row, k) pair, and the B strip is re-streamed
+//! once per `MR` rows instead of once per row. Row blocks are
+//! partitioned across the persistent worker pool — no synchronization
+//! needed. Accumulation over k is strictly sequential and skip-free,
+//! which makes `A·B` and `(Bᵀ·Aᵀ)ᵀ` bit-identical for symmetric
+//! operands — the workspace COMQ engine relies on this (see
+//! quant/workspace.rs).
 
 use super::Tensor;
-use crate::util::pool::parallel_ranges;
+use crate::util::pool::{parallel_ranges, SendPtr};
 
-const KB: usize = 256; // k-panel
+/// Micro-kernel tile: MR rows × NR columns of C accumulated in registers
+/// (4 × 16 f32 = 8 ymm accumulators under AVX2 auto-vectorization).
+const MR: usize = 4;
+const NR: usize = 16;
 const MIN_FLOPS_PER_THREAD: usize = 1 << 20;
 
 /// C = A @ B; A [m, k], B [k, n] -> [m, n].
@@ -21,39 +31,121 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     out
 }
 
-/// C (pre-zeroed or accumulated into) = A @ B on raw slices.
+/// C (pre-zeroed or accumulated into) += A @ B on raw slices.
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    let bp = pack_b(b, k, n);
+    matmul_into_packed(a, &bp, c, m, k, n);
+}
+
+/// C += A @ B where `bp` is B [k, n] already packed by [`pack_b`].
+/// Callers that multiply by the same B many times (the workspace sweep
+/// hits the layer Gram 2·iters times per layer) pack once and reuse.
+pub(crate) fn matmul_into_packed(a: &[f32], bp: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
     assert_eq!(c.len(), m * n);
-    let flops = 2 * m * k * n;
-    let min_rows = (MIN_FLOPS_PER_THREAD / (2 * k * n).max(1)).max(1);
-    // Partition rows of C across threads; each thread owns c[lo..hi].
-    let c_ptr = SendPtr(c.as_mut_ptr());
-    parallel_ranges(m, min_rows, |_, rows| {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let n_strips = n.div_ceil(NR);
+    assert_eq!(bp.len(), n_strips * k * NR, "bp not packed for [{k}, {n}]");
+    let n_blocks = m.div_ceil(MR);
+    let min_blocks = (MIN_FLOPS_PER_THREAD / (2 * k * n * MR).max(1)).max(1);
+    let c_ptr = SendPtr::new(c.as_mut_ptr());
+    parallel_ranges(n_blocks, min_blocks, |_, blocks| {
         let c = unsafe { std::slice::from_raw_parts_mut(c_ptr.ptr(), m * n) };
-        for k0 in (0..k).step_by(KB) {
-            let k1 = (k0 + KB).min(k);
-            for i in rows.clone() {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    axpy(av, brow, crow);
+        // strip-outer order keeps one B strip (k×NR floats) hot across
+        // this thread's row blocks
+        for s in 0..n_strips {
+            let strip = &bp[s * k * NR..(s + 1) * k * NR];
+            let j0 = s * NR;
+            let cols = NR.min(n - j0);
+            for blk in blocks.clone() {
+                let i0 = blk * MR;
+                let rows = MR.min(m - i0);
+                if rows == MR {
+                    micro_kernel_full(a, strip, c, i0, j0, cols, k, n);
+                } else {
+                    micro_kernel_tail(a, strip, c, i0, rows, j0, cols, k, n);
                 }
             }
         }
     });
-    let _ = flops;
 }
 
-/// crow += av * brow  (the vectorizable inner kernel).
+/// Full MR-row micro-kernel: acc[MR][NR] lives in registers across k.
 #[inline]
-fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_full(a: &[f32], strip: &[f32], c: &mut [f32], i0: usize, j0: usize, cols: usize, k: usize, n: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let bq = &strip[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let av = a[(i0 + r) * k + kk];
+            for l in 0..NR {
+                acc[r][l] += av * bq[l];
+            }
+        }
+    }
+    for r in 0..MR {
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
+        for (cv, av) in crow.iter_mut().zip(&acc[r][..cols]) {
+            *cv += av;
+        }
+    }
+}
+
+/// Tail micro-kernel for the last partial row block (rows < MR).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_tail(a: &[f32], strip: &[f32], c: &mut [f32], i0: usize, rows: usize, j0: usize, cols: usize, k: usize, n: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..k {
+        let bq = &strip[kk * NR..kk * NR + NR];
+        for (r, accr) in acc.iter_mut().take(rows).enumerate() {
+            let av = a[(i0 + r) * k + kk];
+            for l in 0..NR {
+                accr[l] += av * bq[l];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().take(rows).enumerate() {
+        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
+        for (cv, av) in crow.iter_mut().zip(&accr[..cols]) {
+            *cv += av;
+        }
+    }
+}
+
+/// Pack B [k, n] into column strips of width NR, k-contiguous and
+/// zero-padded on the last strip: packed[s][kk][l] = B[kk][s·NR + l].
+pub(crate) fn pack_b(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    let n_strips = n.div_ceil(NR);
+    let mut bp = vec![0.0f32; n_strips * k * NR];
+    let bp_ptr = SendPtr::new(bp.as_mut_ptr());
+    // memory-bound; only fan out for panels that dwarf the hand-off cost
+    let min_strips = (1 << 16) / (k * NR).max(1) + 1;
+    parallel_ranges(n_strips, min_strips, |_, strips| {
+        let bp = unsafe { std::slice::from_raw_parts_mut(bp_ptr.ptr(), n_strips * k * NR) };
+        for s in strips {
+            let j0 = s * NR;
+            let cols = NR.min(n - j0);
+            for kk in 0..k {
+                let src = &b[kk * n + j0..kk * n + j0 + cols];
+                bp[s * k * NR + kk * NR..s * k * NR + kk * NR + cols].copy_from_slice(src);
+            }
+        }
+    });
+    bp
+}
+
+/// crow += av * brow  (the vectorizable elementwise kernel; also used by
+/// the COMQ sweep engines for the rank-1 residual update).
+#[inline]
+pub(crate) fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
     let n = crow.len();
     let (bc, bt) = brow.split_at(n - n % 8);
     let (cc, ct) = crow.split_at_mut(n - n % 8);
@@ -68,12 +160,12 @@ fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
 }
 
 /// G = Aᵀ A for A [r, m] -> [m, m] (the calibration Gram kernel).
-/// Symmetric; computes the upper triangle in f64 accumulation and mirrors.
+/// Symmetric; computes the upper triangle and mirrors.
 pub fn matmul_at_a(a: &Tensor) -> Tensor {
     let (r, m) = (a.rows(), a.cols());
     let ad = a.data();
     let mut g = Tensor::zeros(&[m, m]);
-    let g_ptr = SendPtr(g.data_mut().as_mut_ptr());
+    let g_ptr = SendPtr::new(g.data_mut().as_mut_ptr());
     parallel_ranges(m, 8, |_, cols| {
         let gd = unsafe { std::slice::from_raw_parts_mut(g_ptr.ptr(), m * m) };
         for i in cols {
@@ -99,20 +191,6 @@ pub fn matmul_at_a(a: &Tensor) -> Tensor {
     g
 }
 
-/// Shared mutable pointer for disjoint-range writes across scoped threads.
-/// Callers guarantee each thread writes a disjoint row range.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl SendPtr {
-    #[inline]
-    fn ptr(&self) -> *mut f32 {
-        self.0
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,7 +214,16 @@ mod tests {
     #[test]
     fn matches_naive_various_shapes() {
         let mut rng = Rng::new(1);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 48, 96), (100, 1, 50)] {
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 7),
+            (17, 33, 9),
+            (64, 48, 96),
+            (100, 1, 50),
+            (5, 300, 16),  // strip-exact n, k beyond one cache line
+            (4, 7, 16),    // exactly one full strip
+            (9, 11, 35),   // padded tail strip + tail row block
+        ] {
             let a = Tensor::new(&[m, k], rng.normal_vec(m * k));
             let b = Tensor::new(&[k, n], rng.normal_vec(k * n));
             let c = matmul(&a, &b);
@@ -145,6 +232,24 @@ mod tests {
                 c.max_abs_diff(&expect) < 1e-3 * (k as f32).sqrt(),
                 "shape ({m},{k},{n})"
             );
+        }
+    }
+
+    #[test]
+    fn symmetric_transpose_bit_identity() {
+        // For symmetric G: (Rᵀ·G)[j][i] must equal (G·R)[i][j] bit-for-
+        // bit — the contract the workspace sweep engine relies on.
+        let mut rng = Rng::new(8);
+        let (m, n) = (37, 21);
+        let x = Tensor::new(&[50, m], rng.normal_vec(50 * m));
+        let g = matmul_at_a(&x);
+        let r = Tensor::new(&[m, n], rng.normal_vec(m * n));
+        let p = matmul(&g, &r);
+        let pt = matmul(&r.transpose2(), &g);
+        for i in 0..m {
+            for j in 0..n {
+                assert_eq!(p.at2(i, j).to_bits(), pt.at2(j, i).to_bits(), "({i},{j})");
+            }
         }
     }
 
@@ -175,6 +280,15 @@ mod tests {
         let mut rng = Rng::new(3);
         let b = Tensor::new(&[n, 5], rng.normal_vec(n * 5));
         assert_eq!(matmul(&eye, &b), b);
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = Tensor::new(&[2, 2], vec![1., 0., 0., 1.]);
+        let b = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let mut c = vec![10.0f32; 4];
+        matmul_into(a.data(), b.data(), &mut c, 2, 2, 2);
+        assert_eq!(c, vec![11., 12., 13., 14.]);
     }
 
     #[test]

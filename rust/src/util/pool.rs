@@ -1,12 +1,55 @@
-//! Scoped data-parallel helpers over std threads.
+//! Persistent data-parallel worker pool over std threads.
 //!
-//! No rayon in the vendored set, so the coordinator and the tensor layer
-//! parallelize with `std::thread::scope`. The helpers here keep that
-//! boilerplate (chunking, fallback to inline execution for small work)
-//! in one place.
+//! No rayon in the vendored set, so every parallel region in the crate
+//! (the COMQ sweeps, matmul, the baseline quantizers) funnels through the
+//! two helpers here. Until PR 2 they spawned fresh OS threads per call;
+//! at sweep granularity (three calls per quantized layer, plus two
+//! matmuls) the ~50–100 µs spawn+join tax was a visible constant factor
+//! on small and medium layers. The pool below is spawned lazily on first
+//! use and then reused for the life of the process.
+//!
+//! ## Lifecycle
+//!
+//! * Workers are spawned on demand, the first time a call needs them,
+//!   and never exit; they park on a condvar when the job queue is empty.
+//!   The pool holds at most `MAX_WORKERS` threads, ever.
+//! * `COMQ_THREADS` is re-read on **every** call (see [`num_threads`]),
+//!   so callers (and the thread-scaling bench) can change the effective
+//!   parallelism between calls without restarting the process. The pool
+//!   never shrinks; a call that wants fewer threads than exist simply
+//!   enqueues fewer chunks.
+//! * `COMQ_THREADS=1` (or work below `min_per_thread`) runs inline on
+//!   the calling thread and never touches — or creates — the pool.
+//!
+//! ## Execution model
+//!
+//! A call to [`parallel_ranges`] splits `0..n` into contiguous chunks,
+//! enqueues one job per chunk, and then *helps*: the calling thread
+//! drains the queue alongside the workers until its own jobs are done.
+//! Helping makes correctness independent of pool capacity (with zero
+//! spawnable threads the caller just runs everything itself) and makes
+//! nested/concurrent calls — e.g. the layer scheduler running several
+//! quantizers at once — deadlock-free: no thread ever blocks while
+//! runnable work exists in the queue.
+//!
+//! Closures are handed to workers by reference with the lifetime erased;
+//! this is sound because the submitting call cannot return until its
+//! completion latch opens, i.e. strictly after the last worker touching
+//! the closure finished. A panic inside any chunk is caught on the
+//! worker, stored in the latch, and re-thrown on the calling thread once
+//! the remaining chunks finish; the worker itself survives and keeps
+//! serving jobs.
 
-/// Number of worker threads to use: respects COMQ_THREADS, defaults to
-/// available parallelism capped at 16.
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on persistent workers, independent of `COMQ_THREADS`.
+const MAX_WORKERS: usize = 64;
+
+/// Number of worker threads to use for the *current* call: respects
+/// COMQ_THREADS (re-read every call), defaults to available parallelism
+/// capped at 16.
 pub fn num_threads() -> usize {
     if let Ok(v) = std::env::var("COMQ_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
@@ -16,34 +59,219 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
 }
 
+// ---------------------------------------------------------------------------
+// Pool internals
+// ---------------------------------------------------------------------------
+
+/// Completion latch shared by all jobs of one submission.
+struct Latch {
+    state: Mutex<LatchState>,
+    cv: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn std::any::Any + Send + 'static>>,
+}
+
+/// One enqueued chunk. `func` is the submitting call's closure with its
+/// lifetime erased; the latch-wait in `parallel_ranges` keeps it alive
+/// until every job referencing it has run.
+struct Job {
+    func: &'static (dyn Fn(usize, Range<usize>) + Sync),
+    chunk: usize,
+    lo: usize,
+    hi: usize,
+    latch: Arc<Latch>,
+}
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    workers: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState { queue: VecDeque::new(), workers: 0 }),
+        cv: Condvar::new(),
+    })
+}
+
+/// Persistent workers currently alive (diagnostics / tests). Zero until
+/// the first out-of-line parallel call.
+pub fn pool_workers() -> usize {
+    POOL.get().map(|p| p.state.lock().unwrap().workers).unwrap_or(0)
+}
+
+/// Run one job and report its outcome to the job's latch. Panics are
+/// caught here so workers survive and the submitter can re-throw.
+fn run_job(job: Job) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        (job.func)(job.chunk, job.lo..job.hi)
+    }));
+    let mut st = job.latch.state.lock().unwrap();
+    if let Err(payload) = result {
+        if st.panic.is_none() {
+            st.panic = Some(payload);
+        }
+    }
+    st.remaining -= 1;
+    if st.remaining == 0 {
+        job.latch.cv.notify_all();
+    }
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let job = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    break j;
+                }
+                st = pool.cv.wait(st).unwrap();
+            }
+        };
+        run_job(job);
+    }
+}
+
+/// Grow the pool to at least `wanted` workers (capped). Spawn failure is
+/// tolerated: helping-join keeps submissions correct with any number of
+/// workers, including zero.
+fn ensure_workers(pool: &'static Pool, wanted: usize) {
+    let wanted = wanted.min(MAX_WORKERS);
+    let mut st = pool.state.lock().unwrap();
+    while st.workers < wanted {
+        let id = st.workers;
+        let spawned = std::thread::Builder::new()
+            .name(format!("comq-pool-{id}"))
+            .spawn(move || worker_loop(pool))
+            .is_ok();
+        if !spawned {
+            break;
+        }
+        st.workers += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public API (unchanged signatures from the spawn-per-call era)
+// ---------------------------------------------------------------------------
+
 /// Run `f(chunk_index, item_range)` over `n` items split into contiguous
-/// ranges across up to `num_threads()` threads. Runs inline when the work
-/// is too small to amortize thread spawn.
+/// ranges across up to `num_threads()` participants (pool workers plus
+/// the calling thread). Runs inline when the work is too small to
+/// amortize handing off, or when `COMQ_THREADS=1`.
 pub fn parallel_ranges<F>(n: usize, min_per_thread: usize, f: F)
 where
-    F: Fn(usize, std::ops::Range<usize>) + Sync,
+    F: Fn(usize, Range<usize>) + Sync,
 {
     let threads = num_threads().min(n / min_per_thread.max(1)).max(1);
     if threads <= 1 || n == 0 {
         f(0, 0..n);
         return;
     }
+    let pool = pool();
+    ensure_workers(pool, threads - 1);
+
+    // Erase the closure lifetime. Sound: this frame only returns after
+    // the latch confirms every job referencing `f` has completed.
+    let func: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
+    let func: &'static (dyn Fn(usize, Range<usize>) + Sync) =
+        unsafe { std::mem::transmute(func) };
+
     let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for t in 0..threads {
+    let jobs = n.div_ceil(chunk); // number of non-empty chunks
+    let latch = Arc::new(Latch {
+        state: Mutex::new(LatchState { remaining: jobs, panic: None }),
+        cv: Condvar::new(),
+    });
+    {
+        let mut st = pool.state.lock().unwrap();
+        for t in 0..jobs {
             let lo = t * chunk;
             let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(t, lo..hi));
+            st.queue.push_back(Job { func, chunk: t, lo, hi, latch: latch.clone() });
         }
-    });
+    }
+    pool.cv.notify_all();
+
+    // Helping join: drain the queue until our latch opens. Our own jobs
+    // are at the front unless a concurrent call got there first; running
+    // a stranger's job is still progress and prevents deadlock under
+    // nested parallelism. We re-check our latch before every pop so a
+    // call whose own jobs are already done never starts a (possibly
+    // long) stranger chunk it doesn't have to.
+    loop {
+        {
+            let mut st = latch.state.lock().unwrap();
+            if st.remaining == 0 {
+                if let Some(p) = st.panic.take() {
+                    drop(st);
+                    std::panic::resume_unwind(p);
+                }
+                return;
+            }
+        }
+        let job = pool.state.lock().unwrap().queue.pop_front();
+        match job {
+            Some(j) => run_job(j),
+            None => {
+                // Queue empty => all our jobs are done or in flight on
+                // workers; those workers will notify the latch.
+                let mut st = latch.state.lock().unwrap();
+                while st.remaining != 0 {
+                    st = latch.cv.wait(st).unwrap();
+                }
+                if let Some(p) = st.panic.take() {
+                    drop(st);
+                    std::panic::resume_unwind(p);
+                }
+                return;
+            }
+        }
+    }
 }
 
+/// Shared mutable base pointer for disjoint-region writes across pool
+/// threads. The one crate-wide copy of this unsafe pattern: every
+/// parallel caller (matmul, the sweep engines, `parallel_chunks_mut`)
+/// splits a buffer into ranges that each participant owns exclusively,
+/// which is what makes the `Send + Sync` promise sound. Keep that
+/// contract in mind at every use site.
+pub(crate) struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    pub(crate) fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    #[inline]
+    pub(crate) fn ptr(&self) -> *mut T {
+        self.0
+    }
+}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> SendPtr<T> {
+        SendPtr(self.0)
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Map over mutable disjoint chunks of `data` (each `chunk_len` long) in
-/// parallel: `f(chunk_index, chunk_slice)`.
+/// parallel: `f(chunk_index, chunk_slice)`. Built on [`parallel_ranges`],
+/// so it shares the persistent pool, helping join and panic behaviour.
 pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, min_chunks_per_thread: usize, f: F)
 where
     T: Send,
@@ -51,22 +279,12 @@ where
 {
     assert!(chunk_len > 0 && data.len() % chunk_len == 0, "data must divide into chunks");
     let n_chunks = data.len() / chunk_len;
-    let threads = num_threads().min(n_chunks / min_chunks_per_thread.max(1)).max(1);
-    if threads <= 1 {
-        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
-            f(i, c);
-        }
-        return;
-    }
-    let per = n_chunks.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, block) in data.chunks_mut(per * chunk_len).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (i, c) in block.chunks_mut(chunk_len).enumerate() {
-                    f(t * per + i, c);
-                }
-            });
+    let base = SendPtr::new(data.as_mut_ptr());
+    parallel_ranges(n_chunks, min_chunks_per_thread, |_, range| {
+        for i in range {
+            // Ranges are disjoint, hence so are the chunk slices.
+            let chunk = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(i * chunk_len), chunk_len) };
+            f(i, chunk);
         }
     });
 }
@@ -113,5 +331,63 @@ mod tests {
     #[test]
     fn zero_items() {
         parallel_ranges(0, 1, |_, r| assert!(r.is_empty()));
+    }
+
+    #[test]
+    fn pool_is_reused_across_calls() {
+        // Warm the pool with one full-demand call, then check that ten
+        // more identical-demand calls don't grow it: reuse means worker
+        // count is set by per-call demand, not call count.
+        parallel_ranges(256, 1, |_, _| {});
+        let before = pool_workers();
+        for _ in 0..10 {
+            let hits: Vec<AtomicUsize> = (0..256).map(|_| AtomicUsize::new(0)).collect();
+            parallel_ranges(256, 1, |_, r| {
+                for i in r {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+        let after = pool_workers();
+        // Concurrent tests can legitimately grow the pool up to the
+        // current demand (e.g. the COMQ_THREADS=1 test may have shrunk
+        // our warm-up call to inline), hence the max() slack — but call
+        // count must never be a growth factor.
+        assert!(
+            after <= before.max(num_threads().saturating_sub(1)),
+            "pool grew with call count: {before} -> {after}"
+        );
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let res = std::panic::catch_unwind(|| {
+            parallel_ranges(100, 1, |_, r| {
+                if r.contains(&57) {
+                    panic!("boom in chunk");
+                }
+            });
+        });
+        assert!(res.is_err(), "worker panic must reach the caller");
+        // the pool keeps working after a propagated panic
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(100, 1, |_, r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn comq_threads_one_runs_inline() {
+        std::env::set_var("COMQ_THREADS", "1");
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(1000, 1, |t, r| {
+            assert_eq!(t, 0, "inline fallback must use a single chunk");
+            assert_eq!(r, 0..1000);
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        std::env::remove_var("COMQ_THREADS");
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
     }
 }

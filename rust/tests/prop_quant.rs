@@ -3,7 +3,10 @@
 
 use comq::proptest::forall;
 use comq::quant::grid::{LayerQuant, Scheme};
-use comq::quant::{comq_gram, comq_residual, make_quantizer, GramSet, OrderKind, QuantConfig, QUANTIZER_NAMES};
+use comq::quant::{
+    comq_gram, comq_residual, comq_workspace, make_quantizer, GramSet, OrderKind, QuantConfig,
+    QUANTIZER_NAMES,
+};
 use comq::tensor::{matmul_at_a, Tensor};
 
 fn random_case(g: &mut comq::proptest::Gen) -> (Tensor, Tensor, GramSet, QuantConfig) {
@@ -74,6 +77,56 @@ fn gram_equals_residual_engine() {
         let eb = gram.recon_error(&w, &b.dequant());
         let tol = 0.05 * ea.max(eb).max(1e-6);
         assert!((ea - eb).abs() <= tol, "gram {ea} vs residual {eb}");
+    });
+}
+
+/// The ISSUE-2 acceptance property: the column-major workspace engine is
+/// *bit*-identical to the row-major Gram engine — codes, scales and zero
+/// points — across random layers and the full bits × scheme × order
+/// grid, on shared and grouped Grams alike.
+#[test]
+fn workspace_bit_identical_to_gram() {
+    forall(40, 0xC0308, |g| {
+        let grouped = g.case % 4 == 3; // every 4th case: depthwise layer
+        let (w, gram) = if grouped {
+            let rows = g.usize_in(4, 32);
+            let c = g.usize_in(1, 8);
+            let k = g.usize_in(1, 12);
+            g.grouped_layer(rows, c, k)
+        } else {
+            let b = g.usize_in(4, 64);
+            let m = g.usize_in(1, 32);
+            let n = g.usize_in(1, 16);
+            g.shared_layer(b, m, n)
+        };
+        let iters = g.usize_in(1, 4);
+        let lam = g.f32_in(0.5, 1.0);
+        for bits in [2u32, 3, 4] {
+            for scheme in [Scheme::PerChannel, Scheme::PerLayer] {
+                for order in
+                    [OrderKind::Cyclic, OrderKind::GreedyShared, OrderKind::GreedyPerColumn]
+                {
+                    let cfg = QuantConfig { bits, scheme, order, iters, lam };
+                    let a = comq_gram(&gram, &w, &cfg);
+                    let b = comq_workspace(&gram, &w, &cfg);
+                    let ctx = format!("grouped={grouped} cfg={cfg:?}");
+                    assert_eq!(a.q.shape(), b.q.shape(), "{ctx}: shape");
+                    for (i, (x, y)) in a.q.data().iter().zip(b.q.data()).enumerate() {
+                        assert!(
+                            x.to_bits() == y.to_bits(),
+                            "{ctx}: code {i}: {x} vs {y}"
+                        );
+                    }
+                    for (j, (x, y)) in a.delta.iter().zip(&b.delta).enumerate() {
+                        assert!(
+                            x.to_bits() == y.to_bits(),
+                            "{ctx}: delta {j}: {x} vs {y}"
+                        );
+                    }
+                    assert_eq!(a.zero, b.zero, "{ctx}: zero");
+                }
+            }
+        }
     });
 }
 
