@@ -1,23 +1,34 @@
 //! Serving scenario: quantize once, then serve batched classification
-//! requests from the self-contained Rust binary via the PJRT forward
-//! artifact — python is nowhere on this path. Reports per-batch latency
-//! percentiles and end-to-end throughput for the FP and the 4-bit
-//! checkpoints (simulated-quantization inference: same graph, quantized
-//! weights fed as inputs).
+//! requests three ways from one binary —
+//!
+//!  * `pjrt-sim`    — the compiled forward artifact with dequantized f32
+//!    weights fed as inputs (simulated quantization: same graph, same
+//!    FLOPs as fp32);
+//!  * `fp32-native` — the in-crate f32 mirror forward;
+//!  * `int8-serve`  — the integer runtime: packed codes expanded once to
+//!    i8 panels, i8 GEMM with fused dequant, requests coalesced by the
+//!    dynamic micro-batcher.
+//!
+//! One latency-percentile row per path, accuracy parity of the integer
+//! path against the simulated reference, and the packed footprint.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_quantized [model]
 //! ```
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use anyhow::Result;
 
-use comq::bench::{pct, time_it};
+use comq::bench::pct;
 use comq::calib::{Dataset, EngineKind};
-use comq::coordinator::{quantize_model, PipelineOptions};
-use comq::eval::{evaluate, ActMode};
+use comq::coordinator::{quantize_model_packed, PipelineOptions};
+use comq::eval::{evaluate, evaluate_int8, ActMode};
 use comq::manifest::Manifest;
-use comq::model::Model;
+use comq::model::{Model, Tap};
 use comq::runtime::Engine;
+use comq::serve::{ActSource, BatchConfig, QuantizedModel, Server};
 use comq::tensor::Tensor;
 use comq::util::{stats, Rng, Timer};
 
@@ -28,79 +39,148 @@ fn main() -> Result<()> {
     let dataset = Dataset::load(&manifest)?;
 
     // 1. offline: quantize (the whole PTQ pass is part of the story —
-    //    COMQ's pitch is that this step is seconds, not an hour).
+    //    COMQ's pitch is that this step is seconds, not an hour),
+    //    keeping the packed codes + calibrated activation grid around.
     let t = Timer::start();
     let opts = PipelineOptions {
         engine: EngineKind::Pjrt,
         calib_size: 1024,
+        act_bits: Some(8),
         skip_eval: true,
         ..Default::default()
     };
-    let (qmodel, report) = quantize_model(&manifest, &model, &dataset, &opts)?;
+    let out = quantize_model_packed(&manifest, &model, &dataset, &opts)?;
     println!(
-        "quantized {model_name} to 4-bit in {:.2}s (calib {:.2}s + quant {:.2}s)",
+        "quantized {model_name} to {}-bit (W{}A8) in {:.2}s (calib {:.2}s + quant {:.2}s)",
+        opts.qcfg.bits,
+        opts.qcfg.bits,
         t.secs(),
-        report.calib_secs,
-        report.quant_secs
+        out.report.calib_secs,
+        out.report.quant_secs
     );
 
-    // 2. online: serve batches through the compiled forward executable.
-    let engine = Engine::global()?;
-    let art = manifest.path(&model.info.artifacts["forward"]);
-    let exe = engine.load(&art)?;
+    // 2. online: one latency table, three serving paths.
     let b = manifest.batch;
+    let elems = manifest.img * manifest.img * 3;
     let mut rng = Rng::new(1);
     let make_batch = |rng: &mut Rng| {
-        Tensor::new(
-            &[b, manifest.img, manifest.img, 3],
-            rng.normal_vec(b * manifest.img * manifest.img * 3),
-        )
+        Tensor::new(&[b, manifest.img, manifest.img, 3], rng.normal_vec(b * elems))
+    };
+    let row = |label: &str, lat: &[f64]| {
+        println!(
+            "{label:<12} batch={b}: p50={:.2}ms p95={:.2}ms p99={:.2}ms throughput={:.0} img/s",
+            stats::quantile(lat, 0.5) * 1e3,
+            stats::quantile(lat, 0.95) * 1e3,
+            stats::quantile(lat, 0.99) * 1e3,
+            b as f64 / stats::mean(lat)
+        );
     };
 
-    for (label, m) in [("fp32", &model), ("comq-4bit", &qmodel)] {
-        let params = m.params_in_order();
+    // 2a. PJRT simulated quantization (dequantized weights as inputs)
+    {
+        let engine = Engine::global()?;
+        let art = manifest.path(&model.info.artifacts["forward"]);
+        let exe = engine.load(&art)?;
+        let params = out.model.params_in_order();
         let batch = make_batch(&mut rng);
         let mut inputs: Vec<&Tensor> = params.clone();
         inputs.push(&batch);
-        // latency distribution over 50 request batches
         let mut lat = Vec::new();
         for _ in 0..50 {
             let t = Timer::start();
-            let out = engine.run_exe(&exe, &inputs)?;
-            std::hint::black_box(&out);
+            std::hint::black_box(engine.run_exe(&exe, &inputs)?);
             lat.push(t.secs());
         }
-        let throughput = b as f64 / stats::mean(&lat);
+        row("pjrt-sim", &lat);
+    }
+
+    // 2b. fp32 native mirror forward
+    {
+        let batch = make_batch(&mut rng);
+        let mut lat = Vec::new();
+        for _ in 0..50 {
+            let t = Timer::start();
+            std::hint::black_box(model.forward(&batch, &mut Tap::None));
+            lat.push(t.secs());
+        }
+        row("fp32-native", &lat);
+    }
+
+    // 2c. integer runtime behind the micro-batcher: b concurrent singles
+    //     per wave, coalesced back into full batches by the queue.
+    let act_src = match &out.act {
+        Some(a) => ActSource::Static { bits: a.bits, by_layer: a.by_layer.clone() },
+        None => ActSource::Dynamic { bits: comq::serve::DEFAULT_ACT_BITS },
+    };
+    let qm = Arc::new(QuantizedModel::from_parts(
+        model.info.clone(),
+        out.model.params.clone(),
+        &out.packed,
+        act_src,
+    )?);
+    {
+        let server = Server::start(
+            qm.clone(),
+            BatchConfig { max_batch: b, max_delay: Duration::from_millis(2), executors: 1 },
+        );
+        let mut lat = Vec::new();
+        for _ in 0..50 {
+            let wave: Vec<Vec<f32>> = (0..b).map(|_| rng.normal_vec(elems)).collect();
+            let t = Timer::start();
+            let rxs: Vec<_> = wave.into_iter().map(|im| server.submit(im)).collect();
+            for rx in rxs {
+                rx.recv()?;
+            }
+            lat.push(t.secs());
+        }
+        row("int8-serve", &lat);
+        let st = server.stats();
         println!(
-            "{label:<10} batch={b}: p50={:.2}ms p95={:.2}ms p99={:.2}ms throughput={:.0} img/s",
-            stats::quantile(&lat, 0.5) * 1e3,
-            stats::quantile(&lat, 0.95) * 1e3,
-            stats::quantile(&lat, 0.99) * 1e3,
-            throughput
+            "  micro-batcher: {} requests coalesced into {} batches (mean {:.1})",
+            st.served,
+            st.batches,
+            st.served as f64 / st.batches.max(1) as f64
         );
     }
 
-    // 3. quality check on the real val set.
-    for (label, m) in [("fp32", &model), ("comq-4bit", &qmodel)] {
-        let acc = evaluate(
-            &manifest,
-            m,
-            &dataset.val_images,
-            &dataset.val_labels,
-            EngineKind::Pjrt,
-            &ActMode::Fp,
-        )?;
-        println!("{label:<10} top1={}% top5={}%", pct(acc.top1), pct(acc.top5));
-    }
+    // 3. quality: fp32 baseline, simulated quantization reference, and
+    //    the integer path — the last two must agree.
+    let acc_fp = evaluate(
+        &manifest,
+        &model,
+        &dataset.val_images,
+        &dataset.val_labels,
+        EngineKind::Pjrt,
+        &ActMode::Fp,
+    )?;
+    let act_mode = match &out.act {
+        Some(a) => ActMode::Quant {
+            bits: a.bits,
+            params: model.info.quant_layers.iter().map(|l| a.by_layer[&l.name]).collect(),
+        },
+        None => ActMode::Fp,
+    };
+    let acc_sim = evaluate(
+        &manifest,
+        &out.model,
+        &dataset.val_images,
+        &dataset.val_labels,
+        EngineKind::Native,
+        &act_mode,
+    )?;
+    let acc_i8 = evaluate_int8(&qm, &dataset.val_images, &dataset.val_labels, manifest.batch)?;
+    println!("fp32         top1={}% top5={}%", pct(acc_fp.top1), pct(acc_fp.top5));
+    println!("sim-quant    top1={}% top5={}%", pct(acc_sim.top1), pct(acc_sim.top5));
+    println!("int8-serve   top1={}% top5={}%  (parity with sim-quant expected)", pct(acc_i8.top1), pct(acc_i8.top5));
 
-    // 4. memory story: packed deployment size of the quantized weights.
-    let total_w: usize = model.info.quant_layers.iter().map(|l| l.m * l.n).sum();
+    // 4. memory story: packed deployment size vs serving-resident panels.
+    let (packed_b, fp32_b) = comq::deploy::footprint(&out.packed);
     println!(
-        "\nweights: {:.1} KiB fp32 -> {:.1} KiB packed 4-bit codes (+ {:.2} KiB scales)",
-        total_w as f64 * 4.0 / 1024.0,
-        total_w as f64 * 0.5 / 1024.0,
-        model.info.quant_layers.iter().map(|l| l.n * 8).sum::<usize>() as f64 / 1024.0,
+        "\nweights: {:.1} KiB fp32 -> {:.1} KiB packed codes on disk, {:.1} KiB i8 panels resident ({} layers served integer)",
+        fp32_b as f64 / 1024.0,
+        packed_b as f64 / 1024.0,
+        qm.resident_bytes() as f64 / 1024.0,
+        qm.int8_layers(),
     );
-    let _ = time_it(0, 1, || {}); // keep bench API exercised in docs builds
     Ok(())
 }

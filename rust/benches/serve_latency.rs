@@ -1,0 +1,155 @@
+//! Serving-path latency (the §Serving instrument):
+//!
+//!  * i8 GEMM + fused dequant vs the f32 native matmul at serving layer
+//!    shapes, batch 1 (memory-bound — the panel is ¼ the bytes of f32 B)
+//!    and batch 32 (compute-bound);
+//!  * end-to-end model latency percentiles: fp32 native forward vs the
+//!    integer runtime, batch 1 and batch N;
+//!  * the micro-batcher serving N concurrent single requests vs N
+//!    sequential batch-1 forwards.
+//!
+//! All tables land in `BENCH_serve_latency.json` at the repo root (see
+//! `bench::Report`) — quoted by EXPERIMENTS.md §Serving. Runs entirely
+//! on the synthetic model; no AOT artifacts needed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use comq::bench::{time_budget, Report, Table};
+use comq::deploy::PackedLayer;
+use comq::model::Tap;
+use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::quant::actq::ActQuant;
+use comq::quant::grid::LayerQuant;
+use comq::serve::{ActSource, BatchConfig, Int8Panel, QuantizedModel, Server};
+use comq::tensor::{matmul, Tensor};
+use comq::util::{stats, Rng, Timer};
+
+fn random_packed(rng: &mut Rng, m: usize, n: usize, bits: u32) -> PackedLayer {
+    let levels = (1u64 << bits) as usize;
+    let zero = vec![-((1i64 << (bits - 1)) as f32); n];
+    let delta: Vec<f32> = (0..n).map(|_| rng.range_f32(0.005, 0.05)).collect();
+    let mut q = Tensor::zeros(&[m, n]);
+    for idx in 0..m * n {
+        q.data_mut()[idx] = zero[idx % n] + rng.below(levels) as f32;
+    }
+    PackedLayer::from_quant("bench", &LayerQuant { q, delta, zero }, bits)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = Report::new("serve_latency");
+
+    // -- i8 GEMM vs f32 matmul at serving shapes -------------------------
+    let mut table = Table::new(
+        "serve — layer GEMM, f32 native vs i8 fused-dequant",
+        &["shape (m,n)", "batch", "f32 ms", "int8 ms", "speedup", "B bytes f32", "B bytes i8"],
+    );
+    for &(m, n) in &[(192usize, 384usize), (768, 768), (768, 3072), (3072, 768)] {
+        let mut rng = Rng::new(1);
+        let pl = random_packed(&mut rng, m, n, 8);
+        let panel = Int8Panel::from_packed(&pl)?;
+        let w = pl.dequant();
+        let bias = vec![0.0f32; n];
+        for &rows in &[1usize, 32] {
+            let x = Tensor::new(&[rows, m], rng.normal_vec(rows * m));
+            let aq = ActQuant::from_range(x.min(), x.max(), 8, 1.0);
+            let t_f32 = time_budget(0.3, 400, || {
+                std::hint::black_box(matmul(&x, &w));
+            });
+            let t_i8 = time_budget(0.3, 400, || {
+                std::hint::black_box(panel.matmul_i8(&x, aq, Some(&bias)));
+            });
+            table.row(vec![
+                format!("({m},{n})"),
+                rows.to_string(),
+                format!("{:.3}", t_f32.mean * 1e3),
+                format!("{:.3}", t_i8.mean * 1e3),
+                format!("{:.2}x", t_f32.mean / t_i8.mean),
+                (4 * m * n).to_string(),
+                panel.resident_bytes().to_string(),
+            ]);
+        }
+    }
+    table.print();
+    table.save_json("serve_gemm");
+    report.add(&table);
+
+    // -- end-to-end model latency percentiles ----------------------------
+    let (manifest, model) = tiny_plain_cnn(7);
+    let mut rng = Rng::new(8);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * 8 * 8 * 3));
+    // same fixture the parity tests assert on (proptest::quantize_all_layers)
+    let (packed, act, qmodel) = quantize_all_layers(&manifest, &model, 4, 8, &calib)?;
+    let qm = Arc::new(QuantizedModel::from_parts(
+        model.info.clone(),
+        qmodel.params.clone(),
+        &packed,
+        ActSource::Static { bits: act.bits, by_layer: act.by_layer },
+    )?);
+
+    let mut table = Table::new(
+        "serve — end-to-end forward latency (tiny_plain, W4A8)",
+        &["path", "batch", "p50 ms", "p95 ms", "p99 ms", "img/s"],
+    );
+    let percentile_row =
+        |table: &mut Table, label: &str, batch: usize, lat: &[f64]| {
+            table.row(vec![
+                label.to_string(),
+                batch.to_string(),
+                format!("{:.3}", stats::quantile(lat, 0.5) * 1e3),
+                format!("{:.3}", stats::quantile(lat, 0.95) * 1e3),
+                format!("{:.3}", stats::quantile(lat, 0.99) * 1e3),
+                format!("{:.0}", batch as f64 / stats::mean(lat)),
+            ]);
+        };
+    for &batch in &[1usize, 16] {
+        let x = Tensor::new(&[batch, 8, 8, 3], rng.normal_vec(batch * 8 * 8 * 3));
+        let mut lat_fp = Vec::new();
+        let mut lat_i8 = Vec::new();
+        for _ in 0..100 {
+            let t = Timer::start();
+            std::hint::black_box(model.forward(&x, &mut Tap::None));
+            lat_fp.push(t.secs());
+            let t = Timer::start();
+            std::hint::black_box(qm.forward(&x));
+            lat_i8.push(t.secs());
+        }
+        percentile_row(&mut table, "fp32-native", batch, &lat_fp);
+        percentile_row(&mut table, "int8-serve", batch, &lat_i8);
+    }
+
+    // micro-batcher: 16 concurrent singles per wave, coalesced by the queue
+    {
+        let server = Arc::new(Server::start(
+            qm.clone(),
+            BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1), executors: 1 },
+        ));
+        let mut lat = Vec::new();
+        for wave in 0..50 {
+            let imgs: Vec<Vec<f32>> =
+                (0..16).map(|_| rng.normal_vec(8 * 8 * 3)).collect();
+            let t = Timer::start();
+            let rxs: Vec<_> = imgs.into_iter().map(|im| server.submit(im)).collect();
+            for rx in rxs {
+                rx.recv().expect("server reply");
+            }
+            if wave >= 5 {
+                lat.push(t.secs()); // whole-wave latency, 16 requests
+            }
+        }
+        percentile_row(&mut table, "int8 micro-batched (16 concurrent)", 16, &lat);
+        let st = server.stats();
+        println!(
+            "micro-batcher: {} requests in {} batches (mean batch {:.1})",
+            st.served,
+            st.batches,
+            st.served as f64 / st.batches.max(1) as f64
+        );
+    }
+    table.print();
+    table.save_json("serve_e2e");
+    report.add(&table);
+
+    report.write_repo_root()?;
+    Ok(())
+}

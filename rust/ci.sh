@@ -6,6 +6,10 @@ set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
+# examples and benches are binaries too — keep them compiling even when
+# nothing runs them (they bit-rotted silently before PR 3)
+cargo build --release --examples
+cargo bench --no-run
 cargo test -q
 
 if command -v rustfmt >/dev/null 2>&1; then

@@ -27,6 +27,11 @@ use crate::tensorstore;
 pub enum EngineKind {
     Native,
     Pjrt,
+    /// The integer serving runtime (`serve::QuantizedModel`): real i8
+    /// GEMMs over packed codes. Evaluation-only — calibration always
+    /// runs in f32 (statistics of the *unquantized* network are what
+    /// the quantizers need), so for calibration this aliases `Native`.
+    Int8,
 }
 
 impl EngineKind {
@@ -34,6 +39,7 @@ impl EngineKind {
         match s {
             "native" => Some(EngineKind::Native),
             "pjrt" => Some(EngineKind::Pjrt),
+            "int8" | "i8" => Some(EngineKind::Int8),
             _ => None,
         }
     }
@@ -41,6 +47,7 @@ impl EngineKind {
         match self {
             EngineKind::Native => "native",
             EngineKind::Pjrt => "pjrt",
+            EngineKind::Int8 => "int8",
         }
     }
 }
@@ -116,7 +123,11 @@ pub fn collect_stats(
     engine: EngineKind,
 ) -> Result<BTreeMap<String, LayerStats>> {
     match engine {
-        EngineKind::Native => collect_stats_native(model, images, manifest.batch),
+        // Int8 is a serving engine; calibration statistics come from the
+        // f32 network either way.
+        EngineKind::Native | EngineKind::Int8 => {
+            collect_stats_native(model, images, manifest.batch)
+        }
         EngineKind::Pjrt => collect_stats_pjrt(manifest, model, images),
     }
 }

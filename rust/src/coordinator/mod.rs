@@ -16,5 +16,7 @@ pub mod report;
 pub mod scheduler;
 
 pub use mixed::{mixed_precision_quantize, MixedReport};
-pub use pipeline::{quantize_model, quantize_model_with_stats, PipelineOptions, QuantEngine};
+pub use pipeline::{
+    quantize_model, quantize_model_packed, quantize_model_with_stats, PipelineOptions, QuantEngine,
+};
 pub use report::{LayerReport, QuantReport};

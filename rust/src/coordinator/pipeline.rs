@@ -91,19 +91,35 @@ pub fn quantize_model(
     dataset: &Dataset,
     opts: &PipelineOptions,
 ) -> Result<(Model, QuantReport)> {
+    let out = quantize_model_packed(manifest, model, dataset, opts)?;
+    Ok((out.model, out.report))
+}
+
+/// [`quantize_model`] (calibration pass included) returning the full
+/// deployment output — packed layers + activation grid — for callers
+/// heading to `deploy::save_packed_with_act` or the serving runtime.
+pub fn quantize_model_packed(
+    manifest: &Manifest,
+    model: &Model,
+    dataset: &Dataset,
+    opts: &PipelineOptions,
+) -> Result<QuantOutput> {
     // 1. calibration statistics
     let t_calib = Timer::start();
     let calib_images = dataset.calib_subset(opts.calib_size);
     let stats = calib::collect_stats(manifest, model, &calib_images, opts.engine)?;
     let calib_secs = t_calib.secs();
-    quantize_model_with_stats(manifest, model, dataset, opts, &stats, calib_secs)
+    quantize_model_full(manifest, model, dataset, opts, &stats, calib_secs)
 }
 
-/// Full pipeline output (the packed layers feed `deploy::save_packed`).
+/// Full pipeline output (the packed layers feed `deploy::save_packed`;
+/// `act` carries the calibrated activation grid so the checkpoint is
+/// servable by the integer runtime with static scales).
 pub struct QuantOutput {
     pub model: Model,
     pub report: QuantReport,
     pub packed: Vec<crate::deploy::PackedLayer>,
+    pub act: Option<crate::deploy::PackedAct>,
 }
 
 /// Pipeline core with precomputed calibration statistics (bench sweeps
@@ -184,19 +200,49 @@ pub fn quantize_model_full(
     }
     let quant_secs = t_quant.secs();
 
-    // 3. activation quantization parameters (from the same calibration)
-    let act_mode = match opts.act_bits {
-        None => ActMode::Fp,
-        Some(bits) => ActMode::Quant {
-            bits,
-            params: act_params(stats, &model.info.quant_layers, bits, opts.act_clip),
+    // 3. activation quantization parameters (from the same calibration);
+    //    the packed grid is the single source — eval mode derives from it
+    let packed_act = opts.act_bits.map(|bits| crate::deploy::PackedAct {
+        bits,
+        by_layer: model
+            .info
+            .quant_layers
+            .iter()
+            .zip(act_params(stats, &model.info.quant_layers, bits, opts.act_clip))
+            .map(|(l, a)| (l.name.clone(), a))
+            .collect(),
+    });
+    let act_mode = match &packed_act {
+        Some(a) => ActMode::Quant {
+            bits: a.bits,
+            params: model.info.quant_layers.iter().map(|l| a.by_layer[&l.name]).collect(),
         },
+        None => ActMode::Fp,
     };
 
     // 4. evaluation
     let t_eval = Timer::start();
     let (top1, top5) = if opts.skip_eval {
         (f64::NAN, f64::NAN)
+    } else if opts.engine == EngineKind::Int8 {
+        // parity route: serve the packed codes through the i8 GEMM
+        // runtime and score that, instead of the dequantized f32 model
+        let act_src = match &packed_act {
+            Some(a) => crate::serve::ActSource::Static {
+                bits: a.bits,
+                by_layer: a.by_layer.clone(),
+            },
+            None => crate::serve::ActSource::Dynamic { bits: crate::serve::DEFAULT_ACT_BITS },
+        };
+        let qm = crate::serve::QuantizedModel::from_parts(
+            model.info.clone(),
+            qmodel.params.clone(),
+            &packed_layers,
+            act_src,
+        )?;
+        let acc =
+            eval::evaluate_int8(&qm, &dataset.val_images, &dataset.val_labels, manifest.batch)?;
+        (acc.top1, acc.top5)
     } else {
         let acc = eval::evaluate(
             manifest,
@@ -230,7 +276,7 @@ pub fn quantize_model_full(
         eval_secs,
         layers: layer_reports,
     };
-    Ok(QuantOutput { model: qmodel, report, packed: packed_layers })
+    Ok(QuantOutput { model: qmodel, report, packed: packed_layers, act: packed_act })
 }
 
 /// Derive per-layer activation fake-quant parameters (manifest order).

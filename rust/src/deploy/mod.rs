@@ -14,16 +14,27 @@
 //! q/<layer>/delta     f32[n]
 //! q/<layer>/zero      f32[n]
 //! fp/<name>           f32[...] every parameter not covered by a packed layer
+//! __act__             i32[1]  activation bits (optional)
+//! aq/<layer>          f32[2]  calibrated activation (scale, zero) (optional)
 //! ```
 //!
 //! Loading reconstructs a `Model` byte-exactly equal (in W_q) to the one
 //! that was saved — asserted by tests — so accuracy of a served packed
-//! model is identical to the pipeline's report.
+//! model is identical to the pipeline's report. The integer serving
+//! runtime (`serve::QuantizedModel`) instead consumes the raw
+//! [`read_packed`] view and never dequantizes; the optional `__act__` /
+//! `aq/` entries carry the calibrated activation grid it needs for
+//! static (calibration-exact) activation quantization. Readers that
+//! don't know those entries skip them, so the format version is
+//! unchanged.
+
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::manifest::Manifest;
 use crate::model::Model;
+use crate::quant::actq::ActQuant;
 use crate::quant::grid::LayerQuant;
 use crate::tensor::Tensor;
 use crate::tensorstore::{self, Entry, Store};
@@ -67,6 +78,27 @@ impl PackedLayer {
     }
 }
 
+/// Calibrated activation grid stored alongside the weight codes so the
+/// integer runtime can serve with calibration-exact activation scales.
+#[derive(Debug, Clone)]
+pub struct PackedAct {
+    pub bits: u32,
+    pub by_layer: BTreeMap<String, ActQuant>,
+}
+
+/// Raw view of a `.cqm` file: what is actually on disk, before any
+/// dequantization. `load_packed` turns this into an f32 `Model`; the
+/// serving runtime preps it to i8 panels directly.
+pub struct PackedCheckpoint {
+    /// Header bit-width (layers may override per-layer, e.g. mixed
+    /// precision).
+    pub bits: u32,
+    pub layers: Vec<PackedLayer>,
+    /// Every parameter stored in f32.
+    pub fp: BTreeMap<String, Tensor>,
+    pub act: Option<PackedAct>,
+}
+
 /// Save a quantized model: `layers` are the packed quantized layers; all
 /// other parameters of `model` are stored in f32.
 pub fn save_packed(
@@ -75,7 +107,32 @@ pub fn save_packed(
     layers: &[PackedLayer],
     bits: u32,
 ) -> Result<()> {
+    save_packed_with_act(path, model, layers, bits, None)
+}
+
+/// [`save_packed`] plus the calibrated activation grid (when the run
+/// quantized activations too) so the checkpoint is servable with static
+/// scales.
+pub fn save_packed_with_act(
+    path: &str,
+    model: &Model,
+    layers: &[PackedLayer],
+    bits: u32,
+    act: Option<&PackedAct>,
+) -> Result<()> {
     let mut store = Store::new();
+    if let Some(a) = act {
+        store.insert(
+            "__act__".into(),
+            Entry::I32 { shape: vec![1], data: vec![a.bits as i32] },
+        );
+        for (name, aq) in &a.by_layer {
+            store.insert(
+                format!("aq/{name}"),
+                Entry::F32(Tensor::from_vec(vec![aq.scale, aq.zero])),
+            );
+        }
+    }
     store.insert(
         "__meta__".into(),
         Entry::I32 { shape: vec![3], data: vec![VERSION, bits as i32, layers.len() as i32] },
@@ -107,9 +164,11 @@ pub fn save_packed(
     tensorstore::write_store(path, &store)
 }
 
-/// Load a packed checkpoint into a ready-to-run `Model` (manifest
-/// supplies the architecture; the checkpoint supplies the weights).
-pub fn load_packed(manifest: &Manifest, model_name: &str, path: &str) -> Result<Model> {
+/// Parse a `.cqm` file into its raw on-disk parts — codes stay packed,
+/// nothing is dequantized, no manifest needed. The serving runtime preps
+/// i8 panels straight from this; [`load_packed`] builds an f32 `Model`
+/// on top of it.
+pub fn read_packed(path: &str) -> Result<PackedCheckpoint> {
     let store = tensorstore::read_store(path).with_context(|| format!("loading {path}"))?;
     let meta = store
         .get("__meta__")
@@ -118,31 +177,71 @@ pub fn load_packed(manifest: &Manifest, model_name: &str, path: &str) -> Result<
     if meta[0] != VERSION {
         bail!("{path}: unsupported version {}", meta[0]);
     }
-    let info = manifest.model(model_name)?.clone();
-    let mut params = std::collections::BTreeMap::new();
+    let bits = meta[1] as u32;
+    let mut fp = BTreeMap::new();
+    let mut layers = Vec::new();
+    let mut act_raw: Vec<(String, f32, f32)> = Vec::new();
     for (key, entry) in &store {
         if let Some(name) = key.strip_prefix("fp/") {
-            params.insert(name.to_string(), entry.tensor()?.clone());
+            fp.insert(name.to_string(), entry.tensor()?.clone());
+        } else if let Some(name) = key.strip_prefix("q/").and_then(|r| r.strip_suffix("/shape")) {
+            let sh = entry.ints()?;
+            let (m, n, lbits) = (sh[0] as usize, sh[1] as usize, sh[2] as u32);
+            let get = |suffix: &str| {
+                store
+                    .get(&format!("q/{name}/{suffix}"))
+                    .ok_or_else(|| anyhow!("{path}: layer '{name}' missing {suffix}"))
+            };
+            let words = get("codes")?.ints()?;
+            let mut bytes = Vec::with_capacity(words.len() * 4);
+            for w in words {
+                bytes.extend_from_slice(&(*w as u32).to_le_bytes());
+            }
+            bytes.truncate((m * n * lbits as usize).div_ceil(8));
+            layers.push(PackedLayer {
+                name: name.to_string(),
+                m,
+                n,
+                bits: lbits,
+                codes: bytes,
+                delta: get("delta")?.tensor()?.data().to_vec(),
+                zero: get("zero")?.tensor()?.data().to_vec(),
+            });
+        } else if let Some(name) = key.strip_prefix("aq/") {
+            let row = entry.tensor()?.data();
+            if row.len() != 2 {
+                bail!("{path}: malformed activation entry '{key}'");
+            }
+            act_raw.push((name.to_string(), row[0], row[1]));
         }
     }
-    // unpack quantized layers
-    for l in &info.quant_layers {
-        let pre = format!("q/{}", l.name);
-        let Some(shape) = store.get(&format!("{pre}/shape")) else {
-            continue; // layer kept FP (skip-layers) — already under fp/
-        };
-        let sh = shape.ints()?;
-        let (m, n, bits) = (sh[0] as usize, sh[1] as usize, sh[2] as u32);
-        let words = store[&format!("{pre}/codes")].ints()?;
-        let mut bytes = Vec::with_capacity(words.len() * 4);
-        for w in words {
-            bytes.extend_from_slice(&(*w as u32).to_le_bytes());
+    let act = match store.get("__act__") {
+        Some(e) => {
+            let abits = e.ints()?[0] as u32;
+            let by_layer = act_raw
+                .into_iter()
+                .map(|(name, scale, zero)| (name, ActQuant { scale, zero, bits: abits }))
+                .collect();
+            Some(PackedAct { bits: abits, by_layer })
         }
-        bytes.truncate((m * n * bits as usize).div_ceil(8));
-        let delta = store[&format!("{pre}/delta")].tensor()?.data().to_vec();
-        let zero = store[&format!("{pre}/zero")].tensor()?.data().to_vec();
-        let pl = PackedLayer { name: l.name.clone(), m, n, bits, codes: bytes, delta, zero };
-        params.insert(format!("{}/W", l.name), pl.dequant());
+        None => None,
+    };
+    Ok(PackedCheckpoint { bits, layers, fp, act })
+}
+
+/// Load a packed checkpoint into a ready-to-run `Model` (manifest
+/// supplies the architecture; the checkpoint supplies the weights).
+pub fn load_packed(manifest: &Manifest, model_name: &str, path: &str) -> Result<Model> {
+    let ck = read_packed(path)?;
+    let info = manifest.model(model_name)?.clone();
+    let mut params = ck.fp;
+    let by_name: BTreeMap<&str, &PackedLayer> =
+        ck.layers.iter().map(|l| (l.name.as_str(), l)).collect();
+    for l in &info.quant_layers {
+        // layers without codes were kept FP (skip-layers) — already under fp/
+        if let Some(pl) = by_name.get(l.name.as_str()) {
+            params.insert(format!("{}/W", l.name), pl.dequant());
+        }
     }
     // validate completeness
     for p in &info.params {

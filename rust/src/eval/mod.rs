@@ -39,7 +39,50 @@ pub fn evaluate(
     let logits = match engine {
         EngineKind::Native => forward_native(manifest, model, images, act)?,
         EngineKind::Pjrt => forward_pjrt(manifest, model, images, act)?,
+        EngineKind::Int8 => bail!(
+            "the int8 engine executes packed codes, which a dequantized f32 \
+             Model no longer carries — build a serve::QuantizedModel (from \
+             a .cqm via serve::load_cached, or from pipeline parts) and use \
+             eval::evaluate_int8; `comq quantize --engine int8` and \
+             `comq run-packed --engine int8` do this routing"
+        ),
     };
+    score(&logits, labels)
+}
+
+/// Integer-runtime forward over all images (batched to bound memory) —
+/// the serving path's accuracy instrument.
+pub fn forward_int8(
+    qm: &crate::serve::QuantizedModel,
+    images: &Tensor,
+    batch: usize,
+) -> Result<Tensor> {
+    let n = images.shape()[0];
+    let classes = qm.classes();
+    let img_elems: usize = images.shape()[1..].iter().product();
+    let mut logits = Tensor::zeros(&[n, classes]);
+    let mut i = 0;
+    while i < n {
+        let hi = (i + batch).min(n);
+        let chunk = Tensor::new(
+            &[hi - i, images.shape()[1], images.shape()[2], images.shape()[3]],
+            images.data()[i * img_elems..hi * img_elems].to_vec(),
+        );
+        let out = qm.forward(&chunk);
+        logits.data_mut()[i * classes..hi * classes].copy_from_slice(out.data());
+        i = hi;
+    }
+    Ok(logits)
+}
+
+/// Top-1/top-5 of a packed checkpoint served through the i8 GEMM path.
+pub fn evaluate_int8(
+    qm: &crate::serve::QuantizedModel,
+    images: &Tensor,
+    labels: &[i32],
+    batch: usize,
+) -> Result<Accuracy> {
+    let logits = forward_int8(qm, images, batch)?;
     score(&logits, labels)
 }
 

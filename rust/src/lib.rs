@@ -5,7 +5,8 @@
 //!
 //! * **L3 (this crate)** — the PTQ pipeline coordinator: checkpoint store,
 //!   calibration manager, layer-job scheduler, quantizer registry (COMQ +
-//!   baselines), PJRT runtime, evaluation harness, CLI.
+//!   baselines), PJRT runtime, evaluation harness, integer serving
+//!   runtime (`serve`), CLI.
 //! * **L2 (python/compile, build-time)** — JAX model zoo + AOT-lowered
 //!   forward / calibration-statistics graphs.
 //! * **L1 (python/compile/kernels, build-time)** — the COMQ coordinate-
@@ -25,6 +26,7 @@ pub mod model;
 pub mod proptest;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod tensorstore;
 pub mod util;

@@ -109,7 +109,8 @@ USAGE:
   comq models   [--artifacts DIR]
   comq eval     --model NAME [--engine native|pjrt] [--artifacts DIR]
   comq quantize --model NAME [options]
-  comq run-packed --model NAME --packed FILE.cqm [--engine native|pjrt]
+  comq run-packed --model NAME --packed FILE.cqm [--engine native|pjrt|int8]
+                  int8 = serve through the integer runtime (i8 GEMM)
   comq inspect --model NAME [--calib-size N]   calibration diagnostics
 
 QUANTIZE OPTIONS:
@@ -122,7 +123,9 @@ QUANTIZE OPTIONS:
   --act-bits B       also fake-quantize activations (4 or 8)
   --act-clip F       activation range clip ratio, default 0.95
   --calib-size N     calibration images, default 1024
-  --engine E         eval/calibration engine: native | pjrt (default native)
+  --engine E         eval/calibration engine: native | pjrt | int8
+                     (default native; int8 scores the packed codes through
+                     the integer serving runtime)
   --quant-engine E   sweep engine: native | pjrt-kernel (default native)
   --workers N        parallel layer jobs, default 1
   --skip-layers L    comma-separated layer names to keep FP
@@ -260,21 +263,23 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         rc.opts.qcfg.scheme.name(),
         rc.opts.qcfg.order.name()
     );
-    let imgs = dataset.calib_subset(rc.opts.calib_size);
-    let t_calib = comq::util::Timer::start();
-    let stats = comq::calib::collect_stats(&manifest, &model, &imgs, rc.opts.engine)?;
-    let out = comq::coordinator::pipeline::quantize_model_full(
-        &manifest, &model, &dataset, &rc.opts, &stats, t_calib.secs(),
-    )?;
+    let out = comq::coordinator::quantize_model_packed(&manifest, &model, &dataset, &rc.opts)?;
     let report = out.report;
     println!("{}", report.summary());
     if let Some(path) = &rc.save_path {
-        comq::deploy::save_packed(path, &out.model, &out.packed, rc.opts.qcfg.bits)?;
+        comq::deploy::save_packed_with_act(
+            path,
+            &out.model,
+            &out.packed,
+            rc.opts.qcfg.bits,
+            out.act.as_ref(),
+        )?;
         let (packed, fp32) = comq::deploy::footprint(&out.packed);
         log::info!(
-            "packed checkpoint written to {path} ({:.1} KiB quantized weights vs {:.1} KiB f32)",
+            "packed checkpoint written to {path} ({:.1} KiB quantized weights vs {:.1} KiB f32{})",
             packed as f64 / 1024.0,
-            fp32 as f64 / 1024.0
+            fp32 as f64 / 1024.0,
+            if out.act.is_some() { ", + activation grid for int8 serving" } else { "" }
         );
     }
     for l in &report.layers {
@@ -336,6 +341,8 @@ fn cmd_quantize_mixed(
 }
 
 /// Load a packed (.cqm) checkpoint and evaluate it — the deployment path.
+/// `--engine int8` serves the codes through the integer runtime (i8 GEMM,
+/// no f32 weights); native/pjrt dequantize and run the f32 graph.
 fn cmd_run_packed(args: &Args) -> Result<()> {
     let rc = build_config(args)?;
     let packed_path = args
@@ -344,19 +351,33 @@ fn cmd_run_packed(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("run-packed needs --packed FILE.cqm"))?;
     let manifest = Manifest::load(&rc.artifacts)?;
     let dataset = Dataset::load(&manifest)?;
-    let model = comq::deploy::load_packed(&manifest, &rc.model, packed_path)?;
     let t = comq::util::Timer::start();
-    let acc = comq::eval::evaluate(
-        &manifest,
-        &model,
-        &dataset.val_images,
-        &dataset.val_labels,
-        rc.opts.engine,
-        &comq::eval::ActMode::Fp,
-    )?;
+    let acc = if rc.opts.engine == EngineKind::Int8 {
+        let qm = comq::serve::load_cached(&manifest, &rc.model, packed_path)?;
+        log::info!(
+            "serving {} via int8 runtime: {} i8 layers, {:.1} KiB resident (W{}A{})",
+            rc.model,
+            qm.int8_layers(),
+            qm.resident_bytes() as f64 / 1024.0,
+            qm.weight_bits(),
+            qm.act_source().bits(),
+        );
+        comq::eval::evaluate_int8(&qm, &dataset.val_images, &dataset.val_labels, manifest.batch)?
+    } else {
+        let model = comq::deploy::load_packed(&manifest, &rc.model, packed_path)?;
+        comq::eval::evaluate(
+            &manifest,
+            &model,
+            &dataset.val_images,
+            &dataset.val_labels,
+            rc.opts.engine,
+            &comq::eval::ActMode::Fp,
+        )?
+    };
     println!(
-        "{} (packed {packed_path}): top1={:.2}% top5={:.2}% (n={}, {:.2}s)",
+        "{} (packed {packed_path}, engine {}): top1={:.2}% top5={:.2}% (n={}, {:.2}s)",
         rc.model,
+        rc.opts.engine.name(),
         acc.top1 * 100.0,
         acc.top5 * 100.0,
         acc.n,

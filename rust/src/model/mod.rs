@@ -40,6 +40,25 @@ pub struct LayerStats {
     pub rows: usize,
 }
 
+/// Layer-execution override: lets an external runtime take over whole
+/// quantizable linear layers during a forward pass. The integer serving
+/// runtime (`serve::QuantizedModel`) implements this to run `x@W + b` as
+/// an i8 GEMM without ever materializing f32 weights; layers it does not
+/// own (depthwise/skip) fall back to the normal f32 path after
+/// `tap_input` has had a chance to rewrite their input.
+pub trait LayerExec: Sync {
+    /// Fully execute the named linear layer on `x` [rows, m], returning
+    /// `y = x@W + b` [rows, n] — or None to fall back to the f32 path.
+    fn exec_linear(&self, name: &str, x: &Tensor) -> Option<Tensor>;
+
+    /// Observe/rewrite the input of a layer this executor does *not* own
+    /// (e.g. fake-quantize it so fallback layers match a W/A-quantized
+    /// reference). Default: pass through.
+    fn tap_input(&self, _name: &str, x: Tensor) -> Tensor {
+        x
+    }
+}
+
 /// Instrumentation at every quantizable layer input, mirroring
 /// python/compile/nets/common.py::Tap.
 pub enum Tap<'a> {
@@ -49,6 +68,8 @@ pub enum Tap<'a> {
     Stats(&'a mut BTreeMap<String, LayerStats>),
     /// Fake-quantize layer inputs (full W/A quantization).
     ActQ(&'a BTreeMap<String, ActQuant>),
+    /// Route layers through an execution override (integer serving).
+    Exec(&'a dyn LayerExec),
 }
 
 impl Tap<'_> {
@@ -61,6 +82,7 @@ impl Tap<'_> {
                 x
             }
             Tap::ActQ(params) => apply_actq(params, name, x),
+            Tap::Exec(e) => e.tap_input(name, x),
         }
     }
 
@@ -73,6 +95,16 @@ impl Tap<'_> {
                 x
             }
             Tap::ActQ(params) => apply_actq(params, name, x),
+            Tap::Exec(e) => e.tap_input(name, x),
+        }
+    }
+
+    /// Give an execution override the chance to run the whole linear
+    /// layer; None on every non-Exec tap.
+    pub fn exec_linear(&mut self, name: &str, x: &Tensor) -> Option<Tensor> {
+        match self {
+            Tap::Exec(e) => e.exec_linear(name, x),
+            _ => None,
         }
     }
 }
@@ -169,6 +201,9 @@ impl Model {
 }
 
 /// Linear layer: y = tap(x) @ W + b (mirrors nets/common.py::linear).
+/// An `Exec` tap may take the whole layer over (integer serving); the
+/// f32 parameters are only touched on the fallback path, so models
+/// served through an override need no `{name}/W` entry for owned layers.
 pub fn linear(
     params: &BTreeMap<String, Tensor>,
     name: &str,
@@ -176,6 +211,9 @@ pub fn linear(
     tap: &mut Tap,
 ) -> Tensor {
     let x = tap.tap2(name, x);
+    if let Some(y) = tap.exec_linear(name, &x) {
+        return y;
+    }
     let w = params
         .get(&format!("{name}/W"))
         .unwrap_or_else(|| panic!("missing {name}/W"));

@@ -15,6 +15,71 @@
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
+/// Build a tiny self-contained "plain" CNN (see `model/cnn.rs`) plus a
+/// matching in-memory manifest — for tests and benches that must run
+/// without the AOT artifact set. `conv0` is deliberately sized so
+/// `m·n = 189` is odd: for every bit width ≤ 8 its code count does not
+/// pack to whole 32-bit words, exercising the bitstream tail path.
+pub fn tiny_plain_cnn(seed: u64) -> (crate::manifest::Manifest, crate::model::Model) {
+    use crate::manifest::{CnnConfig, LayerInfo, Manifest, ModelConfig, ModelInfo};
+    use std::collections::BTreeMap;
+
+    let (img, classes) = (8usize, 10usize);
+    // (name, input features m, output channels n) along plain_forward
+    let spec: &[(&str, usize, usize)] = &[
+        ("conv0", 27, 7),
+        ("conv1", 63, 8),
+        ("conv2", 72, 16),
+        ("conv3", 144, 16),
+        ("conv4", 144, 16),
+        ("fc", 16, 24),
+        ("head", 24, classes),
+    ];
+    let mut rng = Rng::new(seed);
+    let mut params = BTreeMap::new();
+    let mut names = Vec::new();
+    let mut quant_layers = Vec::new();
+    for &(name, m, n) in spec {
+        let sc = 1.5 / (m as f32).sqrt();
+        params.insert(
+            format!("{name}/W"),
+            Tensor::new(&[m, n], rng.normal_vec(m * n).into_iter().map(|v| v * sc).collect()),
+        );
+        params.insert(
+            format!("{name}/b"),
+            Tensor::new(&[n], rng.normal_vec(n).into_iter().map(|v| v * 0.1).collect()),
+        );
+        names.push(format!("{name}/W"));
+        names.push(format!("{name}/b"));
+        quant_layers.push(LayerInfo { name: name.to_string(), m, n, grouped: false });
+    }
+    let info = ModelInfo {
+        name: "tiny_plain".into(),
+        config: ModelConfig::Cnn(CnnConfig {
+            kind: "plain".into(),
+            width: 7,
+            blocks: 0,
+            img,
+            classes,
+        }),
+        params: names,
+        quant_layers,
+        checkpoint: String::new(),
+        fp_top1: 0.0,
+        artifacts: BTreeMap::new(),
+    };
+    let manifest = Manifest {
+        root: std::path::PathBuf::from("."),
+        batch: 16,
+        classes,
+        img,
+        data: String::new(),
+        models: BTreeMap::from([("tiny_plain".to_string(), info.clone())]),
+        sweeps: Vec::new(),
+    };
+    (manifest, crate::model::Model { info, params })
+}
+
 /// A seeded generator handed to every property case.
 pub struct Gen {
     pub rng: Rng,
@@ -82,6 +147,42 @@ impl Gen {
     }
 }
 
+/// COMQ-quantize every layer of a (synthetic) model from real
+/// calibration statistics — the shared fixture step behind the serve
+/// parity tests and the `serve_latency` bench, kept in one place so the
+/// two can't drift apart. Returns (packed layers, calibrated activation
+/// grid, dequantized reference model).
+#[allow(clippy::type_complexity)]
+pub fn quantize_all_layers(
+    manifest: &crate::manifest::Manifest,
+    model: &crate::model::Model,
+    bits: u32,
+    act_bits: u32,
+    calib: &Tensor,
+) -> anyhow::Result<(
+    Vec<crate::deploy::PackedLayer>,
+    crate::deploy::PackedAct,
+    crate::model::Model,
+)> {
+    use crate::deploy::{PackedAct, PackedLayer};
+    use crate::quant::actq::ActQuant;
+    use crate::quant::{comq_gram, QuantConfig};
+
+    let stats = crate::model::collect_stats_native(model, calib, manifest.batch)?;
+    let cfg = QuantConfig { bits, ..Default::default() };
+    let mut qmodel = model.clone();
+    let mut packed = Vec::new();
+    let mut by_layer = std::collections::BTreeMap::new();
+    for l in &model.info.quant_layers {
+        let st = &stats[&l.name];
+        let lq = comq_gram(&st.gram, model.weight(&l.name), &cfg);
+        qmodel.set_weight(&l.name, lq.dequant());
+        packed.push(PackedLayer::from_quant(&l.name, &lq, bits));
+        by_layer.insert(l.name.clone(), ActQuant::from_range(st.min, st.max, act_bits, 0.95));
+    }
+    Ok((packed, PackedAct { bits: act_bits, by_layer }, qmodel))
+}
+
 /// Run `prop` over `cases` seeded cases; panics with the failing case
 /// index + seed so the case is replayable.
 pub fn forall<F: Fn(&mut Gen)>(cases: usize, seed: u64, prop: F) {
@@ -142,6 +243,22 @@ mod tests {
         let (wg, gg) = g.grouped_layer(12, 3, 5);
         assert_eq!(wg.shape(), &[5, 3]);
         assert_eq!(gg.m(), 5);
+    }
+
+    #[test]
+    fn tiny_plain_cnn_is_consistent() {
+        let (manifest, model) = tiny_plain_cnn(1);
+        let mut g = Gen { rng: Rng::new(2), case: 0 };
+        let x = g.tensor(&[3, manifest.img, manifest.img, 3], 1.0);
+        let y = model.forward(&x, &mut crate::model::Tap::None);
+        assert_eq!(y.shape(), &[3, manifest.classes]);
+        for l in &model.info.quant_layers {
+            assert_eq!(model.weight(&l.name).shape(), &[l.m, l.n], "{}", l.name);
+        }
+        // the bitstream-edge guarantee the serve tests rely on
+        let conv0 = &model.info.quant_layers[0];
+        assert_eq!((conv0.m * conv0.n) % 2, 1, "conv0 must have an odd code count");
+        assert!(manifest.model("tiny_plain").is_ok());
     }
 
     #[test]

@@ -40,13 +40,34 @@ impl ActQuant {
         ActQuant { scale, zero, bits }
     }
 
+    /// Derive from the observed range of one batch (dynamic
+    /// quantization: the serving runtime uses this when a packed
+    /// checkpoint carries no calibrated activation scales).
+    pub fn from_tensor(t: &Tensor, bits: u32) -> ActQuant {
+        ActQuant::from_range(t.min(), t.max(), bits, 1.0)
+    }
+
+    /// Number of representable steps minus one (2^bits − 1).
+    #[inline]
+    pub fn levels(&self) -> f32 {
+        (1u64 << self.bits) as f32 - 1.0
+    }
+
     /// Fake-quantize one value.
     #[inline]
     pub fn apply(&self, x: f32) -> f32 {
-        let levels = (1u64 << self.bits) as f32 - 1.0;
+        let q = self.code(x) + self.zero;
+        q * self.scale
+    }
+
+    /// The unsigned integer code of one value: clamp(round(x/δ) − z,
+    /// 0, 2^bits − 1). `apply(x) == (code(x) + zero) * scale` exactly —
+    /// the integer serving GEMM relies on this identity to reproduce the
+    /// fake-quant reference in integer arithmetic.
+    #[inline]
+    pub fn code(&self, x: f32) -> f32 {
         let q = (x / self.scale).round_ties_even() - self.zero;
-        let q = q.clamp(0.0, levels);
-        (q + self.zero) * self.scale
+        q.clamp(0.0, self.levels())
     }
 
     /// Fake-quantize a tensor in place.
@@ -107,6 +128,21 @@ mod tests {
         let full = ActQuant::from_range(-10.0, 10.0, 4, 1.0);
         let clipped = ActQuant::from_range(-10.0, 10.0, 4, 0.5);
         assert!(clipped.scale < full.scale);
+    }
+
+    #[test]
+    fn code_identity_matches_apply() {
+        let aq = ActQuant::from_range(-3.0, 5.0, 8, 0.95);
+        let mut rng = Rng::new(11);
+        for _ in 0..500 {
+            let x = rng.range_f32(-4.0, 6.0);
+            let c = aq.code(x);
+            assert!(c.fract() == 0.0 && c >= 0.0 && c <= aq.levels(), "{c}");
+            assert_eq!((c + aq.zero) * aq.scale, aq.apply(x));
+        }
+        let dynq = ActQuant::from_tensor(&Tensor::from_vec(vec![-1.0, 0.5, 2.0]), 4);
+        assert!(dynq.scale > 0.0);
+        assert_eq!(dynq.bits, 4);
     }
 
     #[test]

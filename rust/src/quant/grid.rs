@@ -121,19 +121,31 @@ impl LayerQuant {
 
     /// Inverse of `pack_codes`.
     pub fn unpack_codes(packed: &[u8], bits: u32, m: usize, n: usize, zero: &[f32]) -> Tensor {
-        assert!(bits as usize <= 8);
         let mut data = vec![0.0f32; m * n];
-        let mask = (1u64 << bits) - 1;
-        for (idx, d) in data.iter_mut().enumerate() {
-            let bitpos = idx * bits as usize;
-            let (byte, off) = (bitpos / 8, bitpos % 8);
-            let mut u = (packed[byte] as u64) >> off;
-            if off + bits as usize > 8 {
-                u |= (packed[byte + 1] as u64) << (8 - off);
-            }
-            *d = (u & mask) as f32 + zero[idx % n];
-        }
+        for_each_code(packed, bits, m * n, |idx, u| {
+            data[idx] = u as f32 + zero[idx % n];
+        });
         Tensor::new(&[m, n], data)
+    }
+}
+
+/// Walk the unsigned codes of a packed offset-binary bitstream (the
+/// `pack_codes` layout): calls `f(idx, u)` for idx in 0..count. The one
+/// decoder both the f32 unpack above and the i8 serving prep
+/// (`serve::Int8Panel`) go through, so the bit layout lives in exactly
+/// two places — pack and this.
+pub(crate) fn for_each_code(packed: &[u8], bits: u32, count: usize, mut f: impl FnMut(usize, u64)) {
+    assert!(bits as usize <= 8);
+    let mask = (1u64 << bits) - 1;
+    let bits = bits as usize;
+    for idx in 0..count {
+        let bitpos = idx * bits;
+        let (byte, off) = (bitpos / 8, bitpos % 8);
+        let mut u = (packed[byte] as u64) >> off;
+        if off + bits > 8 {
+            u |= (packed[byte + 1] as u64) << (8 - off);
+        }
+        f(idx, u & mask);
     }
 }
 

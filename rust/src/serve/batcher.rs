@@ -1,0 +1,204 @@
+//! Dynamic micro-batching request queue: single-image requests are
+//! coalesced into batches up to `max_batch`, bounded by a latency
+//! deadline measured from the oldest pending request. The classic
+//! serving trade — batch-1 latency vs GEMM efficiency — made explicit:
+//! under load the queue fills to `max_batch` before the deadline and the
+//! i8 GEMM runs at full tilt; at low rate the deadline fires and a
+//! request never waits more than `max_delay` for company.
+//!
+//! Executor threads both coalesce and run the forward (no separate
+//! dispatcher), so with `executors > 1` the next batch assembles while
+//! the previous one is still in the GEMM. Replies travel over
+//! per-request channels, so batch composition never affects who gets
+//! which logits.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::QuantizedModel;
+use crate::tensor::Tensor;
+
+/// Micro-batcher tuning.
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Largest batch a single forward will see.
+    pub max_batch: usize,
+    /// Longest the oldest request may wait for the batch to fill.
+    pub max_delay: Duration,
+    /// Executor threads (0 = derive from the shared COMQ_THREADS
+    /// parallelism knob, see `util::effective_threads`). Each executor
+    /// runs whole batches; the GEMM inside parallelizes further over the
+    /// worker pool.
+    pub executors: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 32, max_delay: Duration::from_millis(2), executors: 1 }
+    }
+}
+
+struct Pending {
+    data: Vec<f32>,
+    arrived: Instant,
+    tx: mpsc::Sender<Vec<f32>>,
+}
+
+struct Shared {
+    model: Arc<QuantizedModel>,
+    side: usize,
+    max_batch: usize,
+    max_delay: Duration,
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    batches: AtomicUsize,
+    served: AtomicUsize,
+}
+
+/// Cumulative queue counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Forward passes executed.
+    pub batches: usize,
+    /// Requests answered.
+    pub served: usize,
+}
+
+/// A running micro-batched server over one quantized model.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start executor threads for `model`. Inputs are single images
+    /// flattened to `img·img·3` f32s (the model's manifest geometry).
+    pub fn start(model: Arc<QuantizedModel>, cfg: BatchConfig) -> Server {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        let executors = if cfg.executors == 0 {
+            // one batch in flight per ~4 pool threads keeps the GEMM fed
+            // without oversubscribing it
+            (crate::util::effective_threads() / 4).clamp(1, 4)
+        } else {
+            cfg.executors.min(crate::util::effective_threads())
+        };
+        let shared = Arc::new(Shared {
+            side: model.input_side(),
+            max_batch: cfg.max_batch,
+            max_delay: cfg.max_delay,
+            model,
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            batches: AtomicUsize::new(0),
+            served: AtomicUsize::new(0),
+        });
+        let workers = (0..executors)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("comq-serve-{i}"))
+                    .spawn(move || executor_loop(&sh))
+                    .expect("spawning serve executor")
+            })
+            .collect();
+        Server { shared, workers }
+    }
+
+    /// Enqueue one image; the receiver yields its logits row. Dropping
+    /// the receiver abandons the request (the batch still runs).
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<Vec<f32>> {
+        let elems = self.shared.side * self.shared.side * 3;
+        assert_eq!(image.len(), elems, "image must be img*img*3 f32s");
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Pending { data: image, arrived: Instant::now(), tx });
+        }
+        self.shared.cv.notify_one();
+        rx
+    }
+
+    /// Blocking single-request inference. Errors if the server shut
+    /// down first or the batch forward panicked (the executor survives
+    /// a panic; only the affected batch's requests fail).
+    pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(image)
+            .recv()
+            .map_err(|_| anyhow!("request dropped: server shut down or batch forward panicked"))
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            served: self.shared.served.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn executor_loop(sh: &Shared) {
+    let elems = sh.side * sh.side * 3;
+    loop {
+        // coalesce: wait for work, then until full / deadline / shutdown
+        let batch: Vec<Pending> = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if q.is_empty() {
+                    if sh.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    // bounded wait so shutdown can't be missed
+                    q = sh.cv.wait_timeout(q, Duration::from_millis(20)).unwrap().0;
+                    continue;
+                }
+                let deadline = q.front().unwrap().arrived + sh.max_delay;
+                let now = Instant::now();
+                if q.len() >= sh.max_batch || now >= deadline || sh.shutdown.load(Ordering::Acquire)
+                {
+                    let take = q.len().min(sh.max_batch);
+                    break q.drain(..take).collect();
+                }
+                q = sh.cv.wait_timeout(q, deadline - now).unwrap().0;
+            }
+        };
+        let b = batch.len();
+        let mut data = Vec::with_capacity(b * elems);
+        for p in &batch {
+            data.extend_from_slice(&p.data);
+        }
+        // a panicking forward must not kill the executor — the queue
+        // would fill forever behind a Server that still looks healthy.
+        // Catch it, drop this batch's senders (their receivers observe
+        // RecvError), and keep serving.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sh.model.forward(&Tensor::new(&[b, sh.side, sh.side, 3], data))
+        }));
+        match result {
+            Ok(logits) => {
+                let classes = logits.cols();
+                for (i, p) in batch.into_iter().enumerate() {
+                    // a dropped receiver is fine — the rest of the batch stands
+                    let _ = p.tx.send(logits.data()[i * classes..(i + 1) * classes].to_vec());
+                }
+                sh.served.fetch_add(b, Ordering::Relaxed);
+            }
+            Err(_) => drop(batch),
+        }
+        sh.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}

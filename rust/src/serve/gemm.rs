@@ -1,0 +1,305 @@
+//! The integer serving GEMM: `i8 × i8 → i32` with the dequantization
+//! epilogue fused into the accumulator drain.
+//!
+//! Both operands are *centered* codes: activations store `qa − 2^(ab−1)`
+//! and weights store `u − 2^(b−1)`, so every value fits i8 for any bit
+//! width ≤ 8 and the products stay well inside i32 (|a·w| ≤ 2^14; the
+//! k extent would need to reach 2^17 to overflow, far beyond any layer
+//! here — asserted anyway). The centering offsets are exact integers, so
+//! the epilogue can reconstruct the *exact* uncentered integer sum
+//!
+//! ```text
+//! Σ_i (qa_i + z_a)(u_ij + z_j)
+//!   = dot_ij + (c_w + z_j)·rowsum_i + (c_a + z_a)·colsum_j
+//!     + m·(c_a + z_a)·(c_w + z_j)
+//! ```
+//!
+//! in f64 (all terms are integers < 2^53) and scale once by
+//! `δ_a · δ_j`, giving bit-faithful agreement with the fake-quant f32
+//! reference up to a single final rounding. `rowsum` comes free during
+//! activation quantization; `colsum` is precomputed at weight prep.
+//!
+//! The kernel reuses the MR×NR register tiling of `tensor/matmul.rs`
+//! (same strip-packed B layout, i8 instead of f32 — one B strip is a
+//! quarter the bytes, which is the whole bandwidth win on batch-1
+//! serving) and the same persistent-pool parallelism, splitting over
+//! row blocks when the batch can feed the pool and over column strips
+//! when it can't (batch-1).
+
+use crate::quant::actq::ActQuant;
+use crate::tensor::{Tensor, MR, NR};
+use crate::util::pool::{parallel_ranges, SendPtr};
+
+/// At this k extent the worst-case i32 sum hits exactly 2^31 (2^17 ·
+/// 2^14) and overflows, so the guard is strict. Weight prep
+/// (`Int8Panel::from_packed`) rejects such layers at build time; the
+/// assert below is the backstop for direct kernel callers.
+pub(crate) const MAX_K: usize = 1 << 17;
+const MIN_OPS_PER_THREAD: usize = 1 << 20;
+
+/// A batch of activations quantized to centered i8 codes, plus the
+/// per-row code sums the epilogue needs.
+pub struct QuantizedActs {
+    /// Centered codes `qa − 2^(bits−1)`, row-major [rows, m].
+    pub codes: Vec<i8>,
+    /// Per-row sum of centered codes.
+    pub rsum: Vec<i32>,
+    pub rows: usize,
+    pub m: usize,
+    pub aq: ActQuant,
+}
+
+impl QuantizedActs {
+    /// Quantize a 2-D input [rows, m] with the given activation grid.
+    pub fn quantize(x: &Tensor, aq: ActQuant) -> QuantizedActs {
+        assert!(aq.bits >= 1 && aq.bits <= 8, "activation bits {} not in 1..=8", aq.bits);
+        let (rows, m) = (x.rows(), x.cols());
+        let center = (1i32 << (aq.bits - 1)) as f32;
+        let mut codes = vec![0i8; rows * m];
+        let mut rsum = vec![0i32; rows];
+        for (r, (crow, rs)) in codes.chunks_exact_mut(m).zip(&mut rsum).enumerate() {
+            let xrow = x.row(r);
+            let mut acc = 0i32;
+            for (c, &v) in crow.iter_mut().zip(xrow) {
+                let s = (aq.code(v) - center) as i32;
+                *c = s as i8;
+                acc += s;
+            }
+            *rs = acc;
+        }
+        QuantizedActs { codes, rsum, rows, m, aq }
+    }
+}
+
+/// Per-column epilogue coefficients for one (layer, activation-grid)
+/// pair; see [`crate::serve::Int8Panel::coeffs`] for the derivation.
+pub struct EpilogueCoeffs {
+    /// δ_a · δ_j — the only non-integer factor.
+    pub scale: Vec<f64>,
+    /// c_w + z_j — multiplies the per-row code sum.
+    pub zc: Vec<f64>,
+    /// (c_a + z_a)·(colsum_j + m·(c_w + z_j)) — the row-independent term.
+    pub fixed: Vec<f64>,
+    /// Layer bias, added after scaling.
+    pub bias: Vec<f64>,
+}
+
+/// Pack centered codes [k, n] row-major into column strips of width NR,
+/// k-contiguous and zero-padded on the last strip — the i8 twin of
+/// `tensor::matmul::pack_b`, done once at weight prep.
+pub(crate) fn pack_panel_i8(s: &[i8], k: usize, n: usize) -> Vec<i8> {
+    assert_eq!(s.len(), k * n);
+    let n_strips = n.div_ceil(NR);
+    let mut panel = vec![0i8; n_strips * k * NR];
+    for strip in 0..n_strips {
+        let j0 = strip * NR;
+        let cols = NR.min(n - j0);
+        for kk in 0..k {
+            let src = &s[kk * n + j0..kk * n + j0 + cols];
+            panel[strip * k * NR + kk * NR..strip * k * NR + kk * NR + cols].copy_from_slice(src);
+        }
+    }
+    panel
+}
+
+/// y[r][j] = scale_j·(dot_rj + zc_j·rsum_r + fixed_j) + bias_j over a
+/// strip-packed i8 weight panel. `out` [rows, n] is fully overwritten.
+pub fn gemm_i8_fused(
+    a: &QuantizedActs,
+    panel: &[i8],
+    n: usize,
+    co: &EpilogueCoeffs,
+    out: &mut [f32],
+) {
+    let (rows, k) = (a.rows, a.m);
+    assert!(k < MAX_K, "k={k} would overflow the i32 accumulator");
+    assert_eq!(out.len(), rows * n);
+    assert_eq!(co.scale.len(), n);
+    assert_eq!(co.zc.len(), n);
+    assert_eq!(co.fixed.len(), n);
+    assert_eq!(co.bias.len(), n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    let n_strips = n.div_ceil(NR);
+    assert_eq!(panel.len(), n_strips * k * NR, "panel not packed for [{k}, {n}]");
+    let row_blocks = rows.div_ceil(MR);
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    if row_blocks < crate::util::pool::num_threads() && n_strips > row_blocks {
+        // few rows (the batch-1 serving case): a row split can't feed
+        // the pool, so split the output columns instead — strips write
+        // disjoint column ranges, which keeps the SendPtr contract
+        let min_strips = (MIN_OPS_PER_THREAD / (2 * k * NR * rows).max(1)).max(1);
+        parallel_ranges(n_strips, min_strips, |_, strips| {
+            let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.ptr(), rows * n) };
+            for s in strips {
+                let strip = &panel[s * k * NR..(s + 1) * k * NR];
+                let j0 = s * NR;
+                let cols = NR.min(n - j0);
+                for blk in 0..row_blocks {
+                    let i0 = blk * MR;
+                    let rmax = MR.min(rows - i0);
+                    micro_i8(a, strip, out, i0, rmax, j0, cols, k, n, co);
+                }
+            }
+        });
+        return;
+    }
+    let min_blocks = (MIN_OPS_PER_THREAD / (2 * k * n * MR).max(1)).max(1);
+    parallel_ranges(row_blocks, min_blocks, |_, blocks| {
+        let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.ptr(), rows * n) };
+        // strip-outer order keeps one i8 strip (k×NR bytes) hot across
+        // this thread's row blocks, same as the f32 kernel
+        for s in 0..n_strips {
+            let strip = &panel[s * k * NR..(s + 1) * k * NR];
+            let j0 = s * NR;
+            let cols = NR.min(n - j0);
+            for blk in blocks.clone() {
+                let i0 = blk * MR;
+                let rmax = MR.min(rows - i0);
+                micro_i8(a, strip, out, i0, rmax, j0, cols, k, n, co);
+            }
+        }
+    });
+}
+
+/// MR×NR i8 micro-kernel with fused dequant drain.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_i8(
+    a: &QuantizedActs,
+    strip: &[i8],
+    out: &mut [f32],
+    i0: usize,
+    rmax: usize,
+    j0: usize,
+    cols: usize,
+    k: usize,
+    n: usize,
+    co: &EpilogueCoeffs,
+) {
+    let codes = &a.codes;
+    let mut acc = [[0i32; NR]; MR];
+    for kk in 0..k {
+        let brow = &strip[kk * NR..kk * NR + NR];
+        for (r, accr) in acc.iter_mut().take(rmax).enumerate() {
+            let av = codes[(i0 + r) * k + kk] as i32;
+            for l in 0..NR {
+                accr[l] += av * brow[l] as i32;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().take(rmax).enumerate() {
+        let rs = a.rsum[i0 + r] as f64;
+        let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
+        for (l, (o, &d)) in orow.iter_mut().zip(&accr[..cols]).enumerate() {
+            let j = j0 + l;
+            *o = (co.scale[j] * (d as f64 + co.zc[j] * rs + co.fixed[j]) + co.bias[j]) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn quantize_codes_and_rowsums() {
+        let aq = ActQuant::from_range(-2.0, 2.0, 8, 1.0);
+        let mut rng = Rng::new(5);
+        let x = Tensor::new(&[3, 17], rng.normal_vec(51));
+        let qa = QuantizedActs::quantize(&x, aq);
+        assert_eq!(qa.codes.len(), 51);
+        for r in 0..3 {
+            let want: i32 = qa.codes[r * 17..(r + 1) * 17].iter().map(|&c| c as i32).sum();
+            assert_eq!(qa.rsum[r], want);
+            // centered code + center reproduces the unsigned code
+            for (c, &v) in qa.codes[r * 17..(r + 1) * 17].iter().zip(x.row(r)) {
+                assert_eq!((*c as i32 + 128) as f32, aq.code(v));
+            }
+        }
+    }
+
+    #[test]
+    fn panel_layout_matches_pack_b() {
+        // pack the same values through the f32 packer and compare
+        let mut rng = Rng::new(6);
+        for &(k, n) in &[(3usize, 5usize), (7, 16), (4, 33), (1, 1)] {
+            let s: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+            let sf: Vec<f32> = s.iter().map(|&v| v as f32).collect();
+            let pi = pack_panel_i8(&s, k, n);
+            let pf = crate::tensor::pack_b(&sf, k, n);
+            assert_eq!(pi.len(), pf.len(), "({k},{n})");
+            for (a, b) in pi.iter().zip(&pf) {
+                assert_eq!(*a as f32, *b, "({k},{n})");
+            }
+        }
+    }
+
+    /// Integer GEMM against a plain f64 loop over the *dequantized*
+    /// values — the identity the whole serving path rests on.
+    #[test]
+    fn gemm_matches_dequantized_reference() {
+        let mut rng = Rng::new(7);
+        for &(rows, k, n) in &[(1usize, 8usize, 3usize), (4, 16, 16), (5, 33, 21), (9, 7, 40)] {
+            let wbits = 4u32;
+            let cw = 1i32 << (wbits - 1);
+            // random centered weight codes + per-column grid
+            let s: Vec<i8> = (0..k * n).map(|_| (rng.below(16) as i32 - cw) as i8).collect();
+            let delta: Vec<f32> = (0..n).map(|_| rng.range_f32(0.01, 0.2)).collect();
+            let zero: Vec<f32> = (0..n).map(|_| (rng.below(9) as f32) - 8.0).collect();
+            let bias: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let x = Tensor::new(&[rows, k], rng.normal_vec(rows * k));
+            let aq = ActQuant::from_range(x.min(), x.max(), 8, 1.0);
+            let acts = QuantizedActs::quantize(&x, aq);
+
+            // epilogue coefficients straight from the derivation
+            let ca = 128.0f64 + aq.zero as f64;
+            let mut csum = vec![0i64; n];
+            for (idx, &v) in s.iter().enumerate() {
+                csum[idx % n] += v as i64;
+            }
+            let co = EpilogueCoeffs {
+                scale: delta.iter().map(|&d| aq.scale as f64 * d as f64).collect(),
+                zc: zero.iter().map(|&z| cw as f64 + z as f64).collect(),
+                fixed: (0..n)
+                    .map(|j| ca * (csum[j] as f64 + k as f64 * (cw as f64 + zero[j] as f64)))
+                    .collect(),
+                bias: bias.iter().map(|&b| b as f64).collect(),
+            };
+            let panel = pack_panel_i8(&s, k, n);
+            let mut y = vec![0.0f32; rows * n];
+            gemm_i8_fused(&acts, &panel, n, &co, &mut y);
+
+            // reference: fake-quant x, dequantize w, f64 matmul
+            for r in 0..rows {
+                for j in 0..n {
+                    let mut acc = bias[j] as f64;
+                    for kk in 0..k {
+                        let xh = aq.apply(x.at2(r, kk)) as f64;
+                        let wq = ((s[kk * n + j] as i32 + cw) as f32 + zero[j]) * delta[j];
+                        acc += xh * wq as f64;
+                    }
+                    let got = y[r * n + j] as f64;
+                    let tol = 1e-3 * acc.abs().max(1.0);
+                    assert!((got - acc).abs() <= tol, "({rows},{k},{n}) r={r} j={j}: {got} vs {acc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let aq = ActQuant::from_range(0.0, 1.0, 8, 1.0);
+        let acts = QuantizedActs::quantize(&Tensor::zeros(&[0, 4]), aq);
+        let co = EpilogueCoeffs {
+            scale: vec![1.0; 2],
+            zc: vec![0.0; 2],
+            fixed: vec![0.0; 2],
+            bias: vec![0.0; 2],
+        };
+        let panel = pack_panel_i8(&[0i8; 8], 4, 2);
+        gemm_i8_fused(&acts, &panel, 2, &co, &mut []);
+    }
+}

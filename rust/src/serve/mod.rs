@@ -1,0 +1,35 @@
+//! Integer serving runtime: execute packed `.cqm` checkpoints without
+//! ever materializing f32 weights.
+//!
+//! The deployment story until now stopped at `deploy::load_packed`,
+//! which unpacks the bit-codes *back to f32* and runs full-precision
+//! matmuls — correct, but none of the compute/bandwidth win the codes
+//! exist for. This subsystem is the other half:
+//!
+//! * `packed`  — one-time weight prep: b-bit bitstream → strip-packed
+//!   centered-i8 panel (the MR×NR layout of `tensor/matmul.rs`, a
+//!   quarter the bytes of f32) + per-column integer sums;
+//! * `gemm`    — the `i8×i8→i32` register-tiled GEMM with the
+//!   per-column `(δ, z)` weight dequant and `(scale, zero)` activation
+//!   grid folded into the epilogue, parallelized over the persistent
+//!   worker pool;
+//! * `model`   — `QuantizedModel` (routes quantizable linears through
+//!   the GEMM via `model::LayerExec`) and the process-wide load-once
+//!   registry, the serving analogue of `runtime::Engine`'s compile
+//!   cache;
+//! * `batcher` — a dynamic micro-batching request queue coalescing
+//!   single requests into batches under a latency deadline.
+//!
+//! Accuracy parity with the dequantized-f32 reference is routed through
+//! `EngineKind::Int8` (see `eval::evaluate_int8` and the pipeline), and
+//! asserted by rust/tests/serve_int8.rs.
+
+pub mod batcher;
+pub mod gemm;
+pub mod model;
+pub mod packed;
+
+pub use batcher::{BatchConfig, ServeStats, Server};
+pub use gemm::{gemm_i8_fused, EpilogueCoeffs, QuantizedActs};
+pub use model::{load_cached, registry_len, ActSource, QuantizedModel, DEFAULT_ACT_BITS};
+pub use packed::Int8Panel;

@@ -1,0 +1,274 @@
+//! `QuantizedModel`: a `.cqm` checkpoint prepped for integer execution,
+//! plus the process-wide load-once registry (the serving analogue of
+//! `runtime::Engine`'s compile cache).
+//!
+//! Quantizable linear layers run through the i8 GEMM via the
+//! `model::LayerExec` override — their f32 weights are never
+//! materialized. Depthwise (grouped) layers and layers kept in full
+//! precision fall back to the f32 forward; when an activation grid is
+//! known their inputs are fake-quantized so the whole network matches
+//! the W/A-quantized reference bit-for-argmax.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::deploy::{self, PackedLayer};
+use crate::manifest::{Manifest, ModelConfig, ModelInfo};
+use crate::model::{LayerExec, Model, Tap};
+use crate::quant::actq::ActQuant;
+use crate::serve::gemm::{gemm_i8_fused, EpilogueCoeffs, QuantizedActs};
+use crate::serve::packed::Int8Panel;
+use crate::tensor::Tensor;
+
+/// Activation bits assumed when a checkpoint carries no calibrated
+/// activation grid (dynamic per-batch quantization).
+pub const DEFAULT_ACT_BITS: u32 = 8;
+
+/// Where each layer's activation grid comes from at serve time.
+#[derive(Debug, Clone)]
+pub enum ActSource {
+    /// Calibrated (scale, zero) per layer, stored in the checkpoint or
+    /// handed over by the pipeline — required for exact parity with the
+    /// fake-quant reference.
+    Static { bits: u32, by_layer: BTreeMap<String, ActQuant> },
+    /// Derive the grid from each batch's (min, max) — standard dynamic
+    /// quantization for checkpoints without calibrated scales.
+    Dynamic { bits: u32 },
+}
+
+impl ActSource {
+    pub fn bits(&self) -> u32 {
+        match self {
+            ActSource::Static { bits, .. } | ActSource::Dynamic { bits } => *bits,
+        }
+    }
+}
+
+/// One i8-served layer: prepped panel + bias; with a static activation
+/// grid the per-column epilogue coefficients are derived once at build
+/// time instead of on every request.
+pub struct Int8Layer {
+    panel: Int8Panel,
+    bias: Option<Vec<f32>>,
+    static_co: Option<(ActQuant, EpilogueCoeffs)>,
+}
+
+impl Int8Layer {
+    /// y = x@W + b entirely in integer arithmetic (x [rows, m]).
+    /// `aq` is only consulted on the dynamic path; the static path uses
+    /// the grid the coefficients were built from.
+    fn forward(&self, x: &Tensor, aq: ActQuant) -> Tensor {
+        match &self.static_co {
+            Some((saq, co)) => {
+                let acts = QuantizedActs::quantize(x, *saq);
+                let mut out = Tensor::zeros(&[x.rows(), self.panel.n]);
+                gemm_i8_fused(&acts, self.panel.panel(), self.panel.n, co, out.data_mut());
+                out
+            }
+            None => self.panel.matmul_i8(x, aq, self.bias.as_deref()),
+        }
+    }
+}
+
+/// A packed checkpoint ready to serve.
+pub struct QuantizedModel {
+    /// Architecture + every parameter that still runs in f32 (biases,
+    /// norms, depthwise weights, kept-FP layers). Has NO `{l}/W` entry
+    /// for i8-served layers.
+    base: Model,
+    int8: BTreeMap<String, Int8Layer>,
+    act: ActSource,
+    weight_bits: u32,
+    quantizable: BTreeSet<String>,
+}
+
+impl QuantizedModel {
+    /// Build from in-memory parts. `params` must hold every non-packed
+    /// parameter (the pipeline passes the dequantized model's map; the
+    /// loader passes the checkpoint's `fp/` entries). Packed weights of
+    /// non-grouped layers are prepped to i8 and their f32 `{l}/W`
+    /// entries dropped; grouped layers are dequantized into `params`.
+    pub fn from_parts(
+        info: ModelInfo,
+        mut params: BTreeMap<String, Tensor>,
+        packed: &[PackedLayer],
+        act: ActSource,
+    ) -> Result<QuantizedModel> {
+        // fail at build time, not with an assert mid-request
+        if act.bits() < 1 || act.bits() > 8 {
+            bail!("activation bits {} not servable as i8 (need 1..=8)", act.bits());
+        }
+        let grouped: BTreeSet<&str> = info
+            .quant_layers
+            .iter()
+            .filter(|l| l.grouped)
+            .map(|l| l.name.as_str())
+            .collect();
+        let known: BTreeSet<&str> = info.quant_layers.iter().map(|l| l.name.as_str()).collect();
+        let mut int8 = BTreeMap::new();
+        let mut weight_bits = 0;
+        for pl in packed {
+            if !known.contains(pl.name.as_str()) {
+                bail!("packed layer '{}' not in model '{}'", pl.name, info.name);
+            }
+            weight_bits = weight_bits.max(pl.bits);
+            if grouped.contains(pl.name.as_str()) {
+                // depthwise runs f32 (k·k×c weights — memory-trivial)
+                params.entry(format!("{}/W", pl.name)).or_insert_with(|| pl.dequant());
+            } else {
+                let panel = Int8Panel::from_packed(pl)?;
+                let bias = params.get(&format!("{}/b", pl.name)).map(|t| t.data().to_vec());
+                let static_co = match &act {
+                    ActSource::Static { by_layer, .. } => by_layer
+                        .get(&pl.name)
+                        .map(|aq| (*aq, panel.coeffs(aq, bias.as_deref()))),
+                    ActSource::Dynamic { .. } => None,
+                };
+                int8.insert(pl.name.clone(), Int8Layer { panel, bias, static_co });
+                params.remove(&format!("{}/W", pl.name));
+            }
+        }
+        // completeness: every canonical parameter is either present in
+        // f32 or covered by an i8 panel
+        for p in &info.params {
+            if !params.contains_key(p) {
+                let covered =
+                    p.strip_suffix("/W").map(|l| int8.contains_key(l)).unwrap_or(false);
+                if !covered {
+                    bail!("missing parameter '{p}' (neither packed nor FP)");
+                }
+            }
+        }
+        let quantizable = info.quant_layers.iter().map(|l| l.name.clone()).collect();
+        Ok(QuantizedModel {
+            base: Model { info, params },
+            int8,
+            act,
+            weight_bits,
+            quantizable,
+        })
+    }
+
+    /// Load a `.cqm` checkpoint for serving (manifest supplies the
+    /// architecture). Falls back to dynamic activation quantization when
+    /// the checkpoint stores no calibrated grid.
+    pub fn load(manifest: &Manifest, model_name: &str, path: &str) -> Result<QuantizedModel> {
+        let ck = deploy::read_packed(path)?;
+        let info = manifest.model(model_name)?.clone();
+        let act = match ck.act {
+            Some(a) => ActSource::Static { bits: a.bits, by_layer: a.by_layer },
+            None => ActSource::Dynamic { bits: DEFAULT_ACT_BITS },
+        };
+        QuantizedModel::from_parts(info, ck.fp, &ck.layers, act)
+    }
+
+    /// Integer forward: x [b, img, img, 3] -> logits [b, classes].
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let mut tap = Tap::Exec(self);
+        self.base.forward(x, &mut tap)
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.base.info
+    }
+
+    pub fn classes(&self) -> usize {
+        match &self.base.info.config {
+            ModelConfig::ViT(c) => c.classes,
+            ModelConfig::Cnn(c) => c.classes,
+        }
+    }
+
+    pub fn input_side(&self) -> usize {
+        match &self.base.info.config {
+            ModelConfig::ViT(c) => c.img,
+            ModelConfig::Cnn(c) => c.img,
+        }
+    }
+
+    /// Number of layers served through the i8 GEMM.
+    pub fn int8_layers(&self) -> usize {
+        self.int8.len()
+    }
+
+    pub fn weight_bits(&self) -> u32 {
+        self.weight_bits
+    }
+
+    pub fn act_source(&self) -> &ActSource {
+        &self.act
+    }
+
+    /// Serving-resident bytes of the i8 panels (the f32 weights these
+    /// replace would be `4·m·n` each).
+    pub fn resident_bytes(&self) -> usize {
+        self.int8.values().map(|l| l.panel.resident_bytes()).sum()
+    }
+
+    fn act_for(&self, name: &str, x: &Tensor) -> ActQuant {
+        match &self.act {
+            ActSource::Static { bits, by_layer } => by_layer
+                .get(name)
+                .copied()
+                .unwrap_or_else(|| ActQuant::from_tensor(x, *bits)),
+            ActSource::Dynamic { bits } => ActQuant::from_tensor(x, *bits),
+        }
+    }
+}
+
+impl LayerExec for QuantizedModel {
+    fn exec_linear(&self, name: &str, x: &Tensor) -> Option<Tensor> {
+        let layer = self.int8.get(name)?;
+        Some(layer.forward(x, self.act_for(name, x)))
+    }
+
+    fn tap_input(&self, name: &str, x: Tensor) -> Tensor {
+        // i8-owned layers quantize internally; non-quantizable layers
+        // pass through; quantizable fallbacks (depthwise, kept-FP) get
+        // fake-quantized so the network matches the W/A reference.
+        if self.int8.contains_key(name) || !self.quantizable.contains(name) {
+            return x;
+        }
+        let aq = self.act_for(name, &x);
+        let mut x = x;
+        aq.apply_tensor(&mut x);
+        x
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry: load each checkpoint once per process
+// ---------------------------------------------------------------------------
+
+static REGISTRY: OnceLock<Mutex<HashMap<String, Arc<QuantizedModel>>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<HashMap<String, Arc<QuantizedModel>>> {
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Load a checkpoint through the process-wide registry: the decode +
+/// panel prep runs once per (model, path); every later caller gets the
+/// same `Arc`. The serving analogue of `runtime::Engine`'s compile
+/// cache.
+pub fn load_cached(
+    manifest: &Manifest,
+    model_name: &str,
+    path: &str,
+) -> Result<Arc<QuantizedModel>> {
+    let key = format!("{model_name}@{path}");
+    if let Some(m) = registry().lock().unwrap().get(&key) {
+        return Ok(m.clone());
+    }
+    // prep outside the lock (it can be slow); a racing double-load is
+    // benign — first insert wins
+    let qm = Arc::new(QuantizedModel::load(manifest, model_name, path)?);
+    let mut reg = registry().lock().unwrap();
+    Ok(reg.entry(key).or_insert(qm).clone())
+}
+
+/// Checkpoints currently cached (diagnostics / tests).
+pub fn registry_len() -> usize {
+    REGISTRY.get().map(|r| r.lock().unwrap().len()).unwrap_or(0)
+}

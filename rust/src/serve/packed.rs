@@ -1,0 +1,182 @@
+//! One-time weight prep: expand a `.cqm` layer's b-bit bitstream into
+//! the strip-packed centered-i8 panel the serving GEMM streams, plus the
+//! per-column integer sums and grid scalars its epilogue folds in.
+//!
+//! This is the only place codes are expanded, and they expand to i8 —
+//! never to f32. An 8-bit panel is 4× smaller than the f32 weight
+//! matrix, a 4-bit-sourced panel still 4× (codes widen to i8 for the
+//! multiplier), so the serving working set stays a quarter of what
+//! `eval::forward_native` touches per layer.
+
+use anyhow::{bail, Result};
+
+use crate::deploy::PackedLayer;
+use crate::quant::actq::ActQuant;
+use crate::serve::gemm::{gemm_i8_fused, pack_panel_i8, EpilogueCoeffs, QuantizedActs};
+use crate::tensor::Tensor;
+
+/// A layer's weights prepped for integer execution.
+pub struct Int8Panel {
+    /// Input features (the GEMM k extent).
+    pub m: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Source code width.
+    pub bits: u32,
+    /// Strip-packed centered codes `u − 2^(bits−1)` (see gemm.rs).
+    panel: Vec<i8>,
+    /// Per-column sum of centered codes.
+    csum: Vec<i32>,
+    /// Per-column scale δ_j.
+    delta: Vec<f32>,
+    /// Per-column zero point z_j.
+    zero: Vec<f32>,
+}
+
+impl Int8Panel {
+    /// Decode the bitstream once (through the shared `grid` decoder,
+    /// minus the f32 detour) and pack it.
+    pub fn from_packed(pl: &PackedLayer) -> Result<Int8Panel> {
+        if pl.bits < 1 || pl.bits > 8 {
+            bail!("layer '{}': {} bits not servable as i8", pl.name, pl.bits);
+        }
+        let (m, n, bits) = (pl.m, pl.n, pl.bits as usize);
+        if pl.delta.len() != n || pl.zero.len() != n {
+            bail!("layer '{}': grid vectors don't match n={n}", pl.name);
+        }
+        if pl.codes.len() != (m * n * bits).div_ceil(8) {
+            bail!("layer '{}': bitstream length {} for [{m}, {n}]@{bits}b", pl.name, pl.codes.len());
+        }
+        if m >= crate::serve::gemm::MAX_K {
+            // fail at build time, not with the GEMM's assert mid-request
+            bail!("layer '{}': m={m} exceeds the i32-accumulator bound ({})", pl.name, crate::serve::gemm::MAX_K);
+        }
+        let center = 1i32 << (bits - 1);
+        let mut s = vec![0i8; m * n];
+        let mut csum = vec![0i32; n];
+        crate::quant::grid::for_each_code(&pl.codes, pl.bits, m * n, |idx, u| {
+            let c = u as i32 - center;
+            s[idx] = c as i8;
+            csum[idx % n] += c;
+        });
+        Ok(Int8Panel {
+            m,
+            n,
+            bits: pl.bits,
+            panel: pack_panel_i8(&s, m, n),
+            csum,
+            delta: pl.delta.clone(),
+            zero: pl.zero.clone(),
+        })
+    }
+
+    pub(crate) fn panel(&self) -> &[i8] {
+        &self.panel
+    }
+
+    /// `y = x@W (+ bias)` through the integer path: quantize `x` on the
+    /// given activation grid, run the i8 GEMM, dequantize in the
+    /// epilogue. The standalone form of an `Int8Layer` forward, exposed
+    /// for benches and layer-level parity tests.
+    pub fn matmul_i8(&self, x: &Tensor, aq: ActQuant, bias: Option<&[f32]>) -> Tensor {
+        let rows = x.rows();
+        assert_eq!(x.cols(), self.m, "input width vs layer m");
+        let acts = QuantizedActs::quantize(x, aq);
+        let co = self.coeffs(&acts.aq, bias);
+        let mut out = Tensor::zeros(&[rows, self.n]);
+        gemm_i8_fused(&acts, &self.panel, self.n, &co, out.data_mut());
+        out
+    }
+
+    /// Per-call epilogue coefficients for one activation grid. All
+    /// inputs are exact integers (zero points are round()ed), so the f64
+    /// arithmetic here is exact and the only rounding in the whole layer
+    /// is the final f32 store.
+    pub fn coeffs(&self, aq: &ActQuant, bias: Option<&[f32]>) -> EpilogueCoeffs {
+        let cw = (1i64 << (self.bits - 1)) as f64;
+        let ca = (1i64 << (aq.bits - 1)) as f64;
+        let a_off = ca + aq.zero as f64;
+        let sa = aq.scale as f64;
+        let m = self.m as f64;
+        let n = self.n;
+        let mut scale = Vec::with_capacity(n);
+        let mut zc = Vec::with_capacity(n);
+        let mut fixed = Vec::with_capacity(n);
+        let mut bv = Vec::with_capacity(n);
+        for j in 0..n {
+            let zcj = cw + self.zero[j] as f64;
+            scale.push(sa * self.delta[j] as f64);
+            zc.push(zcj);
+            fixed.push(a_off * (self.csum[j] as f64 + m * zcj));
+            bv.push(bias.map(|b| b[j] as f64).unwrap_or(0.0));
+        }
+        EpilogueCoeffs { scale, zc, fixed, bias: bv }
+    }
+
+    /// Serving-resident bytes (panel + column sums + grid scalars).
+    pub fn resident_bytes(&self) -> usize {
+        self.panel.len() + 4 * self.csum.len() + 8 * self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::grid::LayerQuant;
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    fn random_packed(rng: &mut Rng, m: usize, n: usize, bits: u32) -> (PackedLayer, LayerQuant) {
+        let levels = (1u64 << bits) as usize;
+        let zero: Vec<f32> = (0..n).map(|_| (rng.below(9) as f32) - 4.0).collect();
+        let delta: Vec<f32> = (0..n).map(|_| rng.range_f32(0.02, 0.3)).collect();
+        let mut q = Tensor::zeros(&[m, n]);
+        for idx in 0..m * n {
+            q.data_mut()[idx] = zero[idx % n] + rng.below(levels) as f32;
+        }
+        let lq = LayerQuant { q, delta, zero };
+        let pl = PackedLayer::from_quant("t", &lq, bits);
+        (pl, lq)
+    }
+
+    #[test]
+    fn decode_agrees_with_unpack_codes() {
+        let mut rng = Rng::new(21);
+        for &bits in &[2u32, 3, 4, 8] {
+            let (m, n) = (13, 7); // 91 codes — bitstream tail not word-aligned
+            let (pl, lq) = random_packed(&mut rng, m, n, bits);
+            let panel = Int8Panel::from_packed(&pl).unwrap();
+            let center = (1i32 << (bits - 1)) as f32;
+            // uncentered codes recovered from the panel strips must match
+            // the f32 unpack: panel[strip][kk][l] = s[kk][strip*NR+l]
+            let nr = crate::tensor::NR;
+            for kk in 0..m {
+                for j in 0..n {
+                    let (strip, l) = (j / nr, j % nr);
+                    let s = panel.panel()[strip * m * nr + kk * nr + l] as f32;
+                    let u = lq.q.at2(kk, j) - lq.zero[j]; // unsigned code
+                    assert_eq!(s + center, u, "bits={bits} ({kk},{j})");
+                }
+            }
+            // column sums
+            for j in 0..n {
+                let want: i32 = (0..m)
+                    .map(|kk| (lq.q.at2(kk, j) - lq.zero[j]) as i32 - (1i32 << (bits - 1)))
+                    .sum();
+                assert_eq!(panel.csum[j], want, "bits={bits} col {j}");
+            }
+            assert!(panel.resident_bytes() < 4 * m * n + 12 * n);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_layers() {
+        let mut rng = Rng::new(22);
+        let (mut pl, _) = random_packed(&mut rng, 4, 4, 4);
+        pl.bits = 9;
+        assert!(Int8Panel::from_packed(&pl).is_err());
+        pl.bits = 4;
+        pl.codes.pop();
+        assert!(Int8Panel::from_packed(&pl).is_err());
+    }
+}

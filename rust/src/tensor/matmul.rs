@@ -17,8 +17,10 @@ use crate::util::pool::{parallel_ranges, SendPtr};
 
 /// Micro-kernel tile: MR rows × NR columns of C accumulated in registers
 /// (4 × 16 f32 = 8 ymm accumulators under AVX2 auto-vectorization).
-const MR: usize = 4;
-const NR: usize = 16;
+/// Shared with the integer serving GEMM (serve/gemm.rs) so both kernels
+/// block the same way.
+pub(crate) const MR: usize = 4;
+pub(crate) const NR: usize = 16;
 const MIN_FLOPS_PER_THREAD: usize = 1 << 20;
 
 /// C = A @ B; A [m, k], B [k, n] -> [m, n].

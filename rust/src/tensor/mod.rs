@@ -11,7 +11,7 @@ mod matmul;
 pub mod ops;
 
 pub use im2col::{im2col, im2col_grouped};
-pub(crate) use matmul::{axpy, matmul_into_packed, pack_b};
+pub(crate) use matmul::{axpy, matmul_into_packed, pack_b, MR, NR};
 pub use matmul::{matmul, matmul_at_a, matmul_into};
 
 use anyhow::{bail, Result};

@@ -11,3 +11,25 @@ pub mod timer;
 pub use json::Json;
 pub use rng::Rng;
 pub use timer::Timer;
+
+/// Parse an environment variable as `usize` (None when unset or not a
+/// number). The single place env-var parsing lives; callers that need a
+/// specific knob wrap this so the parsing rules can't drift apart.
+pub fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|v| v.parse::<usize>().ok())
+}
+
+/// `COMQ_THREADS`, the crate-wide parallelism override. Re-read on every
+/// call (the thread-scaling bench flips it between runs). Values are
+/// clamped to ≥ 1.
+pub fn comq_threads() -> Option<usize> {
+    env_usize("COMQ_THREADS").map(|n| n.max(1))
+}
+
+/// Effective parallelism for the current call: `COMQ_THREADS` if set,
+/// otherwise available hardware parallelism capped at 16. Used by the
+/// worker pool sizing and the serve-queue executor sizing.
+pub fn effective_threads() -> usize {
+    comq_threads()
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16))
+}

@@ -48,15 +48,10 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 const MAX_WORKERS: usize = 64;
 
 /// Number of worker threads to use for the *current* call: respects
-/// COMQ_THREADS (re-read every call), defaults to available parallelism
-/// capped at 16.
+/// COMQ_THREADS (re-read every call via [`crate::util::comq_threads`]),
+/// defaults to available parallelism capped at 16.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("COMQ_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    crate::util::effective_threads()
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,229 @@
+//! Integer serving runtime: `.cqm` round-trips at every bit width,
+//! integer-path vs dequantized-f32 parity, the micro-batcher, and the
+//! model registry. Everything runs on the synthetic `tiny_plain_cnn`
+//! model, so — unlike the `integration_*` suites — none of these tests
+//! need the AOT artifact set.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use comq::deploy::{load_packed, read_packed, save_packed, save_packed_with_act, PackedAct, PackedLayer};
+use comq::manifest::Manifest;
+use comq::model::{Model, Tap};
+use comq::proptest::{forall, quantize_all_layers, tiny_plain_cnn};
+use comq::serve::{load_cached, ActSource, BatchConfig, QuantizedModel, Server};
+use comq::tensor::Tensor;
+use comq::util::Rng;
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("comq_serve_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().to_string()
+}
+
+fn images(rng: &mut Rng, n: usize) -> Tensor {
+    Tensor::new(&[n, 8, 8, 3], rng.normal_vec(n * 8 * 8 * 3))
+}
+
+/// The shared fixture (`proptest::quantize_all_layers`), unwrapped.
+fn quantize_synthetic(
+    manifest: &Manifest,
+    model: &Model,
+    bits: u32,
+    act_bits: u32,
+    calib: &Tensor,
+) -> (Vec<PackedLayer>, PackedAct, Model) {
+    quantize_all_layers(manifest, model, bits, act_bits, calib).unwrap()
+}
+
+#[test]
+fn cqm_roundtrip_all_bit_widths() {
+    let (manifest, model) = tiny_plain_cnn(40);
+    let mut rng = Rng::new(41);
+    let calib = images(&mut rng, 32);
+    for bits in [2u32, 3, 4, 8] {
+        // the bitstream edge: at least one layer's code count must not
+        // pack to whole 32-bit words at this width
+        assert!(
+            model.info.quant_layers.iter().any(|l| (l.m * l.n * bits as usize) % 32 != 0),
+            "bits={bits}: synthetic model no longer covers the packing edge"
+        );
+        let (packed, act, qmodel) = quantize_synthetic(&manifest, &model, bits, 8, &calib);
+        let path = tmp(&format!("tiny_{bits}bit.cqm"));
+        save_packed_with_act(&path, &qmodel, &packed, bits, Some(&act)).unwrap();
+
+        // raw view round-trips codes, grids and the activation entries
+        let ck = read_packed(&path).unwrap();
+        assert_eq!(ck.bits, bits);
+        assert_eq!(ck.layers.len(), packed.len());
+        for pl in &packed {
+            let got = ck.layers.iter().find(|l| l.name == pl.name).unwrap();
+            assert_eq!(got.codes, pl.codes, "bits={bits} layer {}", pl.name);
+            assert_eq!(got.delta, pl.delta, "bits={bits} layer {}", pl.name);
+            assert_eq!(got.zero, pl.zero, "bits={bits} layer {}", pl.name);
+            assert_eq!((got.m, got.n, got.bits), (pl.m, pl.n, pl.bits));
+        }
+        let ck_act = ck.act.expect("activation grid must round-trip");
+        assert_eq!(ck_act.bits, 8);
+        for (name, aq) in &act.by_layer {
+            let got = ck_act.by_layer[name];
+            assert_eq!((got.scale, got.zero, got.bits), (aq.scale, aq.zero, aq.bits), "{name}");
+        }
+        // the f32 loader reproduces the dequantized weights byte-exactly
+        let loaded = load_packed(&manifest, "tiny_plain", &path).unwrap();
+        for l in &model.info.quant_layers {
+            assert_eq!(loaded.weight(&l.name), qmodel.weight(&l.name), "bits={bits} {}", l.name);
+        }
+    }
+}
+
+/// The acceptance property: integer-path logits match the
+/// dequantized-f32 fake-quant reference within 1e-3 relative tolerance,
+/// with identical argmax (whenever the reference's top-2 margin exceeds
+/// the tolerance — below that the "right" argmax is itself a rounding
+/// accident).
+#[test]
+fn int8_logits_match_f32_reference() {
+    forall(8, 0xC0_301, |g| {
+        let seed = 1000 + g.case as u64;
+        let (manifest, model) = tiny_plain_cnn(seed);
+        let bits = *g.choice(&[3u32, 4, 8]);
+        let act_bits = *g.choice(&[4u32, 8]);
+        let mut rng = Rng::new(seed ^ 0x55);
+        let calib = images(&mut rng, 24);
+        let (packed, act, qmodel) = quantize_synthetic(&manifest, &model, bits, act_bits, &calib);
+
+        let test_x = images(&mut rng, 5);
+        // reference: dequantized f32 weights + fake-quant activations
+        let reference = qmodel.forward(&test_x, &mut Tap::ActQ(&act.by_layer));
+        // integer path: same codes, same grid, i8 GEMMs
+        let qm = QuantizedModel::from_parts(
+            model.info.clone(),
+            qmodel.params.clone(),
+            &packed,
+            ActSource::Static { bits: act_bits, by_layer: act.by_layer.clone() },
+        )
+        .unwrap();
+        assert_eq!(qm.int8_layers(), model.info.quant_layers.len());
+        let got = qm.forward(&test_x);
+        assert_eq!(got.shape(), reference.shape());
+
+        let argmax = |row: &[f32]| {
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        for r in 0..reference.rows() {
+            let (rr, gr) = (reference.row(r), got.row(r));
+            let mx = rr.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+            let tol = 1e-3 * mx;
+            for (j, (a, b)) in gr.iter().zip(rr).enumerate() {
+                assert!(
+                    (a - b).abs() <= tol,
+                    "case {} (W{bits}A{act_bits}) row {r} col {j}: int8 {a} vs f32 {b}",
+                    g.case
+                );
+            }
+            let (ai, ri) = (argmax(gr), argmax(rr));
+            if ai != ri {
+                // only excusable as a genuine near-tie in the reference
+                let margin = (rr[ri] - rr[ai]).abs();
+                assert!(
+                    margin <= tol,
+                    "case {} row {r}: argmax {ai} vs {ri} with margin {margin}",
+                    g.case
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn micro_batcher_coalesces_and_matches_direct_forward() {
+    let (manifest, model) = tiny_plain_cnn(77);
+    let mut rng = Rng::new(78);
+    let calib = images(&mut rng, 24);
+    let (packed, act, qmodel) = quantize_synthetic(&manifest, &model, 4, 8, &calib);
+    let qm = Arc::new(
+        QuantizedModel::from_parts(
+            model.info.clone(),
+            qmodel.params.clone(),
+            &packed,
+            ActSource::Static { bits: 8, by_layer: act.by_layer },
+        )
+        .unwrap(),
+    );
+    let n_req = 24;
+    let singles: Vec<Vec<f32>> = (0..n_req).map(|_| rng.normal_vec(8 * 8 * 3)).collect();
+    // with a static grid every row is independent, so the batched
+    // forward must reproduce each request bit-for-bit
+    let mut flat = Vec::new();
+    for im in &singles {
+        flat.extend_from_slice(im);
+    }
+    let direct = qm.forward(&Tensor::new(&[n_req, 8, 8, 3], flat));
+
+    let server = Server::start(
+        qm.clone(),
+        BatchConfig { max_batch: 8, max_delay: Duration::from_millis(25), executors: 1 },
+    );
+    let rxs: Vec<_> = singles.iter().map(|im| server.submit(im.clone())).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let logits = rx.recv().unwrap();
+        assert_eq!(logits.len(), manifest.classes);
+        for (a, b) in logits.iter().zip(direct.row(i)) {
+            assert_eq!(a, b, "request {i} differs from direct forward");
+        }
+    }
+    let st = server.stats();
+    assert_eq!(st.served, n_req);
+    assert!(
+        st.batches < n_req,
+        "queue never coalesced: {} batches for {n_req} requests",
+        st.batches
+    );
+    drop(server); // joins executors; must not hang
+}
+
+#[test]
+fn registry_loads_each_checkpoint_once() {
+    let (manifest, model) = tiny_plain_cnn(99);
+    let mut rng = Rng::new(100);
+    let calib = images(&mut rng, 16);
+    let (packed, act, qmodel) = quantize_synthetic(&manifest, &model, 4, 8, &calib);
+    let path = tmp("registry.cqm");
+    save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act)).unwrap();
+
+    let a = load_cached(&manifest, "tiny_plain", &path).unwrap();
+    let b = load_cached(&manifest, "tiny_plain", &path).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "second load must hit the registry");
+    assert!(comq::serve::registry_len() >= 1);
+    assert_eq!(a.int8_layers(), model.info.quant_layers.len());
+    assert_eq!(a.weight_bits(), 4);
+    match a.act_source() {
+        ActSource::Static { bits, .. } => assert_eq!(*bits, 8),
+        other => panic!("expected static act source, got {other:?}"),
+    }
+    // the serving working set undercuts the f32 weights it replaces
+    let fp32: usize = model.info.quant_layers.iter().map(|l| 4 * l.m * l.n).sum();
+    assert!(a.resident_bytes() < fp32, "{} vs {fp32}", a.resident_bytes());
+}
+
+#[test]
+fn dynamic_act_fallback_when_no_grid_stored() {
+    let (manifest, model) = tiny_plain_cnn(123);
+    let mut rng = Rng::new(124);
+    let calib = images(&mut rng, 16);
+    let (packed, _act, qmodel) = quantize_synthetic(&manifest, &model, 4, 8, &calib);
+    let path = tmp("no_act.cqm");
+    save_packed(&path, &qmodel, &packed, 4).unwrap();
+
+    let ck = read_packed(&path).unwrap();
+    assert!(ck.act.is_none(), "save_packed must not invent an act grid");
+    let qm = QuantizedModel::load(&manifest, "tiny_plain", &path).unwrap();
+    match qm.act_source() {
+        ActSource::Dynamic { bits } => assert_eq!(*bits, comq::serve::DEFAULT_ACT_BITS),
+        other => panic!("expected dynamic fallback, got {other:?}"),
+    }
+    let y = qm.forward(&images(&mut rng, 3));
+    assert_eq!(y.shape(), &[3, manifest.classes]);
+    assert!(y.data().iter().all(|v| v.is_finite()));
+}
