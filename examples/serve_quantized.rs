@@ -108,6 +108,10 @@ fn main() -> Result<()> {
 
     // 2c. integer runtime behind the micro-batcher: b concurrent singles
     //     per wave, coalesced back into full batches by the queue.
+    println!(
+        "int8 GEMM kernel: {} (runtime-detected; force with COMQ_KERNEL=scalar|avx2|vnni)",
+        comq::serve::Kernel::active().name()
+    );
     let act_src = match &out.act {
         Some(a) => ActSource::Static { bits: a.bits, by_layer: a.by_layer.clone() },
         None => ActSource::Dynamic { bits: comq::serve::DEFAULT_ACT_BITS },

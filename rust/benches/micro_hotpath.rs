@@ -16,7 +16,8 @@
 use comq::bench::{time_budget, Report, Table};
 use comq::quant::grid::Scheme;
 use comq::quant::{comq_gram, comq_residual, comq_workspace, GramSet, OrderKind, QuantConfig};
-use comq::tensor::{matmul_at_a, Tensor};
+use comq::tensor::{matmul, matmul_at_a, Tensor};
+use comq::util::simd::Kernel;
 use comq::util::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -32,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     // -- engine comparison across (b, m, n) ------------------------------
     let mut table = Table::new(
         "micro — COMQ engines, ns per coordinate-update (K=3)",
-        &["shape (b,m,n)", "residual ns/coord", "gram ns/coord", "workspace ns/coord", "ws vs gram"],
+        &["shape (b,m,n)", "kernel", "residual ns/coord", "gram ns/coord", "workspace ns/coord", "ws vs gram"],
     );
     for &(b, m, n) in &[
         (256usize, 48usize, 96usize),
@@ -58,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         });
         table.row(vec![
             format!("({b},{m},{n})"),
+            Kernel::active().name().to_string(),
             format!("{:.1}", t_res.mean * 1e9 / coords),
             format!("{:.1}", t_gram.mean * 1e9 / coords),
             format!("{:.1}", t_ws.mean * 1e9 / coords),
@@ -66,6 +68,49 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     table.save_json("micro_engines");
+    report.add(&table);
+
+    // -- f32 matmul kernel sweep -----------------------------------------
+    // the packed matmul is the calibration + fake-quant workhorse; time
+    // it per dispatched kernel via the COMQ_KERNEL override (same knob
+    // CI pins), skipping kernels the host lacks
+    let mut table = Table::new(
+        "micro — f32 packed matmul kernel sweep (forced dispatch)",
+        &["shape (m,k,n)", "kernel", "ms", "GFLOP/s"],
+    );
+    // preserve any caller pin (e.g. `COMQ_KERNEL=scalar cargo bench`) so
+    // the tables after this sweep still run on the kernel the user chose
+    let pinned = std::env::var("COMQ_KERNEL").ok();
+    for &(m, k, n) in &[(256usize, 192usize, 384usize), (512, 768, 768)] {
+        let mut rng = Rng::new(5);
+        let a = Tensor::new(&[m, k], rng.normal_vec(m * k));
+        let b = Tensor::new(&[k, n], rng.normal_vec(k * n));
+        // Vnni is skipped: the f32 path has no separate AVX-512 kernel
+        // (it shares AVX2/FMA), so its row would duplicate avx2
+        for kern in [Kernel::Scalar, Kernel::Avx2] {
+            if !kern.supported() {
+                println!("[f32 kernel sweep: {} unsupported, skipped]", kern.name());
+                continue;
+            }
+            std::env::set_var("COMQ_KERNEL", kern.name());
+            let t = time_budget(0.3, 200, || {
+                std::hint::black_box(matmul(&a, &b));
+            });
+            let flops = 2.0 * m as f64 * k as f64 * n as f64;
+            table.row(vec![
+                format!("({m},{k},{n})"),
+                kern.name().to_string(),
+                format!("{:.3}", t.mean * 1e3),
+                format!("{:.2}", flops / t.mean / 1e9),
+            ]);
+        }
+    }
+    match &pinned {
+        Some(v) => std::env::set_var("COMQ_KERNEL", v),
+        None => std::env::remove_var("COMQ_KERNEL"),
+    }
+    table.print();
+    table.save_json("micro_f32_kernels");
     report.add(&table);
 
     // -- Gram build throughput -------------------------------------------

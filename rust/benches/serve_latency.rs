@@ -21,7 +21,7 @@ use comq::model::Tap;
 use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
 use comq::quant::actq::ActQuant;
 use comq::quant::grid::LayerQuant;
-use comq::serve::{ActSource, BatchConfig, Int8Panel, QuantizedModel, Server};
+use comq::serve::{ActSource, BatchConfig, Int8Panel, Kernel, QuantizedModel, Server};
 use comq::tensor::{matmul, Tensor};
 use comq::util::{stats, Rng, Timer};
 
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     // -- i8 GEMM vs f32 matmul at serving shapes -------------------------
     let mut table = Table::new(
         "serve — layer GEMM, f32 native vs i8 fused-dequant",
-        &["shape (m,n)", "batch", "f32 ms", "int8 ms", "speedup", "B bytes f32", "B bytes i8"],
+        &["shape (m,n)", "batch", "kernel", "f32 ms", "int8 ms", "speedup", "B bytes f32", "B bytes i8"],
     );
     for &(m, n) in &[(192usize, 384usize), (768, 768), (768, 3072), (3072, 768)] {
         let mut rng = Rng::new(1);
@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
             table.row(vec![
                 format!("({m},{n})"),
                 rows.to_string(),
+                Kernel::active().name().to_string(),
                 format!("{:.3}", t_f32.mean * 1e3),
                 format!("{:.3}", t_i8.mean * 1e3),
                 format!("{:.2}x", t_f32.mean / t_i8.mean),
@@ -72,6 +73,52 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     table.save_json("serve_gemm");
+    report.add(&table);
+
+    // -- i8 GEMM per-kernel sweep ----------------------------------------
+    // dispatch forced through the COMQ_KERNEL override (the same knob
+    // CI pins); unsupported kernels are reported and skipped
+    let mut table = Table::new(
+        "serve — i8 GEMM kernel sweep (W8A8, forced dispatch)",
+        &["shape (m,n)", "batch", "kernel", "int8 ms", "GIOP/s"],
+    );
+    // preserve any caller pin (e.g. `COMQ_KERNEL=scalar cargo bench`) so
+    // the end-to-end tables below still run on the kernel the user chose
+    let pinned = std::env::var("COMQ_KERNEL").ok();
+    for &(m, n) in &[(768usize, 768usize), (768, 3072)] {
+        let mut rng = Rng::new(2);
+        let pl = random_packed(&mut rng, m, n, 8);
+        let panel = Int8Panel::from_packed(&pl)?;
+        let bias = vec![0.0f32; n];
+        for &rows in &[1usize, 32] {
+            let x = Tensor::new(&[rows, m], rng.normal_vec(rows * m));
+            let aq = ActQuant::from_range(x.min(), x.max(), 8, 1.0);
+            for kern in Kernel::ALL {
+                if !kern.supported() {
+                    println!("[kernel sweep: {} unsupported on this host, skipped]", kern.name());
+                    continue;
+                }
+                std::env::set_var("COMQ_KERNEL", kern.name());
+                let t = time_budget(0.3, 400, || {
+                    std::hint::black_box(panel.matmul_i8(&x, aq, Some(&bias)));
+                });
+                let ops = 2.0 * rows as f64 * m as f64 * n as f64;
+                table.row(vec![
+                    format!("({m},{n})"),
+                    rows.to_string(),
+                    kern.name().to_string(),
+                    format!("{:.3}", t.mean * 1e3),
+                    format!("{:.2}", ops / t.mean / 1e9),
+                ]);
+            }
+        }
+    }
+    match &pinned {
+        Some(v) => std::env::set_var("COMQ_KERNEL", v),
+        None => std::env::remove_var("COMQ_KERNEL"),
+    }
+    table.print();
+    table.save_json("serve_kernels");
     report.add(&table);
 
     // -- end-to-end model latency percentiles ----------------------------
@@ -89,13 +136,14 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(
         "serve — end-to-end forward latency (tiny_plain, W4A8)",
-        &["path", "batch", "p50 ms", "p95 ms", "p99 ms", "img/s"],
+        &["path", "batch", "kernel", "p50 ms", "p95 ms", "p99 ms", "img/s"],
     );
     let percentile_row =
         |table: &mut Table, label: &str, batch: usize, lat: &[f64]| {
             table.row(vec![
                 label.to_string(),
                 batch.to_string(),
+                Kernel::active().name().to_string(),
                 format!("{:.3}", stats::quantile(lat, 0.5) * 1e3),
                 format!("{:.3}", stats::quantile(lat, 0.95) * 1e3),
                 format!("{:.3}", stats::quantile(lat, 0.99) * 1e3),

@@ -1,0 +1,33 @@
+//! Probe the toolchain for AVX-512 intrinsics support.
+//!
+//! The VNNI serving kernel (`util/simd.rs`) uses `vpdpbusd` through the
+//! `std::arch` AVX-512 intrinsics, which are stable only from rustc
+//! 1.89. Compiling them unconditionally would break older toolchains,
+//! so the kernel is gated behind a `comq_avx512` cfg emitted here; when
+//! the cfg is absent the dispatcher reports the kernel as unsupported
+//! and runtime dispatch falls through to AVX2/scalar.
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Older cargos treat unknown `cargo:` keys as inert metadata, so
+    // declaring the custom cfg unconditionally is safe everywhere.
+    println!("cargo:rustc-check-cfg=cfg(comq_avx512)");
+    if std::env::var("CARGO_CFG_TARGET_ARCH").as_deref() != Ok("x86_64") {
+        return;
+    }
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let out = match Command::new(&rustc).arg("--version").output() {
+        Ok(o) if o.status.success() => String::from_utf8_lossy(&o.stdout).into_owned(),
+        _ => return,
+    };
+    // "rustc 1.89.0 (...)" — parse major.minor, tolerate -nightly tails
+    let Some(ver) = out.split_whitespace().nth(1) else { return };
+    let mut parts = ver.split(|c: char| !c.is_ascii_digit());
+    let major: u32 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    let minor: u32 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    if major > 1 || (major == 1 && minor >= 89) {
+        println!("cargo:rustc-cfg=comq_avx512");
+    }
+}

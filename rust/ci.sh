@@ -10,7 +10,17 @@ cargo build --release
 # nothing runs them (they bit-rotted silently before PR 3)
 cargo build --release --examples
 cargo bench --no-run
+# twice: once with runtime-detected SIMD kernels (the default), once
+# with dispatch pinned to the portable reference — the parity tests
+# compare kernels directly, but the whole suite must also pass when
+# every GEMM runs scalar (what a non-AVX host sees)
 cargo test -q
+COMQ_KERNEL=scalar cargo test -q
+# the intrinsics paths must not bit-rot uncompiled: a target-cpu=native
+# build exercises the target_feature functions plus whatever the
+# autovectorizer now assumes, in a separate target dir so the cache of
+# the portable build survives
+RUSTFLAGS="-C target-cpu=native" cargo build --release --target-dir target/native
 
 if command -v rustfmt >/dev/null 2>&1; then
     cargo fmt --check

@@ -1,73 +1,104 @@
-//! The integer serving GEMM: `i8 × i8 → i32` with the dequantization
-//! epilogue fused into the accumulator drain.
+//! The integer serving GEMM: `u8 × i8 → i32` with the dequantization
+//! epilogue fused into the accumulator drain, over runtime-dispatched
+//! SIMD micro-kernels (`util::simd`).
 //!
-//! Both operands are *centered* codes: activations store `qa − 2^(ab−1)`
-//! and weights store `u − 2^(b−1)`, so every value fits i8 for any bit
-//! width ≤ 8 and the products stay well inside i32 (|a·w| ≤ 2^14; the
-//! k extent would need to reach 2^17 to overflow, far beyond any layer
-//! here — asserted anyway). The centering offsets are exact integers, so
-//! the epilogue can reconstruct the *exact* uncentered integer sum
+//! Activations carry their *uncentered* unsigned codes `qa ∈ [0, 2^ab)`
+//! and weights their *centered* codes `u − 2^(b−1) ∈ i8` — the operand
+//! signedness `vpmaddubsw`/`vpdpbusd` demand (unsigned × signed). The
+//! products stay well inside i32: |qa·s| ≤ 2^8·2^7 = 2^15, so the k
+//! extent would need to reach 2^16 to overflow — far beyond any layer
+//! here, rejected at weight prep and asserted again below. All offsets
+//! are exact integers, so the epilogue reconstructs the exact
+//! uncentered integer sum
 //!
 //! ```text
 //! Σ_i (qa_i + z_a)(u_ij + z_j)
-//!   = dot_ij + (c_w + z_j)·rowsum_i + (c_a + z_a)·colsum_j
-//!     + m·(c_a + z_a)·(c_w + z_j)
+//!   = dot_ij + (c_w + z_j)·rowsum_i + z_a·(colsum_j + m·(c_w + z_j))
 //! ```
 //!
-//! in f64 (all terms are integers < 2^53) and scale once by
+//! in f64 (every term an integer < 2^53) and scales once by
 //! `δ_a · δ_j`, giving bit-faithful agreement with the fake-quant f32
-//! reference up to a single final rounding. `rowsum` comes free during
-//! activation quantization; `colsum` is precomputed at weight prep.
+//! reference up to a single final rounding. `rowsum` (of the unsigned
+//! codes) comes free during activation quantization; `colsum` (of the
+//! centered weight codes) is precomputed at weight prep. `c_w = 2^(b−1)`
+//! is the weight centering, folded here so the panel can stay signed.
 //!
 //! The kernel reuses the MR×NR register tiling of `tensor/matmul.rs`
-//! (same strip-packed B layout, i8 instead of f32 — one B strip is a
-//! quarter the bytes, which is the whole bandwidth win on batch-1
-//! serving) and the same persistent-pool parallelism, splitting over
-//! row blocks when the batch can feed the pool and over column strips
-//! when it can't (batch-1).
+//! with the B strips K4-interleaved (k in groups of 4 adjacent bytes —
+//! the layout `vpdpbusd` and `vpmaddubsw` consume; one group row is 64
+//! bytes, a single cache line). One panel layout serves every kernel,
+//! so a model prepped under one `COMQ_KERNEL` can be re-benched under
+//! another without re-packing. An i8 strip is still a quarter the f32
+//! bytes, which is the whole bandwidth win on batch-1 serving; the same
+//! persistent-pool parallelism splits over row blocks when the batch
+//! can feed the pool and over column strips when it can't (batch-1).
 
 use crate::quant::actq::ActQuant;
 use crate::tensor::{Tensor, MR, NR};
 use crate::util::pool::{parallel_ranges, SendPtr};
+use crate::util::simd::{self, Kernel, K4};
 
-/// At this k extent the worst-case i32 sum hits exactly 2^31 (2^17 ·
-/// 2^14) and overflows, so the guard is strict. Weight prep
+/// At this k extent the worst-case i32 sum hits exactly 2^31
+/// (2^16 · 2^15) and overflows, so the guard is strict. Weight prep
 /// (`Int8Panel::from_packed`) rejects such layers at build time; the
-/// assert below is the backstop for direct kernel callers.
-pub(crate) const MAX_K: usize = 1 << 17;
+/// assert below is the backstop for direct kernel callers. (Half the
+/// old centered-i8 bound: the unsigned activation operand doubled the
+/// per-product magnitude.)
+pub(crate) const MAX_K: usize = 1 << 16;
 const MIN_OPS_PER_THREAD: usize = 1 << 20;
 
-/// A batch of activations quantized to centered i8 codes, plus the
+/// Below this many elements, activation quantization runs inline — the
+/// per-element cost is a few ns, so small batches can't amortize a pool
+/// hand-off.
+const QUANT_MIN_ELEMS_PER_THREAD: usize = 1 << 14;
+
+/// A batch of activations quantized to uncentered u8 codes, plus the
 /// per-row code sums the epilogue needs.
 pub struct QuantizedActs {
-    /// Centered codes `qa − 2^(bits−1)`, row-major [rows, m].
-    pub codes: Vec<i8>,
-    /// Per-row sum of centered codes.
+    /// Unsigned codes `qa ∈ [0, 2^bits)`, row-major [rows, stride] with
+    /// `stride = m` rounded up to the K4 group width; the pad bytes are
+    /// zero (and the matching panel k-pad is zero, so padded products
+    /// vanish from every kernel identically).
+    pub codes: Vec<u8>,
+    /// Per-row sum of the unsigned codes.
     pub rsum: Vec<i32>,
     pub rows: usize,
+    /// True k extent (columns of the source input).
     pub m: usize,
+    /// Row stride of `codes` in bytes: `m.div_ceil(4) * 4`.
+    pub stride: usize,
     pub aq: ActQuant,
 }
 
 impl QuantizedActs {
     /// Quantize a 2-D input [rows, m] with the given activation grid.
+    /// Rows are split over the persistent pool above a size threshold —
+    /// each row writes a disjoint `codes` stripe and `rsum` slot, the
+    /// pool's `SendPtr` contract — so batch serving no longer pays a
+    /// serial pre-GEMM quantization tax.
     pub fn quantize(x: &Tensor, aq: ActQuant) -> QuantizedActs {
         assert!(aq.bits >= 1 && aq.bits <= 8, "activation bits {} not in 1..=8", aq.bits);
         let (rows, m) = (x.rows(), x.cols());
-        let center = (1i32 << (aq.bits - 1)) as f32;
-        let mut codes = vec![0i8; rows * m];
+        let stride = m.div_ceil(K4) * K4;
+        let mut codes = vec![0u8; rows * stride];
         let mut rsum = vec![0i32; rows];
-        for (r, (crow, rs)) in codes.chunks_exact_mut(m).zip(&mut rsum).enumerate() {
-            let xrow = x.row(r);
-            let mut acc = 0i32;
-            for (c, &v) in crow.iter_mut().zip(xrow) {
-                let s = (aq.code(v) - center) as i32;
-                *c = s as i8;
-                acc += s;
+        let cptr = SendPtr::new(codes.as_mut_ptr());
+        let rptr = SendPtr::new(rsum.as_mut_ptr());
+        let min_rows = (QUANT_MIN_ELEMS_PER_THREAD / m.max(1)).max(1);
+        parallel_ranges(rows, min_rows, |_, rr| {
+            for r in rr {
+                // disjoint per-row stripes; pad bytes stay zero
+                let crow = unsafe { std::slice::from_raw_parts_mut(cptr.ptr().add(r * stride), m) };
+                let mut acc = 0i32;
+                for (c, &v) in crow.iter_mut().zip(x.row(r)) {
+                    let q = aq.code(v) as i32;
+                    *c = q as u8;
+                    acc += q;
+                }
+                unsafe { *rptr.ptr().add(r) = acc };
             }
-            *rs = acc;
-        }
-        QuantizedActs { codes, rsum, rows, m, aq }
+        });
+        QuantizedActs { codes, rsum, rows, m, stride, aq }
     }
 }
 
@@ -76,41 +107,69 @@ impl QuantizedActs {
 pub struct EpilogueCoeffs {
     /// δ_a · δ_j — the only non-integer factor.
     pub scale: Vec<f64>,
-    /// c_w + z_j — multiplies the per-row code sum.
+    /// c_w + z_j — multiplies the per-row unsigned code sum.
     pub zc: Vec<f64>,
-    /// (c_a + z_a)·(colsum_j + m·(c_w + z_j)) — the row-independent term.
+    /// z_a·(colsum_j + m·(c_w + z_j)) — the row-independent term.
     pub fixed: Vec<f64>,
     /// Layer bias, added after scaling.
     pub bias: Vec<f64>,
 }
 
-/// Pack centered codes [k, n] row-major into column strips of width NR,
-/// k-contiguous and zero-padded on the last strip — the i8 twin of
-/// `tensor::matmul::pack_b`, done once at weight prep.
-pub(crate) fn pack_panel_i8(s: &[i8], k: usize, n: usize) -> Vec<i8> {
+/// Pack centered codes [k, n] row-major into K4-interleaved column
+/// strips of width NR: within strip `s`, group `g` holds the `NR × 4`
+/// bytes `panel[(g·NR + l)·4 + t] = s[(4g + t)·n + (s·NR + l)]`,
+/// zero-padded in both the last strip and the last k group. Done once
+/// at weight prep; the layout feeds every kernel (see `util::simd`).
+pub fn pack_panel_k4(s: &[i8], k: usize, n: usize) -> Vec<i8> {
     assert_eq!(s.len(), k * n);
     let n_strips = n.div_ceil(NR);
-    let mut panel = vec![0i8; n_strips * k * NR];
+    let kg = k.div_ceil(K4);
+    let mut panel = vec![0i8; n_strips * kg * NR * K4];
     for strip in 0..n_strips {
         let j0 = strip * NR;
         let cols = NR.min(n - j0);
+        let base = strip * kg * NR * K4;
         for kk in 0..k {
+            let (g, t) = (kk / K4, kk % K4);
             let src = &s[kk * n + j0..kk * n + j0 + cols];
-            panel[strip * k * NR + kk * NR..strip * k * NR + kk * NR + cols].copy_from_slice(src);
+            for (l, &v) in src.iter().enumerate() {
+                panel[base + (g * NR + l) * K4 + t] = v;
+            }
         }
     }
     panel
 }
 
 /// y[r][j] = scale_j·(dot_rj + zc_j·rsum_r + fixed_j) + bias_j over a
-/// strip-packed i8 weight panel. `out` [rows, n] is fully overwritten.
+/// K4-packed i8 weight panel, with the micro-kernel chosen by
+/// [`Kernel::active`] (CPU detection + `COMQ_KERNEL` override). `wbits`
+/// is the panel's source code width — it sizes the AVX2 saturation
+/// guard. `out` [rows, n] is fully overwritten.
 pub fn gemm_i8_fused(
     a: &QuantizedActs,
     panel: &[i8],
     n: usize,
+    wbits: u32,
     co: &EpilogueCoeffs,
     out: &mut [f32],
 ) {
+    gemm_i8_fused_with(Kernel::active(), a, panel, n, wbits, co, out)
+}
+
+/// [`gemm_i8_fused`] with the kernel forced — the benching/testing
+/// entry that bypasses detection and the env override.
+pub fn gemm_i8_fused_with(
+    kern: Kernel,
+    a: &QuantizedActs,
+    panel: &[i8],
+    n: usize,
+    wbits: u32,
+    co: &EpilogueCoeffs,
+    out: &mut [f32],
+) {
+    // resolve the defensive unsupported-kernel fallback once per call,
+    // so every per-tile dispatch below takes its guarded arm
+    let kern = if kern.supported() { kern } else { Kernel::Scalar };
     let (rows, k) = (a.rows, a.m);
     assert!(k < MAX_K, "k={k} would overflow the i32 accumulator");
     assert_eq!(out.len(), rows * n);
@@ -121,8 +180,11 @@ pub fn gemm_i8_fused(
     if rows == 0 || n == 0 {
         return;
     }
+    let kg = k.div_ceil(K4);
+    let strip_len = kg * NR * K4;
     let n_strips = n.div_ceil(NR);
-    assert_eq!(panel.len(), n_strips * k * NR, "panel not packed for [{k}, {n}]");
+    assert_eq!(panel.len(), n_strips * strip_len, "panel not K4-packed for [{k}, {n}]");
+    let wide = !simd::maddubs_safe(a.aq.bits, wbits);
     let row_blocks = rows.div_ceil(MR);
     let out_ptr = SendPtr::new(out.as_mut_ptr());
     if row_blocks < crate::util::pool::num_threads() && n_strips > row_blocks {
@@ -133,13 +195,13 @@ pub fn gemm_i8_fused(
         parallel_ranges(n_strips, min_strips, |_, strips| {
             let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.ptr(), rows * n) };
             for s in strips {
-                let strip = &panel[s * k * NR..(s + 1) * k * NR];
+                let strip = &panel[s * strip_len..(s + 1) * strip_len];
                 let j0 = s * NR;
                 let cols = NR.min(n - j0);
                 for blk in 0..row_blocks {
                     let i0 = blk * MR;
                     let rmax = MR.min(rows - i0);
-                    micro_i8(a, strip, out, i0, rmax, j0, cols, k, n, co);
+                    micro_i8(kern, a, strip, kg, wide, out, i0, rmax, j0, cols, n, co);
                 }
             }
         });
@@ -148,47 +210,42 @@ pub fn gemm_i8_fused(
     let min_blocks = (MIN_OPS_PER_THREAD / (2 * k * n * MR).max(1)).max(1);
     parallel_ranges(row_blocks, min_blocks, |_, blocks| {
         let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.ptr(), rows * n) };
-        // strip-outer order keeps one i8 strip (k×NR bytes) hot across
+        // strip-outer order keeps one i8 strip (kg×64 bytes) hot across
         // this thread's row blocks, same as the f32 kernel
         for s in 0..n_strips {
-            let strip = &panel[s * k * NR..(s + 1) * k * NR];
+            let strip = &panel[s * strip_len..(s + 1) * strip_len];
             let j0 = s * NR;
             let cols = NR.min(n - j0);
             for blk in blocks.clone() {
                 let i0 = blk * MR;
                 let rmax = MR.min(rows - i0);
-                micro_i8(a, strip, out, i0, rmax, j0, cols, k, n, co);
+                micro_i8(kern, a, strip, kg, wide, out, i0, rmax, j0, cols, n, co);
             }
         }
     });
 }
 
-/// MR×NR i8 micro-kernel with fused dequant drain.
+/// One MR×NR tile: dispatched integer dot (`util::simd::dot_i8`) plus
+/// the fused dequant drain. The drain is identical for every kernel, so
+/// bit-identical accumulators give bit-identical f32 outputs.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn micro_i8(
+    kern: Kernel,
     a: &QuantizedActs,
     strip: &[i8],
+    kg: usize,
+    wide: bool,
     out: &mut [f32],
     i0: usize,
     rmax: usize,
     j0: usize,
     cols: usize,
-    k: usize,
     n: usize,
     co: &EpilogueCoeffs,
 ) {
-    let codes = &a.codes;
     let mut acc = [[0i32; NR]; MR];
-    for kk in 0..k {
-        let brow = &strip[kk * NR..kk * NR + NR];
-        for (r, accr) in acc.iter_mut().take(rmax).enumerate() {
-            let av = codes[(i0 + r) * k + kk] as i32;
-            for l in 0..NR {
-                accr[l] += av * brow[l] as i32;
-            }
-        }
-    }
+    simd::dot_i8(kern, &a.codes[i0 * a.stride..], a.stride, rmax, strip, kg, wide, &mut acc);
     for (r, accr) in acc.iter().take(rmax).enumerate() {
         let rs = a.rsum[i0 + r] as f64;
         let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
@@ -210,29 +267,54 @@ mod tests {
         let mut rng = Rng::new(5);
         let x = Tensor::new(&[3, 17], rng.normal_vec(51));
         let qa = QuantizedActs::quantize(&x, aq);
-        assert_eq!(qa.codes.len(), 51);
+        assert_eq!(qa.stride, 20, "17 rounds up to the K4 group width");
+        assert_eq!(qa.codes.len(), 3 * 20);
         for r in 0..3 {
-            let want: i32 = qa.codes[r * 17..(r + 1) * 17].iter().map(|&c| c as i32).sum();
+            let row = &qa.codes[r * qa.stride..(r + 1) * qa.stride];
+            let want: i32 = row.iter().map(|&c| c as i32).sum();
             assert_eq!(qa.rsum[r], want);
-            // centered code + center reproduces the unsigned code
-            for (c, &v) in qa.codes[r * 17..(r + 1) * 17].iter().zip(x.row(r)) {
-                assert_eq!((*c as i32 + 128) as f32, aq.code(v));
+            // stored codes are the unsigned grid codes, pad is zero
+            for (c, &v) in row.iter().zip(x.row(r)) {
+                assert_eq!(*c as f32, aq.code(v));
             }
+            assert!(row[17..].iter().all(|&c| c == 0), "pad bytes must stay zero");
         }
     }
 
     #[test]
-    fn panel_layout_matches_pack_b() {
-        // pack the same values through the f32 packer and compare
+    fn quantize_parallel_matches_inline() {
+        // large enough to cross QUANT_MIN_ELEMS_PER_THREAD: the split
+        // path must produce the same codes as the inline path
+        let aq = ActQuant::from_range(-3.0, 3.0, 8, 1.0);
+        let mut rng = Rng::new(9);
+        let (rows, m) = (64, 1024);
+        let x = Tensor::new(&[rows, m], rng.normal_vec(rows * m));
+        let qa = QuantizedActs::quantize(&x, aq);
+        for r in 0..rows {
+            let row = &qa.codes[r * qa.stride..r * qa.stride + m];
+            for (c, &v) in row.iter().zip(x.row(r)) {
+                assert_eq!(*c as f32, aq.code(v));
+            }
+            assert_eq!(qa.rsum[r], row.iter().map(|&c| c as i32).sum::<i32>());
+        }
+    }
+
+    #[test]
+    fn k4_panel_layout() {
         let mut rng = Rng::new(6);
-        for &(k, n) in &[(3usize, 5usize), (7, 16), (4, 33), (1, 1)] {
+        for &(k, n) in &[(3usize, 5usize), (7, 16), (4, 33), (1, 1), (8, 16)] {
             let s: Vec<i8> = (0..k * n).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
-            let sf: Vec<f32> = s.iter().map(|&v| v as f32).collect();
-            let pi = pack_panel_i8(&s, k, n);
-            let pf = crate::tensor::pack_b(&sf, k, n);
-            assert_eq!(pi.len(), pf.len(), "({k},{n})");
-            for (a, b) in pi.iter().zip(&pf) {
-                assert_eq!(*a as f32, *b, "({k},{n})");
+            let panel = pack_panel_k4(&s, k, n);
+            let kg = k.div_ceil(K4);
+            assert_eq!(panel.len(), n.div_ceil(NR) * kg * NR * K4, "({k},{n})");
+            for kk in 0..kg * K4 {
+                let (g, t) = (kk / K4, kk % K4);
+                for j in 0..n.div_ceil(NR) * NR {
+                    let (strip, l) = (j / NR, j % NR);
+                    let got = panel[strip * kg * NR * K4 + (g * NR + l) * K4 + t];
+                    let want = if kk < k && j < n { s[kk * n + j] } else { 0 };
+                    assert_eq!(got, want, "({k},{n}) kk={kk} j={j}");
+                }
             }
         }
     }
@@ -255,7 +337,7 @@ mod tests {
             let acts = QuantizedActs::quantize(&x, aq);
 
             // epilogue coefficients straight from the derivation
-            let ca = 128.0f64 + aq.zero as f64;
+            let za = aq.zero as f64;
             let mut csum = vec![0i64; n];
             for (idx, &v) in s.iter().enumerate() {
                 csum[idx % n] += v as i64;
@@ -264,13 +346,13 @@ mod tests {
                 scale: delta.iter().map(|&d| aq.scale as f64 * d as f64).collect(),
                 zc: zero.iter().map(|&z| cw as f64 + z as f64).collect(),
                 fixed: (0..n)
-                    .map(|j| ca * (csum[j] as f64 + k as f64 * (cw as f64 + zero[j] as f64)))
+                    .map(|j| za * (csum[j] as f64 + k as f64 * (cw as f64 + zero[j] as f64)))
                     .collect(),
                 bias: bias.iter().map(|&b| b as f64).collect(),
             };
-            let panel = pack_panel_i8(&s, k, n);
+            let panel = pack_panel_k4(&s, k, n);
             let mut y = vec![0.0f32; rows * n];
-            gemm_i8_fused(&acts, &panel, n, &co, &mut y);
+            gemm_i8_fused(&acts, &panel, n, wbits, &co, &mut y);
 
             // reference: fake-quant x, dequantize w, f64 matmul
             for r in 0..rows {
@@ -299,7 +381,7 @@ mod tests {
             fixed: vec![0.0; 2],
             bias: vec![0.0; 2],
         };
-        let panel = pack_panel_i8(&[0i8; 8], 4, 2);
-        gemm_i8_fused(&acts, &panel, 2, &co, &mut []);
+        let panel = pack_panel_k4(&[0i8; 8], 4, 2);
+        gemm_i8_fused(&acts, &panel, 2, 4, &co, &mut []);
     }
 }

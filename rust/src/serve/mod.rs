@@ -6,13 +6,17 @@
 //! matmuls — correct, but none of the compute/bandwidth win the codes
 //! exist for. This subsystem is the other half:
 //!
-//! * `packed`  — one-time weight prep: b-bit bitstream → strip-packed
-//!   centered-i8 panel (the MR×NR layout of `tensor/matmul.rs`, a
-//!   quarter the bytes of f32) + per-column integer sums;
-//! * `gemm`    — the `i8×i8→i32` register-tiled GEMM with the
+//! * `packed`  — one-time weight prep: b-bit bitstream → K4-interleaved
+//!   strip-packed centered-i8 panel (the MR×NR blocking of
+//!   `tensor/matmul.rs` with k in groups of 4, a quarter the bytes of
+//!   f32) + per-column integer sums;
+//! * `gemm`    — the `u8×i8→i32` register-tiled GEMM with the
 //!   per-column `(δ, z)` weight dequant and `(scale, zero)` activation
 //!   grid folded into the epilogue, parallelized over the persistent
-//!   worker pool;
+//!   worker pool and executed by a runtime-dispatched SIMD micro-kernel
+//!   (`util::simd`: AVX-512 VNNI `vpdpbusd` / AVX2 `vpmaddubsw` /
+//!   scalar reference, forced via `COMQ_KERNEL=scalar|avx2|vnni`; all
+//!   three produce bit-identical i32 accumulators);
 //! * `model`   — `QuantizedModel` (routes quantizable linears through
 //!   the GEMM via `model::LayerExec`) and the process-wide load-once
 //!   registry, the serving analogue of `runtime::Engine`'s compile
@@ -30,6 +34,8 @@ pub mod model;
 pub mod packed;
 
 pub use batcher::{BatchConfig, ServeStats, Server};
-pub use gemm::{gemm_i8_fused, EpilogueCoeffs, QuantizedActs};
+pub use gemm::{gemm_i8_fused, gemm_i8_fused_with, EpilogueCoeffs, QuantizedActs};
 pub use model::{load_cached, registry_len, ActSource, QuantizedModel, DEFAULT_ACT_BITS};
 pub use packed::Int8Panel;
+
+pub use crate::util::simd::Kernel;

@@ -56,15 +56,26 @@ pub struct Int8Layer {
 }
 
 impl Int8Layer {
-    /// y = x@W + b entirely in integer arithmetic (x [rows, m]).
-    /// `aq` is only consulted on the dynamic path; the static path uses
-    /// the grid the coefficients were built from.
+    /// y = x@W + b entirely in integer arithmetic (x [rows, m]),
+    /// through whichever SIMD kernel `util::simd::Kernel::active`
+    /// dispatches for this call (the K4 panel layout is
+    /// kernel-independent, so `COMQ_KERNEL` can change between
+    /// requests without re-prepping). `aq` is only consulted on the
+    /// dynamic path; the static path uses the grid the coefficients
+    /// were built from.
     fn forward(&self, x: &Tensor, aq: ActQuant) -> Tensor {
         match &self.static_co {
             Some((saq, co)) => {
                 let acts = QuantizedActs::quantize(x, *saq);
                 let mut out = Tensor::zeros(&[x.rows(), self.panel.n]);
-                gemm_i8_fused(&acts, self.panel.panel(), self.panel.n, co, out.data_mut());
+                gemm_i8_fused(
+                    &acts,
+                    self.panel.panel(),
+                    self.panel.n,
+                    self.panel.bits,
+                    co,
+                    out.data_mut(),
+                );
                 out
             }
             None => self.panel.matmul_i8(x, aq, self.bias.as_deref()),

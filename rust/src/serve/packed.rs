@@ -1,18 +1,22 @@
 //! One-time weight prep: expand a `.cqm` layer's b-bit bitstream into
-//! the strip-packed centered-i8 panel the serving GEMM streams, plus the
-//! per-column integer sums and grid scalars its epilogue folds in.
+//! the K4-interleaved centered-i8 panel the serving GEMM streams, plus
+//! the per-column integer sums and grid scalars its epilogue folds in.
 //!
 //! This is the only place codes are expanded, and they expand to i8 —
 //! never to f32. An 8-bit panel is 4× smaller than the f32 weight
 //! matrix, a 4-bit-sourced panel still 4× (codes widen to i8 for the
 //! multiplier), so the serving working set stays a quarter of what
-//! `eval::forward_native` touches per layer.
+//! `eval::forward_native` touches per layer. The layout (k interleaved
+//! in groups of 4 — see `serve::gemm::pack_panel_k4` and `util::simd`)
+//! is kernel-independent: a panel packed here once serves the scalar,
+//! AVX2 and VNNI kernels alike, so flipping `COMQ_KERNEL` at runtime
+//! never forces a re-prep.
 
 use anyhow::{bail, Result};
 
 use crate::deploy::PackedLayer;
 use crate::quant::actq::ActQuant;
-use crate::serve::gemm::{gemm_i8_fused, pack_panel_i8, EpilogueCoeffs, QuantizedActs};
+use crate::serve::gemm::{gemm_i8_fused, pack_panel_k4, EpilogueCoeffs, QuantizedActs};
 use crate::tensor::Tensor;
 
 /// A layer's weights prepped for integer execution.
@@ -23,7 +27,8 @@ pub struct Int8Panel {
     pub n: usize,
     /// Source code width.
     pub bits: u32,
-    /// Strip-packed centered codes `u − 2^(bits−1)` (see gemm.rs).
+    /// K4-interleaved strip-packed centered codes `u − 2^(bits−1)`
+    /// (see gemm.rs).
     panel: Vec<i8>,
     /// Per-column sum of centered codes.
     csum: Vec<i32>,
@@ -63,7 +68,7 @@ impl Int8Panel {
             m,
             n,
             bits: pl.bits,
-            panel: pack_panel_i8(&s, m, n),
+            panel: pack_panel_k4(&s, m, n),
             csum,
             delta: pl.delta.clone(),
             zero: pl.zero.clone(),
@@ -84,18 +89,20 @@ impl Int8Panel {
         let acts = QuantizedActs::quantize(x, aq);
         let co = self.coeffs(&acts.aq, bias);
         let mut out = Tensor::zeros(&[rows, self.n]);
-        gemm_i8_fused(&acts, &self.panel, self.n, &co, out.data_mut());
+        gemm_i8_fused(&acts, &self.panel, self.n, self.bits, &co, out.data_mut());
         out
     }
 
     /// Per-call epilogue coefficients for one activation grid. All
     /// inputs are exact integers (zero points are round()ed), so the f64
     /// arithmetic here is exact and the only rounding in the whole layer
-    /// is the final f32 store.
+    /// is the final f32 store. The activation offset is just `z_a` —
+    /// the codes the GEMM consumes are the *unsigned* grid codes, so no
+    /// activation centering needs undoing (the weight centering `c_w`
+    /// still folds into `zc`/`fixed`).
     pub fn coeffs(&self, aq: &ActQuant, bias: Option<&[f32]>) -> EpilogueCoeffs {
         let cw = (1i64 << (self.bits - 1)) as f64;
-        let ca = (1i64 << (aq.bits - 1)) as f64;
-        let a_off = ca + aq.zero as f64;
+        let a_off = aq.zero as f64;
         let sa = aq.scale as f64;
         let m = self.m as f64;
         let n = self.n;
@@ -147,13 +154,17 @@ mod tests {
             let (pl, lq) = random_packed(&mut rng, m, n, bits);
             let panel = Int8Panel::from_packed(&pl).unwrap();
             let center = (1i32 << (bits - 1)) as f32;
-            // uncentered codes recovered from the panel strips must match
-            // the f32 unpack: panel[strip][kk][l] = s[kk][strip*NR+l]
+            // uncentered codes recovered from the K4-interleaved strips
+            // must match the f32 unpack:
+            // panel[strip][kk/4][l][kk%4] = s[kk][strip*NR+l]
             let nr = crate::tensor::NR;
+            let k4 = crate::util::simd::K4;
+            let kg = m.div_ceil(k4);
             for kk in 0..m {
+                let (g, t) = (kk / k4, kk % k4);
                 for j in 0..n {
                     let (strip, l) = (j / nr, j % nr);
-                    let s = panel.panel()[strip * m * nr + kk * nr + l] as f32;
+                    let s = panel.panel()[strip * kg * nr * k4 + (g * nr + l) * k4 + t] as f32;
                     let u = lq.q.at2(kk, j) - lq.zero[j]; // unsigned code
                     assert_eq!(s + center, u, "bits={bits} ({kk},{j})");
                 }

@@ -10,17 +10,23 @@
 //! needed. Accumulation over k is strictly sequential and skip-free,
 //! which makes `A·B` and `(Bᵀ·Aᵀ)ᵀ` bit-identical for symmetric
 //! operands — the workspace COMQ engine relies on this (see
-//! quant/workspace.rs).
+//! quant/workspace.rs). That identity is a *same-kernel* property: the
+//! micro-kernel is runtime-dispatched (`util::simd`, scalar mul+add vs
+//! AVX2 FMA, overridable via `COMQ_KERNEL`), the kernel is chosen once
+//! per `matmul_into_packed` call, and any single kernel satisfies the
+//! transpose-commute contract because both orientations run the same
+//! k-sequential instruction sequence.
 
 use super::Tensor;
 use crate::util::pool::{parallel_ranges, SendPtr};
+use crate::util::simd::{self, Kernel};
 
 /// Micro-kernel tile: MR rows × NR columns of C accumulated in registers
-/// (4 × 16 f32 = 8 ymm accumulators under AVX2 auto-vectorization).
-/// Shared with the integer serving GEMM (serve/gemm.rs) so both kernels
-/// block the same way.
-pub(crate) const MR: usize = 4;
-pub(crate) const NR: usize = 16;
+/// (4 × 16 f32 = two ymm accumulator rows per MR row under AVX2; 16 i32
+/// = one zmm under AVX-512). Shared with the integer serving GEMM
+/// (serve/gemm.rs) so both kernels block the same way.
+pub const MR: usize = 4;
+pub const NR: usize = 16;
 const MIN_FLOPS_PER_THREAD: usize = 1 << 20;
 
 /// C = A @ B; A [m, k], B [k, n] -> [m, n].
@@ -57,6 +63,10 @@ pub(crate) fn matmul_into_packed(a: &[f32], bp: &[f32], c: &mut [f32], m: usize,
     let n_blocks = m.div_ceil(MR);
     let min_blocks = (MIN_FLOPS_PER_THREAD / (2 * k * n * MR).max(1)).max(1);
     let c_ptr = SendPtr::new(c.as_mut_ptr());
+    // one kernel per call: every tile of this product — and of the
+    // transposed product a bit-identity test might compare against —
+    // must run the same instruction sequence
+    let kern = Kernel::active();
     parallel_ranges(n_blocks, min_blocks, |_, blocks| {
         let c = unsafe { std::slice::from_raw_parts_mut(c_ptr.ptr(), m * n) };
         // strip-outer order keeps one B strip (k×NR floats) hot across
@@ -68,58 +78,17 @@ pub(crate) fn matmul_into_packed(a: &[f32], bp: &[f32], c: &mut [f32], m: usize,
             for blk in blocks.clone() {
                 let i0 = blk * MR;
                 let rows = MR.min(m - i0);
-                if rows == MR {
-                    micro_kernel_full(a, strip, c, i0, j0, cols, k, n);
-                } else {
-                    micro_kernel_tail(a, strip, c, i0, rows, j0, cols, k, n);
+                let mut acc = [[0.0f32; NR]; MR];
+                simd::dot_f32(kern, &a[i0 * k..], k, rows, strip, k, &mut acc);
+                for (r, accr) in acc.iter().take(rows).enumerate() {
+                    let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
+                    for (cv, av) in crow.iter_mut().zip(&accr[..cols]) {
+                        *cv += av;
+                    }
                 }
             }
         }
     });
-}
-
-/// Full MR-row micro-kernel: acc[MR][NR] lives in registers across k.
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn micro_kernel_full(a: &[f32], strip: &[f32], c: &mut [f32], i0: usize, j0: usize, cols: usize, k: usize, n: usize) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for kk in 0..k {
-        let bq = &strip[kk * NR..kk * NR + NR];
-        for r in 0..MR {
-            let av = a[(i0 + r) * k + kk];
-            for l in 0..NR {
-                acc[r][l] += av * bq[l];
-            }
-        }
-    }
-    for r in 0..MR {
-        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
-        for (cv, av) in crow.iter_mut().zip(&acc[r][..cols]) {
-            *cv += av;
-        }
-    }
-}
-
-/// Tail micro-kernel for the last partial row block (rows < MR).
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn micro_kernel_tail(a: &[f32], strip: &[f32], c: &mut [f32], i0: usize, rows: usize, j0: usize, cols: usize, k: usize, n: usize) {
-    let mut acc = [[0.0f32; NR]; MR];
-    for kk in 0..k {
-        let bq = &strip[kk * NR..kk * NR + NR];
-        for (r, accr) in acc.iter_mut().take(rows).enumerate() {
-            let av = a[(i0 + r) * k + kk];
-            for l in 0..NR {
-                accr[l] += av * bq[l];
-            }
-        }
-    }
-    for (r, accr) in acc.iter().take(rows).enumerate() {
-        let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
-        for (cv, av) in crow.iter_mut().zip(&accr[..cols]) {
-            *cv += av;
-        }
-    }
 }
 
 /// Pack B [k, n] into column strips of width NR, k-contiguous and

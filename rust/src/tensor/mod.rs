@@ -11,8 +11,8 @@ mod matmul;
 pub mod ops;
 
 pub use im2col::{im2col, im2col_grouped};
-pub(crate) use matmul::{axpy, matmul_into_packed, pack_b, MR, NR};
-pub use matmul::{matmul, matmul_at_a, matmul_into};
+pub(crate) use matmul::{axpy, matmul_into_packed, pack_b};
+pub use matmul::{matmul, matmul_at_a, matmul_into, MR, NR};
 
 use anyhow::{bail, Result};
 

@@ -5,6 +5,7 @@
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod timer;
 
@@ -17,6 +18,16 @@ pub use timer::Timer;
 /// specific knob wrap this so the parsing rules can't drift apart.
 pub fn env_usize(key: &str) -> Option<usize> {
     std::env::var(key).ok().and_then(|v| v.parse::<usize>().ok())
+}
+
+/// Read an environment variable as a trimmed string (None when unset or
+/// blank). `COMQ_KERNEL` flows through here (see `util::simd`), the
+/// numeric knobs through [`env_usize`].
+pub fn env_str(key: &str) -> Option<String> {
+    std::env::var(key)
+        .ok()
+        .map(|v| v.trim().to_string())
+        .filter(|v| !v.is_empty())
 }
 
 /// `COMQ_THREADS`, the crate-wide parallelism override. Re-read on every

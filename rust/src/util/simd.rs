@@ -1,0 +1,591 @@
+//! Runtime-dispatched SIMD micro-kernels for the two GEMM hot paths:
+//! the int8 serving GEMM (`serve/gemm.rs`) and the f32 packed matmul
+//! (`tensor/matmul.rs`).
+//!
+//! ## Dispatch
+//!
+//! [`Kernel`] names the three implementations; [`Kernel::active`] picks
+//! one per call from CPU feature detection (`is_x86_feature_detected!`,
+//! cached by std) with a `COMQ_KERNEL=scalar|avx2|vnni` environment
+//! override for benching and CI, parsed through `util::env_str` the same
+//! way `COMQ_THREADS` flows through `util::env_usize`. An override that
+//! names a kernel the host cannot run falls back to detection with a
+//! one-time warning — it never fault-dispatches an illegal instruction.
+//!
+//! ## The integer contract
+//!
+//! All three i8 kernels compute the *same* integer quantity — the dot
+//! of **uncentered u8 activation codes** against **centered i8 weight
+//! codes** — so their i32 accumulators are bit-identical by
+//! construction (integer addition is associative; overflow is excluded
+//! by the `MAX_K` bound in `serve/gemm.rs`). The operand signedness is
+//! forced by the hardware: both `vpmaddubsw` (AVX2) and `vpdpbusd`
+//! (AVX-512 VNNI) multiply an unsigned byte by a signed byte, so the
+//! activation side carries the codes unsigned and the `2^(ab−1)`
+//! centering that PR 3 applied at quantize time moves into the
+//! epilogue's exact-integer correction (see `serve/gemm.rs`).
+//!
+//! Both instructions also want k in groups of 4 adjacent bytes, hence
+//! the K4-interleaved panel layout (`serve::gemm::pack_panel_k4`):
+//! one group row holds `NR × 4` weight bytes — 64 bytes, exactly one
+//! cache line and one zmm load. The scalar kernel walks the same layout
+//! so a panel packed once serves any later `COMQ_KERNEL` choice.
+//!
+//! ### Exactness of the AVX2 path
+//!
+//! `vpmaddubsw` adds two adjacent u8×i8 products into an i16 **with
+//! saturation**; the pair sum only fits when
+//! `2 · (2^ab − 1) · 2^(b−1) ≤ 32767` (see [`maddubs_safe`]). That
+//! holds for every bit pairing except W8A8. For that one case the
+//! kernel takes a split path: the broadcast activation quad is masked
+//! to even and odd k bytes separately, so each `vpmaddubsw` pair has a
+//! zero term and the "pair sum" is a single product (|·| ≤ 32640 <
+//! 32768) — two maddubs instead of one, still exact.
+//!
+//! ## The f32 kernel
+//!
+//! The AVX2/FMA f32 micro-kernel fuses the multiply-add (one rounding
+//! instead of two), so its results differ from the scalar kernel's in
+//! the last ulp — that is expected and allowed; the crate's f32
+//! bit-identity contracts (workspace-vs-gram, transpose-commute) are
+//! all *same-process, same-kernel* comparisons and hold for any single
+//! dispatched kernel. Integer accumulators, by contrast, are
+//! bit-identical across kernels and tested as such
+//! (`rust/tests/kernel_parity.rs`).
+
+use std::sync::OnceLock;
+
+use crate::tensor::{MR, NR};
+
+// The x86 kernels hard-code the tile: 4 rows × 16 columns (16 i32 = one
+// zmm; 16 f32 = two ymm).
+const _: () = assert!(MR == 4 && NR == 16, "SIMD kernels assume a 4x16 tile");
+
+/// k-group width of the interleaved i8 panel layout (the quad both
+/// `vpmaddubsw` and `vpdpbusd` consume per lane).
+pub const K4: usize = 4;
+
+/// One dot-product kernel implementation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable reference implementation — always available, and the
+    /// ground truth the SIMD kernels are tested bit-exact against.
+    Scalar,
+    /// AVX2: `vpmaddubsw`+`vpmaddwd` for i8, FMA for f32.
+    Avx2,
+    /// AVX-512 VNNI: `vpdpbusd` for i8 (f32 shares the AVX2/FMA path).
+    Vnni,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 3] = [Kernel::Scalar, Kernel::Avx2, Kernel::Vnni];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Vnni => "vnni",
+        }
+    }
+
+    /// Parse a `COMQ_KERNEL` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Kernel::Scalar),
+            "avx2" => Some(Kernel::Avx2),
+            "vnni" => Some(Kernel::Vnni),
+            _ => None,
+        }
+    }
+
+    /// Can this kernel run on the current host *and* toolchain? (The
+    /// VNNI kernel additionally needs a rustc with stable AVX-512
+    /// intrinsics — see `build.rs` and the `comq_avx512` cfg.)
+    pub fn supported(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            Kernel::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                        && std::arch::is_x86_feature_detected!("fma")
+                }
+                #[cfg(not(target_arch = "x86_64"))]
+                {
+                    false
+                }
+            }
+            Kernel::Vnni => {
+                #[cfg(all(target_arch = "x86_64", comq_avx512))]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                        && std::arch::is_x86_feature_detected!("avx512vnni")
+                        && Kernel::Avx2.supported()
+                }
+                #[cfg(not(all(target_arch = "x86_64", comq_avx512)))]
+                {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Best supported kernel for this host (VNNI > AVX2 > scalar),
+    /// computed once per process.
+    pub fn detect() -> Kernel {
+        static DETECTED: OnceLock<Kernel> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            if Kernel::Vnni.supported() {
+                Kernel::Vnni
+            } else if Kernel::Avx2.supported() {
+                Kernel::Avx2
+            } else {
+                Kernel::Scalar
+            }
+        })
+    }
+
+    /// Kernel for the *current* call: `COMQ_KERNEL` if set (re-read
+    /// every call, like `COMQ_THREADS`, so benches can flip it between
+    /// runs), otherwise [`Kernel::detect`]. An unknown or unsupported
+    /// override falls back to detection with a one-time warning.
+    pub fn active() -> Kernel {
+        match crate::util::env_str("COMQ_KERNEL") {
+            None => Kernel::detect(),
+            Some(s) => match Kernel::parse(&s) {
+                Some(k) if k.supported() => k,
+                _ => {
+                    static WARN: std::sync::Once = std::sync::Once::new();
+                    WARN.call_once(|| {
+                        eprintln!(
+                            "COMQ_KERNEL={s}: unknown or unsupported on this host, using {}",
+                            Kernel::detect().name()
+                        );
+                    });
+                    Kernel::detect()
+                }
+            },
+        }
+    }
+}
+
+/// Whether the single-`vpmaddubsw` AVX2 path is exact for this bit
+/// pairing: the worst-case adjacent pair sum `2·(2^ab − 1)·2^(b−1)`
+/// must fit i16. False only for W8A8, which takes the split path.
+pub fn maddubs_safe(act_bits: u32, w_bits: u32) -> bool {
+    let amax = (1i64 << act_bits) - 1;
+    let wmag = 1i64 << (w_bits.max(1) - 1);
+    2 * amax * wmag <= i16::MAX as i64
+}
+
+// ---------------------------------------------------------------------------
+// i8 × u8 → i32 micro-kernel
+// ---------------------------------------------------------------------------
+
+/// Exact integer tile product over one K4-interleaved panel strip:
+///
+/// ```text
+/// acc[r][l] = Σ_{g < kg, t < 4} acts[r·stride + 4g + t] · strip[(g·NR + l)·4 + t]
+/// ```
+///
+/// `acts` starts at the tile's first row; rows are `stride` bytes apart
+/// (`stride ≥ 4·kg`, zero-padded past the true k extent — the matching
+/// panel k-padding is also zero, so padded products vanish). Rows
+/// `0..rows` of `acc` are overwritten; rows past `rows` are untouched.
+/// Every kernel returns bit-identical accumulators; `wide` selects the
+/// W8A8-exact AVX2 split path (see [`maddubs_safe`] — ignored by the
+/// other kernels).
+#[allow(clippy::too_many_arguments)]
+// `wide` only steers the AVX2 path, so it is unread on non-x86 targets
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn dot_i8(
+    kern: Kernel,
+    acts: &[u8],
+    stride: usize,
+    rows: usize,
+    strip: &[i8],
+    kg: usize,
+    wide: bool,
+    acc: &mut [[i32; NR]; MR],
+) {
+    assert!(rows >= 1 && rows <= MR, "rows {rows} outside 1..={MR}");
+    assert!(stride >= kg * K4, "stride {stride} < {} (k-groups {kg})", kg * K4);
+    assert!(acts.len() >= (rows - 1) * stride + kg * K4, "acts too short");
+    assert!(strip.len() >= kg * NR * K4, "strip too short for {kg} k-groups");
+    match kern {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if Kernel::Avx2.supported() => unsafe {
+            x86::dot_i8_avx2(acts.as_ptr(), stride, rows, strip.as_ptr(), kg, wide, acc)
+        },
+        #[cfg(all(target_arch = "x86_64", comq_avx512))]
+        Kernel::Vnni if Kernel::Vnni.supported() => unsafe {
+            x86::dot_i8_vnni(acts.as_ptr(), stride, rows, strip.as_ptr(), kg, acc)
+        },
+        // Scalar, plus the defensive fallback for a force-dispatched
+        // kernel the host can't run.
+        _ => dot_i8_scalar(acts, stride, rows, strip, kg, acc),
+    }
+}
+
+fn dot_i8_scalar(
+    acts: &[u8],
+    stride: usize,
+    rows: usize,
+    strip: &[i8],
+    kg: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    for (r, accr) in acc.iter_mut().take(rows).enumerate() {
+        let mut tile = [0i32; NR];
+        for g in 0..kg {
+            let a4 = &acts[r * stride + g * K4..r * stride + g * K4 + K4];
+            let wrow = &strip[g * NR * K4..(g + 1) * NR * K4];
+            for (t, w4) in tile.iter_mut().zip(wrow.chunks_exact(K4)) {
+                *t += a4[0] as i32 * w4[0] as i32
+                    + a4[1] as i32 * w4[1] as i32
+                    + a4[2] as i32 * w4[2] as i32
+                    + a4[3] as i32 * w4[3] as i32;
+            }
+        }
+        *accr = tile;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 micro-kernel
+// ---------------------------------------------------------------------------
+
+/// f32 tile product over one NR-wide packed B strip (`tensor::pack_b`
+/// layout, k-contiguous):
+///
+/// ```text
+/// acc[r][l] = Σ_{kk < k} a[r·stride + kk] · strip[kk·NR + l]
+/// ```
+///
+/// Rows `0..rows` of `acc` are overwritten. The AVX2 path uses FMA, so
+/// it differs from scalar in the final ulp (see module docs); it is
+/// deterministic for a fixed kernel choice. `Vnni` shares the AVX2/FMA
+/// path — there is no separate f32 AVX-512 kernel.
+pub fn dot_f32(
+    kern: Kernel,
+    a: &[f32],
+    stride: usize,
+    rows: usize,
+    strip: &[f32],
+    k: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    assert!(rows >= 1 && rows <= MR, "rows {rows} outside 1..={MR}");
+    assert!(stride >= k, "stride {stride} < k {k}");
+    assert!(a.len() >= (rows - 1) * stride + k, "a too short");
+    assert!(strip.len() >= k * NR, "strip too short for k {k}");
+    match kern {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 | Kernel::Vnni if Kernel::Avx2.supported() => unsafe {
+            x86::dot_f32_avx2(a.as_ptr(), stride, rows, strip.as_ptr(), k, acc)
+        },
+        _ => dot_f32_scalar(a, stride, rows, strip, k, acc),
+    }
+}
+
+fn dot_f32_scalar(
+    a: &[f32],
+    stride: usize,
+    rows: usize,
+    strip: &[f32],
+    k: usize,
+    acc: &mut [[f32; NR]; MR],
+) {
+    for (r, accr) in acc.iter_mut().take(rows).enumerate() {
+        let mut tile = [0.0f32; NR];
+        for kk in 0..k {
+            let av = a[r * stride + kk];
+            let brow = &strip[kk * NR..kk * NR + NR];
+            for (t, &b) in tile.iter_mut().zip(brow) {
+                *t += av * b;
+            }
+        }
+        *accr = tile;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 intrinsics
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{K4, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// Caller guarantees: avx2 detected; pointer extents as validated
+    /// by [`super::dot_i8`]. Dispatches on `rows` to a const-generic
+    /// body so the accumulators stay in registers.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_i8_avx2(
+        acts: *const u8,
+        stride: usize,
+        rows: usize,
+        strip: *const i8,
+        kg: usize,
+        wide: bool,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        match rows {
+            4 => dot_i8_avx2_r::<4>(acts, stride, strip, kg, wide, acc),
+            3 => dot_i8_avx2_r::<3>(acts, stride, strip, kg, wide, acc),
+            2 => dot_i8_avx2_r::<2>(acts, stride, strip, kg, wide, acc),
+            _ => dot_i8_avx2_r::<1>(acts, stride, strip, kg, wide, acc),
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_i8_avx2_r<const R: usize>(
+        acts: *const u8,
+        stride: usize,
+        strip: *const i8,
+        kg: usize,
+        wide: bool,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        let ones = _mm256_set1_epi16(1);
+        let mut accv = [[_mm256_setzero_si256(); 2]; R];
+        for g in 0..kg {
+            // one K4 group row: NR columns × 4 k-bytes = 64 bytes
+            let w0 = _mm256_loadu_si256(strip.add(g * NR * K4) as *const __m256i);
+            let w1 = _mm256_loadu_si256(strip.add(g * NR * K4 + 32) as *const __m256i);
+            for r in 0..R {
+                let quad = (acts.add(r * stride + g * K4) as *const u32).read_unaligned();
+                if !wide {
+                    let av = _mm256_set1_epi32(quad as i32);
+                    let p0 = _mm256_madd_epi16(_mm256_maddubs_epi16(av, w0), ones);
+                    let p1 = _mm256_madd_epi16(_mm256_maddubs_epi16(av, w1), ones);
+                    accv[r][0] = _mm256_add_epi32(accv[r][0], p0);
+                    accv[r][1] = _mm256_add_epi32(accv[r][1], p1);
+                } else {
+                    // W8A8: mask even/odd k bytes so each maddubs pair
+                    // has a zero term and cannot saturate i16
+                    let lo = _mm256_set1_epi32((quad & 0x00FF_00FF) as i32);
+                    let hi = _mm256_set1_epi32((quad & 0xFF00_FF00) as i32);
+                    let p0 = _mm256_add_epi32(
+                        _mm256_madd_epi16(_mm256_maddubs_epi16(lo, w0), ones),
+                        _mm256_madd_epi16(_mm256_maddubs_epi16(hi, w0), ones),
+                    );
+                    let p1 = _mm256_add_epi32(
+                        _mm256_madd_epi16(_mm256_maddubs_epi16(lo, w1), ones),
+                        _mm256_madd_epi16(_mm256_maddubs_epi16(hi, w1), ones),
+                    );
+                    accv[r][0] = _mm256_add_epi32(accv[r][0], p0);
+                    accv[r][1] = _mm256_add_epi32(accv[r][1], p1);
+                }
+            }
+        }
+        for (r, v) in accv.iter().enumerate() {
+            _mm256_storeu_si256(acc[r].as_mut_ptr() as *mut __m256i, v[0]);
+            _mm256_storeu_si256(acc[r].as_mut_ptr().add(8) as *mut __m256i, v[1]);
+        }
+    }
+
+    /// `vpdpbusd`: u8×i8 quads into i32 lanes, exact (the intermediate
+    /// i16 products are exact and the quad sum is added without
+    /// saturation; accumulator overflow is excluded by `MAX_K`).
+    #[cfg(comq_avx512)]
+    #[target_feature(enable = "avx512f", enable = "avx512vnni")]
+    pub(super) unsafe fn dot_i8_vnni(
+        acts: *const u8,
+        stride: usize,
+        rows: usize,
+        strip: *const i8,
+        kg: usize,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        match rows {
+            4 => dot_i8_vnni_r::<4>(acts, stride, strip, kg, acc),
+            3 => dot_i8_vnni_r::<3>(acts, stride, strip, kg, acc),
+            2 => dot_i8_vnni_r::<2>(acts, stride, strip, kg, acc),
+            _ => dot_i8_vnni_r::<1>(acts, stride, strip, kg, acc),
+        }
+    }
+
+    #[cfg(comq_avx512)]
+    #[target_feature(enable = "avx512f", enable = "avx512vnni")]
+    unsafe fn dot_i8_vnni_r<const R: usize>(
+        acts: *const u8,
+        stride: usize,
+        strip: *const i8,
+        kg: usize,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        let mut accv = [_mm512_setzero_si512(); R];
+        for g in 0..kg {
+            // one group row is exactly one zmm: 16 i32 lanes of 4 bytes
+            let w = (strip.add(g * NR * K4) as *const __m512i).read_unaligned();
+            for (r, v) in accv.iter_mut().enumerate() {
+                let quad = (acts.add(r * stride + g * K4) as *const u32).read_unaligned();
+                let av = _mm512_set1_epi32(quad as i32);
+                *v = _mm512_dpbusd_epi32(*v, av, w);
+            }
+        }
+        for (r, v) in accv.iter().enumerate() {
+            (acc[r].as_mut_ptr() as *mut __m512i).write_unaligned(*v);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn dot_f32_avx2(
+        a: *const f32,
+        stride: usize,
+        rows: usize,
+        strip: *const f32,
+        k: usize,
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        match rows {
+            4 => dot_f32_avx2_r::<4>(a, stride, strip, k, acc),
+            3 => dot_f32_avx2_r::<3>(a, stride, strip, k, acc),
+            2 => dot_f32_avx2_r::<2>(a, stride, strip, k, acc),
+            _ => dot_f32_avx2_r::<1>(a, stride, strip, k, acc),
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot_f32_avx2_r<const R: usize>(
+        a: *const f32,
+        stride: usize,
+        strip: *const f32,
+        k: usize,
+        acc: &mut [[f32; NR]; MR],
+    ) {
+        let mut accv = [[_mm256_setzero_ps(); 2]; R];
+        for kk in 0..k {
+            let b0 = _mm256_loadu_ps(strip.add(kk * NR));
+            let b1 = _mm256_loadu_ps(strip.add(kk * NR + 8));
+            for (r, v) in accv.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*a.add(r * stride + kk));
+                v[0] = _mm256_fmadd_ps(av, b0, v[0]);
+                v[1] = _mm256_fmadd_ps(av, b1, v[1]);
+            }
+        }
+        for (r, v) in accv.iter().enumerate() {
+            _mm256_storeu_ps(acc[r].as_mut_ptr(), v[0]);
+            _mm256_storeu_ps(acc[r].as_mut_ptr().add(8), v[1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Naive i64 reference for the K4 tile contract.
+    fn naive_tile(
+        acts: &[u8],
+        stride: usize,
+        rows: usize,
+        strip: &[i8],
+        kg: usize,
+    ) -> Vec<Vec<i64>> {
+        (0..rows)
+            .map(|r| {
+                (0..NR)
+                    .map(|l| {
+                        (0..kg * K4)
+                            .map(|kk| {
+                                let (g, t) = (kk / K4, kk % K4);
+                                acts[r * stride + kk] as i64
+                                    * strip[(g * NR + l) * K4 + t] as i64
+                            })
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scalar_dot_i8_matches_naive() {
+        let mut rng = Rng::new(31);
+        for &(rows, kg) in &[(1usize, 1usize), (2, 3), (4, 7), (3, 16)] {
+            let stride = kg * K4 + 4; // deliberately over-wide stride
+            let acts: Vec<u8> = (0..rows * stride).map(|_| rng.below(256) as u8).collect();
+            let strip: Vec<i8> =
+                (0..kg * NR * K4).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            let mut acc = [[0i32; NR]; MR];
+            dot_i8(Kernel::Scalar, &acts, stride, rows, &strip, kg, false, &mut acc);
+            let want = naive_tile(&acts, stride, rows, &strip, kg);
+            for r in 0..rows {
+                for l in 0..NR {
+                    assert_eq!(acc[r][l] as i64, want[r][l], "({rows},{kg}) r={r} l={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_dot_f32_matches_naive() {
+        let mut rng = Rng::new(32);
+        let (rows, k, stride) = (3usize, 11usize, 11usize);
+        let a = rng.normal_vec(rows * stride);
+        let strip = rng.normal_vec(k * NR);
+        let mut acc = [[0.0f32; NR]; MR];
+        dot_f32(Kernel::Scalar, &a, stride, rows, &strip, k, &mut acc);
+        for r in 0..rows {
+            for l in 0..NR {
+                let want: f64 = (0..k)
+                    .map(|kk| a[r * stride + kk] as f64 * strip[kk * NR + l] as f64)
+                    .sum();
+                assert!((acc[r][l] as f64 - want).abs() < 1e-3, "r={r} l={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn maddubs_safety_rule() {
+        // only W8A8 needs the split path
+        for ab in 1..=8u32 {
+            for wb in 1..=8u32 {
+                assert_eq!(maddubs_safe(ab, wb), !(ab == 8 && wb == 8), "A{ab} W{wb}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_and_names_round_trip() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+            assert_eq!(Kernel::parse(&k.name().to_ascii_uppercase()), Some(k));
+        }
+        assert_eq!(Kernel::parse("neon"), None);
+    }
+
+    #[test]
+    fn detection_is_coherent() {
+        assert!(Kernel::Scalar.supported());
+        let best = Kernel::detect();
+        assert!(best.supported());
+        // detect() must prefer SIMD whenever any SIMD kernel works
+        if Kernel::Avx2.supported() {
+            assert_ne!(best, Kernel::Scalar);
+        }
+        // every supported SIMD kernel agrees with scalar on a smoke tile
+        let mut rng = Rng::new(33);
+        let kg = 5;
+        let acts: Vec<u8> = (0..MR * kg * K4).map(|_| rng.below(256) as u8).collect();
+        let strip: Vec<i8> =
+            (0..kg * NR * K4).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+        let mut want = [[0i32; NR]; MR];
+        dot_i8(Kernel::Scalar, &acts, kg * K4, MR, &strip, kg, true, &mut want);
+        // these inputs are full-range W8A8, so only wide=true is exact
+        // on AVX2; the narrow fast path is covered bit-by-bit across
+        // all bit pairings in rust/tests/kernel_parity.rs
+        for k in [Kernel::Avx2, Kernel::Vnni] {
+            if !k.supported() {
+                continue;
+            }
+            let mut acc = [[0i32; NR]; MR];
+            dot_i8(k, &acts, kg * K4, MR, &strip, kg, true, &mut acc);
+            assert_eq!(acc, want, "{}", k.name());
+        }
+    }
+}

@@ -1,0 +1,208 @@
+//! SIMD kernel parity: every runtime-dispatched kernel must produce
+//! i32 accumulators **bit-identical** to the scalar reference — not
+//! within-tolerance — across all code widths, unaligned shapes, k not
+//! divisible by the K4 group, and the k=1 edge; and the `COMQ_KERNEL`
+//! override must force dispatch (skipping cleanly where the host lacks
+//! the feature).
+//!
+//! Everything here except `comq_kernel_env_forces_dispatch` uses the
+//! explicit-kernel entry points (`dot_i8`, `gemm_i8_fused_with`), so
+//! the env-mutating test cannot race the others inside this binary.
+
+use comq::quant::actq::ActQuant;
+use comq::serve::gemm::{gemm_i8_fused_with, pack_panel_k4, EpilogueCoeffs, QuantizedActs};
+use comq::tensor::{Tensor, MR, NR};
+use comq::util::simd::{dot_f32, dot_i8, maddubs_safe, Kernel, K4};
+use comq::util::Rng;
+
+/// SIMD kernels available on this host; absent ones are reported and
+/// skipped (the suite must pass on a scalar-only machine).
+fn simd_kernels() -> Vec<Kernel> {
+    let mut ks = Vec::new();
+    for k in [Kernel::Avx2, Kernel::Vnni] {
+        if k.supported() {
+            ks.push(k);
+        } else {
+            eprintln!("kernel_parity: {} unsupported on this host, skipping", k.name());
+        }
+    }
+    ks
+}
+
+/// Random centered weight codes for `wbits`, K4-packed, plus the raw
+/// matrix.
+fn random_panel(rng: &mut Rng, k: usize, n: usize, wbits: u32) -> (Vec<i8>, Vec<i8>) {
+    let levels = 1usize << wbits;
+    let center = (levels / 2) as i32;
+    let s: Vec<i8> = (0..k * n).map(|_| (rng.below(levels) as i32 - center) as i8).collect();
+    let panel = pack_panel_k4(&s, k, n);
+    (s, panel)
+}
+
+/// Quantized activations spanning the full code range for `abits`.
+fn random_acts(rng: &mut Rng, rows: usize, k: usize, abits: u32) -> QuantizedActs {
+    let x = Tensor::new(&[rows, k], rng.normal_vec(rows * k));
+    // a tight range clamps the tails to code 0 and 2^ab − 1, so the
+    // extreme codes (the saturation-prone ones) actually occur
+    let aq = ActQuant::from_range(-0.5, 0.5, abits, 1.0);
+    QuantizedActs::quantize(&x, aq)
+}
+
+/// The shapes that historically break tiling code: k=1, k % 4 ≠ 0,
+/// rows % MR ≠ 0, n % NR ≠ 0, single-element, and one full-tile case.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (3, 5, 7),
+    (4, 16, 16),
+    (5, 33, 21),
+    (2, 31, 17),
+    (7, 64, 48),
+    (1, 129, 3),
+    (6, 4, 64),
+];
+
+#[test]
+fn dot_i8_bit_identical_to_scalar() {
+    for kern in simd_kernels() {
+        for &wbits in &[2u32, 3, 4, 8] {
+            for &abits in &[4u32, 8] {
+                let wide = !maddubs_safe(abits, wbits);
+                let mut rng = Rng::new(0xD07 + wbits as u64 * 31 + abits as u64);
+                for &(rows, k, n) in SHAPES {
+                    let (_, panel) = random_panel(&mut rng, k, n, wbits);
+                    let acts = random_acts(&mut rng, rows, k, abits);
+                    let kg = k.div_ceil(K4);
+                    let strip_len = kg * NR * K4;
+                    for s in 0..n.div_ceil(NR) {
+                        let strip = &panel[s * strip_len..(s + 1) * strip_len];
+                        for blk in 0..rows.div_ceil(MR) {
+                            let i0 = blk * MR;
+                            let rmax = MR.min(rows - i0);
+                            let a = &acts.codes[i0 * acts.stride..];
+                            let mut want = [[0i32; NR]; MR];
+                            let mut got = [[0i32; NR]; MR];
+                            dot_i8(Kernel::Scalar, a, acts.stride, rmax, strip, kg, wide, &mut want);
+                            dot_i8(kern, a, acts.stride, rmax, strip, kg, wide, &mut got);
+                            assert_eq!(
+                                got,
+                                want,
+                                "{} W{wbits}A{abits} shape ({rows},{k},{n}) strip {s} block {blk}",
+                                kern.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full-GEMM parity: identical accumulators through the identical f64
+/// epilogue must give bit-identical f32 outputs, including the
+/// batch-1 column-split parallel path.
+#[test]
+fn gemm_outputs_bit_identical_across_kernels() {
+    let kernels = simd_kernels();
+    for &wbits in &[2u32, 4, 8] {
+        for &abits in &[4u32, 8] {
+            let mut rng = Rng::new(0x6E44 + wbits as u64 + 100 * abits as u64);
+            for &(rows, k, n) in SHAPES {
+                let (s, panel) = random_panel(&mut rng, k, n, wbits);
+                let acts = random_acts(&mut rng, rows, k, abits);
+                let cw = (1i64 << (wbits - 1)) as f64;
+                let mut csum = vec![0i64; n];
+                for (idx, &v) in s.iter().enumerate() {
+                    csum[idx % n] += v as i64;
+                }
+                let zero: Vec<f64> = (0..n).map(|_| rng.below(9) as f64 - 4.0).collect();
+                let za = acts.aq.zero as f64;
+                let co = EpilogueCoeffs {
+                    scale: (0..n).map(|_| rng.range_f32(0.01, 0.2) as f64).collect(),
+                    zc: zero.iter().map(|&z| cw + z).collect(),
+                    fixed: (0..n).map(|j| za * (csum[j] as f64 + k as f64 * (cw + zero[j]))).collect(),
+                    bias: (0..n).map(|_| rng.range_f32(-1.0, 1.0) as f64).collect(),
+                };
+                let mut want = vec![0.0f32; rows * n];
+                gemm_i8_fused_with(Kernel::Scalar, &acts, &panel, n, wbits, &co, &mut want);
+                for &kern in &kernels {
+                    let mut got = vec![0.0f32; rows * n];
+                    gemm_i8_fused_with(kern, &acts, &panel, n, wbits, &co, &mut got);
+                    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} W{wbits}A{abits} shape ({rows},{k},{n}) flat {i}: {a} vs {b}",
+                            kern.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The f32 FMA kernel is *not* required to match scalar bitwise (fused
+/// rounding) — it must match a f64 reference within tolerance and be
+/// deterministic for a fixed kernel.
+#[test]
+fn dot_f32_simd_accurate_and_deterministic() {
+    for kern in simd_kernels() {
+        let mut rng = Rng::new(0xF32);
+        for &(rows, k) in &[(1usize, 1usize), (3, 7), (4, 33), (2, 300)] {
+            let a = rng.normal_vec(rows * k);
+            let strip = rng.normal_vec(k * NR);
+            let mut acc = [[0.0f32; NR]; MR];
+            dot_f32(kern, &a, k, rows, &strip, k, &mut acc);
+            let mut again = [[0.0f32; NR]; MR];
+            dot_f32(kern, &a, k, rows, &strip, k, &mut again);
+            for r in 0..rows {
+                for l in 0..NR {
+                    assert_eq!(
+                        acc[r][l].to_bits(),
+                        again[r][l].to_bits(),
+                        "{} nondeterministic at ({r},{l})",
+                        kern.name()
+                    );
+                    let want: f64 = (0..k)
+                        .map(|kk| a[r * k + kk] as f64 * strip[kk * NR + l] as f64)
+                        .sum();
+                    let tol = 1e-4 * (k as f64).sqrt().max(1.0);
+                    assert!(
+                        (acc[r][l] as f64 - want).abs() <= tol,
+                        "{} ({rows},{k}) at ({r},{l}): {} vs {want}",
+                        kern.name(),
+                        acc[r][l]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// `COMQ_KERNEL` must force dispatch when the kernel is supported and
+/// fall back to detection (never fault) when it isn't. The only test
+/// in this binary that touches the env var — everything else uses the
+/// explicit-kernel entry points.
+#[test]
+fn comq_kernel_env_forces_dispatch() {
+    // ci.sh runs this suite once with COMQ_KERNEL=scalar pinned —
+    // restore whatever pin the caller set rather than deleting it
+    let pinned = std::env::var("COMQ_KERNEL").ok();
+    for kern in Kernel::ALL {
+        std::env::set_var("COMQ_KERNEL", kern.name());
+        if kern.supported() {
+            assert_eq!(Kernel::active(), kern, "override {} must win", kern.name());
+        } else {
+            eprintln!("kernel_parity: {} absent, checking clean fallback", kern.name());
+            assert_eq!(Kernel::active(), Kernel::detect());
+        }
+    }
+    // unknown names also fall back instead of panicking mid-serve
+    std::env::set_var("COMQ_KERNEL", "quantum");
+    assert_eq!(Kernel::active(), Kernel::detect());
+    std::env::remove_var("COMQ_KERNEL");
+    assert_eq!(Kernel::active(), Kernel::detect());
+    if let Some(v) = pinned {
+        std::env::set_var("COMQ_KERNEL", v);
+    }
+}
