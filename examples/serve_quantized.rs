@@ -180,11 +180,13 @@ fn main() -> Result<()> {
     // 4. memory story: packed deployment size vs serving-resident panels.
     let (packed_b, fp32_b) = comq::deploy::footprint(&out.packed);
     println!(
-        "\nweights: {:.1} KiB fp32 -> {:.1} KiB packed codes on disk, {:.1} KiB i8 panels resident ({} layers served integer)",
+        "\nweights: {:.1} KiB fp32 -> {:.1} KiB packed codes on disk, {:.1} KiB i8 panels resident ({} layers served integer, {} grouped, W{})",
         fp32_b as f64 / 1024.0,
         packed_b as f64 / 1024.0,
         qm.resident_bytes() as f64 / 1024.0,
         qm.int8_layers(),
+        qm.grouped_layers(),
+        qm.weight_bits_label(),
     );
     Ok(())
 }

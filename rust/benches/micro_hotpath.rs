@@ -113,6 +113,52 @@ fn main() -> anyhow::Result<()> {
     table.save_json("micro_f32_kernels");
     report.add(&table);
 
+    // -- grouped depthwise i8 kernel sweep -------------------------------
+    // the per-lane grouped kernel (util::simd::dot_i8_grouped) driven
+    // through the serving entry point, dispatch forced per kernel; raw
+    // kernel throughput at a 3×3-depthwise shape, epilogue included
+    let mut table = Table::new(
+        "micro — grouped depthwise i8 kernel sweep (W8A8, forced dispatch)",
+        &["shape (rows,kk,c)", "kernel", "ms", "GIOP/s"],
+    );
+    {
+        use comq::serve::{dwconv_i8_fused_with, EpilogueCoeffs, GroupedQuantizedActs};
+        let (rows, kk, c) = (4096usize, 9usize, 256usize);
+        let mut rng = Rng::new(6);
+        let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+        let aq = comq::quant::actq::ActQuant::from_range(x3.min(), x3.max(), 8, 1.0);
+        let acts = GroupedQuantizedActs::quantize(&x3, aq);
+        let s: Vec<i8> = (0..kk * c).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+        let panel = comq::serve::gemm::pack_panel_k4(&s, kk, c);
+        let co = EpilogueCoeffs {
+            scale: vec![1e-3; c],
+            zc: vec![128.0; c],
+            fixed: vec![0.0; c],
+            bias: vec![0.0; c],
+        };
+        let mut out = vec![0.0f32; rows * c];
+        for kern in Kernel::ALL {
+            if !kern.supported() {
+                println!("[grouped kernel sweep: {} unsupported, skipped]", kern.name());
+                continue;
+            }
+            let t = time_budget(0.3, 200, || {
+                dwconv_i8_fused_with(kern, &acts, &panel, c, 8, &co, &mut out);
+                std::hint::black_box(&mut out);
+            });
+            let ops = 2.0 * rows as f64 * kk as f64 * c as f64;
+            table.row(vec![
+                format!("({rows},{kk},{c})"),
+                kern.name().to_string(),
+                format!("{:.3}", t.mean * 1e3),
+                format!("{:.2}", ops / t.mean / 1e9),
+            ]);
+        }
+    }
+    table.print();
+    table.save_json("micro_grouped_kernels");
+    report.add(&table);
+
     // -- Gram build throughput -------------------------------------------
     let mut table = Table::new(
         "micro — calibration Gram build G = XᵀX",

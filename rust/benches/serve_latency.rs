@@ -3,8 +3,12 @@
 //!  * i8 GEMM + fused dequant vs the f32 native matmul at serving layer
 //!    shapes, batch 1 (memory-bound — the panel is ¼ the bytes of f32 B)
 //!    and batch 32 (compute-bound);
+//!  * depthwise conv: the f32 per-channel loop vs the grouped i8 kernel
+//!    (`GroupedPanel::conv_i8`), plus grouped rows in the forced-dispatch
+//!    kernel sweep;
 //!  * end-to-end model latency percentiles: fp32 native forward vs the
-//!    integer runtime, batch 1 and batch N;
+//!    integer runtime, batch 1 and batch N — on the plain CNN and on the
+//!    depthwise `tiny_mobile` model (all layers integer, 3 grouped);
 //!  * the micro-batcher serving N concurrent single requests vs N
 //!    sequential batch-1 forwards.
 //!
@@ -18,12 +22,32 @@ use std::time::Duration;
 use comq::bench::{time_budget, Report, Table};
 use comq::deploy::PackedLayer;
 use comq::model::Tap;
-use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::proptest::{quantize_all_layers, tiny_mobile_cnn, tiny_plain_cnn};
 use comq::quant::actq::ActQuant;
 use comq::quant::grid::LayerQuant;
-use comq::serve::{ActSource, BatchConfig, Int8Panel, Kernel, QuantizedModel, Server};
+use comq::serve::{ActSource, BatchConfig, GroupedPanel, Int8Panel, Kernel, QuantizedModel, Server};
 use comq::tensor::{matmul, Tensor};
 use comq::util::{stats, Rng, Timer};
+
+/// f32 reference depthwise conv over grouped patches [rows, c, kk] —
+/// the loop `model::dwconv2d` runs on the fallback path.
+fn dwconv_f32(x3: &Tensor, w: &Tensor, bias: &[f32]) -> Tensor {
+    let (rows, c, kk) = (x3.shape()[0], x3.shape()[1], x3.shape()[2]);
+    let mut out = Tensor::zeros(&[rows, c]);
+    for r in 0..rows {
+        let xr = &x3.data()[r * c * kk..(r + 1) * c * kk];
+        let orow = &mut out.data_mut()[r * c..(r + 1) * c];
+        for ch in 0..c {
+            let xc = &xr[ch * kk..(ch + 1) * kk];
+            let mut s = 0.0f32;
+            for p in 0..kk {
+                s += xc[p] * w.at2(p, ch);
+            }
+            orow[ch] = s + bias[ch];
+        }
+    }
+    out
+}
 
 fn random_packed(rng: &mut Rng, m: usize, n: usize, bits: u32) -> PackedLayer {
     let levels = (1u64 << bits) as usize;
@@ -75,6 +99,44 @@ fn main() -> anyhow::Result<()> {
     table.save_json("serve_gemm");
     report.add(&table);
 
+    // -- depthwise conv, f32 loop vs grouped i8 kernel -------------------
+    // rows = b·oh·ow of a mobile block; c spans a partial-strip and a
+    // multi-strip channel count
+    let mut table = Table::new(
+        "serve — depthwise conv, f32 loop vs grouped i8 fused-dequant",
+        &["shape (kk,c)", "rows", "kernel", "f32 ms", "int8 ms", "speedup", "W bytes f32", "W bytes i8"],
+    );
+    for &(kk, c) in &[(9usize, 64usize), (9, 256)] {
+        let mut rng = Rng::new(3);
+        let pl = random_packed(&mut rng, kk, c, 8);
+        let panel = GroupedPanel::from_packed(&pl)?;
+        let w = pl.dequant();
+        let bias = vec![0.0f32; c];
+        for &rows in &[196usize, 6272] {
+            let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+            let aq = ActQuant::from_range(x3.min(), x3.max(), 8, 1.0);
+            let t_f32 = time_budget(0.3, 400, || {
+                std::hint::black_box(dwconv_f32(&x3, &w, &bias));
+            });
+            let t_i8 = time_budget(0.3, 400, || {
+                std::hint::black_box(panel.conv_i8(&x3, aq, Some(&bias)));
+            });
+            table.row(vec![
+                format!("({kk},{c})"),
+                rows.to_string(),
+                Kernel::active().name().to_string(),
+                format!("{:.3}", t_f32.mean * 1e3),
+                format!("{:.3}", t_i8.mean * 1e3),
+                format!("{:.2}x", t_f32.mean / t_i8.mean),
+                (4 * kk * c).to_string(),
+                panel.resident_bytes().to_string(),
+            ]);
+        }
+    }
+    table.print();
+    table.save_json("serve_dwconv");
+    report.add(&table);
+
     // -- i8 GEMM per-kernel sweep ----------------------------------------
     // dispatch forced through the COMQ_KERNEL override (the same knob
     // CI pins); unsupported kernels are reported and skipped
@@ -105,6 +167,36 @@ fn main() -> anyhow::Result<()> {
                 let ops = 2.0 * rows as f64 * m as f64 * n as f64;
                 table.row(vec![
                     format!("({m},{n})"),
+                    rows.to_string(),
+                    kern.name().to_string(),
+                    format!("{:.3}", t.mean * 1e3),
+                    format!("{:.2}", ops / t.mean / 1e9),
+                ]);
+            }
+        }
+    }
+    // grouped depthwise rows under the same forced dispatch: "batch" is
+    // the grouped row count, ops = 2·rows·kk·c
+    for &(kk, c) in &[(9usize, 256usize)] {
+        let mut rng = Rng::new(4);
+        let pl = random_packed(&mut rng, kk, c, 8);
+        let panel = GroupedPanel::from_packed(&pl)?;
+        let bias = vec![0.0f32; c];
+        for &rows in &[196usize, 6272] {
+            let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+            let aq = ActQuant::from_range(x3.min(), x3.max(), 8, 1.0);
+            for kern in Kernel::ALL {
+                if !kern.supported() {
+                    println!("[kernel sweep: {} unsupported on this host, skipped]", kern.name());
+                    continue;
+                }
+                std::env::set_var("COMQ_KERNEL", kern.name());
+                let t = time_budget(0.3, 400, || {
+                    std::hint::black_box(panel.conv_i8(&x3, aq, Some(&bias)));
+                });
+                let ops = 2.0 * rows as f64 * kk as f64 * c as f64;
+                table.row(vec![
+                    format!("(dw {kk},{c})"),
                     rows.to_string(),
                     kern.name().to_string(),
                     format!("{:.3}", t.mean * 1e3),
@@ -196,6 +288,43 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     table.save_json("serve_e2e");
+    report.add(&table);
+
+    // -- end-to-end, depthwise model -------------------------------------
+    // the grouped path's model-level instrument: every layer (3 of them
+    // depthwise) serves integer, no f32 weights anywhere
+    let (manifest_m, model_m) = tiny_mobile_cnn(9);
+    let mut rng = Rng::new(10);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * 8 * 8 * 3));
+    let (packed_m, act_m, qmodel_m) = quantize_all_layers(&manifest_m, &model_m, 4, 8, &calib)?;
+    let qm_m = Arc::new(QuantizedModel::from_parts(
+        model_m.info.clone(),
+        qmodel_m.params.clone(),
+        &packed_m,
+        ActSource::Static { bits: act_m.bits, by_layer: act_m.by_layer },
+    )?);
+    assert_eq!(qm_m.grouped_layers(), 3);
+    let mut table = Table::new(
+        "serve — end-to-end forward latency (tiny_mobile depthwise, W4A8)",
+        &["path", "batch", "kernel", "p50 ms", "p95 ms", "p99 ms", "img/s"],
+    );
+    for &batch in &[1usize, 16] {
+        let x = Tensor::new(&[batch, 8, 8, 3], rng.normal_vec(batch * 8 * 8 * 3));
+        let mut lat_fp = Vec::new();
+        let mut lat_i8 = Vec::new();
+        for _ in 0..100 {
+            let t = Timer::start();
+            std::hint::black_box(model_m.forward(&x, &mut Tap::None));
+            lat_fp.push(t.secs());
+            let t = Timer::start();
+            std::hint::black_box(qm_m.forward(&x));
+            lat_i8.push(t.secs());
+        }
+        percentile_row(&mut table, "fp32-native", batch, &lat_fp);
+        percentile_row(&mut table, "int8-serve", batch, &lat_i8);
+    }
+    table.print();
+    table.save_json("serve_e2e_mobile");
     report.add(&table);
 
     report.write_repo_root()?;

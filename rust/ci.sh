@@ -10,12 +10,15 @@ cargo build --release
 # nothing runs them (they bit-rotted silently before PR 3)
 cargo build --release --examples
 cargo bench --no-run
-# twice: once with runtime-detected SIMD kernels (the default), once
-# with dispatch pinned to the portable reference — the parity tests
-# compare kernels directly, but the whole suite must also pass when
-# every GEMM runs scalar (what a non-AVX host sees)
+# three passes: runtime-detected SIMD kernels (the default), dispatch
+# pinned to the portable reference — the parity tests compare kernels
+# directly, but the whole suite must also pass when every GEMM runs
+# scalar (what a non-AVX host sees) — and single-threaded, so the
+# pool's inline fallback path (never touches or creates workers) is
+# exercised on every run
 cargo test -q
 COMQ_KERNEL=scalar cargo test -q
+COMQ_THREADS=1 cargo test -q
 # the intrinsics paths must not bit-rot uncompiled: a target-cpu=native
 # build exercises the target_feature functions plus whatever the
 # autovectorizer now assumes, in a separate target dir so the cache of

@@ -355,11 +355,12 @@ fn cmd_run_packed(args: &Args) -> Result<()> {
     let acc = if rc.opts.engine == EngineKind::Int8 {
         let qm = comq::serve::load_cached(&manifest, &rc.model, packed_path)?;
         log::info!(
-            "serving {} via int8 runtime: {} i8 layers, {:.1} KiB resident (W{}A{})",
+            "serving {} via int8 runtime: {} i8 layers ({} grouped), {:.1} KiB resident (W{}A{})",
             rc.model,
             qm.int8_layers(),
+            qm.grouped_layers(),
             qm.resident_bytes() as f64 / 1024.0,
-            qm.weight_bits(),
+            qm.weight_bits_label(),
             qm.act_source().bits(),
         );
         comq::eval::evaluate_int8(&qm, &dataset.val_images, &dataset.val_labels, manifest.batch)?

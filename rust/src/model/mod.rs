@@ -41,15 +41,24 @@ pub struct LayerStats {
 }
 
 /// Layer-execution override: lets an external runtime take over whole
-/// quantizable linear layers during a forward pass. The integer serving
-/// runtime (`serve::QuantizedModel`) implements this to run `x@W + b` as
-/// an i8 GEMM without ever materializing f32 weights; layers it does not
-/// own (depthwise/skip) fall back to the normal f32 path after
+/// quantizable layers during a forward pass. The integer serving
+/// runtime (`serve::QuantizedModel`) implements this to run `x@W + b`
+/// as an i8 GEMM and depthwise convs through the grouped i8 kernel,
+/// without ever materializing f32 weights; layers it does not own
+/// (kept-FP skip layers) fall back to the normal f32 path after
 /// `tap_input` has had a chance to rewrite their input.
 pub trait LayerExec: Sync {
     /// Fully execute the named linear layer on `x` [rows, m], returning
     /// `y = x@W + b` [rows, n] — or None to fall back to the f32 path.
     fn exec_linear(&self, name: &str, x: &Tensor) -> Option<Tensor>;
+
+    /// Fully execute the named grouped (depthwise) layer on its grouped
+    /// patches `x3` [rows, groups, kk], returning `y` [rows, groups]
+    /// (per-group conv + bias) — or None to fall back to the f32 path.
+    /// Default: fall back.
+    fn exec_grouped(&self, _name: &str, _x3: &Tensor) -> Option<Tensor> {
+        None
+    }
 
     /// Observe/rewrite the input of a layer this executor does *not* own
     /// (e.g. fake-quantize it so fallback layers match a W/A-quantized
@@ -104,6 +113,15 @@ impl Tap<'_> {
     pub fn exec_linear(&mut self, name: &str, x: &Tensor) -> Option<Tensor> {
         match self {
             Tap::Exec(e) => e.exec_linear(name, x),
+            _ => None,
+        }
+    }
+
+    /// Give an execution override the chance to run the whole grouped
+    /// (depthwise) layer; None on every non-Exec tap.
+    pub fn exec_grouped(&mut self, name: &str, x3: &Tensor) -> Option<Tensor> {
+        match self {
+            Tap::Exec(e) => e.exec_grouped(name, x3),
             _ => None,
         }
     }
@@ -243,7 +261,10 @@ pub fn conv2d(
 }
 
 /// Depthwise convolution (mirrors nets/common.py::dwconv2d):
-/// weight [k*k, c], per-channel filters over grouped patches.
+/// weight [k*k, c], per-channel filters over grouped patches. An `Exec`
+/// tap may take the whole layer over (grouped integer serving); like
+/// [`linear`], the f32 parameters are only touched on the fallback
+/// path, so override-owned layers need no `{name}/W` entry.
 pub fn dwconv2d(
     params: &BTreeMap<String, Tensor>,
     name: &str,
@@ -257,8 +278,15 @@ pub fn dwconv2d(
     let c = x.shape()[3];
     let (x3, oh, ow) = crate::tensor::im2col_grouped(x, k, stride, pad);
     let x3 = tap.tap_grouped(name, x3);
-    let w = &params[&format!("{name}/W")]; // [kk, c]
-    let bias = &params[&format!("{name}/b")];
+    if let Some(y) = tap.exec_grouped(name, &x3) {
+        return y.reshape(&[b, oh, ow, c]);
+    }
+    let w = params
+        .get(&format!("{name}/W")) // [kk, c]
+        .unwrap_or_else(|| panic!("missing {name}/W"));
+    let bias = params
+        .get(&format!("{name}/b"))
+        .unwrap_or_else(|| panic!("missing {name}/b"));
     let kk = k * k;
     let rows = b * oh * ow;
     let mut out = Tensor::zeros(&[rows, c]);

@@ -80,6 +80,76 @@ pub fn tiny_plain_cnn(seed: u64) -> (crate::manifest::Manifest, crate::model::Mo
     (manifest, crate::model::Model { info, params })
 }
 
+/// Build a tiny self-contained "mobile" CNN (depthwise-separable blocks,
+/// see `model/cnn.rs::mobile_forward`) plus a matching in-memory
+/// manifest — the grouped-layer counterpart of [`tiny_plain_cnn`] for
+/// tests and benches of the integer depthwise path. Channel counts are
+/// chosen to cover both a partial (c=8 < NR) and a full (c=16) panel
+/// strip, and the last depthwise block reduces to a 1×1 spatial output
+/// (the oh·ow = 1 edge).
+pub fn tiny_mobile_cnn(seed: u64) -> (crate::manifest::Manifest, crate::model::Model) {
+    use crate::manifest::{CnnConfig, LayerInfo, Manifest, ModelConfig, ModelInfo};
+    use std::collections::BTreeMap;
+
+    let (img, classes, width) = (8usize, 10usize, 8usize);
+    // (name, input features m, output channels n, grouped) along
+    // mobile_forward: stem k3 s2 → 4×4, dsb0 (dw s1, pw 8→8),
+    // dsb1 (dw s2 → 2×2, pw 8→16), dsb2 (dw s2 → 1×1, pw 16→32), head
+    let spec: &[(&str, usize, usize, bool)] = &[
+        ("stem", 27, width, false),
+        ("dsb0/dw", 9, 8, true),
+        ("dsb0/pw", 8, 8, false),
+        ("dsb1/dw", 9, 8, true),
+        ("dsb1/pw", 8, 16, false),
+        ("dsb2/dw", 9, 16, true),
+        ("dsb2/pw", 16, 32, false),
+        ("head", 32, classes, false),
+    ];
+    let mut rng = Rng::new(seed);
+    let mut params = BTreeMap::new();
+    let mut names = Vec::new();
+    let mut quant_layers = Vec::new();
+    for &(name, m, n, grouped) in spec {
+        let sc = 1.5 / (m as f32).sqrt();
+        params.insert(
+            format!("{name}/W"),
+            Tensor::new(&[m, n], rng.normal_vec(m * n).into_iter().map(|v| v * sc).collect()),
+        );
+        params.insert(
+            format!("{name}/b"),
+            Tensor::new(&[n], rng.normal_vec(n).into_iter().map(|v| v * 0.1).collect()),
+        );
+        names.push(format!("{name}/W"));
+        names.push(format!("{name}/b"));
+        quant_layers.push(LayerInfo { name: name.to_string(), m, n, grouped });
+    }
+    let info = ModelInfo {
+        name: "tiny_mobile".into(),
+        config: ModelConfig::Cnn(CnnConfig {
+            kind: "mobile".into(),
+            width,
+            blocks: 0,
+            img,
+            classes,
+        }),
+        params: names,
+        quant_layers,
+        checkpoint: String::new(),
+        fp_top1: 0.0,
+        artifacts: BTreeMap::new(),
+    };
+    let manifest = Manifest {
+        root: std::path::PathBuf::from("."),
+        batch: 16,
+        classes,
+        img,
+        data: String::new(),
+        models: BTreeMap::from([("tiny_mobile".to_string(), info.clone())]),
+        sweeps: Vec::new(),
+    };
+    (manifest, crate::model::Model { info, params })
+}
+
 /// A seeded generator handed to every property case.
 pub struct Gen {
     pub rng: Rng,
@@ -259,6 +329,25 @@ mod tests {
         let conv0 = &model.info.quant_layers[0];
         assert_eq!((conv0.m * conv0.n) % 2, 1, "conv0 must have an odd code count");
         assert!(manifest.model("tiny_plain").is_ok());
+    }
+
+    #[test]
+    fn tiny_mobile_cnn_is_consistent() {
+        let (manifest, model) = tiny_mobile_cnn(5);
+        let mut g = Gen { rng: Rng::new(6), case: 0 };
+        let x = g.tensor(&[2, manifest.img, manifest.img, 3], 1.0);
+        let y = model.forward(&x, &mut crate::model::Tap::None);
+        assert_eq!(y.shape(), &[2, manifest.classes]);
+        for l in &model.info.quant_layers {
+            assert_eq!(model.weight(&l.name).shape(), &[l.m, l.n], "{}", l.name);
+        }
+        let dw: Vec<_> = model.info.quant_layers.iter().filter(|l| l.grouped).collect();
+        assert_eq!(dw.len(), 3, "three depthwise blocks");
+        assert!(dw.iter().all(|l| l.m == 9), "3×3 depthwise patches");
+        // the strip edges the grouped serve tests rely on: one partial
+        // strip (c < NR) and one full strip (c == NR)
+        assert!(dw.iter().any(|l| l.n < crate::tensor::NR));
+        assert!(dw.iter().any(|l| l.n == crate::tensor::NR));
     }
 
     #[test]

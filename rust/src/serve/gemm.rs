@@ -32,6 +32,14 @@
 //! bytes, which is the whole bandwidth win on batch-1 serving; the same
 //! persistent-pool parallelism splits over row blocks when the batch
 //! can feed the pool and over column strips when it can't (batch-1).
+//!
+//! Grouped (depthwise) layers run through [`dwconv_i8_fused`]: each
+//! output channel convolves its own k·k patch, so the activation side
+//! is packed into the same K4-interleaved strip layout as the weight
+//! panel ([`GroupedQuantizedActs`]) and the kernel loads per-lane quads
+//! instead of broadcasting one (`util::simd::dot_i8_grouped`). The
+//! epilogue identity above holds per group with `m = k·k` and the
+//! per-row code sum replaced by a per-(row, group) sum.
 
 use crate::quant::actq::ActQuant;
 use crate::tensor::{Tensor, MR, NR};
@@ -99,6 +107,74 @@ impl QuantizedActs {
             }
         });
         QuantizedActs { codes, rsum, rows, m, stride, aq }
+    }
+}
+
+/// A grouped (depthwise) batch of activation patches quantized to
+/// uncentered u8 codes, packed into the **same K4-interleaved strip
+/// layout as the weight panel** so the grouped kernel can load per-lane
+/// quads (see `util::simd::dot_i8_grouped`), plus the per-(row, group)
+/// code sums its epilogue needs.
+pub struct GroupedQuantizedActs {
+    /// Unsigned codes in per-row panels `[rows][n_strips][kg][NR][4]`:
+    /// `codes[r·stride + s·kg·NR·4 + (g·NR + l)·4 + t]` is the code of
+    /// patch element `4g + t` of group `s·NR + l`. Pad lanes (groups
+    /// past `c`) and pad k positions (past `kk`) stay zero, matching
+    /// the panel's zero padding so padded products vanish.
+    pub codes: Vec<u8>,
+    /// Per-(row, group) sum of the unsigned codes, `[rows · c]` —
+    /// unlike the dense path the activation sum differs per output
+    /// column, because each group convolves its own patch.
+    pub gsum: Vec<i32>,
+    pub rows: usize,
+    /// Number of groups (channels).
+    pub c: usize,
+    /// Patch length per group (k·k for a k×k depthwise kernel).
+    pub kk: usize,
+    /// Row stride of `codes` in bytes: `c.div_ceil(NR)·kk.div_ceil(4)·NR·4`.
+    pub stride: usize,
+    pub aq: ActQuant,
+}
+
+impl GroupedQuantizedActs {
+    /// Quantize grouped patches x3 [rows, c, kk] (the `im2col_grouped`
+    /// layout) with the given activation grid. Rows split over the
+    /// persistent pool above the same size threshold as the dense path;
+    /// each row writes a disjoint `codes` panel and `gsum` stripe.
+    pub fn quantize(x3: &Tensor, aq: ActQuant) -> GroupedQuantizedActs {
+        assert!(aq.bits >= 1 && aq.bits <= 8, "activation bits {} not in 1..=8", aq.bits);
+        assert_eq!(x3.ndim(), 3, "grouped input must be [rows, c, kk], got {:?}", x3.shape());
+        let (rows, c, kk) = (x3.shape()[0], x3.shape()[1], x3.shape()[2]);
+        let kg = kk.div_ceil(K4);
+        let strip_len = kg * NR * K4;
+        let stride = c.div_ceil(NR) * strip_len;
+        let mut codes = vec![0u8; rows * stride];
+        let mut gsum = vec![0i32; rows * c];
+        let xd = x3.data();
+        let cptr = SendPtr::new(codes.as_mut_ptr());
+        let gptr = SendPtr::new(gsum.as_mut_ptr());
+        let min_rows = (QUANT_MIN_ELEMS_PER_THREAD / (c * kk).max(1)).max(1);
+        parallel_ranges(rows, min_rows, |_, rr| {
+            for r in rr {
+                // disjoint per-row stripes; pad bytes stay zero
+                let crow =
+                    unsafe { std::slice::from_raw_parts_mut(cptr.ptr().add(r * stride), stride) };
+                let grow = unsafe { std::slice::from_raw_parts_mut(gptr.ptr().add(r * c), c) };
+                let src = &xd[r * c * kk..(r + 1) * c * kk];
+                for (ch, (gs, patch)) in grow.iter_mut().zip(src.chunks_exact(kk)).enumerate() {
+                    let (s, l) = (ch / NR, ch % NR);
+                    let mut acc = 0i32;
+                    for (p, &v) in patch.iter().enumerate() {
+                        let q = aq.code(v) as i32;
+                        acc += q;
+                        let (g, t) = (p / K4, p % K4);
+                        crow[s * strip_len + (g * NR + l) * K4 + t] = q as u8;
+                    }
+                    *gs = acc;
+                }
+            }
+        });
+        GroupedQuantizedActs { codes, gsum, rows, c, kk, stride, aq }
     }
 }
 
@@ -220,6 +296,93 @@ pub fn gemm_i8_fused_with(
                 let i0 = blk * MR;
                 let rmax = MR.min(rows - i0);
                 micro_i8(kern, a, strip, kg, wide, out, i0, rmax, j0, cols, n, co);
+            }
+        }
+    });
+}
+
+/// Grouped (depthwise) counterpart of [`gemm_i8_fused`]:
+/// `y[r][j] = scale_j·(dot_rj + zc_j·gsum_rj + fixed_j) + bias_j` over a
+/// K4-packed grouped weight panel (`pack_panel_k4` of the [kk, c]
+/// centered codes — the same one-time prep as the dense path), with the
+/// per-lane kernel dispatched by [`Kernel::active`]. The epilogue is the
+/// dense one with `m = kk` and the per-row code sum replaced by the
+/// per-(row, group) sum. `out` [rows, c] is fully overwritten.
+pub fn dwconv_i8_fused(
+    a: &GroupedQuantizedActs,
+    panel: &[i8],
+    c: usize,
+    wbits: u32,
+    co: &EpilogueCoeffs,
+    out: &mut [f32],
+) {
+    dwconv_i8_fused_with(Kernel::active(), a, panel, c, wbits, co, out)
+}
+
+/// [`dwconv_i8_fused`] with the kernel forced — the benching/testing
+/// entry that bypasses detection and the env override.
+pub fn dwconv_i8_fused_with(
+    kern: Kernel,
+    a: &GroupedQuantizedActs,
+    panel: &[i8],
+    c: usize,
+    wbits: u32,
+    co: &EpilogueCoeffs,
+    out: &mut [f32],
+) {
+    let kern = if kern.supported() { kern } else { Kernel::Scalar };
+    let (rows, kk) = (a.rows, a.kk);
+    assert!(kk < MAX_K, "kk={kk} would overflow the i32 accumulator");
+    assert_eq!(a.c, c, "activation groups vs layer channels");
+    assert_eq!(out.len(), rows * c);
+    assert_eq!(co.scale.len(), c);
+    assert_eq!(co.zc.len(), c);
+    assert_eq!(co.fixed.len(), c);
+    assert_eq!(co.bias.len(), c);
+    if rows == 0 || c == 0 {
+        return;
+    }
+    let kg = kk.div_ceil(K4);
+    let strip_len = kg * NR * K4;
+    let n_strips = c.div_ceil(NR);
+    assert_eq!(panel.len(), n_strips * strip_len, "panel not K4-packed for [{kk}, {c}]");
+    assert_eq!(a.stride, n_strips * strip_len, "activation panel stride mismatch");
+    let wide = !simd::maddubs_safe(a.aq.bits, wbits);
+    let row_blocks = rows.div_ceil(MR);
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    // rows = b·oh·ow, so a row split feeds the pool on every realistic
+    // depthwise call (even batch 1 has oh·ow rows); the whole weight
+    // panel is a few k-groups × 64 bytes and stays L1-resident
+    let min_blocks = (MIN_OPS_PER_THREAD / (2 * kk * c * MR).max(1)).max(1);
+    parallel_ranges(row_blocks, min_blocks, |_, blocks| {
+        let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.ptr(), rows * c) };
+        for blk in blocks {
+            let i0 = blk * MR;
+            let rmax = MR.min(rows - i0);
+            for s in 0..n_strips {
+                let strip = &panel[s * strip_len..(s + 1) * strip_len];
+                let j0 = s * NR;
+                let cols = NR.min(c - j0);
+                let mut acc = [[0i32; NR]; MR];
+                simd::dot_i8_grouped(
+                    kern,
+                    &a.codes[i0 * a.stride + s * strip_len..],
+                    a.stride,
+                    rmax,
+                    strip,
+                    kg,
+                    wide,
+                    &mut acc,
+                );
+                for (r, accr) in acc.iter().take(rmax).enumerate() {
+                    let orow = &mut out[(i0 + r) * c + j0..(i0 + r) * c + j0 + cols];
+                    for (l, (o, &d)) in orow.iter_mut().zip(&accr[..cols]).enumerate() {
+                        let j = j0 + l;
+                        let gs = a.gsum[(i0 + r) * c + j] as f64;
+                        *o = (co.scale[j] * (d as f64 + co.zc[j] * gs + co.fixed[j])
+                            + co.bias[j]) as f32;
+                    }
+                }
             }
         }
     });
@@ -366,6 +529,94 @@ mod tests {
                     let got = y[r * n + j] as f64;
                     let tol = 1e-3 * acc.abs().max(1.0);
                     assert!((got - acc).abs() <= tol, "({rows},{k},{n}) r={r} j={j}: {got} vs {acc}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_quantize_layout_and_sums() {
+        let aq = ActQuant::from_range(-2.0, 2.0, 8, 1.0);
+        let mut rng = Rng::new(11);
+        let (rows, c, kk) = (3usize, 21usize, 9usize); // c % NR ≠ 0, kk % 4 ≠ 0
+        let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+        let qa = GroupedQuantizedActs::quantize(&x3, aq);
+        let kg = kk.div_ceil(K4);
+        let strip_len = kg * NR * K4;
+        assert_eq!(qa.stride, c.div_ceil(NR) * strip_len);
+        assert_eq!(qa.codes.len(), rows * qa.stride);
+        for r in 0..rows {
+            let panel = &qa.codes[r * qa.stride..(r + 1) * qa.stride];
+            let mut seen = vec![false; qa.stride];
+            for ch in 0..c {
+                let (s, l) = (ch / NR, ch % NR);
+                let mut sum = 0i32;
+                for p in 0..kk {
+                    let (g, t) = (p / K4, p % K4);
+                    let idx = s * strip_len + (g * NR + l) * K4 + t;
+                    seen[idx] = true;
+                    let got = panel[idx] as f32;
+                    assert_eq!(got, aq.code(x3.data()[(r * c + ch) * kk + p]), "r={r} ch={ch} p={p}");
+                    sum += panel[idx] as i32;
+                }
+                assert_eq!(qa.gsum[r * c + ch], sum, "r={r} ch={ch}");
+            }
+            // everything not covered by a (group, patch) pair is padding
+            for (idx, &v) in panel.iter().enumerate() {
+                if !seen[idx] {
+                    assert_eq!(v, 0, "pad byte {idx} must stay zero");
+                }
+            }
+        }
+    }
+
+    /// Grouped integer conv against a plain f64 loop over the
+    /// *dequantized* values — the depthwise analogue of
+    /// `gemm_matches_dequantized_reference`.
+    #[test]
+    fn dwconv_matches_dequantized_reference() {
+        let mut rng = Rng::new(12);
+        for &(rows, kk, c) in &[(1usize, 1usize, 1usize), (4, 9, 8), (5, 9, 21), (7, 4, 40)] {
+            let wbits = 4u32;
+            let cw = 1i32 << (wbits - 1);
+            // random centered weight codes [kk, c] + per-channel grid
+            let s: Vec<i8> = (0..kk * c).map(|_| (rng.below(16) as i32 - cw) as i8).collect();
+            let delta: Vec<f32> = (0..c).map(|_| rng.range_f32(0.01, 0.2)).collect();
+            let zero: Vec<f32> = (0..c).map(|_| (rng.below(9) as f32) - 8.0).collect();
+            let bias: Vec<f32> = (0..c).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+            let aq = ActQuant::from_range(x3.min(), x3.max(), 8, 1.0);
+            let acts = GroupedQuantizedActs::quantize(&x3, aq);
+
+            let za = aq.zero as f64;
+            let mut csum = vec![0i64; c];
+            for (idx, &v) in s.iter().enumerate() {
+                csum[idx % c] += v as i64;
+            }
+            let co = EpilogueCoeffs {
+                scale: delta.iter().map(|&d| aq.scale as f64 * d as f64).collect(),
+                zc: zero.iter().map(|&z| cw as f64 + z as f64).collect(),
+                fixed: (0..c)
+                    .map(|j| za * (csum[j] as f64 + kk as f64 * (cw as f64 + zero[j] as f64)))
+                    .collect(),
+                bias: bias.iter().map(|&b| b as f64).collect(),
+            };
+            let panel = pack_panel_k4(&s, kk, c);
+            let mut y = vec![0.0f32; rows * c];
+            dwconv_i8_fused(&acts, &panel, c, wbits, &co, &mut y);
+
+            // reference: fake-quant patches, dequantize w, f64 dot
+            for r in 0..rows {
+                for j in 0..c {
+                    let mut acc = bias[j] as f64;
+                    for p in 0..kk {
+                        let xh = aq.apply(x3.data()[(r * c + j) * kk + p]) as f64;
+                        let wq = ((s[p * c + j] as i32 + cw) as f32 + zero[j]) * delta[j];
+                        acc += xh * wq as f64;
+                    }
+                    let got = y[r * c + j] as f64;
+                    let tol = 1e-3 * acc.abs().max(1.0);
+                    assert!((got - acc).abs() <= tol, "({rows},{kk},{c}) r={r} j={j}: {got} vs {acc}");
                 }
             }
         }

@@ -9,18 +9,22 @@
 //! * `packed`  — one-time weight prep: b-bit bitstream → K4-interleaved
 //!   strip-packed centered-i8 panel (the MR×NR blocking of
 //!   `tensor/matmul.rs` with k in groups of 4, a quarter the bytes of
-//!   f32) + per-column integer sums;
+//!   f32) + per-column integer sums; grouped (depthwise) layers get the
+//!   same prep as per-group k·k-column strips (`GroupedPanel`);
 //! * `gemm`    — the `u8×i8→i32` register-tiled GEMM with the
 //!   per-column `(δ, z)` weight dequant and `(scale, zero)` activation
 //!   grid folded into the epilogue, parallelized over the persistent
 //!   worker pool and executed by a runtime-dispatched SIMD micro-kernel
 //!   (`util::simd`: AVX-512 VNNI `vpdpbusd` / AVX2 `vpmaddubsw` /
 //!   scalar reference, forced via `COMQ_KERNEL=scalar|avx2|vnni`; all
-//!   three produce bit-identical i32 accumulators);
+//!   three produce bit-identical i32 accumulators); plus the grouped
+//!   sibling `dwconv_i8_fused` over per-lane activation panels
+//!   (`GroupedQuantizedActs`), same contract, same kernels;
 //! * `model`   — `QuantizedModel` (routes quantizable linears through
-//!   the GEMM via `model::LayerExec`) and the process-wide load-once
-//!   registry, the serving analogue of `runtime::Engine`'s compile
-//!   cache;
+//!   the GEMM and depthwise layers through the grouped kernel via
+//!   `model::LayerExec` — no layer class is left on f32 weights) and
+//!   the process-wide load-once registry, the serving analogue of
+//!   `runtime::Engine`'s compile cache;
 //! * `batcher` — a dynamic micro-batching request queue coalescing
 //!   single requests into batches under a latency deadline.
 //!
@@ -34,8 +38,11 @@ pub mod model;
 pub mod packed;
 
 pub use batcher::{BatchConfig, ServeStats, Server};
-pub use gemm::{gemm_i8_fused, gemm_i8_fused_with, EpilogueCoeffs, QuantizedActs};
+pub use gemm::{
+    dwconv_i8_fused, dwconv_i8_fused_with, gemm_i8_fused, gemm_i8_fused_with, EpilogueCoeffs,
+    GroupedQuantizedActs, QuantizedActs,
+};
 pub use model::{load_cached, registry_len, ActSource, QuantizedModel, DEFAULT_ACT_BITS};
-pub use packed::Int8Panel;
+pub use packed::{GroupedPanel, Int8Panel};
 
 pub use crate::util::simd::Kernel;

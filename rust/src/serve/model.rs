@@ -2,12 +2,15 @@
 //! plus the process-wide load-once registry (the serving analogue of
 //! `runtime::Engine`'s compile cache).
 //!
-//! Quantizable linear layers run through the i8 GEMM via the
+//! Quantizable layers run through integer execution via the
 //! `model::LayerExec` override — their f32 weights are never
-//! materialized. Depthwise (grouped) layers and layers kept in full
-//! precision fall back to the f32 forward; when an activation grid is
-//! known their inputs are fake-quantized so the whole network matches
-//! the W/A-quantized reference bit-for-argmax.
+//! materialized. Dense linears go through the i8 GEMM; depthwise
+//! (grouped) layers go through the grouped per-lane kernel
+//! (`serve::gemm::dwconv_i8_fused`), so a MobileNet-style CNN is served
+//! with no f32 weight anywhere. Only layers kept in full precision
+//! (skip-layers) fall back to the f32 forward; when an activation grid
+//! is known their inputs are fake-quantized so the whole network
+//! matches the W/A-quantized reference bit-for-argmax.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -18,8 +21,10 @@ use crate::deploy::{self, PackedLayer};
 use crate::manifest::{Manifest, ModelConfig, ModelInfo};
 use crate::model::{LayerExec, Model, Tap};
 use crate::quant::actq::ActQuant;
-use crate::serve::gemm::{gemm_i8_fused, EpilogueCoeffs, QuantizedActs};
-use crate::serve::packed::Int8Panel;
+use crate::serve::gemm::{
+    dwconv_i8_fused, gemm_i8_fused, EpilogueCoeffs, GroupedQuantizedActs, QuantizedActs,
+};
+use crate::serve::packed::{GroupedPanel, Int8Panel};
 use crate::tensor::Tensor;
 
 /// Activation bits assumed when a checkpoint carries no calibrated
@@ -83,24 +88,57 @@ impl Int8Layer {
     }
 }
 
+/// One grouped (depthwise) layer served integer: prepped grouped panel
+/// + bias, with the same static-grid coefficient caching as
+/// [`Int8Layer`].
+pub struct GroupedInt8Layer {
+    panel: GroupedPanel,
+    bias: Option<Vec<f32>>,
+    static_co: Option<(ActQuant, EpilogueCoeffs)>,
+}
+
+impl GroupedInt8Layer {
+    /// Per-group conv + bias over grouped patches x3 [rows, c, kk],
+    /// entirely in integer arithmetic. Same dispatch/static-grid
+    /// contract as [`Int8Layer::forward`].
+    fn forward(&self, x3: &Tensor, aq: ActQuant) -> Tensor {
+        match &self.static_co {
+            Some((saq, co)) => {
+                let acts = GroupedQuantizedActs::quantize(x3, *saq);
+                let c = self.panel.channels();
+                let mut out = Tensor::zeros(&[x3.shape()[0], c]);
+                dwconv_i8_fused(&acts, self.panel.panel(), c, self.panel.bits(), co, out.data_mut());
+                out
+            }
+            None => self.panel.conv_i8(x3, aq, self.bias.as_deref()),
+        }
+    }
+}
+
 /// A packed checkpoint ready to serve.
 pub struct QuantizedModel {
     /// Architecture + every parameter that still runs in f32 (biases,
-    /// norms, depthwise weights, kept-FP layers). Has NO `{l}/W` entry
-    /// for i8-served layers.
+    /// norms, kept-FP layers). Has NO `{l}/W` entry for any
+    /// integer-served layer, dense or grouped.
     base: Model,
     int8: BTreeMap<String, Int8Layer>,
+    grouped: BTreeMap<String, GroupedInt8Layer>,
     act: ActSource,
-    weight_bits: u32,
+    /// (min, max) source code width across packed layers —
+    /// mixed-precision checkpoints carry per-layer widths, so a single
+    /// number would misreport them. (0, 0) when nothing is packed.
+    weight_bits: (u32, u32),
     quantizable: BTreeSet<String>,
 }
 
 impl QuantizedModel {
     /// Build from in-memory parts. `params` must hold every non-packed
     /// parameter (the pipeline passes the dequantized model's map; the
-    /// loader passes the checkpoint's `fp/` entries). Packed weights of
-    /// non-grouped layers are prepped to i8 and their f32 `{l}/W`
-    /// entries dropped; grouped layers are dequantized into `params`.
+    /// loader passes the checkpoint's `fp/` entries). Packed weights —
+    /// dense and grouped alike — are prepped to i8 panels; the packed
+    /// codes are authoritative, so any caller-supplied f32 `{l}/W`
+    /// entry for a packed layer is dropped (a stale tensor in `params`
+    /// must never shadow the checkpoint's codes).
     pub fn from_parts(
         info: ModelInfo,
         mut params: BTreeMap<String, Tensor>,
@@ -111,7 +149,7 @@ impl QuantizedModel {
         if act.bits() < 1 || act.bits() > 8 {
             bail!("activation bits {} not servable as i8 (need 1..=8)", act.bits());
         }
-        let grouped: BTreeSet<&str> = info
+        let grouped_names: BTreeSet<&str> = info
             .quant_layers
             .iter()
             .filter(|l| l.grouped)
@@ -119,34 +157,44 @@ impl QuantizedModel {
             .collect();
         let known: BTreeSet<&str> = info.quant_layers.iter().map(|l| l.name.as_str()).collect();
         let mut int8 = BTreeMap::new();
-        let mut weight_bits = 0;
+        let mut grouped = BTreeMap::new();
+        let mut weight_bits: Option<(u32, u32)> = None;
         for pl in packed {
             if !known.contains(pl.name.as_str()) {
                 bail!("packed layer '{}' not in model '{}'", pl.name, info.name);
             }
-            weight_bits = weight_bits.max(pl.bits);
-            if grouped.contains(pl.name.as_str()) {
-                // depthwise runs f32 (k·k×c weights — memory-trivial)
-                params.entry(format!("{}/W", pl.name)).or_insert_with(|| pl.dequant());
+            weight_bits = Some(match weight_bits {
+                None => (pl.bits, pl.bits),
+                Some((lo, hi)) => (lo.min(pl.bits), hi.max(pl.bits)),
+            });
+            let bias = params.get(&format!("{}/b", pl.name)).map(|t| t.data().to_vec());
+            let static_aq = match &act {
+                ActSource::Static { by_layer, .. } => by_layer.get(&pl.name).copied(),
+                ActSource::Dynamic { .. } => None,
+            };
+            if grouped_names.contains(pl.name.as_str()) {
+                let panel = GroupedPanel::from_packed(pl)?;
+                let static_co =
+                    static_aq.map(|aq| (aq, panel.coeffs(&aq, bias.as_deref())));
+                grouped.insert(pl.name.clone(), GroupedInt8Layer { panel, bias, static_co });
             } else {
                 let panel = Int8Panel::from_packed(pl)?;
-                let bias = params.get(&format!("{}/b", pl.name)).map(|t| t.data().to_vec());
-                let static_co = match &act {
-                    ActSource::Static { by_layer, .. } => by_layer
-                        .get(&pl.name)
-                        .map(|aq| (*aq, panel.coeffs(aq, bias.as_deref()))),
-                    ActSource::Dynamic { .. } => None,
-                };
+                let static_co =
+                    static_aq.map(|aq| (aq, panel.coeffs(&aq, bias.as_deref())));
                 int8.insert(pl.name.clone(), Int8Layer { panel, bias, static_co });
-                params.remove(&format!("{}/W", pl.name));
             }
+            // the packed codes are authoritative: a stale f32 weight in
+            // `params` must neither be served nor linger in memory
+            params.remove(&format!("{}/W", pl.name));
         }
         // completeness: every canonical parameter is either present in
-        // f32 or covered by an i8 panel
+        // f32 or covered by an integer panel
         for p in &info.params {
             if !params.contains_key(p) {
-                let covered =
-                    p.strip_suffix("/W").map(|l| int8.contains_key(l)).unwrap_or(false);
+                let covered = p
+                    .strip_suffix("/W")
+                    .map(|l| int8.contains_key(l) || grouped.contains_key(l))
+                    .unwrap_or(false);
                 if !covered {
                     bail!("missing parameter '{p}' (neither packed nor FP)");
                 }
@@ -156,8 +204,9 @@ impl QuantizedModel {
         Ok(QuantizedModel {
             base: Model { info, params },
             int8,
+            grouped,
             act,
-            weight_bits,
+            weight_bits: weight_bits.unwrap_or((0, 0)),
             quantizable,
         })
     }
@@ -199,23 +248,50 @@ impl QuantizedModel {
         }
     }
 
-    /// Number of layers served through the i8 GEMM.
+    /// Number of layers served through integer execution (dense i8
+    /// GEMM + grouped depthwise kernel).
     pub fn int8_layers(&self) -> usize {
-        self.int8.len()
+        self.int8.len() + self.grouped.len()
     }
 
-    pub fn weight_bits(&self) -> u32 {
+    /// Of those, the grouped (depthwise) layers.
+    pub fn grouped_layers(&self) -> usize {
+        self.grouped.len()
+    }
+
+    /// (min, max) source code width across the packed layers — equal
+    /// for a uniform checkpoint, a genuine range for mixed precision.
+    /// (0, 0) when nothing is packed.
+    pub fn weight_bits_range(&self) -> (u32, u32) {
         self.weight_bits
+    }
+
+    /// Display form of the width: "4" for uniform, "2..8" for mixed.
+    pub fn weight_bits_label(&self) -> String {
+        let (lo, hi) = self.weight_bits;
+        if lo == hi {
+            format!("{lo}")
+        } else {
+            format!("{lo}..{hi}")
+        }
     }
 
     pub fn act_source(&self) -> &ActSource {
         &self.act
     }
 
-    /// Serving-resident bytes of the i8 panels (the f32 weights these
-    /// replace would be `4·m·n` each).
+    /// Whether a layer still holds an f32 `{layer}/W` entry (diagnostic
+    /// for the no-f32-materialization guarantee of integer-served
+    /// layers).
+    pub fn fp_weight_materialized(&self, layer: &str) -> bool {
+        self.base.params.contains_key(&format!("{layer}/W"))
+    }
+
+    /// Serving-resident bytes of the integer panels (the f32 weights
+    /// these replace would be `4·m·n` each).
     pub fn resident_bytes(&self) -> usize {
-        self.int8.values().map(|l| l.panel.resident_bytes()).sum()
+        self.int8.values().map(|l| l.panel.resident_bytes()).sum::<usize>()
+            + self.grouped.values().map(|l| l.panel.resident_bytes()).sum::<usize>()
     }
 
     fn act_for(&self, name: &str, x: &Tensor) -> ActQuant {
@@ -235,11 +311,20 @@ impl LayerExec for QuantizedModel {
         Some(layer.forward(x, self.act_for(name, x)))
     }
 
+    fn exec_grouped(&self, name: &str, x3: &Tensor) -> Option<Tensor> {
+        let layer = self.grouped.get(name)?;
+        Some(layer.forward(x3, self.act_for(name, x3)))
+    }
+
     fn tap_input(&self, name: &str, x: Tensor) -> Tensor {
-        // i8-owned layers quantize internally; non-quantizable layers
-        // pass through; quantizable fallbacks (depthwise, kept-FP) get
-        // fake-quantized so the network matches the W/A reference.
-        if self.int8.contains_key(name) || !self.quantizable.contains(name) {
+        // integer-owned layers (dense and grouped) quantize internally;
+        // non-quantizable layers pass through; quantizable fallbacks
+        // (kept-FP skip layers) get fake-quantized so the network
+        // matches the W/A reference.
+        if self.int8.contains_key(name)
+            || self.grouped.contains_key(name)
+            || !self.quantizable.contains(name)
+        {
             return x;
         }
         let aq = self.act_for(name, &x);

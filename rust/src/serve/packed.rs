@@ -16,7 +16,10 @@ use anyhow::{bail, Result};
 
 use crate::deploy::PackedLayer;
 use crate::quant::actq::ActQuant;
-use crate::serve::gemm::{gemm_i8_fused, pack_panel_k4, EpilogueCoeffs, QuantizedActs};
+use crate::serve::gemm::{
+    dwconv_i8_fused, gemm_i8_fused, pack_panel_k4, EpilogueCoeffs, GroupedQuantizedActs,
+    QuantizedActs,
+};
 use crate::tensor::Tensor;
 
 /// A layer's weights prepped for integer execution.
@@ -126,6 +129,74 @@ impl Int8Panel {
     }
 }
 
+/// A grouped (depthwise) layer's weights prepped for integer execution:
+/// the `.cqm` layer is [k·k, c] with one weight column per group, and
+/// the panel is the same per-group k·k-column strip layout as the dense
+/// prep — `pack_panel_k4` over [kk, c] — with the per-column code sums
+/// the grouped epilogue folds in. The prep is shared with [`Int8Panel`]
+/// (one decode path, one layout); only execution differs: the grouped
+/// kernel dots each strip lane against its *own* activation patch
+/// (`serve::gemm::dwconv_i8_fused`) instead of broadcasting one
+/// activation row across the strip.
+pub struct GroupedPanel {
+    inner: Int8Panel,
+}
+
+impl GroupedPanel {
+    /// Decode and pack a grouped `.cqm` layer (m = k·k patch length,
+    /// n = groups). Same one-time prep and validation as the dense path.
+    pub fn from_packed(pl: &PackedLayer) -> Result<GroupedPanel> {
+        Ok(GroupedPanel { inner: Int8Panel::from_packed(pl)? })
+    }
+
+    /// Patch length per group (k·k).
+    pub fn kk(&self) -> usize {
+        self.inner.m
+    }
+
+    /// Number of groups (channels).
+    pub fn channels(&self) -> usize {
+        self.inner.n
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.inner.bits
+    }
+
+    pub(crate) fn panel(&self) -> &[i8] {
+        self.inner.panel()
+    }
+
+    /// Per-group epilogue coefficients — the dense derivation with
+    /// `m = k·k` (see [`Int8Panel::coeffs`]); the per-row activation sum
+    /// it pairs with becomes per-(row, group) at execution time.
+    pub fn coeffs(&self, aq: &ActQuant, bias: Option<&[f32]>) -> EpilogueCoeffs {
+        self.inner.coeffs(aq, bias)
+    }
+
+    /// Depthwise conv over grouped patches x3 [rows, c, kk] entirely on
+    /// the integer path: quantize+pack the patches on the given grid,
+    /// run the grouped kernel, dequantize in the epilogue. Returns
+    /// [rows, c]. The standalone form of a grouped layer forward,
+    /// exposed for benches and layer-level parity tests.
+    pub fn conv_i8(&self, x3: &Tensor, aq: ActQuant, bias: Option<&[f32]>) -> Tensor {
+        assert_eq!(x3.ndim(), 3, "grouped input must be [rows, c, kk]");
+        let (rows, c, kk) = (x3.shape()[0], x3.shape()[1], x3.shape()[2]);
+        assert_eq!(c, self.channels(), "input groups vs layer channels");
+        assert_eq!(kk, self.kk(), "patch length vs layer k·k");
+        let acts = GroupedQuantizedActs::quantize(x3, aq);
+        let co = self.coeffs(&acts.aq, bias);
+        let mut out = Tensor::zeros(&[rows, c]);
+        dwconv_i8_fused(&acts, self.panel(), c, self.bits(), &co, out.data_mut());
+        out
+    }
+
+    /// Serving-resident bytes (panel + column sums + grid scalars).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,6 +248,43 @@ mod tests {
                 assert_eq!(panel.csum[j], want, "bits={bits} col {j}");
             }
             assert!(panel.resident_bytes() < 4 * m * n + 12 * n);
+        }
+    }
+
+    #[test]
+    fn grouped_panel_shares_the_dense_prep() {
+        let mut rng = Rng::new(23);
+        for &bits in &[2u32, 4, 8] {
+            let (kk, c) = (9, 21); // kk % 4 ≠ 0, c % NR ≠ 0
+            let (pl, lq) = random_packed(&mut rng, kk, c, bits);
+            let gp = GroupedPanel::from_packed(&pl).unwrap();
+            let dense = Int8Panel::from_packed(&pl).unwrap();
+            assert_eq!((gp.kk(), gp.channels(), gp.bits()), (kk, c, bits));
+            assert_eq!(gp.panel(), dense.panel(), "bits={bits}: one prep, one layout");
+            assert_eq!(gp.resident_bytes(), dense.resident_bytes());
+            // integer conv of a single patch row matches the dequantized
+            // f32 dot per group
+            let mut x3 = Tensor::zeros(&[2, c, kk]);
+            for v in x3.data_mut() {
+                *v = rng.range_f32(-1.0, 1.0);
+            }
+            let aq = crate::quant::actq::ActQuant::from_range(-1.0, 1.0, 8, 1.0);
+            let y = gp.conv_i8(&x3, aq, None);
+            let wq = lq.dequant(); // [kk, c]
+            for r in 0..2 {
+                for j in 0..c {
+                    let mut want = 0.0f64;
+                    for p in 0..kk {
+                        want +=
+                            aq.apply(x3.data()[(r * c + j) * kk + p]) as f64 * wq.at2(p, j) as f64;
+                    }
+                    let got = y.at2(r, j) as f64;
+                    assert!(
+                        (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                        "bits={bits} r={r} j={j}: {got} vs {want}"
+                    );
+                }
+            }
         }
     }
 

@@ -42,24 +42,47 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, usize
 
 /// Grouped (depthwise) im2col: x [b,h,w,c] -> [rows, c, k*k] flattened as a
 /// 3-D tensor, matching nets/common.py::dwconv2d (x3d layout [rows, c, kk]).
+///
+/// Fills the grouped layout directly — each pixel read scatters its `c`
+/// channels to stride-`kk` positions — instead of materializing the
+/// dense (kh, kw, c) patch matrix first and regrouping it, which
+/// doubled the working set of every depthwise layer. Parity with the
+/// regrouped dense path is property-tested (rust/tests/prop_quant.rs).
 pub fn im2col_grouped(x: &Tensor, k: usize, stride: usize, pad: usize) -> (Tensor, usize, usize) {
-    let (full, oh, ow) = im2col(x, k, stride, pad);
-    let rows = full.rows();
-    let c = x.shape()[3];
+    assert_eq!(x.ndim(), 4, "im2col_grouped expects NHWC, got {:?}", x.shape());
+    let (b, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
     let kk = k * k;
-    // full rows are (kh, kw, c); regroup to [rows, c, kk]
-    let fd = full.data();
-    let mut out = vec![0.0f32; rows * c * kk];
-    for r in 0..rows {
-        let src = &fd[r * kk * c..(r + 1) * kk * c];
-        let dst = &mut out[r * c * kk..(r + 1) * c * kk];
-        for p in 0..kk {
-            for ch in 0..c {
-                dst[ch * kk + p] = src[p * c + ch];
+    let xd = x.data();
+    let mut out = vec![0.0f32; b * oh * ow * c * kk];
+    for bi in 0..b {
+        let xb = &xd[bi * h * w * c..(bi + 1) * h * w * c];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let r = (bi * oh + oy) * ow + ox;
+                let row = &mut out[r * c * kk..(r + 1) * c * kk];
+                for ki in 0..k {
+                    let iy = (oy * stride + ki) as isize - pad as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue; // zero padding (already zeroed)
+                    }
+                    for kj in 0..k {
+                        let ix = (ox * stride + kj) as isize - pad as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        let src = &xb[(iy as usize * w + ix as usize) * c..][..c];
+                        let p = ki * k + kj;
+                        for (ch, &v) in src.iter().enumerate() {
+                            row[ch * kk + p] = v;
+                        }
+                    }
+                }
             }
         }
     }
-    (Tensor::new(&[rows, c, kk], out), oh, ow)
+    (Tensor::new(&[b * oh * ow, c, kk], out), oh, ow)
 }
 
 #[cfg(test)]

@@ -13,16 +13,10 @@ pub use json::Json;
 pub use rng::Rng;
 pub use timer::Timer;
 
-/// Parse an environment variable as `usize` (None when unset or not a
-/// number). The single place env-var parsing lives; callers that need a
-/// specific knob wrap this so the parsing rules can't drift apart.
-pub fn env_usize(key: &str) -> Option<usize> {
-    std::env::var(key).ok().and_then(|v| v.parse::<usize>().ok())
-}
-
 /// Read an environment variable as a trimmed string (None when unset or
-/// blank). `COMQ_KERNEL` flows through here (see `util::simd`), the
-/// numeric knobs through [`env_usize`].
+/// blank). `COMQ_KERNEL` flows through here (see `util::simd`);
+/// `COMQ_THREADS` has its own policy parser below (invalid values must
+/// warn, not silently vanish).
 pub fn env_str(key: &str) -> Option<String> {
     std::env::var(key)
         .ok()
@@ -30,11 +24,47 @@ pub fn env_str(key: &str) -> Option<String> {
         .filter(|v| !v.is_empty())
 }
 
+/// Parsed `COMQ_THREADS` policy: `Ok(None)` = unset/blank → auto,
+/// `Ok(Some(n))` = explicit count ≥ 1, `Err(raw)` = `0` or unparsable —
+/// not a usable thread count, the caller warns once and falls back to
+/// auto. Pure so the rules are unit-testable without touching the
+/// process environment (tests in this crate run concurrently).
+fn parse_threads(raw: Option<&str>) -> Result<Option<usize>, String> {
+    match raw {
+        None => Ok(None),
+        Some(s) => {
+            let t = s.trim();
+            if t.is_empty() {
+                return Ok(None); // blank = unset, like env_str
+            }
+            match t.parse::<usize>() {
+                Ok(0) | Err(_) => Err(t.to_string()),
+                Ok(n) => Ok(Some(n)),
+            }
+        }
+    }
+}
+
 /// `COMQ_THREADS`, the crate-wide parallelism override. Re-read on every
-/// call (the thread-scaling bench flips it between runs). Values are
-/// clamped to ≥ 1.
+/// call (the thread-scaling bench flips it between runs). `0` and
+/// unparsable values mean "auto = use all detected cores" with a
+/// one-time warning — the same warn-and-fall-back contract as the
+/// `COMQ_KERNEL` override (`util::simd::Kernel::active`), instead of
+/// the old silent clamp of 0 to a single thread.
 pub fn comq_threads() -> Option<usize> {
-    env_usize("COMQ_THREADS").map(|n| n.max(1))
+    let raw = std::env::var("COMQ_THREADS").ok();
+    match parse_threads(raw.as_deref()) {
+        Ok(v) => v,
+        Err(bad) => {
+            static WARN: std::sync::Once = std::sync::Once::new();
+            WARN.call_once(|| {
+                eprintln!(
+                    "COMQ_THREADS={bad}: not a positive thread count, using auto-detected parallelism"
+                );
+            });
+            None
+        }
+    }
 }
 
 /// Effective parallelism for the current call: `COMQ_THREADS` if set,
@@ -43,4 +73,24 @@ pub fn comq_threads() -> Option<usize> {
 pub fn effective_threads() -> usize {
     comq_threads()
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_threads;
+
+    #[test]
+    fn thread_parsing_rules() {
+        // unset / blank → auto, silently
+        assert_eq!(parse_threads(None), Ok(None));
+        assert_eq!(parse_threads(Some("")), Ok(None));
+        assert_eq!(parse_threads(Some("   ")), Ok(None));
+        // explicit positive counts pass through (trimmed)
+        assert_eq!(parse_threads(Some("1")), Ok(Some(1)));
+        assert_eq!(parse_threads(Some(" 8 ")), Ok(Some(8)));
+        // 0 and garbage are invalid → warn-and-auto, not clamp-to-1
+        assert_eq!(parse_threads(Some("0")), Err("0".to_string()));
+        assert_eq!(parse_threads(Some("lots")), Err("lots".to_string()));
+        assert_eq!(parse_threads(Some("-2")), Err("-2".to_string()));
+    }
 }

@@ -375,6 +375,9 @@ mod tests {
 
     #[test]
     fn comq_threads_one_runs_inline() {
+        // ci.sh runs this suite once with COMQ_THREADS=1 pinned —
+        // restore whatever pin the caller set rather than deleting it
+        let pinned = std::env::var("COMQ_THREADS").ok();
         std::env::set_var("COMQ_THREADS", "1");
         let hits = AtomicUsize::new(0);
         parallel_ranges(1000, 1, |t, r| {
@@ -382,7 +385,10 @@ mod tests {
             assert_eq!(r, 0..1000);
             hits.fetch_add(r.len(), Ordering::Relaxed);
         });
-        std::env::remove_var("COMQ_THREADS");
+        match pinned {
+            Some(v) => std::env::set_var("COMQ_THREADS", v),
+            None => std::env::remove_var("COMQ_THREADS"),
+        }
         assert_eq!(hits.load(Ordering::Relaxed), 1000);
     }
 }

@@ -8,7 +8,7 @@
 //! one per call from CPU feature detection (`is_x86_feature_detected!`,
 //! cached by std) with a `COMQ_KERNEL=scalar|avx2|vnni` environment
 //! override for benching and CI, parsed through `util::env_str` the same
-//! way `COMQ_THREADS` flows through `util::env_usize`. An override that
+//! way `COMQ_THREADS` flows through `util::comq_threads`. An override that
 //! names a kernel the host cannot run falls back to detection with a
 //! one-time warning — it never fault-dispatches an illegal instruction.
 //!
@@ -30,6 +30,12 @@
 //! one group row holds `NR × 4` weight bytes — 64 bytes, exactly one
 //! cache line and one zmm load. The scalar kernel walks the same layout
 //! so a panel packed once serves any later `COMQ_KERNEL` choice.
+//!
+//! The grouped (depthwise) kernel [`dot_i8_grouped`] is the per-lane
+//! sibling of the dense [`dot_i8`]: every output column owns its own
+//! k extent, so the activation side is packed into the *same*
+//! K4-interleaved layout and loaded per lane instead of broadcast —
+//! otherwise the contract (and the W8A8 split path) is identical.
 //!
 //! ### Exactness of the AVX2 path
 //!
@@ -252,6 +258,90 @@ fn dot_i8_scalar(
 }
 
 // ---------------------------------------------------------------------------
+// grouped (depthwise) u8 × i8 → i32 micro-kernel
+// ---------------------------------------------------------------------------
+
+/// Exact integer tile product for grouped (depthwise) layers: every
+/// output column `l` owns its *own* activation quad per k-group, so both
+/// operands carry the **same** K4-interleaved strip layout and the tile
+/// is a per-lane dot:
+///
+/// ```text
+/// acc[r][l] = Σ_{g < kg, t < 4}
+///     acts[r·stride + (g·NR + l)·4 + t] · strip[(g·NR + l)·4 + t]
+/// ```
+///
+/// The dense kernel broadcasts one activation quad across all NR lanes;
+/// here the quad is *loaded* per lane instead — the only difference, so
+/// `vpdpbusd`/`vpmaddubsw` apply unchanged and the same `wide` split
+/// path keeps W8A8 exact (the adjacent pair is still two k-neighbours
+/// of one group, so [`maddubs_safe`] bounds it identically). `acts`
+/// starts at the tile's first row's strip; rows are `stride` bytes
+/// apart (`stride ≥ kg·NR·4`). Padded k positions and padded lanes are
+/// zero in **both** operands, so their products vanish from every
+/// kernel identically. Rows `0..rows` of `acc` are overwritten; all
+/// kernels return bit-identical accumulators (exact integer sums,
+/// overflow excluded by the serving-side `MAX_K` bound — kk is a
+/// convolution patch, a few dozen at most).
+#[allow(clippy::too_many_arguments)]
+// `wide` only steers the AVX2 path, so it is unread on non-x86 targets
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables))]
+pub fn dot_i8_grouped(
+    kern: Kernel,
+    acts: &[u8],
+    stride: usize,
+    rows: usize,
+    strip: &[i8],
+    kg: usize,
+    wide: bool,
+    acc: &mut [[i32; NR]; MR],
+) {
+    let strip_len = kg * NR * K4;
+    assert!(rows >= 1 && rows <= MR, "rows {rows} outside 1..={MR}");
+    assert!(stride >= strip_len, "stride {stride} < strip {strip_len}");
+    assert!(acts.len() >= (rows - 1) * stride + strip_len, "acts too short");
+    assert!(strip.len() >= strip_len, "strip too short for {kg} k-groups");
+    match kern {
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 if Kernel::Avx2.supported() => unsafe {
+            x86::dot_i8_grouped_avx2(acts.as_ptr(), stride, rows, strip.as_ptr(), kg, wide, acc)
+        },
+        #[cfg(all(target_arch = "x86_64", comq_avx512))]
+        Kernel::Vnni if Kernel::Vnni.supported() => unsafe {
+            x86::dot_i8_grouped_vnni(acts.as_ptr(), stride, rows, strip.as_ptr(), kg, acc)
+        },
+        // Scalar, plus the defensive fallback for a force-dispatched
+        // kernel the host can't run.
+        _ => dot_i8_grouped_scalar(acts, stride, rows, strip, kg, acc),
+    }
+}
+
+fn dot_i8_grouped_scalar(
+    acts: &[u8],
+    stride: usize,
+    rows: usize,
+    strip: &[i8],
+    kg: usize,
+    acc: &mut [[i32; NR]; MR],
+) {
+    for (r, accr) in acc.iter_mut().take(rows).enumerate() {
+        let mut tile = [0i32; NR];
+        for g in 0..kg {
+            let arow = &acts[r * stride + g * NR * K4..r * stride + (g + 1) * NR * K4];
+            let wrow = &strip[g * NR * K4..(g + 1) * NR * K4];
+            let quads = arow.chunks_exact(K4).zip(wrow.chunks_exact(K4));
+            for (t, (a4, w4)) in tile.iter_mut().zip(quads) {
+                *t += a4[0] as i32 * w4[0] as i32
+                    + a4[1] as i32 * w4[1] as i32
+                    + a4[2] as i32 * w4[2] as i32
+                    + a4[3] as i32 * w4[3] as i32;
+            }
+        }
+        *accr = tile;
+    }
+}
+
+// ---------------------------------------------------------------------------
 // f32 micro-kernel
 // ---------------------------------------------------------------------------
 
@@ -383,6 +473,132 @@ mod x86 {
         for (r, v) in accv.iter().enumerate() {
             _mm256_storeu_si256(acc[r].as_mut_ptr() as *mut __m256i, v[0]);
             _mm256_storeu_si256(acc[r].as_mut_ptr().add(8) as *mut __m256i, v[1]);
+        }
+    }
+
+    /// Grouped variant of [`dot_i8_avx2`]: the activation quads are
+    /// loaded per lane (same K4 strip layout as the weights) instead of
+    /// broadcast. The `wide` split masks even/odd k bytes of the
+    /// *loaded* activation vector, so each `vpmaddubsw` pair keeps a
+    /// zero term — the same W8A8 exactness argument as the dense path.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_i8_grouped_avx2(
+        acts: *const u8,
+        stride: usize,
+        rows: usize,
+        strip: *const i8,
+        kg: usize,
+        wide: bool,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        match rows {
+            4 => dot_i8_grouped_avx2_r::<4>(acts, stride, strip, kg, wide, acc),
+            3 => dot_i8_grouped_avx2_r::<3>(acts, stride, strip, kg, wide, acc),
+            2 => dot_i8_grouped_avx2_r::<2>(acts, stride, strip, kg, wide, acc),
+            _ => dot_i8_grouped_avx2_r::<1>(acts, stride, strip, kg, wide, acc),
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_i8_grouped_avx2_r<const R: usize>(
+        acts: *const u8,
+        stride: usize,
+        strip: *const i8,
+        kg: usize,
+        wide: bool,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        let ones = _mm256_set1_epi16(1);
+        let even = _mm256_set1_epi16(0x00FF);
+        let mut accv = [[_mm256_setzero_si256(); 2]; R];
+        for g in 0..kg {
+            // one K4 group row of each operand: NR lanes × 4 bytes
+            let w0 = _mm256_loadu_si256(strip.add(g * NR * K4) as *const __m256i);
+            let w1 = _mm256_loadu_si256(strip.add(g * NR * K4 + 32) as *const __m256i);
+            for r in 0..R {
+                let abase = acts.add(r * stride + g * NR * K4);
+                let a0 = _mm256_loadu_si256(abase as *const __m256i);
+                let a1 = _mm256_loadu_si256(abase.add(32) as *const __m256i);
+                if !wide {
+                    let p0 = _mm256_madd_epi16(_mm256_maddubs_epi16(a0, w0), ones);
+                    let p1 = _mm256_madd_epi16(_mm256_maddubs_epi16(a1, w1), ones);
+                    accv[r][0] = _mm256_add_epi32(accv[r][0], p0);
+                    accv[r][1] = _mm256_add_epi32(accv[r][1], p1);
+                } else {
+                    // W8A8: zero the odd (resp. even) activation bytes so
+                    // each maddubs pair has a zero term and cannot
+                    // saturate i16
+                    let p0 = _mm256_add_epi32(
+                        _mm256_madd_epi16(
+                            _mm256_maddubs_epi16(_mm256_and_si256(a0, even), w0),
+                            ones,
+                        ),
+                        _mm256_madd_epi16(
+                            _mm256_maddubs_epi16(_mm256_andnot_si256(even, a0), w0),
+                            ones,
+                        ),
+                    );
+                    let p1 = _mm256_add_epi32(
+                        _mm256_madd_epi16(
+                            _mm256_maddubs_epi16(_mm256_and_si256(a1, even), w1),
+                            ones,
+                        ),
+                        _mm256_madd_epi16(
+                            _mm256_maddubs_epi16(_mm256_andnot_si256(even, a1), w1),
+                            ones,
+                        ),
+                    );
+                    accv[r][0] = _mm256_add_epi32(accv[r][0], p0);
+                    accv[r][1] = _mm256_add_epi32(accv[r][1], p1);
+                }
+            }
+        }
+        for (r, v) in accv.iter().enumerate() {
+            _mm256_storeu_si256(acc[r].as_mut_ptr() as *mut __m256i, v[0]);
+            _mm256_storeu_si256(acc[r].as_mut_ptr().add(8) as *mut __m256i, v[1]);
+        }
+    }
+
+    /// Grouped variant of [`dot_i8_vnni`]: one zmm of per-lane
+    /// activation quads against one zmm of weight quads — `vpdpbusd`
+    /// needs no broadcast and no split path at any width.
+    #[cfg(comq_avx512)]
+    #[target_feature(enable = "avx512f", enable = "avx512vnni")]
+    pub(super) unsafe fn dot_i8_grouped_vnni(
+        acts: *const u8,
+        stride: usize,
+        rows: usize,
+        strip: *const i8,
+        kg: usize,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        match rows {
+            4 => dot_i8_grouped_vnni_r::<4>(acts, stride, strip, kg, acc),
+            3 => dot_i8_grouped_vnni_r::<3>(acts, stride, strip, kg, acc),
+            2 => dot_i8_grouped_vnni_r::<2>(acts, stride, strip, kg, acc),
+            _ => dot_i8_grouped_vnni_r::<1>(acts, stride, strip, kg, acc),
+        }
+    }
+
+    #[cfg(comq_avx512)]
+    #[target_feature(enable = "avx512f", enable = "avx512vnni")]
+    unsafe fn dot_i8_grouped_vnni_r<const R: usize>(
+        acts: *const u8,
+        stride: usize,
+        strip: *const i8,
+        kg: usize,
+        acc: &mut [[i32; NR]; MR],
+    ) {
+        let mut accv = [_mm512_setzero_si512(); R];
+        for g in 0..kg {
+            let w = (strip.add(g * NR * K4) as *const __m512i).read_unaligned();
+            for (r, v) in accv.iter_mut().enumerate() {
+                let a = (acts.add(r * stride + g * NR * K4) as *const __m512i).read_unaligned();
+                *v = _mm512_dpbusd_epi32(*v, a, w);
+            }
+        }
+        for (r, v) in accv.iter().enumerate() {
+            (acc[r].as_mut_ptr() as *mut __m512i).write_unaligned(*v);
         }
     }
 
@@ -519,6 +735,73 @@ mod tests {
                     assert_eq!(acc[r][l] as i64, want[r][l], "({rows},{kg}) r={r} l={l}");
                 }
             }
+        }
+    }
+
+    /// Naive i64 reference for the grouped (per-lane) tile contract.
+    fn naive_grouped_tile(
+        acts: &[u8],
+        stride: usize,
+        rows: usize,
+        strip: &[i8],
+        kg: usize,
+    ) -> Vec<Vec<i64>> {
+        (0..rows)
+            .map(|r| {
+                (0..NR)
+                    .map(|l| {
+                        (0..kg * K4)
+                            .map(|kk| {
+                                let (g, t) = (kk / K4, kk % K4);
+                                acts[r * stride + (g * NR + l) * K4 + t] as i64
+                                    * strip[(g * NR + l) * K4 + t] as i64
+                            })
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn scalar_dot_i8_grouped_matches_naive() {
+        let mut rng = Rng::new(34);
+        for &(rows, kg) in &[(1usize, 1usize), (2, 3), (4, 7), (3, 16)] {
+            let stride = kg * NR * K4 + 64; // deliberately over-wide stride
+            let acts: Vec<u8> = (0..rows * stride).map(|_| rng.below(256) as u8).collect();
+            let strip: Vec<i8> =
+                (0..kg * NR * K4).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+            let mut acc = [[0i32; NR]; MR];
+            dot_i8_grouped(Kernel::Scalar, &acts, stride, rows, &strip, kg, false, &mut acc);
+            let want = naive_grouped_tile(&acts, stride, rows, &strip, kg);
+            for r in 0..rows {
+                for l in 0..NR {
+                    assert_eq!(acc[r][l] as i64, want[r][l], "({rows},{kg}) r={r} l={l}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_detection_smoke() {
+        // every supported SIMD kernel agrees with scalar on a full-range
+        // W8A8 tile through the wide path; the narrow path is covered
+        // across all bit pairings in rust/tests/kernel_parity.rs
+        let mut rng = Rng::new(35);
+        let kg = 3;
+        let stride = kg * NR * K4;
+        let acts: Vec<u8> = (0..MR * stride).map(|_| rng.below(256) as u8).collect();
+        let strip: Vec<i8> =
+            (0..kg * NR * K4).map(|_| (rng.below(256) as i32 - 128) as i8).collect();
+        let mut want = [[0i32; NR]; MR];
+        dot_i8_grouped(Kernel::Scalar, &acts, stride, MR, &strip, kg, true, &mut want);
+        for k in [Kernel::Avx2, Kernel::Vnni] {
+            if !k.supported() {
+                continue;
+            }
+            let mut acc = [[0i32; NR]; MR];
+            dot_i8_grouped(k, &acts, stride, MR, &strip, kg, true, &mut acc);
+            assert_eq!(acc, want, "{}", k.name());
         }
     }
 

@@ -1,18 +1,22 @@
 //! SIMD kernel parity: every runtime-dispatched kernel must produce
 //! i32 accumulators **bit-identical** to the scalar reference — not
 //! within-tolerance — across all code widths, unaligned shapes, k not
-//! divisible by the K4 group, and the k=1 edge; and the `COMQ_KERNEL`
-//! override must force dispatch (skipping cleanly where the host lacks
-//! the feature).
+//! divisible by the K4 group, and the k=1 edge; the grouped
+//! (depthwise) kernel under the same exactness contract; and the
+//! `COMQ_KERNEL` override must force dispatch (skipping cleanly where
+//! the host lacks the feature).
 //!
 //! Everything here except `comq_kernel_env_forces_dispatch` uses the
 //! explicit-kernel entry points (`dot_i8`, `gemm_i8_fused_with`), so
 //! the env-mutating test cannot race the others inside this binary.
 
 use comq::quant::actq::ActQuant;
-use comq::serve::gemm::{gemm_i8_fused_with, pack_panel_k4, EpilogueCoeffs, QuantizedActs};
+use comq::serve::gemm::{
+    dwconv_i8_fused_with, gemm_i8_fused_with, pack_panel_k4, EpilogueCoeffs, GroupedQuantizedActs,
+    QuantizedActs,
+};
 use comq::tensor::{Tensor, MR, NR};
-use comq::util::simd::{dot_f32, dot_i8, maddubs_safe, Kernel, K4};
+use comq::util::simd::{dot_f32, dot_i8, dot_i8_grouped, maddubs_safe, Kernel, K4};
 use comq::util::Rng;
 
 /// SIMD kernels available on this host; absent ones are reported and
@@ -90,6 +94,116 @@ fn dot_i8_bit_identical_to_scalar() {
                                 kern.name()
                             );
                         }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Grouped activation patches spanning the full code range for `abits`,
+/// packed into the strip layout (the depthwise analogue of
+/// [`random_acts`]).
+fn random_grouped_acts(
+    rng: &mut Rng,
+    rows: usize,
+    c: usize,
+    kk: usize,
+    abits: u32,
+) -> GroupedQuantizedActs {
+    let x3 = Tensor::new(&[rows, c, kk], rng.normal_vec(rows * c * kk));
+    let aq = ActQuant::from_range(-0.5, 0.5, abits, 1.0);
+    GroupedQuantizedActs::quantize(&x3, aq)
+}
+
+/// Grouped shapes (rows, kk, c) hitting the same tiling edges: kk=1,
+/// kk % 4 ≠ 0, rows % MR ≠ 0, c % NR ≠ 0, single-element, full-strip,
+/// and the 3×3 depthwise patch (kk=9) that serving actually runs.
+const GSHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (3, 9, 5),
+    (4, 9, 16),
+    (5, 4, 21),
+    (2, 7, 17),
+    (7, 9, 48),
+    (1, 25, 3),
+    (6, 3, 64),
+];
+
+#[test]
+fn dot_i8_grouped_bit_identical_to_scalar() {
+    for kern in simd_kernels() {
+        for &wbits in &[2u32, 3, 4, 8] {
+            for &abits in &[4u32, 8] {
+                let wide = !maddubs_safe(abits, wbits);
+                let mut rng = Rng::new(0xDD7 + wbits as u64 * 31 + abits as u64);
+                for &(rows, kk, c) in GSHAPES {
+                    let (_, panel) = random_panel(&mut rng, kk, c, wbits);
+                    let acts = random_grouped_acts(&mut rng, rows, c, kk, abits);
+                    let kg = kk.div_ceil(K4);
+                    let strip_len = kg * NR * K4;
+                    for s in 0..c.div_ceil(NR) {
+                        let strip = &panel[s * strip_len..(s + 1) * strip_len];
+                        for blk in 0..rows.div_ceil(MR) {
+                            let i0 = blk * MR;
+                            let rmax = MR.min(rows - i0);
+                            let a = &acts.codes[i0 * acts.stride + s * strip_len..];
+                            let mut want = [[0i32; NR]; MR];
+                            let mut got = [[0i32; NR]; MR];
+                            let (st, k) = (acts.stride, kg);
+                            dot_i8_grouped(Kernel::Scalar, a, st, rmax, strip, k, wide, &mut want);
+                            dot_i8_grouped(kern, a, st, rmax, strip, k, wide, &mut got);
+                            assert_eq!(
+                                got,
+                                want,
+                                "{} W{wbits}A{abits} shape ({rows},{kk},{c}) strip {s} block {blk}",
+                                kern.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Full grouped-conv parity: identical accumulators through the
+/// identical f64 epilogue must give bit-identical f32 outputs across
+/// kernels, pooled row split included.
+#[test]
+fn dwconv_outputs_bit_identical_across_kernels() {
+    let kernels = simd_kernels();
+    for &wbits in &[2u32, 4, 8] {
+        for &abits in &[4u32, 8] {
+            let mut rng = Rng::new(0x6E55 + wbits as u64 + 100 * abits as u64);
+            for &(rows, kk, c) in GSHAPES {
+                let (s, panel) = random_panel(&mut rng, kk, c, wbits);
+                let acts = random_grouped_acts(&mut rng, rows, c, kk, abits);
+                let cw = (1i64 << (wbits - 1)) as f64;
+                let mut csum = vec![0i64; c];
+                for (idx, &v) in s.iter().enumerate() {
+                    csum[idx % c] += v as i64;
+                }
+                let zero: Vec<f64> = (0..c).map(|_| rng.below(9) as f64 - 4.0).collect();
+                let za = acts.aq.zero as f64;
+                let co = EpilogueCoeffs {
+                    scale: (0..c).map(|_| rng.range_f32(0.01, 0.2) as f64).collect(),
+                    zc: zero.iter().map(|&z| cw + z).collect(),
+                    fixed: (0..c).map(|j| za * (csum[j] as f64 + kk as f64 * (cw + zero[j]))).collect(),
+                    bias: (0..c).map(|_| rng.range_f32(-1.0, 1.0) as f64).collect(),
+                };
+                let mut want = vec![0.0f32; rows * c];
+                dwconv_i8_fused_with(Kernel::Scalar, &acts, &panel, c, wbits, &co, &mut want);
+                for &kern in &kernels {
+                    let mut got = vec![0.0f32; rows * c];
+                    dwconv_i8_fused_with(kern, &acts, &panel, c, wbits, &co, &mut got);
+                    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} W{wbits}A{abits} shape ({rows},{kk},{c}) flat {i}: {a} vs {b}",
+                            kern.name()
+                        );
                     }
                 }
             }

@@ -130,6 +130,102 @@ fn workspace_bit_identical_to_gram() {
     });
 }
 
+/// ISSUE-5: grouped im2col → `dwconv2d` parity across random k, stride
+/// and pad — including pad ≥ k (patches that are entirely padding) and
+/// the oh·ow = 1 edge. Two properties at once: the direct-fill
+/// `im2col_grouped` equals the regrouped dense `im2col` (the old
+/// implementation, kept here as the reference), and `dwconv2d` through
+/// that layout equals a naive direct depthwise convolution bit-exactly
+/// (identical f32 accumulation order).
+#[test]
+fn grouped_im2col_dwconv2d_parity() {
+    use comq::model::{dwconv2d, Tap};
+    use comq::tensor::{im2col, im2col_grouped};
+    use std::collections::BTreeMap;
+
+    forall(60, 0xC0501, |g| {
+        let k = g.usize_in(1, 4);
+        // pad up to k+1 so pad ≥ k occurs routinely
+        let (pad, stride, h, b, c) = if g.case % 5 == 0 {
+            // forced edge: h = k, pad = 0, stride 1 → oh = ow = 1
+            (0, 1, k, g.usize_in(1, 2), g.usize_in(1, 5))
+        } else {
+            let pad = g.usize_in(0, k + 1);
+            let hmin = k.saturating_sub(2 * pad).max(1);
+            (pad, g.usize_in(1, 3), g.usize_in(hmin, hmin + 4), g.usize_in(1, 2), g.usize_in(1, 5))
+        };
+        let x = g.tensor(&[b, h, h, c], 1.0);
+        let kk = k * k;
+
+        // 1) direct-fill grouped layout == regrouped dense im2col
+        let (x3, oh, ow) = im2col_grouped(&x, k, stride, pad);
+        let (full, oh2, ow2) = im2col(&x, k, stride, pad);
+        assert_eq!((oh, ow), (oh2, ow2));
+        let rows = b * oh * ow;
+        assert_eq!(x3.shape(), &[rows, c, kk]);
+        if g.case % 5 == 0 {
+            assert_eq!(oh * ow, 1, "forced 1×1 output edge");
+        }
+        for r in 0..rows {
+            for ch in 0..c {
+                for p in 0..kk {
+                    let got = x3.data()[(r * c + ch) * kk + p];
+                    let want = full.data()[r * kk * c + p * c + ch];
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "k={k} s={stride} p={pad} h={h} r={r} ch={ch} patch {p}"
+                    );
+                }
+            }
+        }
+
+        // 2) dwconv2d == naive direct depthwise conv, bit-exactly
+        let w = g.tensor(&[kk, c], 0.5);
+        let bias = g.tensor(&[c], 0.1);
+        let mut params = BTreeMap::new();
+        params.insert("dw/W".to_string(), w.clone());
+        params.insert("dw/b".to_string(), bias.clone());
+        let y = dwconv2d(&params, "dw", &x, k, stride, pad, &mut Tap::None);
+        assert_eq!(y.shape(), &[b, oh, ow, c]);
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ch in 0..c {
+                        // same accumulation order as dwconv2d: patch
+                        // index ascending, padded taps contributing an
+                        // exact 0.0·w term
+                        let mut s = 0.0f32;
+                        for ki in 0..k {
+                            for kj in 0..k {
+                                let iy = (oy * stride + ki) as isize - pad as isize;
+                                let ix = (ox * stride + kj) as isize - pad as isize;
+                                let xv = if iy >= 0
+                                    && (iy as usize) < h
+                                    && ix >= 0
+                                    && (ix as usize) < h
+                                {
+                                    x.data()[((bi * h + iy as usize) * h + ix as usize) * c + ch]
+                                } else {
+                                    0.0
+                                };
+                                s += xv * w.at2(ki * k + kj, ch);
+                            }
+                        }
+                        s += bias.data()[ch];
+                        let got = y.data()[(((bi * oh + oy) * ow) + ox) * c + ch];
+                        assert_eq!(
+                            got.to_bits(),
+                            s.to_bits(),
+                            "k={k} s={stride} p={pad} ({bi},{oy},{ox},{ch})"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
 #[test]
 fn more_bits_never_hurt() {
     forall(40, 0xC0304, |g| {

@@ -10,7 +10,7 @@ use std::time::Duration;
 use comq::deploy::{load_packed, read_packed, save_packed, save_packed_with_act, PackedAct, PackedLayer};
 use comq::manifest::Manifest;
 use comq::model::{Model, Tap};
-use comq::proptest::{forall, quantize_all_layers, tiny_plain_cnn};
+use comq::proptest::{forall, quantize_all_layers, tiny_mobile_cnn, tiny_plain_cnn};
 use comq::serve::{load_cached, ActSource, BatchConfig, QuantizedModel, Server};
 use comq::tensor::Tensor;
 use comq::util::Rng;
@@ -136,6 +136,160 @@ fn int8_logits_match_f32_reference() {
     });
 }
 
+/// The ISSUE-5 acceptance property: a depthwise CNN served entirely on
+/// the integer path — grouped layers included, no f32 `{l}/W` anywhere
+/// — matches the fake-quant f32 reference within 1e-3 relative, argmax
+/// included (same excusable-near-tie rule as the dense test).
+#[test]
+fn int8_serves_depthwise_model_with_no_f32_weights() {
+    forall(8, 0xC0_501, |g| {
+        let seed = 2000 + g.case as u64;
+        let (manifest, model) = tiny_mobile_cnn(seed);
+        let bits = *g.choice(&[3u32, 4, 8]);
+        let act_bits = *g.choice(&[4u32, 8]);
+        let mut rng = Rng::new(seed ^ 0xAA);
+        let calib = images(&mut rng, 24);
+        let (packed, act, qmodel) = quantize_synthetic(&manifest, &model, bits, act_bits, &calib);
+
+        let test_x = images(&mut rng, 5);
+        let reference = qmodel.forward(&test_x, &mut Tap::ActQ(&act.by_layer));
+        let qm = QuantizedModel::from_parts(
+            model.info.clone(),
+            qmodel.params.clone(),
+            &packed,
+            ActSource::Static { bits: act_bits, by_layer: act.by_layer.clone() },
+        )
+        .unwrap();
+        // every quantizable layer is integer-served; the three depthwise
+        // blocks run the grouped kernel and materialize no f32 weight
+        assert_eq!(qm.int8_layers(), model.info.quant_layers.len());
+        assert_eq!(qm.grouped_layers(), 3);
+        for l in model.info.quant_layers.iter() {
+            assert!(
+                !qm.fp_weight_materialized(&l.name),
+                "layer '{}' still holds an f32 weight",
+                l.name
+            );
+        }
+        let got = qm.forward(&test_x);
+        assert_eq!(got.shape(), reference.shape());
+
+        let argmax = |row: &[f32]| {
+            row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        for r in 0..reference.rows() {
+            let (rr, gr) = (reference.row(r), got.row(r));
+            let mx = rr.iter().fold(0.0f32, |a, &v| a.max(v.abs())).max(1e-3);
+            let tol = 1e-3 * mx;
+            for (j, (a, b)) in gr.iter().zip(rr).enumerate() {
+                assert!(
+                    (a - b).abs() <= tol,
+                    "case {} (W{bits}A{act_bits}) row {r} col {j}: int8 {a} vs f32 {b}",
+                    g.case
+                );
+            }
+            let (ai, ri) = (argmax(gr), argmax(rr));
+            if ai != ri {
+                let margin = (rr[ri] - rr[ai]).abs();
+                assert!(
+                    margin <= tol,
+                    "case {} row {r}: argmax {ai} vs {ri} with margin {margin}",
+                    g.case
+                );
+            }
+        }
+    });
+}
+
+/// ISSUE-5 regression: the packed codes are authoritative. A stale (or
+/// corrupted) caller-supplied f32 `{l}/W` in the `params` map must
+/// neither shadow the checkpoint's codes nor survive in the registry —
+/// for grouped layers just like dense ones (grouped weights used to be
+/// inserted with `or_insert_with`, letting the stale tensor win).
+#[test]
+fn packed_codes_beat_stale_params_weights() {
+    let (manifest, model) = tiny_mobile_cnn(300);
+    let mut rng = Rng::new(301);
+    let calib = images(&mut rng, 16);
+    let (packed, act, qmodel) = quantize_synthetic(&manifest, &model, 4, 8, &calib);
+    let act_src = ActSource::Static { bits: 8, by_layer: act.by_layer.clone() };
+
+    let clean = QuantizedModel::from_parts(
+        model.info.clone(),
+        qmodel.params.clone(),
+        &packed,
+        act_src.clone(),
+    )
+    .unwrap();
+
+    // corrupt every quantizable layer's f32 weight (right shape, wrong
+    // values) — dense and grouped alike
+    let mut corrupted = qmodel.params.clone();
+    for l in &model.info.quant_layers {
+        corrupted.insert(
+            format!("{}/W", l.name),
+            Tensor::new(&[l.m, l.n], rng.normal_vec(l.m * l.n)),
+        );
+    }
+    let dirty =
+        QuantizedModel::from_parts(model.info.clone(), corrupted, &packed, act_src).unwrap();
+    for l in &model.info.quant_layers {
+        assert!(
+            !dirty.fp_weight_materialized(&l.name),
+            "corrupted '{}/W' survived the build",
+            l.name
+        );
+    }
+    let x = images(&mut rng, 4);
+    let (a, b) = (clean.forward(&x), dirty.forward(&x));
+    for (i, (u, v)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(
+            u.to_bits(),
+            v.to_bits(),
+            "logit {i} diverged — stale params weight leaked into serving"
+        );
+    }
+}
+
+/// ISSUE-5: `weight_bits` must not flatten a mixed-precision checkpoint
+/// to one number — the registry reports the min..max range across the
+/// per-layer code widths.
+#[test]
+fn weight_bits_range_reports_mixed_precision() {
+    use comq::model::collect_stats_native;
+    use comq::quant::actq::ActQuant;
+    use comq::quant::{comq_gram, QuantConfig};
+
+    let (manifest, model) = tiny_mobile_cnn(400);
+    let mut rng = Rng::new(401);
+    let calib = images(&mut rng, 16);
+    let stats = collect_stats_native(&model, &calib, manifest.batch).unwrap();
+    // alternate 2- and 8-bit layers: a genuinely mixed checkpoint
+    let mut packed = Vec::new();
+    let mut by_layer = std::collections::BTreeMap::new();
+    for (i, l) in model.info.quant_layers.iter().enumerate() {
+        let bits = if i % 2 == 0 { 2u32 } else { 8 };
+        let st = &stats[&l.name];
+        let cfg = QuantConfig { bits, ..Default::default() };
+        let lq = comq_gram(&st.gram, model.weight(&l.name), &cfg);
+        packed.push(PackedLayer::from_quant(&l.name, &lq, bits));
+        by_layer.insert(l.name.clone(), ActQuant::from_range(st.min, st.max, 8, 0.95));
+    }
+    let qm = QuantizedModel::from_parts(
+        model.info.clone(),
+        model.params.clone(),
+        &packed,
+        ActSource::Static { bits: 8, by_layer },
+    )
+    .unwrap();
+    assert_eq!(qm.weight_bits_range(), (2, 8));
+    assert_eq!(qm.weight_bits_label(), "2..8");
+    // mixed widths still serve: the panel bits are per-layer
+    let y = qm.forward(&images(&mut rng, 2));
+    assert_eq!(y.shape(), &[2, manifest.classes]);
+    assert!(y.data().iter().all(|v| v.is_finite()));
+}
+
 #[test]
 fn micro_batcher_coalesces_and_matches_direct_forward() {
     let (manifest, model) = tiny_plain_cnn(77);
@@ -183,6 +337,35 @@ fn micro_batcher_coalesces_and_matches_direct_forward() {
     drop(server); // joins executors; must not hang
 }
 
+/// A depthwise checkpoint round-trips through `.cqm` and serves from
+/// disk identically to the in-memory build — the `run-packed --engine
+/// int8` route for a MobileNet-style model.
+#[test]
+fn depthwise_cqm_loads_and_matches_in_memory_build() {
+    let (manifest, model) = tiny_mobile_cnn(500);
+    let mut rng = Rng::new(501);
+    let calib = images(&mut rng, 16);
+    let (packed, act, qmodel) = quantize_synthetic(&manifest, &model, 4, 8, &calib);
+    let path = tmp("mobile.cqm");
+    save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act)).unwrap();
+
+    let from_disk = QuantizedModel::load(&manifest, "tiny_mobile", &path).unwrap();
+    let in_memory = QuantizedModel::from_parts(
+        model.info.clone(),
+        qmodel.params.clone(),
+        &packed,
+        ActSource::Static { bits: 8, by_layer: act.by_layer },
+    )
+    .unwrap();
+    assert_eq!(from_disk.grouped_layers(), 3);
+    assert_eq!(from_disk.int8_layers(), in_memory.int8_layers());
+    let x = images(&mut rng, 3);
+    let (a, b) = (from_disk.forward(&x), in_memory.forward(&x));
+    for (u, v) in a.data().iter().zip(b.data()) {
+        assert_eq!(u.to_bits(), v.to_bits(), "disk vs memory serving diverged");
+    }
+}
+
 #[test]
 fn registry_loads_each_checkpoint_once() {
     let (manifest, model) = tiny_plain_cnn(99);
@@ -197,7 +380,8 @@ fn registry_loads_each_checkpoint_once() {
     assert!(Arc::ptr_eq(&a, &b), "second load must hit the registry");
     assert!(comq::serve::registry_len() >= 1);
     assert_eq!(a.int8_layers(), model.info.quant_layers.len());
-    assert_eq!(a.weight_bits(), 4);
+    assert_eq!(a.weight_bits_range(), (4, 4), "uniform checkpoint: degenerate range");
+    assert_eq!(a.weight_bits_label(), "4");
     match a.act_source() {
         ActSource::Static { bits, .. } => assert_eq!(*bits, 8),
         other => panic!("expected static act source, got {other:?}"),
