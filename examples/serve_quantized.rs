@@ -11,6 +11,11 @@
 //!
 //! One latency-percentile row per path, accuracy parity of the integer
 //! path against the simulated reference, and the packed footprint.
+//! At exit it prints the process-wide telemetry snapshot in Prometheus
+//! text form — per-stage request latencies, queue depth, batch sizes,
+//! per-layer exec counters, kernel dispatch counts (see
+//! EXPERIMENTS.md §Observability for the metric catalogue; gate with
+//! `COMQ_OBS=off|on|trace`, JSON twin via `obs::registry().to_json()`).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_quantized [model]
@@ -67,12 +72,15 @@ fn main() -> Result<()> {
         Tensor::new(&[b, manifest.img, manifest.img, 3], rng.normal_vec(b * elems))
     };
     let row = |label: &str, lat: &[f64]| {
+        // sort once; all three percentiles read the sorted copy
+        let mut s = lat.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         println!(
             "{label:<12} batch={b}: p50={:.2}ms p95={:.2}ms p99={:.2}ms throughput={:.0} img/s",
-            stats::quantile(lat, 0.5) * 1e3,
-            stats::quantile(lat, 0.95) * 1e3,
-            stats::quantile(lat, 0.99) * 1e3,
-            b as f64 / stats::mean(lat)
+            stats::quantile_sorted(&s, 0.5) * 1e3,
+            stats::quantile_sorted(&s, 0.95) * 1e3,
+            stats::quantile_sorted(&s, 0.99) * 1e3,
+            b as f64 / stats::mean(&s)
         );
     };
 
@@ -188,5 +196,19 @@ fn main() -> Result<()> {
         qm.grouped_layers(),
         qm.weight_bits_label(),
     );
+
+    // 5. everything the runtime recorded along the way, in the exact
+    //    text a Prometheus scrape of this process would return (the JSON
+    //    twin is `registry().to_json()`).
+    println!(
+        "\n--- telemetry snapshot (COMQ_OBS={}) ---",
+        comq::obs::level().name()
+    );
+    let snap = comq::obs::registry().snapshot();
+    if snap.is_empty() {
+        println!("(empty — set COMQ_OBS=on for metrics, =trace for sweep trajectories)");
+    } else {
+        print!("{}", snap.to_prometheus());
+    }
     Ok(())
 }

@@ -232,14 +232,17 @@ fn main() -> anyhow::Result<()> {
     );
     let percentile_row =
         |table: &mut Table, label: &str, batch: usize, lat: &[f64]| {
+            // sort once; every percentile reads the same sorted copy
+            let mut s = lat.to_vec();
+            s.sort_by(|a, b| a.partial_cmp(b).unwrap());
             table.row(vec![
                 label.to_string(),
                 batch.to_string(),
                 Kernel::active().name().to_string(),
-                format!("{:.3}", stats::quantile(lat, 0.5) * 1e3),
-                format!("{:.3}", stats::quantile(lat, 0.95) * 1e3),
-                format!("{:.3}", stats::quantile(lat, 0.99) * 1e3),
-                format!("{:.0}", batch as f64 / stats::mean(lat)),
+                format!("{:.3}", stats::quantile_sorted(&s, 0.5) * 1e3),
+                format!("{:.3}", stats::quantile_sorted(&s, 0.95) * 1e3),
+                format!("{:.3}", stats::quantile_sorted(&s, 0.99) * 1e3),
+                format!("{:.0}", batch as f64 / stats::mean(&s)),
             ]);
         };
     for &batch in &[1usize, 16] {
@@ -285,6 +288,39 @@ fn main() -> anyhow::Result<()> {
             st.batches,
             st.served as f64 / st.batches.max(1) as f64
         );
+        // per-stage breakdown from the runtime's own telemetry (the same
+        // histograms `comq::obs::registry()` exports) — where each request
+        // actually spent its time, not just the wave total measured above
+        if let Some(obs) = server.obs() {
+            let mut stages = Table::new(
+                "serve — micro-batcher stage breakdown (runtime telemetry, per request)",
+                &["stage", "count", "p50 us", "p95 us", "p99 us", "mean us"],
+            );
+            for stage in comq::obs::span::STAGES {
+                let s = obs.spans.hist(stage).snapshot();
+                stages.row(vec![
+                    stage.name().to_string(),
+                    s.count.to_string(),
+                    format!("{:.1}", s.p50() as f64 / 1e3),
+                    format!("{:.1}", s.p95() as f64 / 1e3),
+                    format!("{:.1}", s.p99() as f64 / 1e3),
+                    format!("{:.1}", s.mean() / 1e3),
+                ]);
+            }
+            stages.print();
+            stages.save_json("serve_stages");
+            report.add(&stages);
+            let bs = obs.batch_size.snapshot();
+            println!(
+                "batch size p50={} p95={} (deadline misses {}, queue depth now {})",
+                bs.p50(),
+                bs.p95(),
+                obs.deadline_miss.get(),
+                obs.queue_depth.get()
+            );
+        } else {
+            println!("[COMQ_OBS=off: no runtime stage telemetry]");
+        }
     }
     table.print();
     table.save_json("serve_e2e");

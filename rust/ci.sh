@@ -10,15 +10,19 @@ cargo build --release
 # nothing runs them (they bit-rotted silently before PR 3)
 cargo build --release --examples
 cargo bench --no-run
-# three passes: runtime-detected SIMD kernels (the default), dispatch
+# four passes: runtime-detected SIMD kernels (the default), dispatch
 # pinned to the portable reference — the parity tests compare kernels
 # directly, but the whole suite must also pass when every GEMM runs
-# scalar (what a non-AVX host sees) — and single-threaded, so the
-# pool's inline fallback path (never touches or creates workers) is
-# exercised on every run
+# scalar (what a non-AVX host sees) — single-threaded, so the pool's
+# inline fallback path (never touches or creates workers) is exercised
+# on every run, and with telemetry off, so the obs no-op path keeps the
+# suite green and tests/serve_obs.rs asserts the empty-registry /
+# bit-identical-logits contract (lib unit tests that exercise recording
+# force the gate on themselves via obs::set_level)
 cargo test -q
 COMQ_KERNEL=scalar cargo test -q
 COMQ_THREADS=1 cargo test -q
+COMQ_OBS=off cargo test -q
 # the intrinsics paths must not bit-rot uncompiled: a target-cpu=native
 # build exercises the target_feature functions plus whatever the
 # autovectorizer now assumes, in a separate target dir so the cache of

@@ -26,6 +26,18 @@ impl Timing {
     }
 }
 
+fn summarize(mut samples: Vec<f64>) -> Timing {
+    // one sort feeds every percentile (mean/std are order-free)
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        mean: stats::mean(&samples),
+        std: stats::std_dev(&samples),
+        p50: stats::quantile_sorted(&samples, 0.5),
+        p95: stats::quantile_sorted(&samples, 0.95),
+        iters: samples.len(),
+    }
+}
+
 /// Time `f` with `warmup` unrecorded runs then `iters` recorded ones.
 pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
     for _ in 0..warmup {
@@ -37,13 +49,7 @@ pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Timing {
         f();
         samples.push(t.secs());
     }
-    Timing {
-        mean: stats::mean(&samples),
-        std: stats::std_dev(&samples),
-        p50: stats::quantile(&samples, 0.5),
-        p95: stats::quantile(&samples, 0.95),
-        iters,
-    }
+    summarize(samples)
 }
 
 /// Adaptive variant: runs until `min_secs` of samples or `max_iters`.
@@ -56,13 +62,7 @@ pub fn time_budget<F: FnMut()>(min_secs: f64, max_iters: usize, mut f: F) -> Tim
         f();
         samples.push(t.secs());
     }
-    Timing {
-        mean: stats::mean(&samples),
-        std: stats::std_dev(&samples),
-        p50: stats::quantile(&samples, 0.5),
-        p95: stats::quantile(&samples, 0.95),
-        iters: samples.len(),
-    }
+    summarize(samples)
 }
 
 /// A paper-style results table.

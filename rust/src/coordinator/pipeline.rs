@@ -161,22 +161,30 @@ pub fn quantize_model_full(
         let t = Timer::start();
         let st = &stats[&layer.name];
         let w = model.weight(&layer.name);
+        // discard any stale sweep stash on this worker thread so the
+        // telemetry captured below can only come from this layer's run
+        let _ = crate::obs::quant::take_sweep();
         let lq = match opts.quant_engine {
             QuantEngine::PjrtKernel if !layer.grouped && opts.method.starts_with("comq") => {
                 match comq_pjrt(manifest, &st.gram, w, &opts.qcfg) {
                     Ok(lq) => lq,
                     Err(e) => {
-                        log::debug!("pjrt-kernel fallback for {}: {e}", layer.name);
+                        crate::log_debug!("pjrt-kernel fallback for {}: {e}", layer.name);
                         quantizer.quantize(&st.gram, w, &opts.qcfg)
                     }
                 }
             }
             _ => quantizer.quantize(&st.gram, w, &opts.qcfg),
         };
+        let sweep = crate::obs::quant::take_sweep();
         let wq = lq.dequant();
         let err = st.gram.recon_error(w, &wq);
         let err_rtn = st.gram.recon_error(w, &rtn(w, &opts.qcfg).dequant());
         let packed = crate::deploy::PackedLayer::from_quant(&layer.name, &lq, opts.qcfg.bits);
+        let secs = t.secs();
+        if crate::obs::enabled() {
+            crate::obs::quant::record_layer(secs);
+        }
         (
             wq,
             packed,
@@ -186,7 +194,8 @@ pub fn quantize_model_full(
                 n: layer.n,
                 err,
                 err_rtn,
-                secs: t.secs(),
+                secs,
+                sweep,
             },
         )
     });

@@ -2,6 +2,7 @@
 //! end-to-end accuracy, serialized to JSON for the bench harness and
 //! EXPERIMENTS.md.
 
+use crate::obs::quant::SweepTelemetry;
 use crate::util::Json;
 
 #[derive(Debug, Clone)]
@@ -14,6 +15,10 @@ pub struct LayerReport {
     /// Same error for plain RTN on the same grid (context for Fig. 3).
     pub err_rtn: f64,
     pub secs: f64,
+    /// Sweep-level telemetry stashed by the quantizer (present when
+    /// `COMQ_OBS` is on and the method reports it; the per-pass error
+    /// trajectory additionally needs `COMQ_OBS=trace`).
+    pub sweep: Option<SweepTelemetry>,
 }
 
 #[derive(Debug, Clone)]
@@ -48,14 +53,25 @@ impl QuantReport {
             .layers
             .iter()
             .map(|l| {
-                Json::obj_from(vec![
+                let mut fields = vec![
                     ("name", Json::Str(l.name.clone())),
                     ("m", Json::Num(l.m as f64)),
                     ("n", Json::Num(l.n as f64)),
                     ("err", Json::Num(l.err)),
                     ("err_rtn", Json::Num(l.err_rtn)),
                     ("secs", Json::Num(l.secs)),
-                ])
+                ];
+                if let Some(s) = &l.sweep {
+                    fields.push((
+                        "sweep",
+                        Json::obj_from(vec![
+                            ("passes", Json::from_f64s(&s.passes)),
+                            ("updates", Json::Num(s.updates as f64)),
+                            ("order_uniform", Json::Bool(s.order_uniform)),
+                        ]),
+                    ));
+                }
+                Json::obj_from(fields)
             })
             .collect();
         Json::obj_from(vec![
@@ -138,6 +154,7 @@ mod tests {
                 err: 0.125,
                 err_rtn: 0.5,
                 secs: 0.01,
+                sweep: None,
             }],
         }
     }
@@ -159,6 +176,27 @@ mod tests {
                 .unwrap(),
             0.125
         );
+    }
+
+    #[test]
+    fn json_carries_sweep_when_present() {
+        let mut r = sample();
+        // absent sweep ⇒ no key, so old readers see the old shape
+        let layer0 = &r.to_json().get("layers").unwrap().arr().unwrap()[0];
+        assert!(layer0.opt("sweep").is_none());
+        r.layers[0].sweep = Some(SweepTelemetry {
+            passes: vec![2.0, 1.0, 0.5],
+            updates: 96 * 16 * 3,
+            order_uniform: true,
+        });
+        let txt = r.to_json().to_string_pretty(1);
+        let back = Json::parse(&txt).unwrap();
+        let sweep = back.get("layers").unwrap().arr().unwrap()[0].get("sweep").unwrap();
+        let passes = sweep.get("passes").unwrap().arr().unwrap();
+        assert_eq!(passes.len(), 3);
+        assert_eq!(passes[2].num().unwrap(), 0.5);
+        assert_eq!(sweep.get("updates").unwrap().num().unwrap(), (96 * 16 * 3) as f64);
+        assert!(sweep.get("order_uniform").unwrap().boolean().unwrap());
     }
 
     #[test]

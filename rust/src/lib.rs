@@ -23,6 +23,7 @@ pub mod deploy;
 pub mod eval;
 pub mod manifest;
 pub mod model;
+pub mod obs;
 pub mod proptest;
 pub mod quant;
 pub mod runtime;

@@ -24,35 +24,12 @@ use comq::quant::{OrderKind, QUANTIZER_NAMES};
 
 
 fn main() {
-    env_logger_lite();
+    // logging goes through comq::obs::logger (COMQ_LOG=quiet|warn|info|debug,
+    // default info) — no logger setup needed, the gate is read on first use
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-fn env_logger_lite() {
-    // minimal logger: COMQ_LOG=debug|info (default info)
-    struct L(log::Level);
-    impl log::Log for L {
-        fn enabled(&self, m: &log::Metadata) -> bool {
-            m.level() <= self.0
-        }
-        fn log(&self, r: &log::Record) {
-            if self.enabled(r.metadata()) {
-                eprintln!("[{}] {}", r.level().as_str().to_lowercase(), r.args());
-            }
-        }
-        fn flush(&self) {}
-    }
-    let level = match std::env::var("COMQ_LOG").as_deref() {
-        Ok("debug") => log::Level::Debug,
-        Ok("trace") => log::Level::Trace,
-        Ok("warn") => log::Level::Warn,
-        _ => log::Level::Info,
-    };
-    let _ = log::set_boxed_logger(Box::new(L(level)));
-    log::set_max_level(level.to_level_filter());
 }
 
 struct Args {
@@ -254,7 +231,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     if let Some(budget) = args.flags.get("mixed-budget") {
         return cmd_quantize_mixed(&rc, &manifest, &model, &dataset, budget.parse()?);
     }
-    log::info!(
+    comq::log_info!(
         "quantizing {} with {} ({}W{}, {}, {})",
         rc.model,
         rc.opts.method,
@@ -275,7 +252,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             out.act.as_ref(),
         )?;
         let (packed, fp32) = comq::deploy::footprint(&out.packed);
-        log::info!(
+        comq::log_info!(
             "packed checkpoint written to {path} ({:.1} KiB quantized weights vs {:.1} KiB f32{})",
             packed as f64 / 1024.0,
             fp32 as f64 / 1024.0,
@@ -283,7 +260,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         );
     }
     for l in &report.layers {
-        log::debug!(
+        comq::log_debug!(
             "  {:<16} [{:>4}x{:<4}] err={:.4e} (rtn {:.4e}) {:.3}s",
             l.name,
             l.m,
@@ -295,7 +272,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     }
     if let Some(path) = &rc.report_path {
         report.save(path)?;
-        log::info!("report written to {path}");
+        comq::log_info!("report written to {path}");
     }
     Ok(())
 }
@@ -354,7 +331,7 @@ fn cmd_run_packed(args: &Args) -> Result<()> {
     let t = comq::util::Timer::start();
     let acc = if rc.opts.engine == EngineKind::Int8 {
         let qm = comq::serve::load_cached(&manifest, &rc.model, packed_path)?;
-        log::info!(
+        comq::log_info!(
             "serving {} via int8 runtime: {} i8 layers ({} grouped), {:.1} KiB resident (W{}A{})",
             rc.model,
             qm.int8_layers(),

@@ -1,0 +1,299 @@
+//! Log-linear fixed-bucket latency histogram (HDR-style).
+//!
+//! Values are non-negative integers — the serving spans record
+//! **nanoseconds** as `u64`. The bucket layout is log-linear with
+//! 2^[`SUB_BITS`] = 64 linear sub-buckets per power-of-two octave:
+//!
+//! * values `< 64` land in exact unit buckets (small counts like batch
+//!   sizes are represented exactly);
+//! * larger values keep their top 1+6 significant bits, so the relative
+//!   bucket width is ≤ 1/64 ≈ 1.56 % and the midpoint estimate returned
+//!   by snapshots is within ~0.8 % of the true value;
+//! * values ≥ 2^[`MAX_EXP`] ns (≈ 73 min) saturate into the top bucket.
+//!
+//! `record` is lock-free (one relaxed `fetch_add` on the bucket plus
+//! count/sum/min/max updates) and internally gated on `obs::enabled()`,
+//! so call sites don't need their own guard. Quantiles are computed on
+//! [`snapshot`](Histogram::snapshot) by rank-walking the buckets; tests
+//! cross-check them against `util::stats::quantile` on the raw samples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log2 of the number of linear sub-buckets per octave.
+pub const SUB_BITS: u32 = 6;
+const SUB: u64 = 1 << SUB_BITS; // 64
+/// Values at or above 2^MAX_EXP saturate into the last bucket.
+pub const MAX_EXP: u32 = 42;
+/// 64 exact unit buckets + (MAX_EXP − SUB_BITS) octaves × 64 sub-buckets.
+pub const N_BUCKETS: usize = SUB as usize + (MAX_EXP - SUB_BITS) as usize * SUB as usize;
+
+/// Index of the bucket holding `v`.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB {
+        return v as usize;
+    }
+    let v = v.min((1u64 << MAX_EXP) - 1);
+    let msb = 63 - v.leading_zeros(); // ≥ SUB_BITS here
+    let sub = (v >> (msb - SUB_BITS)) & (SUB - 1);
+    SUB as usize + ((msb - SUB_BITS) as usize) * SUB as usize + sub as usize
+}
+
+/// Midpoint of the value range covered by bucket `idx` (the estimate
+/// reported for every sample that landed there).
+fn bucket_value(idx: usize) -> u64 {
+    if idx < SUB as usize {
+        return idx as u64;
+    }
+    let rel = idx - SUB as usize;
+    let exp = SUB_BITS + (rel / SUB as usize) as u32; // msb of values in this octave
+    let sub = (rel % SUB as usize) as u64;
+    let width = 1u64 << (exp - SUB_BITS);
+    ((SUB + sub) << (exp - SUB_BITS)) + width / 2
+}
+
+/// Lock-free log-linear histogram. Cheap to record into from any
+/// thread; all aggregate reads go through [`snapshot`](Self::snapshot).
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. No-op when `COMQ_OBS=off`.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` samples of the same value (the batcher records one
+    /// coalesce/exec duration for every request in the batch).
+    pub fn record_n(&self, v: u64, n: u64) {
+        if n == 0 || !crate::obs::enabled() {
+            return;
+        }
+        self.buckets[bucket_index(v)].fetch_add(n, Ordering::Relaxed);
+        self.count.fetch_add(n, Ordering::Relaxed);
+        self.sum.fetch_add(v.saturating_mul(n), Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Exact number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of recorded sample values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Consistent read of the whole histogram. Not atomic across
+    /// concurrent recorders, but each field is monotone so a snapshot
+    /// taken after all recording threads have quiesced is exact.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let min = self.min.load(Ordering::Relaxed);
+        HistogramSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { min },
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self
+                .buckets
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| {
+                    let c = b.load(Ordering::Relaxed);
+                    (c > 0).then_some((i as u32, c))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]: exact count/sum/min/max plus
+/// the non-empty buckets, with quantile estimation.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    /// (bucket index, sample count), ascending, non-empty buckets only.
+    pub buckets: Vec<(u32, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Quantile estimate (nearest-rank over buckets, midpoint within a
+    /// bucket, clamped to the exact observed [min, max]). 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for &(idx, c) in &self.buckets {
+            seen += c;
+            if seen >= rank {
+                return bucket_value(idx as usize).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Exact mean (sum/count), 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    /// Recording is gated on the process-wide COMQ_OBS level; these
+    /// unit tests exercise the recording path itself, so they force it
+    /// on (telemetry is observation-only, so this cannot perturb any
+    /// concurrently-running parity test). The off-path contract is
+    /// asserted in tests/serve_obs.rs, a separate test binary.
+    fn force_on() {
+        crate::obs::set_level(crate::obs::ObsLevel::On);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        force_on();
+        let h = Histogram::new();
+        for v in 0..64u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 64);
+        assert_eq!(s.sum, (0..64).sum::<u64>());
+        assert_eq!(s.min, 0);
+        assert_eq!(s.max, 63);
+        // every unit bucket holds exactly its own value
+        for &(idx, c) in &s.buckets {
+            assert_eq!(c, 1);
+            assert_eq!(bucket_value(idx as usize), idx as u64);
+        }
+    }
+
+    #[test]
+    fn bucket_relative_error_bound() {
+        // For every representable magnitude, the midpoint estimate is
+        // within half a bucket width of the sample → ≤ 1/128 rel error.
+        let mut v = 64u64;
+        while v < (1 << MAX_EXP) {
+            for probe in [v, v + v / 128, v + v / 65] {
+                let est = bucket_value(bucket_index(probe));
+                let err = (est as f64 - probe as f64).abs() / probe as f64;
+                assert!(err <= 1.0 / 128.0 + 1e-12, "v={probe} est={est} err={err}");
+            }
+            v = v.saturating_mul(3) / 2 + 1;
+        }
+    }
+
+    #[test]
+    fn quantiles_match_stats_quantile() {
+        // Cross-check against util::stats::quantile on the raw samples
+        // (the tentpole's stated accuracy contract: ~2 % relative).
+        force_on();
+        let mut rng = Rng::new(0xC0310);
+        let mut samples: Vec<u64> = Vec::new();
+        let h = Histogram::new();
+        for _ in 0..4000 {
+            // log-uniform-ish spread over 1µs..10ms, like real latencies
+            let e = 10.0 + 13.3 * rng.f32() as f64;
+            let v = (2f64.powf(e)) as u64;
+            samples.push(v);
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, samples.len() as u64);
+        let raw: Vec<f64> = samples.iter().map(|&v| v as f64).collect();
+        for q in [0.5, 0.95, 0.99, 0.999] {
+            let exact = stats::quantile(&raw, q);
+            let est = s.quantile(q) as f64;
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.04, "q={q}: est={est} exact={exact} rel={rel}");
+        }
+        // percentiles are monotone
+        assert!(s.p50() <= s.p95() && s.p95() <= s.p99() && s.p99() <= s.p999());
+        assert!(s.p999() <= s.max && s.min <= s.p50());
+    }
+
+    #[test]
+    fn record_n_equals_repeated_record() {
+        force_on();
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for v in [3u64, 700, 123_456, 1 << 30] {
+            a.record_n(v, 5);
+            for _ in 0..5 {
+                b.record(v);
+            }
+        }
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        assert_eq!(sa.count, sb.count);
+        assert_eq!(sa.sum, sb.sum);
+        assert_eq!(sa.buckets, sb.buckets);
+    }
+
+    #[test]
+    fn empty_and_saturation() {
+        force_on();
+        let h = Histogram::new();
+        let s = h.snapshot();
+        assert_eq!((s.count, s.sum, s.min, s.max), (0, 0, 0, 0));
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.mean(), 0.0);
+        // huge values saturate into the top bucket instead of panicking
+        h.record(u64::MAX);
+        h.record(1 << 50);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert_eq!(s.buckets.len(), 1);
+        assert_eq!(s.buckets[0].0 as usize, N_BUCKETS - 1);
+    }
+}

@@ -1,0 +1,511 @@
+//! Process-wide metrics registry: sharded counters, gauges, histograms,
+//! and the Prometheus / JSON exporters.
+//!
+//! ## Hot-path cost model
+//!
+//! [`Counter`] spreads increments across [`SHARDS`] cache-line-padded
+//! atomic cells indexed by a per-thread shard id, so the pool's worker
+//! threads and the batcher executors never contend on one line; reads
+//! sum the shards. [`Gauge`] is the same with signed cells (queue depth
+//! goes down as well as up). Both gate on `obs::enabled()` internally —
+//! under `COMQ_OBS=off` every bump is a relaxed load, a compare, and a
+//! predicted-not-taken branch.
+//!
+//! ## Naming
+//!
+//! Metric names follow Prometheus conventions: `comq_` prefix,
+//! `_total` suffix on counters, `_seconds` suffix on duration
+//! histograms. Histograms record **nanoseconds**; the exporters divide
+//! by 1e9 exactly when the base name ends in `_seconds`, so unitless
+//! histograms (batch size) pass through raw. Labels are embedded in the
+//! name with [`with_labels`] — the registry key *is* the full exposition
+//! string, so two call sites asking for the same name+labels share one
+//! underlying metric (that is how per-request spans aggregate).
+//!
+//! ## `off` means empty
+//!
+//! When telemetry is off at creation time, [`MetricsRegistry::counter`]
+//! & co. hand back a *detached* instance that is never registered:
+//! recording into it is already a no-op, and the exported snapshot
+//! stays empty — the acceptance contract for `COMQ_OBS=off`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::hist::{Histogram, HistogramSnapshot};
+use crate::util::json::Json;
+use crate::util::simd::Kernel;
+
+/// Number of per-thread shards in counters/gauges. 16 covers the pool's
+/// worker cap (`effective_threads()` ≤ 16) plus the batcher executors
+/// with only benign collisions beyond that.
+pub const SHARDS: usize = 16;
+
+#[repr(align(64))]
+struct PadU64(AtomicU64);
+
+#[repr(align(64))]
+struct PadI64(AtomicI64);
+
+/// Stable per-thread shard id in [0, SHARDS).
+#[inline]
+fn shard_id() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    SHARD.with(|s| *s)
+}
+
+/// Monotone counter, sharded per thread.
+pub struct Counter {
+    shards: [PadU64; SHARDS],
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        // const-item trick: arrays of non-Copy values need a const initializer
+        const Z: PadU64 = PadU64(AtomicU64::new(0));
+        Counter { shards: [Z; SHARDS] }
+    }
+
+    /// Add `n`. No-op when `COMQ_OBS=off`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if crate::obs::enabled() {
+            self.shards[shard_id()].0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Sum across shards.
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Signed gauge (queue depth, worker count, resident bytes), sharded
+/// per thread for the inc/dec paths.
+pub struct Gauge {
+    shards: [PadI64; SHARDS],
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        const Z: PadI64 = PadI64(AtomicI64::new(0));
+        Gauge { shards: [Z; SHARDS] }
+    }
+
+    /// Add `n` (may be negative). No-op when `COMQ_OBS=off`.
+    #[inline]
+    pub fn add(&self, n: i64) {
+        if crate::obs::enabled() {
+            self.shards[shard_id()].0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    /// Overwrite the value. Not linearizable against concurrent
+    /// `add`s — use for set-once/quiescent values (resident bytes,
+    /// worker count), not for anything inc/dec'd concurrently.
+    pub fn set(&self, v: i64) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        for s in &self.shards[1..] {
+            s.0.store(0, Ordering::Relaxed);
+        }
+        self.shards[0].0.store(v, Ordering::Relaxed);
+    }
+
+    /// Sum across shards.
+    pub fn get(&self) -> i64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Build a full exposition name: `name{k1="v1",k2="v2"}`. Values are
+/// escaped per the Prometheus text format (`\` and `"`).
+pub fn with_labels(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut out = String::with_capacity(name.len() + 16 * labels.len());
+    out.push_str(name);
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                _ => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out.push('}');
+    out
+}
+
+/// Process-wide registry of named metrics. One global instance behind
+/// [`registry`]; separate instances exist only in tests.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create the counter `name`. Detached (never exported) when
+    /// telemetry is off at call time.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        if !crate::obs::enabled() {
+            return Arc::new(Counter::new());
+        }
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())).clone()
+    }
+
+    /// Get-or-create the gauge `name`; detached when telemetry is off.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        if !crate::obs::enabled() {
+            return Arc::new(Gauge::new());
+        }
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())).clone()
+    }
+
+    /// Get-or-create the histogram `name`; detached when telemetry is off.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if !crate::obs::enabled() {
+            return Arc::new(Histogram::new());
+        }
+        let mut m = self.hists.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
+    }
+
+    /// Point-in-time copy of every registered metric.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            hists: self
+                .hists
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+
+    /// Prometheus text exposition of the current snapshot.
+    pub fn to_prometheus(&self) -> String {
+        self.snapshot().to_prometheus()
+    }
+
+    /// JSON exposition of the current snapshot.
+    pub fn to_json(&self) -> Json {
+        self.snapshot().to_json()
+    }
+
+    /// Drop every registered metric (test isolation). Live `Arc`s held
+    /// by servers/models keep recording but stop exporting.
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.gauges.lock().unwrap().clear();
+        self.hists.lock().unwrap().clear();
+    }
+}
+
+/// The process-wide registry.
+pub fn registry() -> &'static MetricsRegistry {
+    static REG: OnceLock<MetricsRegistry> = OnceLock::new();
+    REG.get_or_init(MetricsRegistry::new)
+}
+
+/// Per-kernel-tier GEMM dispatch counters
+/// (`comq_serve_gemm_calls_total{kernel=...}`), cached so the serving
+/// GEMM entry points pay one array index per call instead of a registry
+/// lock. Caller gates on `obs::enabled()`.
+pub fn kernel_counter(k: Kernel) -> &'static Counter {
+    static KC: OnceLock<[Arc<Counter>; 3]> = OnceLock::new();
+    let all = KC.get_or_init(|| {
+        let mk = |tag: &str| {
+            registry().counter(&with_labels("comq_serve_gemm_calls_total", &[("kernel", tag)]))
+        };
+        [mk("scalar"), mk("avx2"), mk("vnni")]
+    });
+    match k {
+        Kernel::Scalar => &all[0],
+        Kernel::Avx2 => &all[1],
+        Kernel::Vnni => &all[2],
+    }
+}
+
+/// Point-in-time copy of the whole registry, with both exporters.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, HistogramSnapshot>,
+}
+
+/// Whether a full exposition name's *base* (before any `{labels}`)
+/// carries the `_seconds` unit suffix — those histograms recorded
+/// nanoseconds and export scaled by 1e-9.
+fn is_seconds(name: &str) -> bool {
+    name.split('{').next().unwrap_or(name).ends_with("_seconds")
+}
+
+/// Split `name{labels}` into (`name`, `Some("labels")` without braces).
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) => (&name[..i], Some(name[i + 1..].trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Append `suffix` and/or an extra label to a full exposition name:
+/// `decorate("h{a="b"}", "_sum", None)` → `h_sum{a="b"}`.
+fn decorate(name: &str, suffix: &str, extra_label: Option<&str>) -> String {
+    let (base, labels) = split_labels(name);
+    let mut out = String::with_capacity(name.len() + suffix.len() + 24);
+    out.push_str(base);
+    out.push_str(suffix);
+    let combined = match (labels, extra_label) {
+        (Some(l), Some(e)) => Some(format!("{l},{e}")),
+        (Some(l), None) => Some(l.to_string()),
+        (None, Some(e)) => Some(e.to_string()),
+        (None, None) => None,
+    };
+    if let Some(c) = combined {
+        out.push('{');
+        out.push_str(&c);
+        out.push('}');
+    }
+    out
+}
+
+impl Snapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Prometheus text format: counters and gauges as plain samples,
+    /// histograms as summaries (`quantile` label + `_sum`/`_count`).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            let scale = if is_seconds(name) { 1e-9 } else { 1.0 };
+            for (q, label) in
+                [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99"), (0.999, "0.999")]
+            {
+                let line = decorate(name, "", Some(&format!("quantile=\"{label}\"")));
+                out.push_str(&format!("{line} {}\n", h.quantile(q) as f64 * scale));
+            }
+            out.push_str(&format!("{} {}\n", decorate(name, "_sum", None), h.sum as f64 * scale));
+            out.push_str(&format!("{} {}\n", decorate(name, "_count", None), h.count));
+        }
+        out
+    }
+
+    /// JSON exposition via `util::json` — counters and gauges as number
+    /// maps, histograms as `{count, mean, min, max, p50, p95, p99,
+    /// p999, sum}` objects (durations in seconds).
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v as f64))).collect(),
+        );
+        let hists = Json::Obj(
+            self.hists
+                .iter()
+                .map(|(k, h)| {
+                    let scale = if is_seconds(k) { 1e-9 } else { 1.0 };
+                    let obj = Json::obj_from(vec![
+                        ("count", Json::Num(h.count as f64)),
+                        ("mean", Json::Num(h.mean() * scale)),
+                        ("min", Json::Num(h.min as f64 * scale)),
+                        ("max", Json::Num(h.max as f64 * scale)),
+                        ("p50", Json::Num(h.p50() as f64 * scale)),
+                        ("p95", Json::Num(h.p95() as f64 * scale)),
+                        ("p99", Json::Num(h.p99() as f64 * scale)),
+                        ("p999", Json::Num(h.p999() as f64 * scale)),
+                        ("sum", Json::Num(h.sum as f64 * scale)),
+                    ]);
+                    (k.clone(), obj)
+                })
+                .collect(),
+        );
+        Json::obj_from(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn force_on() {
+        crate::obs::set_level(crate::obs::ObsLevel::On);
+    }
+
+    #[test]
+    fn counter_and_gauge_shard_correctly() {
+        force_on();
+        let c = Arc::new(Counter::new());
+        let g = Arc::new(Gauge::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let (c, g) = (c.clone(), g.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                        g.inc();
+                    }
+                    for _ in 0..250 {
+                        g.dec();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+        assert_eq!(g.get(), 8 * 750);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+    }
+
+    #[test]
+    fn registry_shares_by_name() {
+        force_on();
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("x_total");
+        let b = reg.counter("x_total");
+        a.inc();
+        b.inc();
+        assert_eq!(reg.snapshot().counters["x_total"], 2);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(with_labels("m", &[]), "m");
+        assert_eq!(
+            with_labels("m", &[("model", "a\"b\\c"), ("stage", "exec")]),
+            "m{model=\"a\\\"b\\\\c\",stage=\"exec\"}"
+        );
+    }
+
+    #[test]
+    fn prometheus_and_json_exposition() {
+        force_on();
+        let reg = MetricsRegistry::new();
+        reg.counter("comq_requests_total").add(7);
+        reg.gauge("comq_queue_depth").set(2);
+        // a _seconds histogram records ns, exports seconds
+        let h = reg.histogram(&with_labels("comq_stage_seconds", &[("stage", "exec")]));
+        h.record_n(1_000_000_000, 4); // 4 × 1s
+        // a unitless histogram passes through raw
+        let b = reg.histogram("comq_batch_size");
+        b.record(16);
+
+        let text = reg.to_prometheus();
+        assert!(text.contains("comq_requests_total 7\n"), "{text}");
+        assert!(text.contains("comq_queue_depth 2\n"), "{text}");
+        assert!(
+            text.contains("comq_stage_seconds{stage=\"exec\",quantile=\"0.99\"}"),
+            "{text}"
+        );
+        assert!(text.contains("comq_stage_seconds_sum{stage=\"exec\"} 4\n"), "{text}");
+        assert!(text.contains("comq_stage_seconds_count{stage=\"exec\"} 4\n"), "{text}");
+        assert!(text.contains("comq_batch_size{quantile=\"0.5\"} 16\n"), "{text}");
+
+        let j = reg.to_json();
+        let hs = j.get("histograms").unwrap();
+        let exec = hs.get("comq_stage_seconds{stage=\"exec\"}").unwrap();
+        assert_eq!(exec.get("count").unwrap().num().unwrap(), 4.0);
+        assert_eq!(exec.get("sum").unwrap().num().unwrap(), 4.0); // seconds
+        let bs = hs.get("comq_batch_size").unwrap();
+        assert_eq!(bs.get("max").unwrap().num().unwrap(), 16.0); // raw
+        // round-trips through the in-tree parser
+        let parsed = Json::parse(&j.to_string_pretty(1)).unwrap();
+        assert_eq!(
+            parsed.get("counters").unwrap().get("comq_requests_total").unwrap().num().unwrap(),
+            7.0
+        );
+    }
+
+    #[test]
+    fn decorate_suffix_placement() {
+        assert_eq!(decorate("h", "_sum", None), "h_sum");
+        assert_eq!(decorate("h{a=\"b\"}", "_sum", None), "h_sum{a=\"b\"}");
+        assert_eq!(decorate("h{a=\"b\"}", "", Some("q=\"1\"")), "h{a=\"b\",q=\"1\"}");
+        assert_eq!(decorate("h", "", Some("q=\"1\"")), "h{q=\"1\"}");
+        assert!(is_seconds("x_seconds{stage=\"exec\"}"));
+        assert!(!is_seconds("x_total"));
+    }
+}

@@ -1,0 +1,158 @@
+//! `obs` — in-tree, dependency-free observability.
+//!
+//! Everything the runtime measures about itself funnels through here:
+//!
+//! * [`logger`]  — the leveled logger behind the `COMQ_LOG` gate and the
+//!   crate-root `log_warn!` / `log_info!` / `log_debug!` / `warn_once!`
+//!   macros (the one place warnings are formatted; the scattered
+//!   warn-once `eprintln!`s of earlier PRs route through it now);
+//! * [`hist`]    — log-linear fixed-bucket latency histograms
+//!   (HDR-style: lock-free atomic record, ≤ ~1.6 % relative bucket
+//!   error, exact count/sum/min/max, p50/p95/p99/p999 on snapshot);
+//! * [`metrics`] — the process-wide [`MetricsRegistry`] of named
+//!   counters (sharded, cache-line-padded), gauges and histograms, with
+//!   Prometheus text and JSON (`util::json`) export;
+//! * [`span`]    — the per-request serving span: submit → queue-wait →
+//!   batch-coalesce → exec → epilogue, aggregated into per-model
+//!   per-stage histograms;
+//! * [`quant`]   — quantizer-side sweep telemetry (per-pass
+//!   reconstruction-error trajectory, order stats, coordinate-update
+//!   counts), stashed by the sweep engine and surfaced through
+//!   `coordinator::report`.
+//!
+//! ## The `COMQ_OBS` gate
+//!
+//! `COMQ_OBS=off|on|trace` (default `on`). Recording sites check
+//! [`enabled`] — a single relaxed atomic load and compare, so `off`
+//! turns every counter bump and histogram record into a
+//! branch-predicted no-op and the kernel-parity bit-identity contracts
+//! are untouched (telemetry is observation-only everywhere; nothing it
+//! computes feeds back into codes, scales or logits). `trace`
+//! additionally enables the per-pass reconstruction-error trajectory in
+//! the sweep engine, which costs one extra Gram product per layer.
+//!
+//! Unlike `COMQ_KERNEL`/`COMQ_THREADS`, the level is read from the
+//! environment **once** and cached — recording sites are too hot for an
+//! env lookup. Embedders and tests flip it with [`set_level`].
+//!
+//! Granularity rule: counters and histograms live at request/layer
+//! granularity only — never inside kernel inner loops (`micro_i8`,
+//! `dot_i8`, the sweep coordinate loop).
+
+pub mod hist;
+pub mod logger;
+pub mod metrics;
+pub mod quant;
+pub mod span;
+
+pub use hist::{Histogram, HistogramSnapshot};
+pub use logger::LogLevel;
+pub use metrics::{registry, Counter, Gauge, MetricsRegistry, Snapshot};
+pub use span::{Span, SpanSet, Stage};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Telemetry level, from `COMQ_OBS`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ObsLevel {
+    /// Recording is a branch-predicted no-op; the registry stays empty.
+    Off = 0,
+    /// Counters, gauges, histograms and spans (the default).
+    On = 1,
+    /// `On` plus the expensive extras (per-pass error trajectories).
+    Trace = 2,
+}
+
+impl ObsLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ObsLevel::Off => "off",
+            ObsLevel::On => "on",
+            ObsLevel::Trace => "trace",
+        }
+    }
+}
+
+/// Parsed `COMQ_OBS` policy: `Ok(None)` = unset/blank → default,
+/// `Ok(Some(l))` = explicit level, `Err(raw)` = unknown value — the
+/// caller warns once and stays on the default. Pure so the rules are
+/// unit-testable without touching the process environment.
+fn parse_level(raw: Option<&str>) -> Result<Option<ObsLevel>, String> {
+    match raw.map(str::trim) {
+        None | Some("") => Ok(None),
+        Some("off") => Ok(Some(ObsLevel::Off)),
+        Some("on") => Ok(Some(ObsLevel::On)),
+        Some("trace") => Ok(Some(ObsLevel::Trace)),
+        Some(other) => Err(other.to_string()),
+    }
+}
+
+const LEVEL_UNINIT: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(LEVEL_UNINIT);
+
+/// The current telemetry level (cached after the first read).
+#[inline]
+pub fn level() -> ObsLevel {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => ObsLevel::Off,
+        1 => ObsLevel::On,
+        2 => ObsLevel::Trace,
+        _ => init_level(),
+    }
+}
+
+/// Whether recording is on at all — the hot-path check every counter
+/// bump and histogram record makes first.
+#[inline]
+pub fn enabled() -> bool {
+    level() != ObsLevel::Off
+}
+
+/// Whether the expensive extras are on.
+#[inline]
+pub fn tracing() -> bool {
+    level() == ObsLevel::Trace
+}
+
+#[cold]
+fn init_level() -> ObsLevel {
+    let lv = match parse_level(std::env::var("COMQ_OBS").ok().as_deref()) {
+        Ok(v) => v.unwrap_or(ObsLevel::On),
+        Err(bad) => {
+            crate::warn_once!("COMQ_OBS={bad}: expected off|on|trace, telemetry stays on");
+            ObsLevel::On
+        }
+    };
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    lv
+}
+
+/// Override the telemetry level (tests, embedders). Metrics created
+/// while the level was `Off` stay detached from the registry — flip the
+/// level before building servers/models whose telemetry should export.
+pub fn set_level(l: ObsLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{parse_level, ObsLevel};
+
+    #[test]
+    fn level_parsing_rules() {
+        assert_eq!(parse_level(None), Ok(None));
+        assert_eq!(parse_level(Some("")), Ok(None));
+        assert_eq!(parse_level(Some("  ")), Ok(None));
+        assert_eq!(parse_level(Some("off")), Ok(Some(ObsLevel::Off)));
+        assert_eq!(parse_level(Some("on")), Ok(Some(ObsLevel::On)));
+        assert_eq!(parse_level(Some(" trace ")), Ok(Some(ObsLevel::Trace)));
+        assert_eq!(parse_level(Some("verbose")), Err("verbose".to_string()));
+    }
+
+    #[test]
+    fn level_ordering() {
+        assert!(ObsLevel::Off < ObsLevel::On);
+        assert!(ObsLevel::On < ObsLevel::Trace);
+        assert_eq!(ObsLevel::Trace.name(), "trace");
+    }
+}

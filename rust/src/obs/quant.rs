@@ -1,0 +1,85 @@
+//! Quantizer-side telemetry: per-layer sweep statistics.
+//!
+//! The coordinate-descent sweep (`quant::workspace`) runs deep inside a
+//! worker-pool job with no channel back to the coordinator other than
+//! its return value — which is pinned by bit-identity tests and cannot
+//! grow fields. So the sweep stashes its telemetry in a thread-local
+//! and the coordinator (`coordinator::pipeline`), which runs the
+//! quantizer on the *same* thread, takes it immediately after the call.
+//! The stash is observation-only: nothing in it feeds back into codes
+//! or scales.
+//!
+//! Wall time per layer additionally lands in the registry histogram
+//! `comq_quant_layer_seconds` (with `comq_quant_layers_total`), so a
+//! long quantization run can be watched over the same Prometheus/JSON
+//! export as serving.
+
+use std::cell::RefCell;
+
+use super::metrics::registry;
+
+/// Telemetry from one layer's coordinate-descent sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepTelemetry {
+    /// Reconstruction-error trajectory: ‖X(W_q − W)‖² after each full
+    /// pass over the coordinates. Only populated under `COMQ_OBS=trace`
+    /// (costs one extra Gram product per layer); empty at `on`.
+    pub passes: Vec<f64>,
+    /// Total coordinate updates performed (passes × rows × columns).
+    pub updates: u64,
+    /// Whether the greedy order collapsed to a single shared
+    /// permutation (uniform) or used a per-column order table.
+    pub order_uniform: bool,
+}
+
+thread_local! {
+    static STASH: RefCell<Option<SweepTelemetry>> = const { RefCell::new(None) };
+}
+
+/// Stash this thread's sweep telemetry (called by the sweep engine;
+/// no-op when telemetry is off).
+pub fn put_sweep(t: SweepTelemetry) {
+    if crate::obs::enabled() {
+        STASH.with(|s| *s.borrow_mut() = Some(t));
+    }
+}
+
+/// Take (and clear) this thread's stashed sweep telemetry.
+pub fn take_sweep() -> Option<SweepTelemetry> {
+    STASH.with(|s| s.borrow_mut().take())
+}
+
+/// Record one quantized layer's wall time into the registry.
+pub fn record_layer(secs: f64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    registry()
+        .histogram("comq_quant_layer_seconds")
+        .record((secs * 1e9) as u64);
+    registry().counter("comq_quant_layers_total").inc();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stash_roundtrip_and_clear() {
+        crate::obs::set_level(crate::obs::ObsLevel::On);
+        assert_eq!(take_sweep(), None);
+        let t = SweepTelemetry { passes: vec![4.0, 1.0, 0.5], updates: 300, order_uniform: true };
+        put_sweep(t.clone());
+        assert_eq!(take_sweep(), Some(t));
+        // take clears — a second take sees nothing (stale-stash guard)
+        assert_eq!(take_sweep(), None);
+    }
+
+    #[test]
+    fn stash_is_thread_local() {
+        crate::obs::set_level(crate::obs::ObsLevel::On);
+        put_sweep(SweepTelemetry { passes: vec![], updates: 1, order_uniform: false });
+        std::thread::spawn(|| assert_eq!(take_sweep(), None)).join().unwrap();
+        assert!(take_sweep().is_some());
+    }
+}

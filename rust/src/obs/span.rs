@@ -1,0 +1,186 @@
+//! Per-request serving spans.
+//!
+//! Each request through the micro-batcher is stamped at four stage
+//! boundaries — submit → coalesce-start (queue wait), tensor assembly
+//! (coalesce), model forward (exec), reply delivery (epilogue) — and
+//! the durations aggregate into per-model per-stage histograms named
+//! `comq_serve_stage_seconds{model=...,stage=...}` plus a `total`
+//! histogram of submit→reply latency. Stages are recorded batch-wide
+//! with [`SpanSet::record_n`] (every request in a batch shares the
+//! coalesce/exec/epilogue durations), so per-stage sums stay coherent
+//! with the per-request totals — the invariant the integration test
+//! asserts.
+//!
+//! The [`items`] thread-local carries the current batch size from
+//! `QuantizedModel::forward` down into the per-layer exec hooks, so
+//! layer exec counters count *images*, not forward calls (a grouped
+//! conv sees b·oh·ow rows per call — request count is not recoverable
+//! from the tensor shape at that depth).
+
+use std::cell::Cell;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::hist::Histogram;
+use super::metrics::{registry, with_labels};
+
+/// A pipeline stage of one serving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Submit → executor picks the request out of the queue.
+    QueueWait,
+    /// Queue drain → input tensor assembled.
+    Coalesce,
+    /// Model forward (all layers).
+    Exec,
+    /// Forward done → reply handed to the requester.
+    Epilogue,
+    /// Submit → reply (end-to-end, per request).
+    Total,
+}
+
+/// All stages, in pipeline order.
+pub const STAGES: [Stage; 5] =
+    [Stage::QueueWait, Stage::Coalesce, Stage::Exec, Stage::Epilogue, Stage::Total];
+
+impl Stage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::Coalesce => "coalesce",
+            Stage::Exec => "exec",
+            Stage::Epilogue => "epilogue",
+            Stage::Total => "total",
+        }
+    }
+
+    fn idx(&self) -> usize {
+        match self {
+            Stage::QueueWait => 0,
+            Stage::Coalesce => 1,
+            Stage::Exec => 2,
+            Stage::Epilogue => 3,
+            Stage::Total => 4,
+        }
+    }
+}
+
+/// The per-stage histograms of one model's serving path.
+#[derive(Clone)]
+pub struct SpanSet {
+    hists: [Arc<Histogram>; 5],
+}
+
+impl SpanSet {
+    /// Build (or re-attach to) the per-stage histograms for `model`.
+    pub fn for_model(model: &str) -> SpanSet {
+        let mk = |stage: Stage| {
+            registry().histogram(&with_labels(
+                "comq_serve_stage_seconds",
+                &[("model", model), ("stage", stage.name())],
+            ))
+        };
+        SpanSet {
+            hists: [
+                mk(Stage::QueueWait),
+                mk(Stage::Coalesce),
+                mk(Stage::Exec),
+                mk(Stage::Epilogue),
+                mk(Stage::Total),
+            ],
+        }
+    }
+
+    /// Record one duration (nanoseconds) for `stage`.
+    #[inline]
+    pub fn record(&self, stage: Stage, nanos: u64) {
+        self.hists[stage.idx()].record(nanos);
+    }
+
+    /// Record the same duration once per request in a batch of `n`.
+    #[inline]
+    pub fn record_n(&self, stage: Stage, nanos: u64, n: u64) {
+        self.hists[stage.idx()].record_n(nanos, n);
+    }
+
+    /// The underlying histogram (snapshot access for tests/benches).
+    pub fn hist(&self, stage: Stage) -> &Histogram {
+        &self.hists[stage.idx()]
+    }
+}
+
+/// Incremental span: mark successive stage boundaries, each `mark`
+/// recording the time since the previous one.
+pub struct Span {
+    set: SpanSet,
+    last: Instant,
+    weight: u64,
+}
+
+impl Span {
+    /// Start a span at an explicit instant (the batcher timestamps
+    /// arrival while holding the queue lock, before the span exists).
+    pub fn start_at(set: &SpanSet, at: Instant, weight: u64) -> Span {
+        Span { set: set.clone(), last: at, weight }
+    }
+
+    /// Close the current stage: record now−last into `stage` (weighted
+    /// by the batch size) and advance the boundary.
+    pub fn mark(&mut self, stage: Stage) {
+        let now = Instant::now();
+        let ns = now.saturating_duration_since(self.last).as_nanos() as u64;
+        self.set.record_n(stage, ns, self.weight);
+        self.last = now;
+    }
+}
+
+thread_local! {
+    static ITEMS: Cell<u64> = const { Cell::new(1) };
+}
+
+/// Set the number of requests (images) in the batch the current thread
+/// is executing; read back by per-layer exec hooks via [`items`].
+pub fn set_items(n: u64) {
+    ITEMS.with(|c| c.set(n.max(1)));
+}
+
+/// The current thread's in-flight batch size (1 outside a forward).
+pub fn items() -> u64 {
+    ITEMS.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_and_order() {
+        assert_eq!(STAGES.len(), 5);
+        let names: Vec<_> = STAGES.iter().map(|s| s.name()).collect();
+        assert_eq!(names, ["queue_wait", "coalesce", "exec", "epilogue", "total"]);
+        for (i, s) in STAGES.iter().enumerate() {
+            assert_eq!(s.idx(), i);
+        }
+    }
+
+    #[test]
+    fn span_marks_accumulate_per_stage() {
+        crate::obs::set_level(crate::obs::ObsLevel::On);
+        let set = SpanSet::for_model("span-unit-test");
+        let mut span = Span::start_at(&set, Instant::now(), 3);
+        span.mark(Stage::QueueWait);
+        span.mark(Stage::Exec);
+        assert_eq!(set.hist(Stage::QueueWait).count(), 3);
+        assert_eq!(set.hist(Stage::Exec).count(), 3);
+        assert_eq!(set.hist(Stage::Coalesce).count(), 0);
+    }
+
+    #[test]
+    fn items_is_thread_local() {
+        set_items(8);
+        assert_eq!(items(), 8);
+        std::thread::spawn(|| assert_eq!(items(), 1)).join().unwrap();
+        set_items(0); // clamps to 1 — a zero weight would drop samples
+        assert_eq!(items(), 1);
+    }
+}

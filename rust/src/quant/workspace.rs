@@ -178,6 +178,25 @@ pub fn comq_workspace(gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQua
     let levels = cfg.levels();
     let mut ws = SweepWorkspace::pack(gram, w, cfg, &delta);
 
+    // Trace-only telemetry: the per-pass reconstruction-error
+    // trajectory. cw[j] = w_jᵀ G_j w_j is sweep-invariant (one extra
+    // Gram product per layer, paid only under COMQ_OBS=trace); each
+    // pass's error then falls out of the δ-statistics the sweep already
+    // computes: ‖X(w_j − δ_j q_j)‖² = cw_j − 2δ_j·(q_jᵀG w_j) +
+    // δ_j²·(q_jᵀG q_j). Observation-only — nothing here feeds back into
+    // the sweep, so the bit-identity contract above is untouched.
+    let cw: Option<Vec<f64>> = crate::obs::tracing().then(|| {
+        let mut gw = vec![0.0f32; m];
+        (0..n)
+            .map(|j| {
+                let wc = &ws.wt[j * m..(j + 1) * m];
+                gemv(gram.for_col(j), wc, &mut gw);
+                wc.iter().zip(&gw).map(|(&wi, &gi)| wi as f64 * gi as f64).sum::<f64>()
+            })
+            .collect()
+    });
+    let mut passes: Vec<f64> = Vec::new();
+
     let mut stats = vec![(0.0f32, 0.0f32); n];
     for _k in 0..cfg.iters {
         match gram {
@@ -202,6 +221,24 @@ pub fn comq_workspace(gram: &GramSet, w: &Tensor, cfg: &QuantConfig) -> LayerQua
                 }
             }
         }
+        if let Some(cw) = &cw {
+            // clamped at 0: each term is a true quadratic ≥ 0, but the
+            // f32 stats can carry it a hair negative near convergence
+            let err: f64 = (0..n)
+                .map(|j| {
+                    let d = delta[j] as f64;
+                    (cw[j] - 2.0 * d * stats[j].0 as f64 + d * d * stats[j].1 as f64).max(0.0)
+                })
+                .sum();
+            passes.push(err);
+        }
+    }
+    if crate::obs::enabled() {
+        crate::obs::quant::put_sweep(crate::obs::quant::SweepTelemetry {
+            passes,
+            updates: cfg.iters as u64 * n as u64 * m as u64,
+            order_uniform: matches!(ws.plan, OrderPlan::Uniform(_)),
+        });
     }
     // unpack: one transpose out
     let q = Tensor::new(&[n, m], ws.qt).transpose2();
@@ -397,6 +434,36 @@ mod tests {
             let e_rtn = g.recon_error(&w, &rtn(&w, &cfg).dequant());
             assert!(e_comq < e_rtn, "bits={bits}: {e_comq} vs {e_rtn}");
         }
+    }
+
+    #[test]
+    fn trace_trajectory_matches_exact_recon_error() {
+        // Under COMQ_OBS=trace the sweep stashes a per-pass error
+        // trajectory; it must be monotone non-increasing and its final
+        // point must agree with the exact recon error of the result.
+        crate::obs::set_level(crate::obs::ObsLevel::Trace);
+        let (w, g) = setup(64, 24, 12, 15);
+        let cfg = QuantConfig { bits: 2, iters: 4, ..Default::default() };
+        let _ = crate::obs::quant::take_sweep(); // stale-stash guard
+        let lq = comq_workspace(&g, &w, &cfg);
+        let t = crate::obs::quant::take_sweep().expect("sweep telemetry at trace");
+        crate::obs::set_level(crate::obs::ObsLevel::On);
+        assert_eq!(t.passes.len(), 4);
+        assert_eq!(t.updates, 4 * 24 * 12);
+        assert!(t.order_uniform, "cyclic order is a uniform plan");
+        for win in t.passes.windows(2) {
+            assert!(
+                win[1] <= win[0] * (1.0 + 1e-4) + 1e-9,
+                "coordinate descent must not increase the error: {:?}",
+                t.passes
+            );
+        }
+        let exact = g.recon_error(&w, &lq.dequant());
+        let last = *t.passes.last().unwrap();
+        assert!(
+            (last - exact).abs() <= 0.05 * exact.max(1e-9),
+            "trajectory end {last} vs exact recon error {exact}"
+        );
     }
 
     #[test]

@@ -11,6 +11,11 @@
 //! Executables are compiled once per artifact path and cached; the
 //! compile cache is the runtime analogue of a serving system's model
 //! registry.
+//!
+//! Builds without the `xla_extension` shared library use the in-tree
+//! [`stub`] in its place (same API surface; `Engine::global()` returns
+//! a "not vendored" error and the pipeline falls back to the native
+//! engine). Swap the alias below for the real crate to re-enable PJRT.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -19,6 +24,9 @@ use anyhow::{anyhow, Context, Result};
 use once_cell::sync::OnceCell;
 
 use crate::tensor::Tensor;
+
+pub mod stub;
+use stub as xla;
 
 /// Lazily-initialized process-wide PJRT engine.
 pub struct Engine {
@@ -40,7 +48,7 @@ impl Engine {
         ENGINE.get_or_try_init(|| {
             let client = xla::PjRtClient::cpu()
                 .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
-            log::info!(
+            crate::log_info!(
                 "PJRT client: platform={} devices={}",
                 client.platform_name(),
                 client.device_count()

@@ -1,0 +1,208 @@
+//! In-tree stand-in for the `xla` crate's PJRT surface.
+//!
+//! The PJRT runtime is an *optional* execution engine: the native
+//! Gram-domain quantizer and the i8 serving runtime never touch it.
+//! Vendored builds of this crate don't carry the `xla_extension`
+//! shared library, so instead of a hard link-time dependency the
+//! handful of types `runtime::Engine` needs are mirrored here.
+//!
+//! Shape of the stub:
+//!
+//! * `Literal` is **real** — host-side f32 tensor interchange has no
+//!   PJRT dependency, so `tensor_to_literal`/`literal_to_tensor` (and
+//!   their round-trip test) work unchanged;
+//! * everything that requires a live PJRT client (`PjRtClient`,
+//!   `PjRtLoadedExecutable`, `PjRtBuffer`, `HloModuleProto`,
+//!   `XlaComputation`) is an *uninhabited* enum: the only constructors
+//!   (`PjRtClient::cpu`, `HloModuleProto::from_text_file`) return
+//!   `Err`, so every downstream method body is a provably-unreachable
+//!   `match *self {}`. Callers see a clean runtime error
+//!   ("PJRT runtime not vendored"), not a crash, and the pipeline's
+//!   `pjrt-kernel` path falls back to the native engine per layer.
+//!
+//! When a real `xla` crate is linked in, delete the `use stub as xla`
+//! alias in `runtime/mod.rs`; the call sites match its 0.5-era API.
+
+/// Error type mirroring `xla::Error` closely enough for the `{e:?}`
+/// formatting at the call sites.
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn not_vendored() -> Error {
+    Error(
+        "PJRT runtime not vendored in this build (xla_extension is absent); \
+         use the native engine (--quant-engine native, the default)"
+            .into(),
+    )
+}
+
+/// Element types `Literal` can report. The stub only ever holds f32.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+/// Shape of an array literal: dimensions plus element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Marker for element types `Literal::to_vec` can extract. Sealed to
+/// f32 — the only dtype the runtime moves across the boundary.
+pub trait NativeType: Sized {
+    fn extract(data: &[f32]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    fn extract(data: &[f32]) -> Vec<f32> {
+        data.to_vec()
+    }
+}
+
+/// Host-side tensor interchange value. Real (not stubbed): it's just
+/// an f32 buffer with a shape, and keeping it functional keeps the
+/// Tensor↔Literal conversions testable without PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Same data, new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({} vs {})",
+                self.dims,
+                dims,
+                self.data.len(),
+                want
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: ElementType::F32 })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Ok(T::extract(&self.data))
+    }
+
+    /// Tuple literals only come out of PJRT executions, which the stub
+    /// cannot perform — so this is always an error here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(not_vendored())
+    }
+}
+
+/// PJRT client handle. Uninhabited: `cpu()` is the only constructor
+/// and it always fails in the stub.
+pub enum PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(not_vendored())
+    }
+    pub fn platform_name(&self) -> String {
+        match *self {}
+    }
+    pub fn device_count(&self) -> usize {
+        match *self {}
+    }
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        match *self {}
+    }
+}
+
+/// Compiled-and-loaded executable handle (uninhabited in the stub).
+pub enum PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        match *self {}
+    }
+}
+
+/// Device buffer handle (uninhabited in the stub).
+pub enum PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        match *self {}
+    }
+}
+
+/// Parsed HLO module (uninhabited: parsing needs the XLA text parser).
+pub enum HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(not_vendored())
+    }
+}
+
+/// XLA computation wrapper (uninhabited in the stub).
+pub enum XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        match *proto {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_is_functional_without_pjrt() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err(), "element count mismatch must fail");
+        assert!(r.to_tuple().is_err(), "stub never produces tuple literals");
+    }
+
+    #[test]
+    fn client_reports_not_vendored() {
+        let err = PjRtClient::cpu().err().expect("stub client must not construct");
+        let msg = format!("{err:?}");
+        assert!(msg.contains("not vendored"), "got: {msg}");
+    }
+}

@@ -19,6 +19,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::metrics::with_labels;
+use crate::obs::{Counter, Gauge, Histogram, SpanSet, Stage};
 use crate::serve::QuantizedModel;
 use crate::tensor::Tensor;
 
@@ -48,6 +50,42 @@ struct Pending {
     tx: mpsc::Sender<Vec<f32>>,
 }
 
+/// The micro-batcher's telemetry handles for one model. Stage
+/// histograms are recorded only for *answered* requests (a panicked
+/// batch records nothing), so all five stages always carry the same
+/// count and their sums stay coherent with the end-to-end totals.
+pub struct ServeObs {
+    /// queue_wait / coalesce / exec / epilogue / total, per request.
+    pub spans: SpanSet,
+    /// Requests currently waiting in the queue (decremented when an
+    /// executor drains them into a batch).
+    pub queue_depth: Arc<Gauge>,
+    /// Coalesced batch sizes (unitless histogram).
+    pub batch_size: Arc<Histogram>,
+    /// Requests submitted.
+    pub requests: Arc<Counter>,
+    /// Batches whose coalesce window closed on the deadline rather than
+    /// on a full batch.
+    pub deadline_miss: Arc<Counter>,
+    /// Batch forwards that panicked (their requests were dropped).
+    pub panics: Arc<Counter>,
+}
+
+impl ServeObs {
+    fn new(model: &str) -> ServeObs {
+        let reg = crate::obs::registry();
+        let l = |name: &str| with_labels(name, &[("model", model)]);
+        ServeObs {
+            spans: SpanSet::for_model(model),
+            queue_depth: reg.gauge(&l("comq_serve_queue_depth")),
+            batch_size: reg.histogram(&l("comq_serve_batch_size")),
+            requests: reg.counter(&l("comq_serve_requests_total")),
+            deadline_miss: reg.counter(&l("comq_serve_deadline_miss_total")),
+            panics: reg.counter(&l("comq_serve_executor_panics_total")),
+        }
+    }
+}
+
 struct Shared {
     model: Arc<QuantizedModel>,
     side: usize,
@@ -58,6 +96,8 @@ struct Shared {
     shutdown: AtomicBool,
     batches: AtomicUsize,
     served: AtomicUsize,
+    /// Present only when telemetry was on when the server started.
+    obs: Option<ServeObs>,
 }
 
 /// Cumulative queue counters.
@@ -87,6 +127,7 @@ impl Server {
         } else {
             cfg.executors.min(crate::util::effective_threads())
         };
+        let obs = crate::obs::enabled().then(|| ServeObs::new(&model.info().name));
         let shared = Arc::new(Shared {
             side: model.input_side(),
             max_batch: cfg.max_batch,
@@ -97,6 +138,7 @@ impl Server {
             shutdown: AtomicBool::new(false),
             batches: AtomicUsize::new(0),
             served: AtomicUsize::new(0),
+            obs,
         });
         let workers = (0..executors)
             .map(|i| {
@@ -116,6 +158,10 @@ impl Server {
         let elems = self.shared.side * self.shared.side * 3;
         assert_eq!(image.len(), elems, "image must be img*img*3 f32s");
         let (tx, rx) = mpsc::channel();
+        if let Some(o) = &self.shared.obs {
+            o.requests.inc();
+            o.queue_depth.inc();
+        }
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.push_back(Pending { data: image, arrived: Instant::now(), tx });
@@ -139,6 +185,12 @@ impl Server {
             served: self.shared.served.load(Ordering::Relaxed),
         }
     }
+
+    /// This server's telemetry handles (the same histograms the global
+    /// registry exports), when `COMQ_OBS` was on at start.
+    pub fn obs(&self) -> Option<&ServeObs> {
+        self.shared.obs.as_ref()
+    }
 }
 
 impl Drop for Server {
@@ -154,8 +206,10 @@ impl Drop for Server {
 fn executor_loop(sh: &Shared) {
     let elems = sh.side * sh.side * 3;
     loop {
-        // coalesce: wait for work, then until full / deadline / shutdown
-        let batch: Vec<Pending> = {
+        // coalesce: wait for work, then until full / deadline / shutdown.
+        // `missed` marks a window closed by the deadline rather than by
+        // a full batch (shutdown drains don't count as misses).
+        let (batch, missed): (Vec<Pending>, bool) = {
             let mut q = sh.queue.lock().unwrap();
             loop {
                 if q.is_empty() {
@@ -168,19 +222,33 @@ fn executor_loop(sh: &Shared) {
                 }
                 let deadline = q.front().unwrap().arrived + sh.max_delay;
                 let now = Instant::now();
-                if q.len() >= sh.max_batch || now >= deadline || sh.shutdown.load(Ordering::Acquire)
-                {
+                let full = q.len() >= sh.max_batch;
+                if full || now >= deadline || sh.shutdown.load(Ordering::Acquire) {
                     let take = q.len().min(sh.max_batch);
-                    break q.drain(..take).collect();
+                    break (q.drain(..take).collect(), !full && now >= deadline);
                 }
                 q = sh.cv.wait_timeout(q, deadline - now).unwrap().0;
             }
         };
         let b = batch.len();
+        // Stamp the batch's stage boundaries only when telemetry is on.
+        // Arrival times are copied out up front because the send loop
+        // consumes the batch before the epilogue boundary is known.
+        let t_drained = sh.obs.as_ref().map(|o| {
+            o.queue_depth.add(-(b as i64));
+            o.batch_size.record(b as u64);
+            if missed {
+                o.deadline_miss.inc();
+            }
+            Instant::now()
+        });
+        let arrivals: Vec<Instant> =
+            if sh.obs.is_some() { batch.iter().map(|p| p.arrived).collect() } else { Vec::new() };
         let mut data = Vec::with_capacity(b * elems);
         for p in &batch {
             data.extend_from_slice(&p.data);
         }
+        let t_built = t_drained.map(|_| Instant::now());
         // a panicking forward must not kill the executor — the queue
         // would fill forever behind a Server that still looks healthy.
         // Catch it, drop this batch's senders (their receivers observe
@@ -190,14 +258,41 @@ fn executor_loop(sh: &Shared) {
         }));
         match result {
             Ok(logits) => {
+                let t_done = t_built.map(|_| Instant::now());
                 let classes = logits.cols();
                 for (i, p) in batch.into_iter().enumerate() {
                     // a dropped receiver is fine — the rest of the batch stands
                     let _ = p.tx.send(logits.data()[i * classes..(i + 1) * classes].to_vec());
                 }
                 sh.served.fetch_add(b, Ordering::Relaxed);
+                // Record spans only for answered requests, all at once,
+                // so every stage histogram carries the same count and
+                // per-stage sums stay coherent with the totals.
+                if let (Some(o), Some(ta), Some(tb), Some(td)) =
+                    (&sh.obs, t_drained, t_built, t_done)
+                {
+                    let ts = Instant::now();
+                    let ns = |d: std::time::Duration| d.as_nanos() as u64;
+                    let n = b as u64;
+                    o.spans.record_n(Stage::Coalesce, ns(tb.saturating_duration_since(ta)), n);
+                    o.spans.record_n(Stage::Exec, ns(td.saturating_duration_since(tb)), n);
+                    o.spans.record_n(Stage::Epilogue, ns(ts.saturating_duration_since(td)), n);
+                    for a in &arrivals {
+                        o.spans
+                            .record(Stage::QueueWait, ns(ta.saturating_duration_since(*a)));
+                        o.spans.record(Stage::Total, ns(ts.saturating_duration_since(*a)));
+                    }
+                }
             }
-            Err(_) => drop(batch),
+            Err(_) => {
+                if let Some(o) = &sh.obs {
+                    o.panics.inc();
+                }
+                crate::log_warn!(
+                    "serve executor: batch forward panicked; {b} request(s) dropped"
+                );
+                drop(batch);
+            }
         }
         sh.batches.fetch_add(1, Ordering::Relaxed);
     }

@@ -246,6 +246,9 @@ pub fn gemm_i8_fused_with(
     // resolve the defensive unsupported-kernel fallback once per call,
     // so every per-tile dispatch below takes its guarded arm
     let kern = if kern.supported() { kern } else { Kernel::Scalar };
+    if crate::obs::enabled() {
+        crate::obs::metrics::kernel_counter(kern).inc();
+    }
     let (rows, k) = (a.rows, a.m);
     assert!(k < MAX_K, "k={k} would overflow the i32 accumulator");
     assert_eq!(out.len(), rows * n);
@@ -331,6 +334,9 @@ pub fn dwconv_i8_fused_with(
     out: &mut [f32],
 ) {
     let kern = if kern.supported() { kern } else { Kernel::Scalar };
+    if crate::obs::enabled() {
+        crate::obs::metrics::kernel_counter(kern).inc();
+    }
     let (rows, kk) = (a.rows, a.kk);
     assert!(kk < MAX_K, "kk={kk} would overflow the i32 accumulator");
     assert_eq!(a.c, c, "activation groups vs layer channels");

@@ -28,6 +28,11 @@
 //! * `batcher` — a dynamic micro-batching request queue coalescing
 //!   single requests into batches under a latency deadline.
 //!
+//! The whole path is instrumented through `crate::obs` (per-request
+//! stage spans, queue depth, batch-size distribution, per-layer exec
+//! timing, kernel-tier dispatch counters), gated by `COMQ_OBS` —
+//! see `obs` for the export formats and the off-is-free contract.
+//!
 //! Accuracy parity with the dequantized-f32 reference is routed through
 //! `EngineKind::Int8` (see `eval::evaluate_int8` and the pipeline), and
 //! asserted by rust/tests/serve_int8.rs.
@@ -37,12 +42,12 @@ pub mod gemm;
 pub mod model;
 pub mod packed;
 
-pub use batcher::{BatchConfig, ServeStats, Server};
+pub use batcher::{BatchConfig, ServeObs, ServeStats, Server};
 pub use gemm::{
     dwconv_i8_fused, dwconv_i8_fused_with, gemm_i8_fused, gemm_i8_fused_with, EpilogueCoeffs,
     GroupedQuantizedActs, QuantizedActs,
 };
-pub use model::{load_cached, registry_len, ActSource, QuantizedModel, DEFAULT_ACT_BITS};
+pub use model::{load_cached, registry_len, ActSource, ModelObs, QuantizedModel, DEFAULT_ACT_BITS};
 pub use packed::{GroupedPanel, Int8Panel};
 
 pub use crate::util::simd::Kernel;

@@ -14,12 +14,15 @@
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::deploy::{self, PackedLayer};
 use crate::manifest::{Manifest, ModelConfig, ModelInfo};
 use crate::model::{LayerExec, Model, Tap};
+use crate::obs::metrics::with_labels;
+use crate::obs::{span, Counter, Histogram};
 use crate::quant::actq::ActQuant;
 use crate::serve::gemm::{
     dwconv_i8_fused, gemm_i8_fused, EpilogueCoeffs, GroupedQuantizedActs, QuantizedActs,
@@ -115,6 +118,76 @@ impl GroupedInt8Layer {
     }
 }
 
+/// Per-layer execution telemetry for one model: exec counters (in
+/// *images* — a batch of b counts b per layer, so "layers × requests"
+/// holds regardless of coalescing) and per-call exec-time histograms,
+/// plus model-wide fallback and image counters. Built only when
+/// `COMQ_OBS` is on at load time; `None` costs nothing per request.
+pub struct ModelObs {
+    layers: BTreeMap<String, LayerObs>,
+    fallback: Arc<Counter>,
+    images: Arc<Counter>,
+}
+
+struct LayerObs {
+    execs: Arc<Counter>,
+    nanos: Arc<Histogram>,
+}
+
+impl ModelObs {
+    fn new(
+        model: &str,
+        dense: &BTreeMap<String, Int8Layer>,
+        grouped: &BTreeMap<String, GroupedInt8Layer>,
+    ) -> ModelObs {
+        let reg = crate::obs::registry();
+        let mut layers = BTreeMap::new();
+        let mut add = |name: &str, kind: &str| {
+            let labels = [("model", model), ("layer", name), ("kind", kind)];
+            layers.insert(
+                name.to_string(),
+                LayerObs {
+                    execs: reg.counter(&with_labels("comq_serve_layer_exec_total", &labels)),
+                    nanos: reg
+                        .histogram(&with_labels("comq_serve_layer_exec_seconds", &labels)),
+                },
+            );
+        };
+        for name in dense.keys() {
+            add(name, "dense");
+        }
+        for name in grouped.keys() {
+            add(name, "grouped");
+        }
+        ModelObs {
+            layers,
+            fallback: reg.counter(&with_labels("comq_serve_fallback_total", &[("model", model)])),
+            images: reg.counter(&with_labels("comq_serve_images_total", &[("model", model)])),
+        }
+    }
+
+    /// Images executed through `layer` (0 for unknown layers).
+    pub fn layer_execs(&self, layer: &str) -> u64 {
+        self.layers.get(layer).map(|l| l.execs.get()).unwrap_or(0)
+    }
+
+    /// Integer-served layer names with telemetry attached.
+    pub fn layer_names(&self) -> impl Iterator<Item = &str> {
+        self.layers.keys().map(String::as_str)
+    }
+
+    /// Forward calls that hit a quantizable layer with no integer panel
+    /// (the f32 fallback path).
+    pub fn fallbacks(&self) -> u64 {
+        self.fallback.get()
+    }
+
+    /// Total images through [`QuantizedModel::forward`].
+    pub fn images(&self) -> u64 {
+        self.images.get()
+    }
+}
+
 /// A packed checkpoint ready to serve.
 pub struct QuantizedModel {
     /// Architecture + every parameter that still runs in f32 (biases,
@@ -129,6 +202,8 @@ pub struct QuantizedModel {
     /// number would misreport them. (0, 0) when nothing is packed.
     weight_bits: (u32, u32),
     quantizable: BTreeSet<String>,
+    /// Present only when telemetry was on at build time.
+    obs: Option<ModelObs>,
 }
 
 impl QuantizedModel {
@@ -201,6 +276,15 @@ impl QuantizedModel {
             }
         }
         let quantizable = info.quant_layers.iter().map(|l| l.name.clone()).collect();
+        let obs = crate::obs::enabled().then(|| {
+            let m = ModelObs::new(&info.name, &int8, &grouped);
+            let resident: usize = int8.values().map(|l| l.panel.resident_bytes()).sum::<usize>()
+                + grouped.values().map(|l| l.panel.resident_bytes()).sum::<usize>();
+            crate::obs::registry()
+                .gauge(&with_labels("comq_serve_resident_bytes", &[("model", &info.name)]))
+                .set(resident as i64);
+            m
+        });
         Ok(QuantizedModel {
             base: Model { info, params },
             int8,
@@ -208,6 +292,7 @@ impl QuantizedModel {
             act,
             weight_bits: weight_bits.unwrap_or((0, 0)),
             quantizable,
+            obs,
         })
     }
 
@@ -226,8 +311,20 @@ impl QuantizedModel {
 
     /// Integer forward: x [b, img, img, 3] -> logits [b, classes].
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        if let Some(o) = &self.obs {
+            let b = x.shape()[0] as u64;
+            // carry the batch size down to the per-layer exec hooks —
+            // at that depth the row count is patches, not requests
+            span::set_items(b);
+            o.images.add(b);
+        }
         let mut tap = Tap::Exec(self);
         self.base.forward(x, &mut tap)
+    }
+
+    /// Per-layer telemetry, when `COMQ_OBS` was on at build time.
+    pub fn obs(&self) -> Option<&ModelObs> {
+        self.obs.as_ref()
     }
 
     pub fn info(&self) -> &ModelInfo {
@@ -305,15 +402,49 @@ impl QuantizedModel {
     }
 }
 
+impl QuantizedModel {
+    /// Count a quantizable layer falling back to the f32 path (kept-FP
+    /// skip layers); non-quantizable layers never had a panel to miss.
+    fn note_fallback(&self, name: &str) {
+        if let Some(o) = &self.obs {
+            if self.quantizable.contains(name) {
+                o.fallback.inc();
+            }
+        }
+    }
+
+    /// Run one integer layer, timing it when telemetry is attached.
+    /// Exec counters are weighted by the in-flight batch size
+    /// ([`span::items`]) so they count images, not forward calls.
+    fn timed<F: FnOnce() -> Tensor>(&self, name: &str, f: F) -> Tensor {
+        match self.obs.as_ref().and_then(|o| o.layers.get(name)) {
+            Some(lo) => {
+                let t = Instant::now();
+                let y = f();
+                lo.nanos.record(t.elapsed().as_nanos() as u64);
+                lo.execs.add(span::items());
+                y
+            }
+            None => f(),
+        }
+    }
+}
+
 impl LayerExec for QuantizedModel {
     fn exec_linear(&self, name: &str, x: &Tensor) -> Option<Tensor> {
-        let layer = self.int8.get(name)?;
-        Some(layer.forward(x, self.act_for(name, x)))
+        let Some(layer) = self.int8.get(name) else {
+            self.note_fallback(name);
+            return None;
+        };
+        Some(self.timed(name, || layer.forward(x, self.act_for(name, x))))
     }
 
     fn exec_grouped(&self, name: &str, x3: &Tensor) -> Option<Tensor> {
-        let layer = self.grouped.get(name)?;
-        Some(layer.forward(x3, self.act_for(name, x3)))
+        let Some(layer) = self.grouped.get(name) else {
+            self.note_fallback(name);
+            return None;
+        };
+        Some(self.timed(name, || layer.forward(x3, self.act_for(name, x3))))
     }
 
     fn tap_input(&self, name: &str, x: Tensor) -> Tensor {

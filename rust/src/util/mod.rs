@@ -56,12 +56,9 @@ pub fn comq_threads() -> Option<usize> {
     match parse_threads(raw.as_deref()) {
         Ok(v) => v,
         Err(bad) => {
-            static WARN: std::sync::Once = std::sync::Once::new();
-            WARN.call_once(|| {
-                eprintln!(
-                    "COMQ_THREADS={bad}: not a positive thread count, using auto-detected parallelism"
-                );
-            });
+            crate::warn_once!(
+                "COMQ_THREADS={bad}: not a positive thread count, using auto-detected parallelism"
+            );
             None
         }
     }

@@ -43,6 +43,9 @@
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs::{self, Counter, Gauge, Histogram};
 
 /// Hard cap on persistent workers, independent of `COMQ_THREADS`.
 const MAX_WORKERS: usize = 64;
@@ -78,6 +81,29 @@ struct Job {
     lo: usize,
     hi: usize,
     latch: Arc<Latch>,
+    /// Enqueue timestamp, taken only when telemetry is on — queue wait
+    /// is the gap until a participant (worker or helping submitter)
+    /// picks the job up.
+    enqueued: Option<Instant>,
+}
+
+/// Pool-wide telemetry handles, resolved once (the registry lock is too
+/// slow for per-job lookups).
+struct PoolObs {
+    wait: Arc<Histogram>,
+    busy: Arc<Histogram>,
+    jobs: Arc<Counter>,
+    workers: Arc<Gauge>,
+}
+
+fn pool_obs() -> &'static PoolObs {
+    static OBS: OnceLock<PoolObs> = OnceLock::new();
+    OBS.get_or_init(|| PoolObs {
+        wait: obs::registry().histogram("comq_pool_task_wait_seconds"),
+        busy: obs::registry().histogram("comq_pool_job_seconds"),
+        jobs: obs::registry().counter("comq_pool_jobs_total"),
+        workers: obs::registry().gauge("comq_pool_workers"),
+    })
 }
 
 struct PoolState {
@@ -108,9 +134,19 @@ pub fn pool_workers() -> usize {
 /// Run one job and report its outcome to the job's latch. Panics are
 /// caught here so workers survive and the submitter can re-throw.
 fn run_job(job: Job) {
+    let started = job.enqueued.map(|t| {
+        let now = Instant::now();
+        pool_obs().wait.record(now.saturating_duration_since(t).as_nanos() as u64);
+        now
+    });
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         (job.func)(job.chunk, job.lo..job.hi)
     }));
+    if let Some(t) = started {
+        let o = pool_obs();
+        o.busy.record(t.elapsed().as_nanos() as u64);
+        o.jobs.inc();
+    }
     let mut st = job.latch.state.lock().unwrap();
     if let Err(payload) = result {
         if st.panic.is_none() {
@@ -155,6 +191,9 @@ fn ensure_workers(pool: &'static Pool, wanted: usize) {
         }
         st.workers += 1;
     }
+    if obs::enabled() {
+        pool_obs().workers.set(st.workers as i64);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -189,12 +228,13 @@ where
         state: Mutex::new(LatchState { remaining: jobs, panic: None }),
         cv: Condvar::new(),
     });
+    let enqueued = obs::enabled().then(Instant::now);
     {
         let mut st = pool.state.lock().unwrap();
         for t in 0..jobs {
             let lo = t * chunk;
             let hi = ((t + 1) * chunk).min(n);
-            st.queue.push_back(Job { func, chunk: t, lo, hi, latch: latch.clone() });
+            st.queue.push_back(Job { func, chunk: t, lo, hi, latch: latch.clone(), enqueued });
         }
     }
     pool.cv.notify_all();

@@ -161,13 +161,10 @@ impl Kernel {
             Some(s) => match Kernel::parse(&s) {
                 Some(k) if k.supported() => k,
                 _ => {
-                    static WARN: std::sync::Once = std::sync::Once::new();
-                    WARN.call_once(|| {
-                        eprintln!(
-                            "COMQ_KERNEL={s}: unknown or unsupported on this host, using {}",
-                            Kernel::detect().name()
-                        );
-                    });
+                    crate::warn_once!(
+                        "COMQ_KERNEL={s}: unknown or unsupported on this host, using {}",
+                        Kernel::detect().name()
+                    );
                     Kernel::detect()
                 }
             },

@@ -17,13 +17,22 @@ pub fn std_dev(v: &[f64]) -> f64 {
     (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (v.len() - 1) as f64).sqrt()
 }
 
-/// Quantile by linear interpolation on the sorted copy; q in [0, 1].
+/// Quantile by linear interpolation on a sorted copy; q in [0, 1].
+/// Callers reading many quantiles from the same sample should sort once
+/// and use [`quantile_sorted`] instead.
 pub fn quantile(v: &[f64], q: f64) -> f64 {
-    if v.is_empty() {
-        return 0.0;
-    }
     let mut s = v.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&s, q)
+}
+
+/// [`quantile`] over an already ascending-sorted slice — no copy, no
+/// re-sort, so percentile tables over large bench samples stay O(n log n)
+/// once instead of per-row.
+pub fn quantile_sorted(s: &[f64], q: f64) -> f64 {
+    if s.is_empty() {
+        return 0.0;
+    }
     let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -34,11 +43,20 @@ pub fn quantile(v: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Smallest element (0.0 for empty input, like the other helpers here —
+/// an empty sample must not leak ±inf into reports/JSON).
 pub fn min(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
     v.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Largest element (0.0 for empty input).
 pub fn max(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
     v.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
@@ -63,5 +81,20 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(std_dev(&[]), 0.0);
         assert_eq!(quantile(&[], 0.5), 0.0);
+        assert_eq!(quantile_sorted(&[], 0.5), 0.0);
+        // min/max must be finite on empty input — ±inf is not JSON
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+    }
+
+    #[test]
+    fn quantile_sorted_matches_quantile() {
+        let v = [5.0, 1.0, 4.0, 2.0, 3.0];
+        let mut s = v.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 1.0] {
+            assert_eq!(quantile_sorted(&s, q), quantile(&v, q));
+        }
+        assert_eq!(quantile_sorted(&s, 0.5), 3.0);
     }
 }

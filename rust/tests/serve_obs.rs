@@ -1,0 +1,181 @@
+//! Serving-path telemetry integration: drive real requests through the
+//! checkpoint registry and the micro-batcher, then assert the global
+//! snapshot is *coherent* — per-stage histogram sums telescope to the
+//! end-to-end latency, the queue-depth gauge returns to zero after the
+//! drain, per-layer exec counters equal layers × images, and the
+//! deadline-miss counter ticks exactly once per late batch.
+//!
+//! Run with `COMQ_OBS=off` (ci.sh does) the same test instead asserts
+//! the off-is-free contract: forwards still work, logits are identical
+//! bit for bit, and the metrics registry stays empty.
+
+use std::time::Duration;
+
+use comq::deploy::save_packed_with_act;
+use comq::obs::{self, ObsLevel, Stage};
+use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::serve::{load_cached, BatchConfig, Server};
+use comq::tensor::Tensor;
+use comq::util::Rng;
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("comq_serve_obs_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().to_string()
+}
+
+#[test]
+fn telemetry_snapshot_is_coherent_end_to_end() {
+    // the same fixture the int8 parity tests drive: synthetic CNN,
+    // W4A8, every quantizable layer served integer
+    let (manifest, model) = tiny_plain_cnn(7);
+    let mut rng = Rng::new(0x0B5);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * 8 * 8 * 3));
+    let (packed, act, qmodel) = quantize_all_layers(&manifest, &model, 4, 8, &calib).unwrap();
+
+    if obs::level() == ObsLevel::Off {
+        // off-is-free: the whole serving run must leave the registry
+        // empty (every handle is detached) while serving works as usual
+        let path = tmp("off.cqm");
+        save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act)).unwrap();
+        let qm = load_cached(&manifest, "tiny_plain", &path).unwrap();
+        assert!(qm.obs().is_none(), "model must not build telemetry when off");
+        let x = Tensor::new(&[2, 8, 8, 3], rng.normal_vec(2 * 8 * 8 * 3));
+        let _ = qm.forward(&x);
+        let server = Server::start(qm.clone(), BatchConfig::default());
+        assert!(server.obs().is_none(), "server must not build telemetry when off");
+        server.infer(rng.normal_vec(8 * 8 * 3)).unwrap();
+        drop(server);
+        let snap = obs::registry().snapshot();
+        assert!(
+            snap.is_empty(),
+            "COMQ_OBS=off must record nothing, got:\n{}",
+            snap.to_prometheus()
+        );
+        return;
+    }
+    // pin the gate: from here the test owns the level, not the env
+    obs::set_level(ObsLevel::On);
+
+    let path = tmp("coherence.cqm");
+    save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act)).unwrap();
+    let qm = load_cached(&manifest, "tiny_plain", &path).unwrap();
+    let images0 = qm.obs().expect("model telemetry").images();
+
+    let server = Server::start(
+        qm.clone(),
+        BatchConfig { max_batch: 8, max_delay: Duration::from_millis(2), executors: 1 },
+    );
+    // clone the handles out so the assertions can outlive the server
+    // (dropping it joins the executors, making every count final)
+    let sobs = server.obs().expect("server telemetry");
+    let spans = sobs.spans.clone();
+    let queue_depth = sobs.queue_depth.clone();
+    let batch_size = sobs.batch_size.clone();
+    let requests = sobs.requests.clone();
+    let deadline_miss = sobs.deadline_miss.clone();
+    let panics = sobs.panics.clone();
+
+    // phase 1: waves of concurrent singles, coalesced by the queue (how
+    // the queue happened to split them doesn't matter to the invariants)
+    const WAVES: usize = 3;
+    const WAVE: usize = 8;
+    for _ in 0..WAVES {
+        let imgs: Vec<Vec<f32>> = (0..WAVE).map(|_| rng.normal_vec(8 * 8 * 3)).collect();
+        let rxs: Vec<_> = imgs.into_iter().map(|im| server.submit(im)).collect();
+        for rx in rxs {
+            rx.recv().expect("reply");
+        }
+    }
+    // misses are counted at drain time, and every wave batch has drained
+    // (its replies arrived), so this baseline is final
+    let misses_after_waves = deadline_miss.get();
+
+    // phase 2: sequential singles — each sits alone in the queue until
+    // the deadline fires, so each must count exactly one deadline miss
+    const K: usize = 3;
+    for _ in 0..K {
+        server.infer(rng.normal_vec(8 * 8 * 3)).expect("single reply");
+    }
+    assert_eq!(
+        deadline_miss.get() - misses_after_waves,
+        K as u64,
+        "a lone request must close its window on the deadline, exactly once"
+    );
+
+    let n = (WAVES * WAVE + K) as u64;
+    drop(server); // joins the executors — all telemetry below is final
+
+    assert_eq!(queue_depth.get(), 0, "queue depth must return to zero after the drain");
+    assert_eq!(requests.get(), n);
+    assert_eq!(panics.get(), 0);
+
+    // every answered request is stamped in all five stages
+    for stage in comq::obs::span::STAGES {
+        assert_eq!(
+            spans.hist(stage).count(),
+            n,
+            "stage {} must carry one sample per answered request",
+            stage.name()
+        );
+    }
+
+    // the stages telescope: queue_wait + coalesce + exec + epilogue was
+    // computed from the same Instants as total, per request, so the
+    // exact histogram sums agree (small slack for ns truncation)
+    let sum = |st: Stage| spans.hist(st).sum();
+    let parts =
+        sum(Stage::QueueWait) + sum(Stage::Coalesce) + sum(Stage::Exec) + sum(Stage::Epilogue);
+    let total = sum(Stage::Total);
+    assert!(
+        parts.abs_diff(total) <= 8 * n,
+        "per-stage sums must add up to the end-to-end latency: {parts} vs {total}"
+    );
+
+    // batch accounting: sizes sum to the requests answered, and there
+    // was at least one batch per wave plus one per sequential single
+    assert_eq!(batch_size.sum(), n, "batch sizes must sum to answered requests");
+    assert!(batch_size.count() >= (WAVES + K) as u64);
+
+    // per-layer exec counters: each image crosses every integer layer once
+    let mobs = qm.obs().expect("model telemetry");
+    assert_eq!(mobs.images() - images0, n, "forward must count every request image");
+    assert_eq!(mobs.fallbacks(), 0, "this fixture serves every layer integer");
+    let layer_names: Vec<String> = mobs.layer_names().map(str::to_string).collect();
+    assert_eq!(layer_names.len(), model.info.quant_layers.len());
+    for name in &layer_names {
+        assert_eq!(mobs.layer_execs(name), n, "layer {name} must execute once per image");
+    }
+
+    // both export formats carry the serving metrics
+    let snap = obs::registry().snapshot();
+    let prom = snap.to_prometheus();
+    for needle in [
+        "comq_serve_stage_seconds",
+        "comq_serve_batch_size",
+        "comq_serve_requests_total",
+        "comq_serve_layer_exec_total",
+        "comq_serve_gemm_calls_total",
+        "comq_serve_resident_bytes",
+    ] {
+        assert!(prom.contains(needle), "prometheus export missing {needle}:\n{prom}");
+    }
+    assert!(snap.to_json().to_string_pretty(1).contains("comq_serve_requests_total"));
+
+    // off-is-free bit-identity: flip the gate off, run the same forward,
+    // get the same logits to the bit while not a single counter moves
+    let x = Tensor::new(&[2, 8, 8, 3], rng.normal_vec(2 * 8 * 8 * 3));
+    let y_on = qm.forward(&x);
+    let execs_on: u64 = layer_names.iter().map(|l| mobs.layer_execs(l)).sum();
+    let images_on = mobs.images();
+    obs::set_level(ObsLevel::Off);
+    let y_off = qm.forward(&x);
+    obs::set_level(ObsLevel::On);
+    assert_eq!(y_on.shape(), y_off.shape());
+    for (a, b) in y_on.data().iter().zip(y_off.data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "the COMQ_OBS gate must not change logits");
+    }
+    let execs_off: u64 = layer_names.iter().map(|l| mobs.layer_execs(l)).sum();
+    assert_eq!(execs_off, execs_on, "counters must not move while off");
+    assert_eq!(mobs.images(), images_on, "counters must not move while off");
+}
