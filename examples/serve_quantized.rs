@@ -141,7 +141,7 @@ fn main() -> Result<()> {
             let t = Timer::start();
             let rxs: Vec<_> = wave.into_iter().map(|im| server.submit(im)).collect();
             for rx in rxs {
-                rx.recv()?;
+                rx.recv()??;
             }
             lat.push(t.secs());
         }

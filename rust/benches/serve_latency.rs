@@ -274,7 +274,7 @@ fn main() -> anyhow::Result<()> {
             let t = Timer::start();
             let rxs: Vec<_> = imgs.into_iter().map(|im| server.submit(im)).collect();
             for rx in rxs {
-                rx.recv().expect("server reply");
+                rx.recv().expect("server reply").expect("served");
             }
             if wave >= 5 {
                 lat.push(t.secs()); // whole-wave latency, 16 requests

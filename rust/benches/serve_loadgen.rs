@@ -1,0 +1,202 @@
+//! Open-loop load generator for the TCP serving tier (the §Robustness
+//! instrument): Poisson arrivals — exponential inter-arrival gaps,
+//! `-ln(u)/λ` — offered at a ramp of rates against a loopback
+//! [`NetServer`], with a per-request deadline budget so overload turns
+//! into *typed sheds* instead of an unbounded queue.
+//!
+//! Open-loop matters: a closed-loop client (send, wait, send) slows
+//! its own arrival rate exactly when the server struggles, hiding the
+//! latency cliff. Here arrivals keep coming on schedule whatever the
+//! server does — the protocol is pipelined, replies are matched to
+//! send timestamps by request id — so the p99/p999 columns show the
+//! real queueing behavior and the shed column shows admission control
+//! doing its job.
+//!
+//! Reported per offered rate: achieved QPS, p50/p99/p999 latency, shed
+//! rate; plus the max sustainable QPS (highest offered rate with under
+//! 1% shed). Lands in `BENCH_serve_loadgen.json` at the repo root —
+//! quoted by EXPERIMENTS.md §Robustness. Synthetic model; no AOT
+//! artifacts needed.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use comq::bench::{Report, Table};
+use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::serve::net::{ClientError, NetClient, NetConfig, NetServer, Response};
+use comq::serve::{ActSource, BatchConfig, QuantizedModel};
+use comq::tensor::Tensor;
+use comq::util::{stats, Rng};
+
+const MODEL: &str = "tiny_plain";
+const ELEMS: usize = 8 * 8 * 3;
+/// Per-request latency budget: past this the server sheds instead of
+/// queueing work it will miss anyway.
+const BUDGET: Duration = Duration::from_millis(25);
+
+struct LevelResult {
+    offered_qps: f64,
+    requests: usize,
+    achieved_qps: f64,
+    /// Latencies of served requests, seconds, sorted.
+    lat: Vec<f64>,
+    shed: usize,
+    /// Requests unanswered when the wall-clock guard tripped (should
+    /// stay 0 — every admitted request is answered, sheds included).
+    lost: usize,
+}
+
+/// One offered-rate level: a single pipelined connection, sends paced
+/// by the Poisson schedule, replies drained between arrivals with a
+/// read timeout sized to the gap (open-loop: a slow server never slows
+/// the schedule).
+fn run_level(
+    addr: std::net::SocketAddr,
+    qps: f64,
+    n_req: usize,
+    img: &[f32],
+    rng: &mut Rng,
+) -> anyhow::Result<LevelResult> {
+    let mut c = NetClient::connect(addr).map_err(|e| anyhow::anyhow!("connect: {e}"))?;
+    let mut pending: HashMap<u32, Instant> = HashMap::new();
+    let mut lat: Vec<f64> = Vec::with_capacity(n_req);
+    let mut shed = 0usize;
+    let start = Instant::now();
+    // everything should resolve within the offered span plus the drain
+    let wall = start + Duration::from_secs_f64(n_req as f64 / qps) + Duration::from_secs(5);
+    let mut next = Instant::now();
+    let mut sent = 0usize;
+    let mut last_send = start;
+    while (sent < n_req || !pending.is_empty()) && Instant::now() < wall {
+        let now = Instant::now();
+        if sent < n_req && now >= next {
+            let id = c
+                .send_infer(MODEL, img, Some(BUDGET))
+                .map_err(|e| anyhow::anyhow!("send: {e}"))?;
+            last_send = Instant::now();
+            pending.insert(id, last_send);
+            sent += 1;
+            // exponential inter-arrival gap: -ln(u)/λ, u ∈ (0, 1]
+            let u = rng.range_f32(f32::EPSILON, 1.0) as f64;
+            next += Duration::from_secs_f64(-u.ln() / qps);
+            continue;
+        }
+        // drain replies until the next arrival is due (bounded reads so
+        // the schedule never slips behind a slow reply)
+        let until_next =
+            if sent < n_req { next.saturating_duration_since(now) } else { Duration::from_millis(2) };
+        let t = until_next.clamp(Duration::from_micros(100), Duration::from_millis(2));
+        c.set_read_timeout(Some(t)).map_err(|e| anyhow::anyhow!("timeout: {e}"))?;
+        match c.recv() {
+            Ok(Response::Logits { request_id, .. }) => {
+                if let Some(t0) = pending.remove(&request_id) {
+                    lat.push(t0.elapsed().as_secs_f64());
+                }
+            }
+            Ok(Response::Error { request_id, .. }) => {
+                // typed shed (DeadlineExceeded / Overloaded): counted,
+                // never waited on again
+                pending.remove(&request_id);
+                shed += 1;
+            }
+            Ok(_) => {}
+            Err(ClientError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) => {}
+            Err(e) => return Err(anyhow::anyhow!("recv: {e}")),
+        }
+    }
+    let lost = pending.len();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let span = last_send.saturating_duration_since(start).as_secs_f64().max(1e-9);
+    Ok(LevelResult {
+        offered_qps: qps,
+        requests: sent,
+        achieved_qps: sent as f64 / span,
+        lat,
+        shed,
+        lost,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = Report::new("serve_loadgen");
+
+    // the W4A8 synthetic-CNN fixture every serving test and bench drives
+    let (manifest, model) = tiny_plain_cnn(7);
+    let mut rng = Rng::new(0x10AD);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * ELEMS));
+    let (packed, act, qmodel) = quantize_all_layers(&manifest, &model, 4, 8, &calib)?;
+    let qm = Arc::new(QuantizedModel::from_parts(
+        model.info.clone(),
+        qmodel.params.clone(),
+        &packed,
+        ActSource::Static { bits: act.bits, by_layer: act.by_layer },
+    )?);
+
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        vec![(MODEL.to_string(), qm)],
+        NetConfig {
+            batch: BatchConfig { max_batch: 32, max_delay: Duration::from_millis(1), executors: 2 },
+            ..NetConfig::default()
+        },
+    )?;
+    let addr = server.local_addr();
+    let img = rng.normal_vec(ELEMS);
+
+    let mut table = Table::new(
+        "serve — open-loop Poisson loadgen over TCP loopback (tiny_plain W4A8, 25 ms budget)",
+        &["offered qps", "requests", "achieved qps", "p50 ms", "p99 ms", "p999 ms", "shed %", "lost"],
+    );
+    let mut max_sustainable = 0.0f64;
+    for &qps in &[250.0f64, 500.0, 1000.0, 2000.0, 4000.0, 8000.0] {
+        // enough requests for a stable p99 at every level, capped so the
+        // whole ramp stays a bench and not a soak test
+        let n_req = ((qps * 2.0) as usize).clamp(500, 4000);
+        let r = run_level(addr, qps, n_req, &img, &mut rng)?;
+        let shed_rate = (r.shed + r.lost) as f64 / r.requests.max(1) as f64;
+        if shed_rate < 0.01 && r.lost == 0 {
+            max_sustainable = max_sustainable.max(r.achieved_qps);
+        }
+        let q = |p: f64| {
+            if r.lat.is_empty() { f64::NAN } else { stats::quantile_sorted(&r.lat, p) * 1e3 }
+        };
+        table.row(vec![
+            format!("{:.0}", r.offered_qps),
+            r.requests.to_string(),
+            format!("{:.0}", r.achieved_qps),
+            format!("{:.3}", q(0.5)),
+            format!("{:.3}", q(0.99)),
+            format!("{:.3}", q(0.999)),
+            format!("{:.2}", shed_rate * 100.0),
+            r.lost.to_string(),
+        ]);
+    }
+    table.print();
+    table.save_json("serve_loadgen");
+    report.add(&table);
+
+    // the headline number, as its own table so it survives in the
+    // committed BENCH_serve_loadgen.json (Report serializes tables only)
+    let mut summary = Table::new("serve — max sustainable QPS", &["criterion", "qps"]);
+    summary.row(vec!["shed < 1% and no lost replies".to_string(), format!("{max_sustainable:.0}")]);
+    summary.print();
+    report.add(&summary);
+
+    // the tier's own accounting, reconciled against what the client saw
+    let st = server.stats();
+    let bst = server.model_server(MODEL).expect("model").stats();
+    println!(
+        "net: {} frames, {} error frames, {} rx bytes, {} tx bytes; batcher: {} served in {} batches, {} deadline-shed, {} overload-shed",
+        st.frames, st.error_frames, st.rx_bytes, st.tx_bytes,
+        bst.served, bst.batches, bst.shed_deadline, bst.shed_overload
+    );
+    server.shutdown();
+
+    report.write_repo_root()?;
+    Ok(())
+}

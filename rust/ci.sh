@@ -23,6 +23,11 @@ cargo test -q
 COMQ_KERNEL=scalar cargo test -q
 COMQ_THREADS=1 cargo test -q
 COMQ_OBS=off cargo test -q
+# fault-injection pass: the env-driven COMQ_FAULT path, run against the
+# one test that expects it (the rest of tests/serve_net.rs arms faults
+# via fault::set_spec and must never see an env spec — a full-suite run
+# under COMQ_FAULT would fire injected faults inside unrelated tests)
+COMQ_FAULT=panic:conn:1 cargo test -q --test serve_net env_spec_smoke
 # the intrinsics paths must not bit-rot uncompiled: a target-cpu=native
 # build exercises the target_feature functions plus whatever the
 # autovectorizer now assumes, in a separate target dir so the cache of

@@ -8,6 +8,9 @@
 //!               [--engine native|pjrt] [--quant-engine native|pjrt-kernel]
 //!               [--calib-size N] [--act-bits B] [--workers W]
 //!               [--config FILE.toml] [--report OUT.json]
+//! comq serve    --model M --packed FILE.cqm [--addr HOST:PORT]
+//!               [--max-batch N] [--max-delay-ms MS]
+//!               [--max-inflight N] [--max-queue N]
 //! ```
 //!
 //! Argument parsing is hand-rolled (no clap in the offline vendor set).
@@ -69,6 +72,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args),
         "quantize" => cmd_quantize(&args),
         "run-packed" => cmd_run_packed(&args),
+        "serve" => cmd_serve(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -88,6 +92,12 @@ USAGE:
   comq quantize --model NAME [options]
   comq run-packed --model NAME --packed FILE.cqm [--engine native|pjrt|int8]
                   int8 = serve through the integer runtime (i8 GEMM)
+  comq serve --model NAME --packed FILE.cqm [--addr HOST:PORT]
+             TCP serving tier over the int8 micro-batcher (COMQ wire
+             protocol; Ctrl-C drains in flight and exits). Options:
+             --max-batch N / --max-delay-ms MS   micro-batcher window
+             --max-inflight N / --max-queue N    admission + shedding
+             --drain-timeout-ms MS               shutdown drain bound
   comq inspect --model NAME [--calib-size N]   calibration diagnostics
 
 QUANTIZE OPTIONS:
@@ -362,6 +372,92 @@ fn cmd_run_packed(args: &Args) -> Result<()> {
         t.secs()
     );
     Ok(())
+}
+
+/// TCP serving: load a packed checkpoint into the int8 runtime and put
+/// the hardened network front door (wire protocol, deadlines, admission
+/// control, load shedding) in front of its micro-batcher. Runs until
+/// SIGINT/SIGTERM, then drains gracefully.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::time::Duration;
+    let rc = build_config(args)?;
+    let packed_path =
+        args.flags.get("packed").ok_or_else(|| anyhow!("serve needs --packed FILE.cqm"))?;
+    let manifest = Manifest::load(&rc.artifacts)?;
+    let qm = comq::serve::load_cached(&manifest, &rc.model, packed_path)?;
+    let f = &args.flags;
+    let addr = f.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7943");
+    let mut cfg = comq::serve::NetConfig::default();
+    if let Some(v) = f.get("max-batch") {
+        cfg.batch.max_batch = v.parse()?;
+    }
+    if let Some(v) = f.get("max-delay-ms") {
+        cfg.batch.max_delay = Duration::from_millis(v.parse()?);
+    }
+    if let Some(v) = f.get("max-inflight") {
+        cfg.admission.max_inflight = v.parse()?;
+    }
+    if let Some(v) = f.get("max-queue") {
+        cfg.admission.max_queue = v.parse()?;
+    }
+    if let Some(v) = f.get("drain-timeout-ms") {
+        cfg.drain_timeout = Duration::from_millis(v.parse()?);
+    }
+    let server = comq::serve::NetServer::bind(addr, vec![(rc.model.clone(), qm)], cfg)?;
+    println!(
+        "serving {} on {} — COMQ wire protocol v{} (Ctrl-C drains and exits)",
+        rc.model,
+        server.local_addr(),
+        comq::serve::net::WIRE_VERSION,
+    );
+    wait_for_interrupt();
+    println!("draining in-flight requests…");
+    server.shutdown();
+    let net = server.stats();
+    let batch = server.model_server(&rc.model).map(|s| s.stats());
+    println!(
+        "drained: {} connections, {} frames, {} error frames, {} rx / {} tx bytes",
+        net.connections, net.frames, net.error_frames, net.rx_bytes, net.tx_bytes
+    );
+    if let Some(b) = batch {
+        println!(
+            "batcher: {} served in {} batches, shed {} (deadline) + {} (overload), {} respawns",
+            b.served, b.batches, b.shed_deadline, b.shed_overload, b.respawns
+        );
+    }
+    Ok(())
+}
+
+/// Park the main thread until SIGINT/SIGTERM. The handler only flips an
+/// atomic (async-signal-safe); the drain itself runs on this thread.
+#[cfg(unix)]
+fn wait_for_interrupt() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static STOP: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+    while !STOP.load(Ordering::SeqCst) {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+}
+
+#[cfg(not(unix))]
+fn wait_for_interrupt() {
+    // no portable signal story without deps: serve until the process is
+    // killed (the OS reclaims the sockets)
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 /// Calibration diagnostics: per-layer Gram conditioning, dead features,

@@ -8,9 +8,34 @@
 //!
 //! Executor threads both coalesce and run the forward (no separate
 //! dispatcher), so with `executors > 1` the next batch assembles while
-//! the previous one is still in the GEMM. Replies travel over
-//! per-request channels, so batch composition never affects who gets
-//! which logits.
+//! the previous one is still in the GEMM. Replies travel through a
+//! per-request [`Responder`] (an mpsc channel for in-process callers, a
+//! completion callback for the network tier), so batch composition
+//! never affects who gets which logits.
+//!
+//! ## Robustness contract (PR 7)
+//!
+//! * **Per-request deadlines.** [`Server::submit_deadline`] carries an
+//!   absolute deadline into the queue: an already-expired request is
+//!   shed at submit, a request that expires while queued is shed at
+//!   drain time — both answer `Err(DeadlineExceeded)` instead of
+//!   burning a GEMM slot — and a pending deadline tightens the coalesce
+//!   window so a tight-budget request is not held for company it cannot
+//!   afford. Sheds count in `comq_serve_shed_total{model,reason}`.
+//! * **Every request is answered.** A [`Responder`] that is dropped
+//!   unanswered (a panic unwound through the executor) replies
+//!   `Err(ExecutorPanicked)` from its `Drop` — no caller ever hangs on
+//!   a reply that will not come.
+//! * **Executors respawn.** A panic that escapes the per-batch guard
+//!   (e.g. `COMQ_FAULT=panic:exec`) unwinds to a supervisor that counts
+//!   it and re-enters the loop, so a poisoned request cannot
+//!   permanently shrink exec capacity.
+//! * **Shutdown is immediate.** The shutdown flag is flipped under the
+//!   queue lock before the condvar broadcast, so an executor can never
+//!   check the flag, miss the notify, and sleep — idle executors wake
+//!   at once (the old code polled on a 20 ms timeout to paper over
+//!   exactly this lost-wakeup race). Queued requests are still drained
+//!   and answered before the executors exit.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -21,6 +46,7 @@ use anyhow::{anyhow, Result};
 
 use crate::obs::metrics::with_labels;
 use crate::obs::{Counter, Gauge, Histogram, SpanSet, Stage};
+use crate::serve::net::fault;
 use crate::serve::QuantizedModel;
 use crate::tensor::Tensor;
 
@@ -44,10 +70,88 @@ impl Default for BatchConfig {
     }
 }
 
+/// Why a request was answered with an error instead of logits. The
+/// wire protocol maps each variant onto a typed error frame
+/// (`serve::net::frame::ErrorReason`), so clients can tell "back off"
+/// from "give up".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's deadline passed before the forward ran (shed at
+    /// submit or at drain — either way no GEMM slot was spent on it).
+    DeadlineExceeded,
+    /// Admission control or queue-depth load shedding rejected the
+    /// request up front; the client should back off and retry.
+    Overloaded,
+    /// The executor panicked with this request in flight.
+    ExecutorPanicked,
+    /// The server is draining and no longer accepts new requests.
+    Shutdown,
+}
+
+impl ServeError {
+    /// Stable label, used as the `reason` metric label and in error
+    /// frames.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeError::DeadlineExceeded => "deadline",
+            ServeError::Overloaded => "overload",
+            ServeError::ExecutorPanicked => "panic",
+            ServeError::Shutdown => "shutdown",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            ServeError::Overloaded => write!(f, "server overloaded, request shed"),
+            ServeError::ExecutorPanicked => write!(f, "executor panicked on this batch"),
+            ServeError::Shutdown => write!(f, "server shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What a request resolves to: logits or a typed shed/failure reason.
+pub type ServeResult = std::result::Result<Vec<f32>, ServeError>;
+
+/// One request's reply path. Guarantees delivery: if the responder is
+/// dropped unanswered (a panic unwound through the executor with the
+/// batch in scope), `Drop` answers `Err(ExecutorPanicked)` so no caller
+/// waits forever. The network tier leans on this — its per-connection
+/// in-flight accounting is balanced inside the callback, so a lost
+/// reply would wedge the drain.
+pub struct Responder(Option<Box<dyn FnOnce(ServeResult) + Send + 'static>>);
+
+impl Responder {
+    pub fn new<F: FnOnce(ServeResult) + Send + 'static>(f: F) -> Responder {
+        Responder(Some(Box::new(f)))
+    }
+
+    /// Answer the request (consumes the responder).
+    pub fn reply(mut self, r: ServeResult) {
+        if let Some(f) = self.0.take() {
+            f(r);
+        }
+    }
+}
+
+impl Drop for Responder {
+    fn drop(&mut self) {
+        if let Some(f) = self.0.take() {
+            f(Err(ServeError::ExecutorPanicked));
+        }
+    }
+}
+
 struct Pending {
     data: Vec<f32>,
     arrived: Instant,
-    tx: mpsc::Sender<Vec<f32>>,
+    /// Absolute per-request deadline; `None` = wait as long as it takes.
+    deadline: Option<Instant>,
+    respond: Responder,
 }
 
 /// The micro-batcher's telemetry handles for one model. Stage
@@ -60,21 +164,36 @@ pub struct ServeObs {
     /// Requests currently waiting in the queue (decremented when an
     /// executor drains them into a batch).
     pub queue_depth: Arc<Gauge>,
-    /// Coalesced batch sizes (unitless histogram).
+    /// Coalesced batch sizes (unitless histogram; expired requests shed
+    /// at drain are not part of the executed batch).
     pub batch_size: Arc<Histogram>,
-    /// Requests submitted.
+    /// Requests submitted (including ones later shed).
     pub requests: Arc<Counter>,
-    /// Batches whose coalesce window closed on the deadline rather than
+    /// Batches whose coalesce window closed on a deadline rather than
     /// on a full batch.
     pub deadline_miss: Arc<Counter>,
-    /// Batch forwards that panicked (their requests were dropped).
+    /// Executor panics — batch forwards that panicked plus panics that
+    /// escaped to the respawn supervisor.
     pub panics: Arc<Counter>,
+    /// Requests shed before execution, deadline reason
+    /// (`comq_serve_shed_total{model,reason="deadline"}`).
+    pub shed_deadline: Arc<Counter>,
+    /// Requests shed by admission control / queue-depth load shedding
+    /// (`comq_serve_shed_total{model,reason="overload"}`, incremented by
+    /// the network tier via [`Server::note_overload_shed`]).
+    pub shed_overload: Arc<Counter>,
 }
 
 impl ServeObs {
     fn new(model: &str) -> ServeObs {
         let reg = crate::obs::registry();
         let l = |name: &str| with_labels(name, &[("model", model)]);
+        let shed = |reason: &str| {
+            reg.counter(&with_labels(
+                "comq_serve_shed_total",
+                &[("model", model), ("reason", reason)],
+            ))
+        };
         ServeObs {
             spans: SpanSet::for_model(model),
             queue_depth: reg.gauge(&l("comq_serve_queue_depth")),
@@ -82,6 +201,8 @@ impl ServeObs {
             requests: reg.counter(&l("comq_serve_requests_total")),
             deadline_miss: reg.counter(&l("comq_serve_deadline_miss_total")),
             panics: reg.counter(&l("comq_serve_executor_panics_total")),
+            shed_deadline: shed("deadline"),
+            shed_overload: shed("overload"),
         }
     }
 }
@@ -96,8 +217,24 @@ struct Shared {
     shutdown: AtomicBool,
     batches: AtomicUsize,
     served: AtomicUsize,
+    /// Always-on queue depth (the obs gauge mirrors it when telemetry
+    /// is on) — load shedding must work under `COMQ_OBS=off` too.
+    depth: AtomicUsize,
+    shed_deadline: AtomicUsize,
+    shed_overload: AtomicUsize,
+    /// Executor respawns after a panic escaped the per-batch guard.
+    respawns: AtomicUsize,
     /// Present only when telemetry was on when the server started.
     obs: Option<ServeObs>,
+}
+
+impl Shared {
+    fn note_deadline_shed(&self, n: usize) {
+        self.shed_deadline.fetch_add(n, Ordering::Relaxed);
+        if let Some(o) = &self.obs {
+            o.shed_deadline.add(n as u64);
+        }
+    }
 }
 
 /// Cumulative queue counters.
@@ -105,14 +242,21 @@ struct Shared {
 pub struct ServeStats {
     /// Forward passes executed.
     pub batches: usize,
-    /// Requests answered.
+    /// Requests answered with logits.
     pub served: usize,
+    /// Requests shed because their deadline passed before exec.
+    pub shed_deadline: usize,
+    /// Requests shed by admission control / queue-depth shedding
+    /// (counted here when the network tier reports them).
+    pub shed_overload: usize,
+    /// Executor respawns after an escaped panic.
+    pub respawns: usize,
 }
 
 /// A running micro-batched server over one quantized model.
 pub struct Server {
     shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl Server {
@@ -138,6 +282,10 @@ impl Server {
             shutdown: AtomicBool::new(false),
             batches: AtomicUsize::new(0),
             served: AtomicUsize::new(0),
+            depth: AtomicUsize::new(0),
+            shed_deadline: AtomicUsize::new(0),
+            shed_overload: AtomicUsize::new(0),
+            respawns: AtomicUsize::new(0),
             obs,
         });
         let workers = (0..executors)
@@ -145,45 +293,114 @@ impl Server {
                 let sh = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("comq-serve-{i}"))
-                    .spawn(move || executor_loop(&sh))
+                    .spawn(move || supervise(&sh))
                     .expect("spawning serve executor")
             })
             .collect();
-        Server { shared, workers }
+        Server { shared, workers: Mutex::new(workers) }
     }
 
-    /// Enqueue one image; the receiver yields its logits row. Dropping
-    /// the receiver abandons the request (the batch still runs).
-    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<Vec<f32>> {
+    /// Enqueue one image with no deadline; the receiver yields its
+    /// logits or a typed [`ServeError`]. Dropping the receiver abandons
+    /// the request (the batch still runs).
+    pub fn submit(&self, image: Vec<f32>) -> mpsc::Receiver<ServeResult> {
+        self.submit_deadline(image, None)
+    }
+
+    /// Enqueue one image with an absolute deadline. If the deadline has
+    /// already passed the request is shed immediately; if it passes
+    /// while queued the request is shed at drain time — either way the
+    /// receiver yields `Err(DeadlineExceeded)` and no GEMM slot is
+    /// spent.
+    pub fn submit_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> mpsc::Receiver<ServeResult> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with(
+            image,
+            deadline,
+            Responder::new(move |r| {
+                let _ = tx.send(r);
+            }),
+        );
+        rx
+    }
+
+    /// Enqueue one image, answering through `respond` — the zero-thread
+    /// completion path the network tier uses (the executor invokes the
+    /// callback after the forward; no per-request waiter blocks on a
+    /// channel).
+    pub fn submit_with(&self, image: Vec<f32>, deadline: Option<Instant>, respond: Responder) {
         let elems = self.shared.side * self.shared.side * 3;
         assert_eq!(image.len(), elems, "image must be img*img*3 f32s");
-        let (tx, rx) = mpsc::channel();
         if let Some(o) = &self.shared.obs {
             o.requests.inc();
+        }
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            respond.reply(Err(ServeError::Shutdown));
+            return;
+        }
+        // pre-queue shed: an already-expired request never takes a slot
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                self.shared.note_deadline_shed(1);
+                respond.reply(Err(ServeError::DeadlineExceeded));
+                return;
+            }
+        }
+        self.shared.depth.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &self.shared.obs {
             o.queue_depth.inc();
         }
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Pending { data: image, arrived: Instant::now(), tx });
+            q.push_back(Pending { data: image, arrived: Instant::now(), deadline, respond });
         }
         self.shared.cv.notify_one();
-        rx
     }
 
-    /// Blocking single-request inference. Errors if the server shut
-    /// down first or the batch forward panicked (the executor survives
-    /// a panic; only the affected batch's requests fail).
+    /// Blocking single-request inference. Errors carry the typed shed
+    /// reason when the request was shed rather than executed.
     pub fn infer(&self, image: Vec<f32>) -> Result<Vec<f32>> {
-        self.submit(image)
-            .recv()
-            .map_err(|_| anyhow!("request dropped: server shut down or batch forward panicked"))
+        match self.submit(image).recv() {
+            Ok(Ok(v)) => Ok(v),
+            Ok(Err(e)) => Err(anyhow!(e)),
+            Err(_) => Err(anyhow!("request dropped: server shut down")),
+        }
+    }
+
+    /// Requests currently queued (always live, independent of
+    /// `COMQ_OBS` — the load-shedding check in the network tier reads
+    /// this).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth.load(Ordering::Relaxed)
+    }
+
+    /// Record an admission-control / queue-depth shed against this
+    /// model's counters (the shed itself happens in the network tier,
+    /// before the request reaches the queue).
+    pub fn note_overload_shed(&self) {
+        self.shared.shed_overload.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &self.shared.obs {
+            o.shed_overload.inc();
+        }
     }
 
     pub fn stats(&self) -> ServeStats {
         ServeStats {
             batches: self.shared.batches.load(Ordering::Relaxed),
             served: self.shared.served.load(Ordering::Relaxed),
+            shed_deadline: self.shared.shed_deadline.load(Ordering::Relaxed),
+            shed_overload: self.shared.shed_overload.load(Ordering::Relaxed),
+            respawns: self.shared.respawns.load(Ordering::Relaxed),
         }
+    }
+
+    /// The model this server executes.
+    pub fn model(&self) -> &Arc<QuantizedModel> {
+        &self.shared.model
     }
 
     /// This server's telemetry handles (the same histograms the global
@@ -191,14 +408,52 @@ impl Server {
     pub fn obs(&self) -> Option<&ServeObs> {
         self.shared.obs.as_ref()
     }
+
+    /// Graceful drain: stop accepting, answer everything queued, join
+    /// the executors. Idempotent; `Drop` calls it. The shutdown flag is
+    /// flipped *under the queue lock* before the broadcast so an
+    /// executor that just found the queue empty cannot miss the wakeup
+    /// and sleep through the drain (the executors block on a plain
+    /// `Condvar::wait` — a lost notify here would hang forever, which
+    /// is exactly what the shutdown-latency test would catch).
+    pub fn shutdown(&self) {
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.cv.notify_all();
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.cv.notify_all();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        self.shutdown();
+    }
+}
+
+/// Run the executor loop, respawning it (in place, same OS thread) when
+/// a panic escapes the per-batch guard — a single poisoned request or
+/// an injected `COMQ_FAULT=panic:exec` must not permanently shrink exec
+/// capacity. In-flight requests of the poisoned iteration are answered
+/// `Err(ExecutorPanicked)` by their [`Responder`] drops during the
+/// unwind.
+fn supervise(sh: &Shared) {
+    loop {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| executor_loop(sh))) {
+            Ok(()) => return, // clean shutdown
+            Err(_) => {
+                sh.respawns.fetch_add(1, Ordering::Relaxed);
+                if let Some(o) = &sh.obs {
+                    o.panics.inc();
+                }
+                crate::log_warn!("serve executor: panic escaped the batch guard; respawning");
+                // loop re-enters executor_loop: a shutdown in progress
+                // still drains and returns cleanly from there
+            }
         }
     }
 }
@@ -207,8 +462,11 @@ fn executor_loop(sh: &Shared) {
     let elems = sh.side * sh.side * 3;
     loop {
         // coalesce: wait for work, then until full / deadline / shutdown.
-        // `missed` marks a window closed by the deadline rather than by
-        // a full batch (shutdown drains don't count as misses).
+        // The window is the oldest request's batching deadline tightened
+        // by any queued per-request deadline (a tight-budget request
+        // must not be held for company it cannot afford). `missed` marks
+        // a window closed by a deadline rather than by a full batch
+        // (shutdown drains don't count as misses).
         let (batch, missed): (Vec<Pending>, bool) = {
             let mut q = sh.queue.lock().unwrap();
             loop {
@@ -216,30 +474,59 @@ fn executor_loop(sh: &Shared) {
                     if sh.shutdown.load(Ordering::Acquire) {
                         return;
                     }
-                    // bounded wait so shutdown can't be missed
-                    q = sh.cv.wait_timeout(q, Duration::from_millis(20)).unwrap().0;
+                    // no timeout needed: push and shutdown both happen
+                    // under this mutex before their notify, so the
+                    // wakeup cannot be lost
+                    q = sh.cv.wait(q).unwrap();
                     continue;
                 }
-                let deadline = q.front().unwrap().arrived + sh.max_delay;
+                let window = coalesce_window(&q, sh.max_delay, sh.max_batch);
                 let now = Instant::now();
                 let full = q.len() >= sh.max_batch;
-                if full || now >= deadline || sh.shutdown.load(Ordering::Acquire) {
+                if full || now >= window || sh.shutdown.load(Ordering::Acquire) {
                     let take = q.len().min(sh.max_batch);
-                    break (q.drain(..take).collect(), !full && now >= deadline);
+                    break (q.drain(..take).collect(), !full && now >= window);
                 }
-                q = sh.cv.wait_timeout(q, deadline - now).unwrap().0;
+                q = sh.cv.wait_timeout(q, window - now).unwrap().0;
             }
         };
+        let drained = batch.len();
+        sh.depth.fetch_sub(drained, Ordering::Relaxed);
+        if let Some(o) = &sh.obs {
+            o.queue_depth.add(-(drained as i64));
+            if missed {
+                o.deadline_miss.inc();
+            }
+        }
+        // injected fault: a panic here escapes the per-batch guard below
+        // and exercises the supervisor respawn (the batch's responders
+        // answer ExecutorPanicked from their drops during the unwind)
+        fault::maybe_panic(fault::Site::Exec);
+        // pre-exec shed: anything whose deadline passed while queued is
+        // answered DeadlineExceeded instead of burning a GEMM slot
+        let now = Instant::now();
+        let (batch, expired): (Vec<Pending>, Vec<Pending>) =
+            batch.into_iter().partition(|p| p.deadline.map_or(true, |d| now < d));
+        if !expired.is_empty() {
+            sh.note_deadline_shed(expired.len());
+            for p in expired {
+                p.respond.reply(Err(ServeError::DeadlineExceeded));
+            }
+        }
         let b = batch.len();
+        if b == 0 {
+            continue; // whole batch expired — nothing to execute
+        }
+        // injected fault: stretch the exec stage (overload / deadline
+        // tests drive the shed paths with this)
+        if let Some(d) = fault::slow_for(fault::Site::Exec) {
+            std::thread::sleep(d);
+        }
         // Stamp the batch's stage boundaries only when telemetry is on.
         // Arrival times are copied out up front because the send loop
         // consumes the batch before the epilogue boundary is known.
         let t_drained = sh.obs.as_ref().map(|o| {
-            o.queue_depth.add(-(b as i64));
             o.batch_size.record(b as u64);
-            if missed {
-                o.deadline_miss.inc();
-            }
             Instant::now()
         });
         let arrivals: Vec<Instant> =
@@ -251,8 +538,8 @@ fn executor_loop(sh: &Shared) {
         let t_built = t_drained.map(|_| Instant::now());
         // a panicking forward must not kill the executor — the queue
         // would fill forever behind a Server that still looks healthy.
-        // Catch it, drop this batch's senders (their receivers observe
-        // RecvError), and keep serving.
+        // Catch it, answer this batch's requests ExecutorPanicked, and
+        // keep serving.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             sh.model.forward(&Tensor::new(&[b, sh.side, sh.side, 3], data))
         }));
@@ -262,7 +549,7 @@ fn executor_loop(sh: &Shared) {
                 let classes = logits.cols();
                 for (i, p) in batch.into_iter().enumerate() {
                     // a dropped receiver is fine — the rest of the batch stands
-                    let _ = p.tx.send(logits.data()[i * classes..(i + 1) * classes].to_vec());
+                    p.respond.reply(Ok(logits.data()[i * classes..(i + 1) * classes].to_vec()));
                 }
                 sh.served.fetch_add(b, Ordering::Relaxed);
                 // Record spans only for answered requests, all at once,
@@ -289,11 +576,28 @@ fn executor_loop(sh: &Shared) {
                     o.panics.inc();
                 }
                 crate::log_warn!(
-                    "serve executor: batch forward panicked; {b} request(s) dropped"
+                    "serve executor: batch forward panicked; {b} request(s) answered with error"
                 );
-                drop(batch);
+                for p in batch {
+                    p.respond.reply(Err(ServeError::ExecutorPanicked));
+                }
             }
         }
         sh.batches.fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// Earliest instant at which the pending batch must drain: the oldest
+/// request's batching window, tightened by any per-request deadline in
+/// the first `max_batch` entries (only those drain into this batch).
+fn coalesce_window(q: &VecDeque<Pending>, max_delay: Duration, max_batch: usize) -> Instant {
+    let mut window = q.front().expect("non-empty queue").arrived + max_delay;
+    for p in q.iter().take(max_batch) {
+        if let Some(d) = p.deadline {
+            if d < window {
+                window = d;
+            }
+        }
+    }
+    window
 }

@@ -26,7 +26,13 @@
 //!   the process-wide load-once registry, the serving analogue of
 //!   `runtime::Engine`'s compile cache;
 //! * `batcher` — a dynamic micro-batching request queue coalescing
-//!   single requests into batches under a latency deadline.
+//!   single requests into batches under a latency deadline, with
+//!   per-request deadlines, typed shed errors and panic-respawning
+//!   executors;
+//! * `net`     — the TCP serving tier in front of the batcher: the
+//!   COMQ wire protocol, deadline propagation, admission control and
+//!   load shedding, graceful drain, and the `COMQ_FAULT` injection
+//!   layer the robustness tests drive.
 //!
 //! The whole path is instrumented through `crate::obs` (per-request
 //! stage spans, queue depth, batch-size distribution, per-layer exec
@@ -40,9 +46,13 @@
 pub mod batcher;
 pub mod gemm;
 pub mod model;
+pub mod net;
 pub mod packed;
 
-pub use batcher::{BatchConfig, ServeObs, ServeStats, Server};
+pub use batcher::{
+    BatchConfig, Responder, ServeError, ServeObs, ServeResult, ServeStats, Server,
+};
+pub use net::{NetClient, NetConfig, NetServer};
 pub use gemm::{
     dwconv_i8_fused, dwconv_i8_fused_with, gemm_i8_fused, gemm_i8_fused_with, EpilogueCoeffs,
     GroupedQuantizedActs, QuantizedActs,

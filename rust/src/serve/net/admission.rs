@@ -1,0 +1,145 @@
+//! Per-model admission control: a concurrency token bucket plus
+//! queue-depth load shedding.
+//!
+//! Two independent gates, both checked *before* a request touches the
+//! micro-batcher:
+//!
+//! * **In-flight tokens** — at most `max_inflight` requests per model
+//!   between admission and reply. The permit is RAII: the network tier
+//!   moves it into the completion callback, so however the request ends
+//!   (logits, shed, executor panic, client gone) the token comes back.
+//! * **Queue depth** — if the batcher's live queue is already at
+//!   `max_queue`, the request is shed even if a token is free: depth is
+//!   the leading indicator that p99 is about to blow (the same signal
+//!   the `comq_serve_queue_depth` gauge exports; the check reads the
+//!   batcher's always-on atomic so shedding works under
+//!   `COMQ_OBS=off`).
+//!
+//! Shed requests answer a typed `Overloaded` frame — the client backs
+//! off; the server does the cheap thing instead of queueing work it
+//! will miss deadlines on. Explicit shed beats implicit collapse.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Admission tuning, per model.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Requests allowed between admission and reply.
+    pub max_inflight: usize,
+    /// Batcher queue depth at or above which new requests are shed.
+    pub max_queue: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_inflight: 128, max_queue: 256 }
+    }
+}
+
+/// The token bucket. Cheap: one atomic per try/release.
+pub struct Admission {
+    available: AtomicUsize,
+    cfg: AdmissionConfig,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Arc<Admission> {
+        assert!(cfg.max_inflight >= 1, "max_inflight must be >= 1");
+        Arc::new(Admission { available: AtomicUsize::new(cfg.max_inflight), cfg })
+    }
+
+    /// Try to take an in-flight token. `None` = shed (Overloaded).
+    pub fn try_acquire(self: &Arc<Admission>) -> Option<Permit> {
+        let mut cur = self.available.load(Ordering::Relaxed);
+        loop {
+            if cur == 0 {
+                return None;
+            }
+            match self.available.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Acquire,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(Permit { bucket: self.clone() }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Whether queue depth `depth` means new work should be shed.
+    pub fn queue_is_full(&self, depth: usize) -> bool {
+        depth >= self.cfg.max_queue
+    }
+
+    /// Tokens currently free (diagnostics / tests).
+    pub fn available(&self) -> usize {
+        self.available.load(Ordering::Relaxed)
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+}
+
+/// RAII in-flight token; dropping it returns the token to the bucket.
+pub struct Permit {
+    bucket: Arc<Admission>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.bucket.available.fetch_add(1, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_are_bounded_and_returned() {
+        let a = Admission::new(AdmissionConfig { max_inflight: 2, max_queue: 4 });
+        let p1 = a.try_acquire().expect("token 1");
+        let p2 = a.try_acquire().expect("token 2");
+        assert!(a.try_acquire().is_none(), "bucket must be empty at max_inflight");
+        assert_eq!(a.available(), 0);
+        drop(p1);
+        assert_eq!(a.available(), 1);
+        let p3 = a.try_acquire().expect("token back after release");
+        drop(p2);
+        drop(p3);
+        assert_eq!(a.available(), 2);
+    }
+
+    #[test]
+    fn queue_threshold_is_inclusive() {
+        let a = Admission::new(AdmissionConfig { max_inflight: 1, max_queue: 3 });
+        assert!(!a.queue_is_full(0));
+        assert!(!a.queue_is_full(2));
+        assert!(a.queue_is_full(3));
+        assert!(a.queue_is_full(4));
+    }
+
+    #[test]
+    fn permits_survive_threads() {
+        let a = Admission::new(AdmissionConfig { max_inflight: 4, max_queue: 8 });
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let a = a.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        if let Some(p) = a.try_acquire() {
+                            std::hint::black_box(&p);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(a.available(), 4, "every permit must come home");
+    }
+}

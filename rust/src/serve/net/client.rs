@@ -1,0 +1,193 @@
+//! A small blocking client for the COMQ wire protocol — enough for the
+//! loopback integration tests, the open-loop load generator and the
+//! CLI to drive a [`super::server::NetServer`] without any external
+//! HTTP/RPC machinery.
+//!
+//! The client is deliberately synchronous (one thread, one socket) but
+//! the protocol is pipelined: [`NetClient::send_infer`] returns the
+//! request id immediately, any number may be outstanding, and
+//! [`NetClient::recv`] yields replies in server completion order for
+//! the caller to match by id. [`NetClient::infer`] wraps the pair for
+//! the common one-at-a-time case.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::serve::net::frame::{self, ErrorReason, FrameError, FrameKind};
+
+/// Why a client call failed.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport failure (connect, read, write, server hung up).
+    Io(std::io::Error),
+    /// The server's bytes do not parse as a frame (e.g. an injected
+    /// `garbage_frame` corruption).
+    Frame(FrameError),
+    /// The server answered a typed error frame.
+    Server { reason: ErrorReason, message: String },
+    /// The server answered a frame kind that makes no sense here.
+    Unexpected(FrameKind),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "transport error: {e}"),
+            ClientError::Frame(e) => write!(f, "bad frame from server: {e}"),
+            ClientError::Server { reason, message } => {
+                write!(f, "server error ({}): {message}", reason.name())
+            }
+            ClientError::Unexpected(k) => write!(f, "unexpected frame kind {k:?} from server"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<FrameError> for ClientError {
+    fn from(e: FrameError) -> Self {
+        ClientError::Frame(e)
+    }
+}
+
+/// One decoded server reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// `InferOk`: the logits for `request_id`.
+    Logits { request_id: u32, logits: Vec<f32> },
+    /// A typed error frame for `request_id` (protocol-level errors
+    /// carry request id 0).
+    Error { request_id: u32, reason: ErrorReason, message: String },
+    /// `MetricsText`: the Prometheus exposition.
+    Metrics { request_id: u32, text: String },
+}
+
+/// Blocking COMQ protocol client over one TCP connection.
+pub struct NetClient {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    next_id: u32,
+}
+
+impl NetClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream, rbuf: Vec::new(), next_id: 1 })
+    }
+
+    /// Bound every subsequent `recv` (tests use this so an asserted
+    /// "no reply" is a bounded wait, never a hang).
+    pub fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<(), ClientError> {
+        self.stream.set_read_timeout(t)?;
+        Ok(())
+    }
+
+    /// Send one inference request; returns its request id without
+    /// waiting for the reply (pipelining). `budget` is the per-request
+    /// latency deadline the server propagates into the batcher.
+    pub fn send_infer(
+        &mut self,
+        model: &str,
+        input: &[f32],
+        budget: Option<Duration>,
+    ) -> Result<u32, ClientError> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        let deadline_us = budget.map_or(0, |b| b.as_micros().min(u64::MAX as u128) as u64);
+        let bytes = frame::encode_infer(id, model, deadline_us, input);
+        self.stream.write_all(&bytes)?;
+        Ok(id)
+    }
+
+    /// Read the next reply frame (blocking, in server completion
+    /// order).
+    pub fn recv(&mut self) -> Result<Response, ClientError> {
+        loop {
+            match frame::decode(&self.rbuf)? {
+                Some((f, used)) => {
+                    self.rbuf.drain(..used);
+                    return match f.kind {
+                        FrameKind::InferOk => Ok(Response::Logits {
+                            request_id: f.request_id,
+                            logits: f.payload_f32()?,
+                        }),
+                        FrameKind::Error => {
+                            let (reason, message) = f.error_reason()?;
+                            Ok(Response::Error { request_id: f.request_id, reason, message })
+                        }
+                        FrameKind::MetricsText => Ok(Response::Metrics {
+                            request_id: f.request_id,
+                            text: String::from_utf8_lossy(&f.payload).into_owned(),
+                        }),
+                        other => Err(ClientError::Unexpected(other)),
+                    };
+                }
+                None => {
+                    let mut buf = [0u8; 16384];
+                    let n = self.stream.read(&mut buf)?;
+                    if n == 0 {
+                        return Err(ClientError::Io(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "server closed the connection",
+                        )));
+                    }
+                    self.rbuf.extend_from_slice(&buf[..n]);
+                }
+            }
+        }
+    }
+
+    /// One-shot inference: send, then wait for this request's reply. A
+    /// typed error frame becomes [`ClientError::Server`].
+    pub fn infer_deadline(
+        &mut self,
+        model: &str,
+        input: &[f32],
+        budget: Option<Duration>,
+    ) -> Result<Vec<f32>, ClientError> {
+        let id = self.send_infer(model, input, budget)?;
+        loop {
+            match self.recv()? {
+                Response::Logits { request_id, logits } if request_id == id => return Ok(logits),
+                Response::Error { request_id, reason, message }
+                    if request_id == id || request_id == 0 =>
+                {
+                    return Err(ClientError::Server { reason, message })
+                }
+                // stale reply to an abandoned earlier request — skip
+                _ => continue,
+            }
+        }
+    }
+
+    /// One-shot inference with no deadline.
+    pub fn infer(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>, ClientError> {
+        self.infer_deadline(model, input, None)
+    }
+
+    /// Fetch the server's Prometheus metrics over the same transport.
+    pub fn metrics(&mut self) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        self.stream.write_all(&frame::encode_metrics_req(id))?;
+        loop {
+            match self.recv()? {
+                Response::Metrics { request_id, text } if request_id == id => return Ok(text),
+                Response::Error { request_id, reason, message }
+                    if request_id == id || request_id == 0 =>
+                {
+                    return Err(ClientError::Server { reason, message })
+                }
+                _ => continue,
+            }
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! `COMQ_FAULT` — deterministic fault injection for the serving tier,
+//! so containment is *tested*, not asserted.
+//!
+//! The spec is a comma-separated list of faults:
+//!
+//! ```text
+//! panic:<site>[:<n>]     panic at a site (exec | forward | conn), n times
+//! slow:<ms>[:<n>]        stretch the exec stage by <ms> milliseconds
+//! drop_conn:<p>[:<n>]    close 1-in-round(1/p) connections after accept
+//! garbage_frame[:<n>]    corrupt the magic of an outgoing reply frame
+//! ```
+//!
+//! `[:<n>]` is a **budget**: the fault fires exactly `n` times then
+//! disarms, which is what lets the integration tests assert that shed
+//! and panic counters match the injected counts *exactly*. Without a
+//! budget the fault fires on every hit.
+//!
+//! Like `COMQ_OBS`, the spec is read from the environment once and
+//! cached; tests and embedders flip it with [`set_spec`] / [`clear`]
+//! (tests in one binary run concurrently, so fault-sensitive tests
+//! serialize on a lock and never touch the process environment). Every
+//! injection site counts its firings ([`fired`]), giving tests the
+//! exact number to reconcile counters against.
+//!
+//! `drop_conn` is deterministic, not random: with probability `p` it
+//! closes every `round(1/p)`-th connection the process accepts, so a
+//! test that opens 10 connections under `drop_conn:0.5` knows exactly
+//! 5 die.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// Where a fault can fire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// In the batcher's executor loop, outside the per-batch panic
+    /// guard — a `panic` here exercises the respawn supervisor; `slow`
+    /// here stretches the exec stage.
+    Exec,
+    /// Inside the model forward (under the per-batch guard) — a `panic`
+    /// here fails one batch but not the executor.
+    Forward,
+    /// In the network connection handler, while processing a frame.
+    Conn,
+}
+
+impl Site {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Site::Exec => "exec",
+            Site::Forward => "forward",
+            Site::Conn => "conn",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Site> {
+        match s {
+            "exec" => Some(Site::Exec),
+            "forward" => Some(Site::Forward),
+            "conn" => Some(Site::Conn),
+            _ => None,
+        }
+    }
+}
+
+/// One armed fault.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    Panic(Site),
+    /// Sleep this long at the exec site.
+    Slow(Duration),
+    /// Close 1-in-`period` accepted connections.
+    DropConn { period: u64 },
+    /// Corrupt the magic of an outgoing reply frame.
+    GarbageFrame,
+}
+
+/// An armed fault: kind + firing budget + fired count. Opaque outside
+/// this module; [`parse`] hands a batch of them to [`set_spec`].
+#[derive(Debug)]
+pub struct Fault {
+    kind: FaultKind,
+    /// Remaining firings; `None` = unlimited.
+    budget: Option<AtomicU64>,
+    fired: AtomicU64,
+}
+
+impl Fault {
+    /// Consume one firing if armed and in budget.
+    fn take(&self) -> bool {
+        match &self.budget {
+            None => {
+                self.fired.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Some(b) => {
+                // CAS loop: never take the budget below zero under races
+                let mut cur = b.load(Ordering::Relaxed);
+                loop {
+                    if cur == 0 {
+                        return false;
+                    }
+                    match b.compare_exchange_weak(
+                        cur,
+                        cur - 1,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            self.fired.fetch_add(1, Ordering::Relaxed);
+                            return true;
+                        }
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[derive(Default)]
+struct State {
+    faults: Vec<Fault>,
+    /// Monotone accepted-connection counter driving `drop_conn`.
+    conns: AtomicU64,
+}
+
+fn state() -> &'static Mutex<State> {
+    static S: OnceLock<Mutex<State>> = OnceLock::new();
+    S.get_or_init(|| {
+        let faults = match std::env::var("COMQ_FAULT").ok().as_deref().map(str::trim) {
+            None | Some("") => Vec::new(),
+            Some(spec) => match parse(spec) {
+                Ok(fs) => {
+                    crate::log_warn!("COMQ_FAULT armed: {spec} (fault injection is for tests)");
+                    fs
+                }
+                Err(e) => {
+                    crate::warn_once!("COMQ_FAULT ignored: {e}");
+                    Vec::new()
+                }
+            },
+        };
+        Mutex::new(State { faults, conns: AtomicU64::new(0) })
+    })
+}
+
+/// Parse a fault spec into its armed faults. Pure — unit-testable and
+/// reused by [`set_spec`] and the env init.
+pub fn parse(spec: &str) -> Result<Vec<Fault>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let mut fields = part.split(':');
+        let kind = fields.next().unwrap_or("");
+        let rest: Vec<&str> = fields.collect();
+        let (kind, budget) = match kind {
+            "panic" => {
+                let site = rest
+                    .first()
+                    .and_then(|s| Site::parse(s))
+                    .ok_or_else(|| format!("panic needs a site (exec|forward|conn): '{part}'"))?;
+                (FaultKind::Panic(site), parse_budget(rest.get(1))?)
+            }
+            "slow" => {
+                let ms: u64 = rest
+                    .first()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("slow needs milliseconds: '{part}'"))?;
+                (FaultKind::Slow(Duration::from_millis(ms)), parse_budget(rest.get(1))?)
+            }
+            "drop_conn" => {
+                let p: f64 = rest
+                    .first()
+                    .and_then(|s| s.parse().ok())
+                    .filter(|p| *p > 0.0 && *p <= 1.0)
+                    .ok_or_else(|| format!("drop_conn needs a probability in (0, 1]: '{part}'"))?;
+                let period = (1.0 / p).round().max(1.0) as u64;
+                (FaultKind::DropConn { period }, parse_budget(rest.get(1))?)
+            }
+            "garbage_frame" => (FaultKind::GarbageFrame, parse_budget(rest.first())?),
+            other => return Err(format!("unknown fault kind '{other}' in '{part}'")),
+        };
+        out.push(Fault { kind, budget: budget.map(AtomicU64::new), fired: AtomicU64::new(0) });
+    }
+    if out.is_empty() {
+        return Err(format!("no faults in spec '{spec}'"));
+    }
+    Ok(out)
+}
+
+fn parse_budget(field: Option<&&str>) -> Result<Option<u64>, String> {
+    match field {
+        None => Ok(None),
+        Some(s) => s.parse().map(Some).map_err(|_| format!("bad fault budget '{s}'")),
+    }
+}
+
+/// Arm a new fault spec, replacing whatever was armed (tests).
+pub fn set_spec(spec: &str) -> Result<(), String> {
+    let faults = parse(spec)?;
+    state().lock().unwrap().faults = faults;
+    Ok(())
+}
+
+/// Disarm all faults (tests call this before and after fault runs).
+pub fn clear() {
+    state().lock().unwrap().faults.clear();
+}
+
+/// Total firings of faults matching `pred` since they were armed.
+fn fired_where<F: Fn(&FaultKind) -> bool>(pred: F) -> u64 {
+    let st = state().lock().unwrap();
+    st.faults
+        .iter()
+        .filter(|f| pred(&f.kind))
+        .map(|f| f.fired.load(Ordering::Relaxed))
+        .sum()
+}
+
+/// Firings of `panic:<site>` faults.
+pub fn fired_panics(site: Site) -> u64 {
+    fired_where(|k| matches!(k, FaultKind::Panic(s) if *s == site))
+}
+
+/// Firings of `slow` faults.
+pub fn fired_slow() -> u64 {
+    fired_where(|k| matches!(k, FaultKind::Slow(_)))
+}
+
+/// Firings of `drop_conn` faults.
+pub fn fired_drops() -> u64 {
+    fired_where(|k| matches!(k, FaultKind::DropConn { .. }))
+}
+
+/// Panic at `site` if a matching fault is armed and in budget.
+/// The panic message names the injection so escaped ones are
+/// recognizable in logs.
+pub fn maybe_panic(site: Site) {
+    let hit = {
+        let st = state().lock().unwrap();
+        st.faults
+            .iter()
+            .any(|f| matches!(f.kind, FaultKind::Panic(s) if s == site) && f.take())
+    };
+    if hit {
+        panic!("COMQ_FAULT injected panic at site '{}'", site.name());
+    }
+}
+
+/// The injected exec-stage delay, if a `slow` fault is armed and in
+/// budget. (`site` is accepted for symmetry; only `Exec` slows today.)
+pub fn slow_for(site: Site) -> Option<Duration> {
+    if site != Site::Exec {
+        return None;
+    }
+    let st = state().lock().unwrap();
+    st.faults.iter().find_map(|f| match f.kind {
+        FaultKind::Slow(d) if f.take() => Some(d),
+        _ => None,
+    })
+}
+
+/// Whether the connection being accepted should be dropped. Counts
+/// *all* accepted connections (the period is deterministic), fires on
+/// every `period`-th one.
+pub fn should_drop_conn() -> bool {
+    let st = state().lock().unwrap();
+    let n = st.conns.fetch_add(1, Ordering::Relaxed) + 1;
+    st.faults.iter().any(|f| {
+        matches!(f.kind, FaultKind::DropConn { period } if n % period == 0) && f.take()
+    })
+}
+
+/// Whether the reply frame about to be written should be corrupted.
+pub fn garbage_reply() -> bool {
+    let st = state().lock().unwrap();
+    st.faults.iter().any(|f| matches!(f.kind, FaultKind::GarbageFrame) && f.take())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_matrix() {
+        let fs = parse("panic:exec:3, slow:50, drop_conn:0.25:2, garbage_frame:1").unwrap();
+        assert_eq!(fs.len(), 4);
+        assert_eq!(fs[0].kind, FaultKind::Panic(Site::Exec));
+        assert_eq!(fs[0].budget.as_ref().unwrap().load(Ordering::Relaxed), 3);
+        assert_eq!(fs[1].kind, FaultKind::Slow(Duration::from_millis(50)));
+        assert!(fs[1].budget.is_none());
+        assert_eq!(fs[2].kind, FaultKind::DropConn { period: 4 });
+        assert_eq!(fs[3].kind, FaultKind::GarbageFrame);
+        assert_eq!(fs[3].budget.as_ref().unwrap().load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn spec_errors_are_typed() {
+        assert!(parse("").is_err());
+        assert!(parse("panic").is_err());
+        assert!(parse("panic:gpu").is_err());
+        assert!(parse("slow:abc").is_err());
+        assert!(parse("drop_conn:0").is_err());
+        assert!(parse("drop_conn:1.5").is_err());
+        assert!(parse("explode:now").is_err());
+        assert!(parse("panic:exec:many").is_err());
+    }
+
+    #[test]
+    fn budget_disarms_exactly() {
+        let f = Fault {
+            kind: FaultKind::GarbageFrame,
+            budget: Some(AtomicU64::new(2)),
+            fired: AtomicU64::new(0),
+        };
+        assert!(f.take());
+        assert!(f.take());
+        assert!(!f.take());
+        assert!(!f.take());
+        assert_eq!(f.fired.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn unlimited_fault_keeps_firing() {
+        let f = Fault { kind: FaultKind::GarbageFrame, budget: None, fired: AtomicU64::new(0) };
+        for _ in 0..5 {
+            assert!(f.take());
+        }
+        assert_eq!(f.fired.load(Ordering::Relaxed), 5);
+    }
+}

@@ -1,0 +1,496 @@
+//! The COMQ wire format: a dependency-free length-prefixed binary
+//! framing, little-endian throughout.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic        0x434F4D51 ("COMQ" big-endian bytes, read LE)
+//! 4       1     version      WIRE_VERSION (currently 1)
+//! 5       1     kind         FrameKind discriminant
+//! 6       4     request_id   client-chosen, echoed in the reply
+//! 10      8     deadline_us  per-request latency budget in µs (0 = none)
+//! 18      2     model_len    bytes of UTF-8 model id that follow
+//! 20      4     payload_len  bytes of payload that follow the model id
+//! 24      m     model id
+//! 24+m    p     payload
+//! ```
+//!
+//! Payloads by kind: `Infer` carries `payload_len/4` f32 inputs (LE);
+//! `InferOk` carries the logits the same way; `Error` carries one
+//! [`ErrorReason`] byte plus a UTF-8 message; `MetricsReq` is empty and
+//! `MetricsText` carries the Prometheus text exposition — the PR 6
+//! telemetry surfaces over the same transport as inference.
+//!
+//! Request ids make the protocol pipelined: a client may have many
+//! requests outstanding on one connection and match replies by id (the
+//! micro-batcher completes them in batch order, not submit order).
+//!
+//! Decoding is incremental: [`decode`] returns `Ok(None)` while the
+//! accumulated bytes are still a prefix of a valid frame, so both event
+//! loops just append reads to a buffer and poll it. Every decode error
+//! is typed ([`FrameError`]) and maps onto the [`ErrorReason`] the
+//! server answers with before closing the connection — a malformed
+//! client costs its own connection, never the process.
+
+use std::time::Duration;
+
+/// First four bytes of every frame, "COMQ" as a LE u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"COMQ");
+
+/// Current protocol version.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Fixed header size in bytes (through `payload_len`).
+pub const HEADER_LEN: usize = 24;
+
+/// Hard cap on a frame's payload: a batch-1 image for any plausible
+/// model fits well under this, and it bounds the per-connection buffer
+/// a hostile client can make the server hold.
+pub const MAX_PAYLOAD: usize = 1 << 24; // 16 MiB
+
+/// Hard cap on the model-id length.
+pub const MAX_MODEL_ID: usize = 256;
+
+/// Frame discriminant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server: run one image through `model`.
+    Infer = 1,
+    /// Server → client: the logits for `request_id`.
+    InferOk = 2,
+    /// Server → client: typed failure for `request_id`.
+    Error = 3,
+    /// Client → server: dump the metrics registry.
+    MetricsReq = 4,
+    /// Server → client: Prometheus text exposition.
+    MetricsText = 5,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Option<FrameKind> {
+        match v {
+            1 => Some(FrameKind::Infer),
+            2 => Some(FrameKind::InferOk),
+            3 => Some(FrameKind::Error),
+            4 => Some(FrameKind::MetricsReq),
+            5 => Some(FrameKind::MetricsText),
+            _ => None,
+        }
+    }
+}
+
+/// Why the server answered an [`FrameKind::Error`] frame. The
+/// connection-fatal reasons (everything through `UnknownModel`) also
+/// close the connection; the shed reasons (`DeadlineExceeded`,
+/// `Overloaded`, `Shutdown`) answer only the one request, and a client
+/// seeing `Overloaded` should back off before retrying.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorReason {
+    BadMagic = 1,
+    UnsupportedVersion = 2,
+    Malformed = 3,
+    Oversized = 4,
+    UnknownModel = 5,
+    /// Payload length is not a whole number of f32s or does not match
+    /// the model's input geometry.
+    BadPayload = 6,
+    DeadlineExceeded = 7,
+    Overloaded = 8,
+    ExecutorPanicked = 9,
+    Shutdown = 10,
+    Internal = 11,
+}
+
+impl ErrorReason {
+    pub fn from_u8(v: u8) -> Option<ErrorReason> {
+        use ErrorReason::*;
+        match v {
+            1 => Some(BadMagic),
+            2 => Some(UnsupportedVersion),
+            3 => Some(Malformed),
+            4 => Some(Oversized),
+            5 => Some(UnknownModel),
+            6 => Some(BadPayload),
+            7 => Some(DeadlineExceeded),
+            8 => Some(Overloaded),
+            9 => Some(ExecutorPanicked),
+            10 => Some(Shutdown),
+            11 => Some(Internal),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        use ErrorReason::*;
+        match self {
+            BadMagic => "bad_magic",
+            UnsupportedVersion => "unsupported_version",
+            Malformed => "malformed",
+            Oversized => "oversized",
+            UnknownModel => "unknown_model",
+            BadPayload => "bad_payload",
+            DeadlineExceeded => "deadline_exceeded",
+            Overloaded => "overloaded",
+            ExecutorPanicked => "executor_panicked",
+            Shutdown => "shutdown",
+            Internal => "internal",
+        }
+    }
+
+    /// Whether the server closes the connection after answering this —
+    /// protocol damage is connection-fatal, per-request sheds are not.
+    pub fn closes_connection(&self) -> bool {
+        use ErrorReason::*;
+        matches!(
+            self,
+            BadMagic | UnsupportedVersion | Malformed | Oversized | UnknownModel | BadPayload
+        )
+    }
+}
+
+impl From<crate::serve::ServeError> for ErrorReason {
+    fn from(e: crate::serve::ServeError) -> ErrorReason {
+        use crate::serve::ServeError as S;
+        match e {
+            S::DeadlineExceeded => ErrorReason::DeadlineExceeded,
+            S::Overloaded => ErrorReason::Overloaded,
+            S::ExecutorPanicked => ErrorReason::ExecutorPanicked,
+            S::Shutdown => ErrorReason::Shutdown,
+        }
+    }
+}
+
+/// A fully decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub request_id: u32,
+    /// Latency budget in µs from the wire (`0` = no deadline).
+    pub deadline_us: u64,
+    pub model: String,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// The deadline budget as a duration, if one was set.
+    pub fn budget(&self) -> Option<Duration> {
+        (self.deadline_us > 0).then(|| Duration::from_micros(self.deadline_us))
+    }
+
+    /// Interpret the payload as LE f32s (inference inputs / logits).
+    pub fn payload_f32(&self) -> Result<Vec<f32>, FrameError> {
+        if self.payload.len() % 4 != 0 {
+            return Err(FrameError::Malformed("payload not a whole number of f32s"));
+        }
+        Ok(self
+            .payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Split an `Error` frame payload into (reason, message).
+    pub fn error_reason(&self) -> Result<(ErrorReason, String), FrameError> {
+        let Some((&code, msg)) = self.payload.split_first() else {
+            return Err(FrameError::Malformed("error frame without reason byte"));
+        };
+        let reason = ErrorReason::from_u8(code)
+            .ok_or(FrameError::Malformed("unknown error reason code"))?;
+        Ok((reason, String::from_utf8_lossy(msg).into_owned()))
+    }
+}
+
+/// Typed decode failure. `Truncated` alone is recoverable (more bytes
+/// may arrive); everything else is connection-fatal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// Not an error while the peer may still send more bytes; becomes
+    /// one when the stream ends mid-frame.
+    Truncated,
+    BadMagic,
+    UnsupportedVersion(u8),
+    UnknownKind(u8),
+    Oversized(usize),
+    Malformed(&'static str),
+}
+
+impl FrameError {
+    /// The wire reason the server answers with for this decode failure.
+    pub fn reason(&self) -> ErrorReason {
+        match self {
+            FrameError::Truncated | FrameError::Malformed(_) => ErrorReason::Malformed,
+            FrameError::BadMagic => ErrorReason::BadMagic,
+            FrameError::UnsupportedVersion(_) | FrameError::UnknownKind(_) => {
+                ErrorReason::UnsupportedVersion
+            }
+            FrameError::Oversized(_) => ErrorReason::Oversized,
+        }
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated => write!(f, "stream ended mid-frame"),
+            FrameError::BadMagic => write!(f, "bad magic (not a COMQ frame)"),
+            FrameError::UnsupportedVersion(v) => {
+                write!(f, "unsupported wire version {v} (this server speaks {WIRE_VERSION})")
+            }
+            FrameError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::Oversized(n) => {
+                write!(f, "declared payload {n} bytes exceeds the {MAX_PAYLOAD} cap")
+            }
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn get_u32(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+fn get_u64(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Encode a frame. Panics if model id or payload exceed the wire caps —
+/// server-side frames are always under them and the client validates
+/// before calling.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    assert!(frame.model.len() <= MAX_MODEL_ID, "model id too long for the wire");
+    assert!(frame.payload.len() <= MAX_PAYLOAD, "payload too large for the wire");
+    let mut out = Vec::with_capacity(HEADER_LEN + frame.model.len() + frame.payload.len());
+    put_u32(&mut out, MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(frame.kind as u8);
+    put_u32(&mut out, frame.request_id);
+    put_u64(&mut out, frame.deadline_us);
+    put_u16(&mut out, frame.model.len() as u16);
+    put_u32(&mut out, frame.payload.len() as u32);
+    out.extend_from_slice(frame.model.as_bytes());
+    out.extend_from_slice(&frame.payload);
+    out
+}
+
+/// Convenience encoders for the frames the server sends.
+pub fn encode_infer(request_id: u32, model: &str, deadline_us: u64, input: &[f32]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(input.len() * 4);
+    for v in input {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    encode(&Frame {
+        kind: FrameKind::Infer,
+        request_id,
+        deadline_us,
+        model: model.to_string(),
+        payload,
+    })
+}
+
+pub fn encode_infer_ok(request_id: u32, logits: &[f32]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(logits.len() * 4);
+    for v in logits {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    encode(&Frame {
+        kind: FrameKind::InferOk,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload,
+    })
+}
+
+pub fn encode_error(request_id: u32, reason: ErrorReason, msg: &str) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(1 + msg.len());
+    payload.push(reason as u8);
+    payload.extend_from_slice(msg.as_bytes());
+    encode(&Frame {
+        kind: FrameKind::Error,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload,
+    })
+}
+
+pub fn encode_metrics_req(request_id: u32) -> Vec<u8> {
+    encode(&Frame {
+        kind: FrameKind::MetricsReq,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload: Vec::new(),
+    })
+}
+
+pub fn encode_metrics_text(request_id: u32, text: &str) -> Vec<u8> {
+    encode(&Frame {
+        kind: FrameKind::MetricsText,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload: text.as_bytes().to_vec(),
+    })
+}
+
+/// Incremental decode: `Ok(Some((frame, consumed)))` when `buf` starts
+/// with a complete frame, `Ok(None)` when it is a (possibly empty)
+/// prefix of one, `Err` when it can never become a valid frame. Size
+/// caps are enforced from the *declared* lengths, before the bytes
+/// arrive, so an oversized frame is rejected without buffering it.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
+    // reject garbage from the earliest byte that proves it
+    if !buf.is_empty() {
+        let upto = buf.len().min(4);
+        if buf[..upto] != MAGIC.to_le_bytes()[..upto] {
+            return Err(FrameError::BadMagic);
+        }
+    }
+    if buf.len() >= 5 && buf[4] != WIRE_VERSION {
+        return Err(FrameError::UnsupportedVersion(buf[4]));
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let kind = FrameKind::from_u8(buf[5]).ok_or(FrameError::UnknownKind(buf[5]))?;
+    let request_id = get_u32(&buf[6..10]);
+    let deadline_us = get_u64(&buf[10..18]);
+    let model_len = u16::from_le_bytes([buf[18], buf[19]]) as usize;
+    let payload_len = get_u32(&buf[20..24]) as usize;
+    if model_len > MAX_MODEL_ID {
+        return Err(FrameError::Malformed("model id exceeds the wire cap"));
+    }
+    if payload_len > MAX_PAYLOAD {
+        return Err(FrameError::Oversized(payload_len));
+    }
+    let total = HEADER_LEN + model_len + payload_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let model = std::str::from_utf8(&buf[HEADER_LEN..HEADER_LEN + model_len])
+        .map_err(|_| FrameError::Malformed("model id is not UTF-8"))?
+        .to_string();
+    let payload = buf[HEADER_LEN + model_len..total].to_vec();
+    Ok(Some((Frame { kind, request_id, deadline_us, model, payload }, total)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_frame_round_trips() {
+        let bytes = encode_infer(42, "tiny_plain", 1500, &[1.0, -2.5, 0.0]);
+        let (f, used) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(f.kind, FrameKind::Infer);
+        assert_eq!(f.request_id, 42);
+        assert_eq!(f.deadline_us, 1500);
+        assert_eq!(f.budget(), Some(Duration::from_micros(1500)));
+        assert_eq!(f.model, "tiny_plain");
+        assert_eq!(f.payload_f32().unwrap(), vec![1.0, -2.5, 0.0]);
+    }
+
+    #[test]
+    fn error_frame_round_trips() {
+        let bytes = encode_error(7, ErrorReason::Overloaded, "queue full");
+        let (f, _) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(f.kind, FrameKind::Error);
+        let (reason, msg) = f.error_reason().unwrap();
+        assert_eq!(reason, ErrorReason::Overloaded);
+        assert_eq!(msg, "queue full");
+        assert!(!reason.closes_connection());
+        assert!(ErrorReason::Oversized.closes_connection());
+    }
+
+    #[test]
+    fn metrics_frames_round_trip() {
+        let (req, _) = decode(&encode_metrics_req(1)).unwrap().unwrap();
+        assert_eq!(req.kind, FrameKind::MetricsReq);
+        let (txt, _) = decode(&encode_metrics_text(1, "comq_up 1\n")).unwrap().unwrap();
+        assert_eq!(txt.kind, FrameKind::MetricsText);
+        assert_eq!(txt.payload, b"comq_up 1\n");
+    }
+
+    #[test]
+    fn incremental_decode_needs_more_then_completes() {
+        let bytes = encode_infer(9, "m", 0, &[3.5; 8]);
+        for cut in 0..bytes.len() {
+            assert_eq!(decode(&bytes[..cut]).unwrap(), None, "prefix of {cut} bytes");
+        }
+        // two frames back to back: first decodes with its exact length
+        let mut two = bytes.clone();
+        two.extend_from_slice(&bytes);
+        let (f, used) = decode(&two).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(f.request_id, 9);
+        let (f2, _) = decode(&two[used..]).unwrap().unwrap();
+        assert_eq!(f2.request_id, 9);
+    }
+
+    #[test]
+    fn garbage_rejected_from_first_divergent_byte() {
+        assert_eq!(decode(b"GET / HTTP/1.1\r\n"), Err(FrameError::BadMagic));
+        // even a single wrong byte is enough
+        assert_eq!(decode(b"X"), Err(FrameError::BadMagic));
+        // a correct prefix of the magic is still "need more"
+        assert_eq!(decode(b"CO").unwrap(), None);
+    }
+
+    #[test]
+    fn version_and_kind_are_checked() {
+        let mut bytes = encode_metrics_req(0);
+        bytes[4] = 9;
+        assert_eq!(decode(&bytes), Err(FrameError::UnsupportedVersion(9)));
+        assert_eq!(FrameError::UnsupportedVersion(9).reason(), ErrorReason::UnsupportedVersion);
+        let mut bytes = encode_metrics_req(0);
+        bytes[5] = 200;
+        assert_eq!(decode(&bytes), Err(FrameError::UnknownKind(200)));
+    }
+
+    #[test]
+    fn oversized_rejected_from_declared_length() {
+        let mut bytes = encode_metrics_req(0);
+        // declare a payload over the cap without sending it
+        bytes[20..24].copy_from_slice(&((MAX_PAYLOAD as u32) + 1).to_le_bytes());
+        match decode(&bytes) {
+            Err(FrameError::Oversized(n)) => assert_eq!(n, MAX_PAYLOAD + 1),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        assert_eq!(FrameError::Oversized(0).reason(), ErrorReason::Oversized);
+    }
+
+    #[test]
+    fn payload_f32_rejects_ragged_lengths() {
+        let mut f = Frame {
+            kind: FrameKind::Infer,
+            request_id: 0,
+            deadline_us: 0,
+            model: "m".into(),
+            payload: vec![0u8; 6],
+        };
+        assert!(f.payload_f32().is_err());
+        f.payload = vec![0u8; 8];
+        assert_eq!(f.payload_f32().unwrap(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn reason_codes_round_trip() {
+        for code in 1..=11u8 {
+            let r = ErrorReason::from_u8(code).unwrap();
+            assert_eq!(r as u8, code, "{}", r.name());
+        }
+        assert_eq!(ErrorReason::from_u8(0), None);
+        assert_eq!(ErrorReason::from_u8(12), None);
+    }
+}

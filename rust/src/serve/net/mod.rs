@@ -1,0 +1,40 @@
+//! `serve::net` — the hardened TCP front door for the int8 serving
+//! runtime (PR 7).
+//!
+//! Layers, bottom up:
+//!
+//! * [`frame`]     — the dependency-free length-prefixed wire format
+//!   (magic, version, request id, per-request deadline budget, model
+//!   id, tensor payload; typed error frames). Incremental decode, hard
+//!   size caps enforced from declared lengths.
+//! * [`fault`]     — the `COMQ_FAULT` injection layer (`panic:<site>`,
+//!   `slow:<ms>`, `drop_conn:<p>`, `garbage_frame`, each with an
+//!   optional exact firing budget) that the robustness tests drive.
+//! * [`admission`] — per-model concurrency token bucket + queue-depth
+//!   load shedding, checked before a request touches the batcher.
+//! * [`epoll`]     — (Linux) thin RAII wrapper over the epoll + pipe
+//!   syscalls; no `libc` crate in the vendor set, so the symbols are
+//!   declared directly.
+//! * [`server`]    — [`NetServer`]: the event loop (epoll, or a
+//!   portable connection-thread fallback) feeding the per-model
+//!   micro-batchers, with deadline propagation, admission control,
+//!   graceful drain and per-frame panic containment.
+//! * [`client`]    — a small blocking client speaking the same frames
+//!   (used by the loopback tests, the load generator and the CLI).
+//!
+//! The serving semantics (what is shed when, which errors close the
+//! connection, the fault matrix) are documented in `EXPERIMENTS.md`
+//! §Robustness.
+
+pub mod admission;
+pub mod client;
+#[cfg(target_os = "linux")]
+pub mod epoll;
+pub mod fault;
+pub mod frame;
+pub mod server;
+
+pub use admission::{Admission, AdmissionConfig, Permit};
+pub use client::{ClientError, NetClient, Response};
+pub use frame::{ErrorReason, Frame, FrameKind, MAX_MODEL_ID, MAX_PAYLOAD, WIRE_VERSION};
+pub use server::{NetConfig, NetServer, NetStats};

@@ -1,0 +1,1017 @@
+//! The network front door: a TCP server speaking the COMQ wire format
+//! ([`super::frame`]) in front of the micro-batcher.
+//!
+//! ## Architecture
+//!
+//! One event-loop thread owns every connection (epoll on Linux via the
+//! [`super::epoll`] wrapper; a portable thread-per-connection loop
+//! elsewhere, also selectable with [`NetConfig::force_fallback`] so the
+//! portable path stays tested on Linux). Inference never runs on the
+//! loop thread: a decoded `Infer` frame is admitted, stamped with its
+//! absolute deadline, and submitted to the per-model [`Server`] with a
+//! completion callback that encodes the reply frame and hands it back
+//! to the transport (completion queue + wake pipe for epoll, a direct
+//! locked write for the fallback). Request ids make the connection
+//! pipelined: replies go out in completion order and the client matches
+//! them by id.
+//!
+//! ## Robustness contract
+//!
+//! * **Deadline propagation** — the frame's `deadline_us` budget
+//!   becomes an absolute deadline at decode time and rides into the
+//!   batcher, which tightens the coalesce window and sheds expired
+//!   requests before the GEMM (`Err(DeadlineExceeded)` → a typed error
+//!   frame).
+//! * **Admission + load shedding** — per-model in-flight tokens and a
+//!   live queue-depth check ([`super::admission`]) run *before* the
+//!   queue; a shed answers an `Overloaded` frame on an otherwise
+//!   healthy connection and counts in
+//!   `comq_serve_shed_total{model,reason="overload"}`.
+//! * **Protocol damage is connection-fatal, sheds are not** — a frame
+//!   that can never parse answers a typed error with request id 0 and
+//!   closes that one connection; other connections and the model
+//!   registry are untouched.
+//! * **Graceful drain** — [`NetServer::shutdown`] stops accepting,
+//!   answers everything already submitted (bounded by
+//!   [`NetConfig::drain_timeout`]), flushes, then joins the loop and
+//!   the batcher executors.
+//! * **Fault containment** — a panic while handling a frame
+//!   (`COMQ_FAULT=panic:conn`) is caught per-frame; the client gets an
+//!   `Internal` error frame and loses only its own connection.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::obs::metrics::with_labels;
+use crate::obs::{Counter, Gauge};
+use crate::serve::net::admission::{Admission, AdmissionConfig};
+use crate::serve::net::fault;
+use crate::serve::net::frame::{self, ErrorReason, Frame, FrameKind};
+use crate::serve::{BatchConfig, QuantizedModel, Responder, Server};
+
+/// Hard cap on one connection's pending write backlog; a client that
+/// stops reading past this point is treated as gone rather than letting
+/// it pin server memory.
+const MAX_WBUF: usize = 1 << 26; // 64 MiB
+
+/// Network tier tuning.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Micro-batcher tuning for every served model.
+    pub batch: BatchConfig,
+    /// Per-model admission control.
+    pub admission: AdmissionConfig,
+    /// How long [`NetServer::shutdown`] waits for in-flight requests to
+    /// be answered and flushed before giving up on the stragglers.
+    pub drain_timeout: Duration,
+    /// Use the portable connection-thread loop even where epoll is
+    /// available (tests exercise both transports on Linux).
+    pub force_fallback: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            batch: BatchConfig::default(),
+            admission: AdmissionConfig::default(),
+            drain_timeout: Duration::from_secs(5),
+            force_fallback: false,
+        }
+    }
+}
+
+/// Cumulative network-tier counters (always on, independent of
+/// `COMQ_OBS` — the integration tests reconcile these against injected
+/// fault counts exactly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted (including fault-dropped ones).
+    pub connections: usize,
+    /// Connections closed right after accept by `COMQ_FAULT=drop_conn`.
+    pub dropped_conns: usize,
+    /// Frames dispatched (any kind).
+    pub frames: usize,
+    /// Error frames sent.
+    pub error_frames: usize,
+    /// Requests currently between admission and reply.
+    pub inflight: usize,
+    /// Bytes read from / written to clients.
+    pub rx_bytes: usize,
+    pub tx_bytes: usize,
+}
+
+#[derive(Default)]
+struct Counters {
+    connections: AtomicUsize,
+    dropped_conns: AtomicUsize,
+    frames: AtomicUsize,
+    error_frames: AtomicUsize,
+    rx_bytes: AtomicUsize,
+    tx_bytes: AtomicUsize,
+}
+
+/// Registry handles for the exported `comq_net_*` metrics (present only
+/// when `COMQ_OBS` was on at bind time; the always-on [`Counters`]
+/// carry the same numbers for tests and `stats()`).
+struct NetObs {
+    connections: Arc<Counter>,
+    open: Arc<Gauge>,
+    frames: Arc<Counter>,
+    rx_bytes: Arc<Counter>,
+    tx_bytes: Arc<Counter>,
+}
+
+impl NetObs {
+    fn new() -> NetObs {
+        let reg = crate::obs::registry();
+        NetObs {
+            connections: reg.counter("comq_net_connections_total"),
+            open: reg.gauge("comq_net_open_connections"),
+            frames: reg.counter("comq_net_frames_total"),
+            rx_bytes: reg.counter("comq_net_rx_bytes_total"),
+            tx_bytes: reg.counter("comq_net_tx_bytes_total"),
+        }
+    }
+
+    /// Per-reason error-frame counter, created on demand (errors are
+    /// rare; the registry lookup is off the hot path).
+    fn error(&self, reason: ErrorReason) {
+        crate::obs::registry()
+            .counter(&with_labels("comq_net_error_frames_total", &[("reason", reason.name())]))
+            .inc();
+    }
+}
+
+struct ModelEntry {
+    server: Server,
+    admission: Arc<Admission>,
+    /// f32 elements one image must carry (`side·side·3`).
+    elems: usize,
+}
+
+/// State shared between the listener loop, connection handlers and
+/// completion callbacks.
+struct Inner {
+    models: BTreeMap<String, ModelEntry>,
+    draining: AtomicBool,
+    /// Requests between admission and reply, across all models.
+    inflight: AtomicUsize,
+    drain_timeout: Duration,
+    counters: Counters,
+    obs: Option<NetObs>,
+}
+
+impl Inner {
+    fn note_accept(&self, kept: bool) {
+        self.counters.connections.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &self.obs {
+            o.connections.inc();
+            if kept {
+                o.open.inc();
+            }
+        }
+    }
+
+    fn note_dropped_conn(&self) {
+        self.counters.dropped_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_conn_closed(&self) {
+        if let Some(o) = &self.obs {
+            o.open.dec();
+        }
+    }
+
+    fn note_rx(&self, n: usize) {
+        self.counters.rx_bytes.fetch_add(n, Ordering::Relaxed);
+        if let Some(o) = &self.obs {
+            o.rx_bytes.add(n as u64);
+        }
+    }
+
+    fn note_tx(&self, n: usize) {
+        self.counters.tx_bytes.fetch_add(n, Ordering::Relaxed);
+        if let Some(o) = &self.obs {
+            o.tx_bytes.add(n as u64);
+        }
+    }
+
+    fn note_frame(&self) {
+        self.counters.frames.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &self.obs {
+            o.frames.inc();
+        }
+    }
+
+    fn note_error(&self, reason: ErrorReason) {
+        self.counters.error_frames.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &self.obs {
+            o.error(reason);
+        }
+    }
+}
+
+/// Build (and count) an error frame.
+fn error_reply(inner: &Inner, request_id: u32, reason: ErrorReason, msg: &str) -> Vec<u8> {
+    inner.note_error(reason);
+    frame::encode_error(request_id, reason, msg)
+}
+
+/// What handling one frame produced.
+enum Handled {
+    /// Send these bytes now; `close` ends the connection after the
+    /// flush (protocol damage is connection-fatal).
+    Reply { bytes: Vec<u8>, close: bool },
+    /// Submitted to the batcher; the completion callback owns the
+    /// reply.
+    Async,
+}
+
+/// Handle one decoded frame. Transport-agnostic: `complete` delivers
+/// the encoded reply of an async (batched) request back to whichever
+/// loop owns the connection. Callers wrap this in `catch_unwind` — an
+/// injected `panic:conn` must cost one connection, not the process.
+fn dispatch(
+    inner: &Arc<Inner>,
+    f: Frame,
+    complete: Box<dyn FnOnce(Vec<u8>) + Send + 'static>,
+) -> Handled {
+    fault::maybe_panic(fault::Site::Conn);
+    inner.note_frame();
+    let rid = f.request_id;
+    match f.kind {
+        FrameKind::MetricsReq => {
+            let text = crate::obs::registry().to_prometheus();
+            Handled::Reply { bytes: frame::encode_metrics_text(rid, &text), close: false }
+        }
+        FrameKind::Infer => {
+            let Some(entry) = inner.models.get(&f.model) else {
+                let msg = format!("unknown model '{}'", f.model);
+                return Handled::Reply {
+                    bytes: error_reply(inner, rid, ErrorReason::UnknownModel, &msg),
+                    close: true,
+                };
+            };
+            let input = match f.payload_f32() {
+                Ok(v) => v,
+                Err(e) => {
+                    return Handled::Reply {
+                        bytes: error_reply(inner, rid, ErrorReason::BadPayload, &e.to_string()),
+                        close: true,
+                    }
+                }
+            };
+            if input.len() != entry.elems {
+                let msg = format!(
+                    "payload carries {} f32s; model '{}' wants {}",
+                    input.len(),
+                    f.model,
+                    entry.elems
+                );
+                return Handled::Reply {
+                    bytes: error_reply(inner, rid, ErrorReason::BadPayload, &msg),
+                    close: true,
+                };
+            }
+            if inner.draining.load(Ordering::Acquire) {
+                return Handled::Reply {
+                    bytes: error_reply(inner, rid, ErrorReason::Shutdown, "server is draining"),
+                    close: false,
+                };
+            }
+            // admission: queue depth first (leading indicator), then the
+            // in-flight token bucket; a shed answers Overloaded on an
+            // otherwise healthy connection
+            if entry.admission.queue_is_full(entry.server.queue_depth()) {
+                entry.server.note_overload_shed();
+                return Handled::Reply {
+                    bytes: error_reply(inner, rid, ErrorReason::Overloaded, "queue full, back off"),
+                    close: false,
+                };
+            }
+            let Some(permit) = entry.admission.try_acquire() else {
+                entry.server.note_overload_shed();
+                return Handled::Reply {
+                    bytes: error_reply(
+                        inner,
+                        rid,
+                        ErrorReason::Overloaded,
+                        "too many requests in flight, back off",
+                    ),
+                    close: false,
+                };
+            };
+            let deadline = f.budget().map(|b| Instant::now() + b);
+            inner.inflight.fetch_add(1, Ordering::AcqRel);
+            let inner2 = inner.clone();
+            entry.server.submit_with(
+                input,
+                deadline,
+                Responder::new(move |res| {
+                    let mut bytes = match &res {
+                        Ok(logits) => frame::encode_infer_ok(rid, logits),
+                        Err(e) => {
+                            let reason: ErrorReason = (*e).into();
+                            inner2.note_error(reason);
+                            frame::encode_error(rid, reason, &e.to_string())
+                        }
+                    };
+                    if fault::garbage_reply() {
+                        bytes[0] ^= 0xAA; // corrupt the magic, as injected
+                    }
+                    // deliver before decrementing: the drain loop exits
+                    // on inflight==0 and must find these bytes queued
+                    complete(bytes);
+                    inner2.inflight.fetch_sub(1, Ordering::AcqRel);
+                    drop(permit);
+                }),
+            );
+            Handled::Async
+        }
+        FrameKind::InferOk | FrameKind::Error | FrameKind::MetricsText => Handled::Reply {
+            bytes: error_reply(
+                inner,
+                rid,
+                ErrorReason::Malformed,
+                "client sent a server-only frame kind",
+            ),
+            close: true,
+        },
+    }
+}
+
+/// Result of feeding buffered bytes through decode + dispatch.
+struct Pumped {
+    /// Immediate replies (errors, metrics) to queue for writing.
+    replies: Vec<Vec<u8>>,
+    /// Frames submitted to the batcher by this pump.
+    started: usize,
+    /// The connection must close once `replies` flush.
+    close: bool,
+}
+
+/// Decode and dispatch every complete frame in `rbuf`. `eof` marks the
+/// read side closed: leftover bytes then mean the stream ended
+/// mid-frame (a typed error), and the connection winds down either way.
+fn pump_frames(
+    inner: &Arc<Inner>,
+    rbuf: &mut Vec<u8>,
+    eof: bool,
+    mut mk_complete: impl FnMut() -> Box<dyn FnOnce(Vec<u8>) + Send + 'static>,
+) -> Pumped {
+    let mut out = Pumped { replies: Vec::new(), started: 0, close: false };
+    let mut consumed = 0usize;
+    loop {
+        match frame::decode(&rbuf[consumed..]) {
+            Ok(Some((f, used))) => {
+                consumed += used;
+                match catch_unwind(AssertUnwindSafe(|| dispatch(inner, f, mk_complete()))) {
+                    Ok(Handled::Reply { bytes, close }) => {
+                        out.replies.push(bytes);
+                        out.close |= close;
+                    }
+                    Ok(Handled::Async) => out.started += 1,
+                    Err(_) => {
+                        crate::log_warn!(
+                            "net: panic while handling a frame; closing that connection"
+                        );
+                        out.replies.push(error_reply(
+                            inner,
+                            0,
+                            ErrorReason::Internal,
+                            "internal error while handling frame",
+                        ));
+                        out.close = true;
+                    }
+                }
+                if out.close {
+                    break;
+                }
+            }
+            Ok(None) => break,
+            Err(e) => {
+                out.replies.push(error_reply(inner, 0, e.reason(), &e.to_string()));
+                out.close = true;
+                break;
+            }
+        }
+    }
+    rbuf.drain(..consumed);
+    if eof && !out.close {
+        if !rbuf.is_empty() {
+            out.replies.push(error_reply(
+                inner,
+                0,
+                ErrorReason::Malformed,
+                "stream ended mid-frame",
+            ));
+        }
+        out.close = true;
+    }
+    if out.close {
+        rbuf.clear();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// epoll transport (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod ep {
+    use super::*;
+    use crate::serve::net::epoll::{
+        Epoll, EpollEvent, Wakeup, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+    };
+    use std::os::unix::io::AsRawFd;
+
+    const TOK_LISTENER: u64 = 0;
+    const TOK_WAKE: u64 = 1;
+
+    /// Encoded replies completed off-loop, keyed by connection id, plus
+    /// the pipe that wakes `epoll_wait` to drain them. Callbacks may
+    /// outlive the loop (a drain that timed out); they just enqueue
+    /// into an Arc nobody reads again.
+    pub(super) struct Completions {
+        q: Mutex<Vec<(u64, Vec<u8>)>>,
+        pub(super) wake: Wakeup,
+    }
+
+    impl Completions {
+        pub(super) fn new(wake: Wakeup) -> Completions {
+            Completions { q: Mutex::new(Vec::new()), wake }
+        }
+
+        fn push(&self, id: u64, bytes: Vec<u8>) {
+            self.q.lock().unwrap().push((id, bytes));
+            self.wake.wake();
+        }
+
+        fn take(&self) -> Vec<(u64, Vec<u8>)> {
+            std::mem::take(&mut self.q.lock().unwrap())
+        }
+
+        fn is_empty(&self) -> bool {
+            self.q.lock().unwrap().is_empty()
+        }
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        rbuf: Vec<u8>,
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// Batched requests outstanding on this connection.
+        inflight: usize,
+        /// No more frames will be dispatched (EOF or protocol damage);
+        /// wind down once replies flush and in-flight requests answer.
+        read_done: bool,
+        /// Socket unusable (reset / write failure / backlog cap):
+        /// drop the connection without further ceremony.
+        peer_gone: bool,
+        /// Event mask currently registered with epoll.
+        interest: u32,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream) -> Conn {
+            Conn {
+                stream,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                wpos: 0,
+                inflight: 0,
+                read_done: false,
+                peer_gone: false,
+                interest: EPOLLIN | EPOLLRDHUP,
+            }
+        }
+
+        fn wbuf_empty(&self) -> bool {
+            self.wpos >= self.wbuf.len()
+        }
+
+        fn queue(&mut self, bytes: Vec<u8>) {
+            if self.peer_gone {
+                return;
+            }
+            if self.wbuf.len() - self.wpos + bytes.len() > MAX_WBUF {
+                self.peer_gone = true; // reader stopped reading; cut it loose
+                return;
+            }
+            self.wbuf.extend_from_slice(&bytes);
+        }
+
+        /// Write as much of the backlog as the socket takes.
+        fn pump_write(&mut self, inner: &Inner) {
+            while !self.wbuf_empty() && !self.peer_gone {
+                match self.stream.write(&self.wbuf[self.wpos..]) {
+                    Ok(0) => self.peer_gone = true,
+                    Ok(n) => {
+                        inner.note_tx(n);
+                        self.wpos += n;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => self.peer_gone = true,
+                }
+            }
+            if self.wbuf_empty() {
+                self.wbuf.clear();
+                self.wpos = 0;
+            }
+        }
+
+        fn desired_interest(&self) -> u32 {
+            let mut want = 0;
+            if !self.read_done {
+                want |= EPOLLIN | EPOLLRDHUP;
+            }
+            if !self.wbuf_empty() {
+                want |= EPOLLOUT;
+            }
+            want
+        }
+    }
+
+    fn accept_ready(
+        inner: &Arc<Inner>,
+        listener: &TcpListener,
+        epoll: &Epoll,
+        conns: &mut HashMap<u64, Conn>,
+        next_id: &mut u64,
+    ) {
+        loop {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    if fault::should_drop_conn() {
+                        inner.note_accept(false);
+                        inner.note_dropped_conn();
+                        continue; // drop(s): injected accept-time failure
+                    }
+                    if inner.draining.load(Ordering::Acquire) {
+                        inner.note_accept(false);
+                        continue;
+                    }
+                    if s.set_nonblocking(true).is_err() {
+                        inner.note_accept(false);
+                        continue;
+                    }
+                    let _ = s.set_nodelay(true);
+                    let id = *next_id;
+                    *next_id += 1;
+                    if epoll.add(s.as_raw_fd(), EPOLLIN | EPOLLRDHUP, id).is_err() {
+                        inner.note_accept(false);
+                        continue;
+                    }
+                    inner.note_accept(true);
+                    conns.insert(id, Conn::new(s));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    fn pump_read(inner: &Arc<Inner>, completions: &Arc<Completions>, id: u64, c: &mut Conn) {
+        let mut eof = false;
+        let mut buf = [0u8; 16384];
+        loop {
+            match c.stream.read(&mut buf) {
+                Ok(0) => {
+                    eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    inner.note_rx(n);
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    c.peer_gone = true;
+                    return;
+                }
+            }
+        }
+        if c.read_done {
+            c.rbuf.clear(); // protocol-dead: discard anything further
+            return;
+        }
+        let cq = completions;
+        let out = pump_frames(inner, &mut c.rbuf, eof, || {
+            let cq = cq.clone();
+            Box::new(move |bytes| cq.push(id, bytes))
+        });
+        c.inflight += out.started;
+        for r in out.replies {
+            c.queue(r);
+        }
+        if out.close || eof {
+            c.read_done = true;
+        }
+        c.pump_write(inner);
+    }
+
+    pub(super) fn run(
+        inner: Arc<Inner>,
+        listener: TcpListener,
+        epoll: Epoll,
+        completions: Arc<Completions>,
+    ) {
+        if listener.set_nonblocking(true).is_err() {
+            crate::log_warn!("net: cannot make the listener non-blocking; serving stops");
+            return;
+        }
+        if epoll.add(listener.as_raw_fd(), EPOLLIN, TOK_LISTENER).is_err()
+            || epoll.add(completions.wake.read_fd(), EPOLLIN, TOK_WAKE).is_err()
+        {
+            crate::log_warn!("net: epoll registration failed; serving stops");
+            return;
+        }
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_id: u64 = 2;
+        let mut evs = [EpollEvent::zero(); 64];
+        let mut accepting = true;
+        let mut drain_until: Option<Instant> = None;
+        loop {
+            let draining = inner.draining.load(Ordering::Acquire);
+            if draining && accepting {
+                // stop accepting: deregister and close the listen socket
+                // so new connects are refused, not silently queued
+                let _ = epoll.del(listener.as_raw_fd());
+                accepting = false;
+                drain_until = Some(Instant::now() + inner.drain_timeout);
+            }
+            let timeout = if draining { 25 } else { -1 };
+            let n = match epoll.wait(&mut evs, timeout) {
+                Ok(n) => n,
+                Err(_) => 0,
+            };
+            for ev in evs.iter().take(n) {
+                // copy fields out: the struct is packed on x86-64
+                let (bits, tok) = (ev.events, ev.data);
+                match tok {
+                    TOK_LISTENER => {
+                        if accepting {
+                            accept_ready(&inner, &listener, &epoll, &mut conns, &mut next_id);
+                        }
+                    }
+                    TOK_WAKE => completions.wake.drain(),
+                    id => {
+                        if let Some(c) = conns.get_mut(&id) {
+                            if bits & (EPOLLIN | EPOLLRDHUP | EPOLLERR | EPOLLHUP) != 0 {
+                                pump_read(&inner, &completions, id, c);
+                            }
+                            if bits & EPOLLOUT != 0 {
+                                c.pump_write(&inner);
+                            }
+                        }
+                    }
+                }
+            }
+            // replies completed off-loop since the last pass
+            for (id, bytes) in completions.take() {
+                if let Some(c) = conns.get_mut(&id) {
+                    c.inflight = c.inflight.saturating_sub(1);
+                    c.queue(bytes);
+                    c.pump_write(&inner);
+                }
+                // a vanished connection already dropped its replies;
+                // global accounting happened in the callback
+            }
+            // re-register interest; reap finished connections
+            let mut dead: Vec<u64> = Vec::new();
+            for (id, c) in conns.iter_mut() {
+                if c.peer_gone || (c.read_done && c.wbuf_empty() && c.inflight == 0) {
+                    dead.push(*id);
+                    continue;
+                }
+                let want = c.desired_interest();
+                if want != c.interest && epoll.modify(c.stream.as_raw_fd(), want, *id).is_ok() {
+                    c.interest = want;
+                }
+            }
+            for id in dead {
+                if let Some(c) = conns.remove(&id) {
+                    let _ = epoll.del(c.stream.as_raw_fd());
+                    inner.note_conn_closed();
+                }
+            }
+            if draining {
+                // order matters: load inflight before checking the
+                // completion queue — a completion enqueues its reply
+                // *before* decrementing, so inflight==0 + empty queue
+                // means every reply is in a wbuf (or its conn is gone)
+                let quiesced = inner.inflight.load(Ordering::Acquire) == 0
+                    && completions.is_empty()
+                    && conns.values().all(|c| c.peer_gone || c.wbuf_empty());
+                let expired = drain_until.map_or(false, |d| Instant::now() >= d);
+                if quiesced || expired {
+                    if expired && !quiesced {
+                        crate::log_warn!(
+                            "net: drain timed out with {} request(s) in flight",
+                            inner.inflight.load(Ordering::Relaxed)
+                        );
+                    }
+                    break;
+                }
+            }
+        }
+        for (_, _c) in conns.drain() {
+            inner.note_conn_closed();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// portable fallback transport (any platform; tested on Linux too)
+// ---------------------------------------------------------------------------
+
+/// Join handles of live connection threads (fallback transport).
+struct FallbackState {
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+fn fallback_accept_loop(inner: Arc<Inner>, listener: TcpListener, st: Arc<FallbackState>) {
+    if listener.set_nonblocking(true).is_err() {
+        crate::log_warn!("net: cannot make the listener non-blocking; serving stops");
+        return;
+    }
+    loop {
+        if inner.draining.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((s, _)) => {
+                if fault::should_drop_conn() {
+                    inner.note_accept(false);
+                    inner.note_dropped_conn();
+                    continue;
+                }
+                inner.note_accept(true);
+                let inner2 = inner.clone();
+                let h = std::thread::Builder::new()
+                    .name("comq-net-conn".into())
+                    .spawn(move || fallback_conn_loop(inner2, s));
+                match h {
+                    Ok(h) => st.handles.lock().unwrap().push(h),
+                    Err(_) => inner.note_conn_closed(),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+fn fallback_conn_loop(inner: Arc<Inner>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    // the read timeout doubles as the drain poll interval
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(25)));
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => {
+            inner.note_conn_closed();
+            return;
+        }
+    };
+    // signed so a completion landing before this thread applies its
+    // `started` increment dips below zero instead of underflowing
+    let inflight: Arc<(Mutex<i64>, Condvar)> = Arc::new((Mutex::new(0), Condvar::new()));
+    let mut reader = stream;
+    let mut rbuf: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 16384];
+    loop {
+        if inner.draining.load(Ordering::Acquire) {
+            break;
+        }
+        let eof = match reader.read(&mut buf) {
+            Ok(0) => true,
+            Ok(n) => {
+                inner.note_rx(n);
+                rbuf.extend_from_slice(&buf[..n]);
+                false
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                continue
+            }
+            Err(_) => break,
+        };
+        let out = pump_frames(&inner, &mut rbuf, eof, || {
+            let writer = writer.clone();
+            let inflight = inflight.clone();
+            let inner = inner.clone();
+            Box::new(move |bytes: Vec<u8>| {
+                {
+                    let mut w = writer.lock().unwrap();
+                    if w.write_all(&bytes).is_ok() {
+                        inner.note_tx(bytes.len());
+                        let _ = w.flush();
+                    }
+                }
+                let (m, cv) = &*inflight;
+                *m.lock().unwrap() -= 1;
+                cv.notify_all();
+            })
+        });
+        if out.started > 0 {
+            *inflight.0.lock().unwrap() += out.started as i64;
+        }
+        if !out.replies.is_empty() {
+            let mut w = writer.lock().unwrap();
+            for r in &out.replies {
+                if w.write_all(r).is_ok() {
+                    inner.note_tx(r.len());
+                }
+            }
+            let _ = w.flush();
+        }
+        if out.close || eof {
+            break;
+        }
+    }
+    // answer everything this connection submitted before closing
+    // (bounded: a wedged executor must not pin the thread forever)
+    let deadline = Instant::now() + inner.drain_timeout;
+    let (m, cv) = &*inflight;
+    let mut n = m.lock().unwrap();
+    while *n > 0 {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        n = cv.wait_timeout(n, deadline - now).unwrap().0;
+    }
+    drop(n);
+    inner.note_conn_closed();
+}
+
+// ---------------------------------------------------------------------------
+// the server handle
+// ---------------------------------------------------------------------------
+
+enum LoopKind {
+    #[cfg(target_os = "linux")]
+    Epoll(Arc<ep::Completions>),
+    Fallback(Arc<FallbackState>),
+}
+
+/// A running TCP serving tier: one listener, one event loop, one
+/// micro-batched [`Server`] + [`Admission`] gate per model.
+pub struct NetServer {
+    inner: Arc<Inner>,
+    local: SocketAddr,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    kind: LoopKind,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `models` by name. On Linux this runs an epoll event loop;
+    /// elsewhere (or with [`NetConfig::force_fallback`], or if epoll
+    /// setup fails) a portable connection-thread loop.
+    pub fn bind(
+        addr: &str,
+        models: Vec<(String, Arc<QuantizedModel>)>,
+        cfg: NetConfig,
+    ) -> Result<NetServer> {
+        if models.is_empty() {
+            return Err(anyhow!("need at least one model to serve"));
+        }
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("binding {addr}: {e}"))?;
+        let local = listener.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
+        let mut map = BTreeMap::new();
+        for (name, model) in models {
+            let side = model.input_side();
+            let entry = ModelEntry {
+                server: Server::start(model, cfg.batch.clone()),
+                admission: Admission::new(cfg.admission.clone()),
+                elems: side * side * 3,
+            };
+            map.insert(name, entry);
+        }
+        let inner = Arc::new(Inner {
+            models: map,
+            draining: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            drain_timeout: cfg.drain_timeout,
+            counters: Counters::default(),
+            obs: crate::obs::enabled().then(NetObs::new),
+        });
+        #[cfg(target_os = "linux")]
+        {
+            use crate::serve::net::epoll::{Epoll, Wakeup};
+            if !cfg.force_fallback {
+                match (Epoll::new(), Wakeup::new()) {
+                    (Ok(epoll), Ok(wake)) => {
+                        let completions = Arc::new(ep::Completions::new(wake));
+                        let (i2, c2) = (inner.clone(), completions.clone());
+                        let thread = std::thread::Builder::new()
+                            .name("comq-net".into())
+                            .spawn(move || ep::run(i2, listener, epoll, c2))
+                            .map_err(|e| anyhow!("spawning the net loop: {e}"))?;
+                        crate::log_info!("net: serving on {local} (epoll)");
+                        return Ok(NetServer {
+                            inner,
+                            local,
+                            thread: Mutex::new(Some(thread)),
+                            kind: LoopKind::Epoll(completions),
+                        });
+                    }
+                    _ => crate::log_warn!(
+                        "net: epoll unavailable; using the portable connection-thread loop"
+                    ),
+                }
+            }
+        }
+        let st = Arc::new(FallbackState { handles: Mutex::new(Vec::new()) });
+        let (i2, s2) = (inner.clone(), st.clone());
+        let thread = std::thread::Builder::new()
+            .name("comq-net".into())
+            .spawn(move || fallback_accept_loop(i2, listener, s2))
+            .map_err(|e| anyhow!("spawning the net loop: {e}"))?;
+        crate::log_info!("net: serving on {local} (connection threads)");
+        Ok(NetServer { inner, local, thread: Mutex::new(Some(thread)), kind: LoopKind::Fallback(st) })
+    }
+
+    /// The bound address (with the real port when `:0` was requested).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// The micro-batcher behind `name` (tests reconcile its stats and
+    /// queue depth against wire-level behavior).
+    pub fn model_server(&self, name: &str) -> Option<&Server> {
+        self.inner.models.get(name).map(|e| &e.server)
+    }
+
+    /// The admission gate behind `name`.
+    pub fn admission(&self, name: &str) -> Option<&Arc<Admission>> {
+        self.inner.models.get(name).map(|e| &e.admission)
+    }
+
+    /// Point-in-time network-tier counters.
+    pub fn stats(&self) -> NetStats {
+        let c = &self.inner.counters;
+        NetStats {
+            connections: c.connections.load(Ordering::Relaxed),
+            dropped_conns: c.dropped_conns.load(Ordering::Relaxed),
+            frames: c.frames.load(Ordering::Relaxed),
+            error_frames: c.error_frames.load(Ordering::Relaxed),
+            inflight: self.inner.inflight.load(Ordering::Relaxed),
+            rx_bytes: c.rx_bytes.load(Ordering::Relaxed),
+            tx_bytes: c.tx_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful drain: stop accepting, answer every request already
+    /// admitted (bounded by the drain timeout), flush replies, join the
+    /// event loop and every batcher executor. Idempotent; `Drop` calls
+    /// it.
+    pub fn shutdown(&self) {
+        self.inner.draining.store(true, Ordering::Release);
+        match &self.kind {
+            #[cfg(target_os = "linux")]
+            LoopKind::Epoll(c) => c.wake.wake(),
+            LoopKind::Fallback(_) => {}
+        }
+        if let Some(t) = self.thread.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        if let LoopKind::Fallback(st) = &self.kind {
+            for h in st.handles.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+        }
+        for e in self.inner.models.values() {
+            e.server.shutdown();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -321,7 +321,7 @@ fn micro_batcher_coalesces_and_matches_direct_forward() {
     );
     let rxs: Vec<_> = singles.iter().map(|im| server.submit(im.clone())).collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let logits = rx.recv().unwrap();
+        let logits = rx.recv().unwrap().expect("request must be served, not shed");
         assert_eq!(logits.len(), manifest.classes);
         for (a, b) in logits.iter().zip(direct.row(i)) {
             assert_eq!(a, b, "request {i} differs from direct forward");

@@ -84,7 +84,7 @@ fn telemetry_snapshot_is_coherent_end_to_end() {
         let imgs: Vec<Vec<f32>> = (0..WAVE).map(|_| rng.normal_vec(8 * 8 * 3)).collect();
         let rxs: Vec<_> = imgs.into_iter().map(|im| server.submit(im)).collect();
         for rx in rxs {
-            rx.recv().expect("reply");
+            rx.recv().expect("reply").expect("served");
         }
     }
     // misses are counted at drain time, and every wave batch has drained
