@@ -259,6 +259,26 @@ fn main() -> anyhow::Result<()> {
         }
         percentile_row(&mut table, "fp32-native", batch, &lat_fp);
         percentile_row(&mut table, "int8-serve", batch, &lat_i8);
+
+        // the same forward with COMQ_TRACE=all and a traced batch pinned
+        // on this thread (as the batcher pins it): every layer exec is
+        // timed and recorded as a span, so this row is the per-layer
+        // trace-recording overhead against the int8-serve baseline
+        {
+            use comq::obs::trace::{self, TraceMode};
+            trace::set_mode(TraceMode::All);
+            let mut lat_tr = Vec::new();
+            for i in 0..100u64 {
+                trace::set_batch(&[i + 1]);
+                let t = Timer::start();
+                std::hint::black_box(qm.forward(&x));
+                lat_tr.push(t.secs());
+            }
+            trace::clear_batch();
+            trace::set_mode(TraceMode::Off);
+            trace::reset();
+            percentile_row(&mut table, "int8-serve traced", batch, &lat_tr);
+        }
     }
 
     // micro-batcher: 16 concurrent singles per wave, coalesced by the queue

@@ -187,6 +187,44 @@ fn main() -> anyhow::Result<()> {
     summary.print();
     report.add(&summary);
 
+    // tracing overhead: the same mid-ramp level offered twice — untraced,
+    // then with every request traced end to end (client-minted wire
+    // contexts, span trees, tail retention) — so EXPERIMENTS.md §Tracing
+    // can quote the cost of COMQ_TRACE=all against the off baseline
+    {
+        use comq::obs::trace::{self, TraceMode};
+        let mut overhead = Table::new(
+            "serve — tracing overhead at 1000 qps (COMQ_TRACE off vs all)",
+            &["trace", "requests", "p50 ms", "p99 ms", "p999 ms", "shed %"],
+        );
+        for (label, mode) in [("off", TraceMode::Off), ("all", TraceMode::All)] {
+            trace::reset();
+            trace::set_mode(mode);
+            let r = run_level(addr, 1000.0, 2000, &img, &mut rng)?;
+            let q = |p: f64| {
+                if r.lat.is_empty() { f64::NAN } else { stats::quantile_sorted(&r.lat, p) * 1e3 }
+            };
+            overhead.row(vec![
+                label.to_string(),
+                r.requests.to_string(),
+                format!("{:.3}", q(0.5)),
+                format!("{:.3}", q(0.99)),
+                format!("{:.3}", q(0.999)),
+                format!("{:.2}", (r.shed + r.lost) as f64 / r.requests.max(1) as f64 * 100.0),
+            ]);
+        }
+        println!(
+            "traced level: {} span events buffered, {} traces retained",
+            trace::events_buffered(),
+            trace::retained().len()
+        );
+        trace::set_mode(TraceMode::Off);
+        trace::reset();
+        overhead.print();
+        overhead.save_json("serve_loadgen_trace_overhead");
+        report.add(&overhead);
+    }
+
     // the tier's own accounting, reconciled against what the client saw
     let st = server.stats();
     let bst = server.model_server(MODEL).expect("model").stats();

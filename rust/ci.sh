@@ -10,7 +10,7 @@ cargo build --release
 # nothing runs them (they bit-rotted silently before PR 3)
 cargo build --release --examples
 cargo bench --no-run
-# four passes: runtime-detected SIMD kernels (the default), dispatch
+# env passes: runtime-detected SIMD kernels (the default), dispatch
 # pinned to the portable reference — the parity tests compare kernels
 # directly, but the whole suite must also pass when every GEMM runs
 # scalar (what a non-AVX host sees) — single-threaded, so the pool's
@@ -23,6 +23,11 @@ cargo test -q
 COMQ_KERNEL=scalar cargo test -q
 COMQ_THREADS=1 cargo test -q
 COMQ_OBS=off cargo test -q
+# fifth env pass: every request traced end to end — the whole suite must
+# stay green (and bit-exact where it asserts parity) while span trees,
+# tail retention and the flight recorder record everything; clients
+# auto-mint wire contexts so the v2 frame path is exercised everywhere
+COMQ_TRACE=all cargo test -q
 # fault-injection pass: the env-driven COMQ_FAULT path, run against the
 # one test that expects it (the rest of tests/serve_net.rs arms faults
 # via fault::set_spec and must never see an env spec — a full-suite run

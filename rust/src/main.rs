@@ -11,6 +11,8 @@
 //! comq serve    --model M --packed FILE.cqm [--addr HOST:PORT]
 //!               [--max-batch N] [--max-delay-ms MS]
 //!               [--max-inflight N] [--max-queue N]
+//! comq metrics  [ADDR] [--raw]
+//! comq trace    [ADDR] [--out FILE]
 //! ```
 //!
 //! Argument parsing is hand-rolled (no clap in the offline vendor set).
@@ -73,6 +75,8 @@ fn run() -> Result<()> {
         "quantize" => cmd_quantize(&args),
         "run-packed" => cmd_run_packed(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
+        "trace" => cmd_trace(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
             print_help();
@@ -98,6 +102,13 @@ USAGE:
              --max-batch N / --max-delay-ms MS   micro-batcher window
              --max-inflight N / --max-queue N    admission + shedding
              --drain-timeout-ms MS               shutdown drain bound
+  comq metrics [ADDR]   fetch a running server's metrics and pretty-print
+             counters, gauges and histogram quantiles (default addr
+             127.0.0.1:7943); --raw dumps the Prometheus text as-is
+  comq trace [ADDR]     fetch a running server's retained request traces
+             (COMQ_TRACE must be on server-side) as Chrome trace-event
+             JSON; --out FILE (default comq_trace.json), load in
+             chrome://tracing or https://ui.perfetto.dev
   comq inspect --model NAME [--calib-size N]   calibration diagnostics
 
 QUANTIZE OPTIONS:
@@ -424,6 +435,151 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "batcher: {} served in {} batches, shed {} (deadline) + {} (overload), {} respawns",
             b.served, b.batches, b.shed_deadline, b.shed_overload, b.respawns
         );
+    }
+    Ok(())
+}
+
+/// Positional `ADDR` for the client-side subcommands (`metrics`,
+/// `trace`), defaulting to the `serve` default.
+fn client_addr(args: &Args) -> &str {
+    args.positional.get(1).map(String::as_str).unwrap_or("127.0.0.1:7943")
+}
+
+/// Fetch a running server's metrics over the wire and pretty-print them
+/// client-side: plain counters/gauges as-is, histogram summaries
+/// regrouped so each series shows its quantiles on one line.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let addr = client_addr(args);
+    let mut client = comq::serve::NetClient::connect(addr)
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let text = client.metrics().map_err(|e| anyhow!("metrics fetch: {e}"))?;
+    if args.flags.contains_key("raw") {
+        print!("{text}");
+        return Ok(());
+    }
+
+    // The exposition is `name{labels} value` lines; histograms appear as
+    // summaries — four `quantile="..."` samples plus `_sum`/`_count`.
+    // Regroup by series key (name+labels minus the quantile label).
+    use std::collections::BTreeMap;
+    let mut scalars: Vec<(String, f64)> = Vec::new();
+    let mut hists: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name, value)) = line.rsplit_once(' ') else { continue };
+        let Ok(value) = value.parse::<f64>() else { continue };
+        if name.contains("quantile=\"") {
+            // split name{l1,l2,quantile="q"} into the series key (name +
+            // remaining labels) and the quantile itself
+            let (base, labels) = match name.find('{') {
+                Some(i) => (&name[..i], name[i + 1..].trim_end_matches('}')),
+                None => (name, ""),
+            };
+            let mut q = String::new();
+            let rest: Vec<&str> = labels
+                .split(',')
+                .filter(|l| match l.strip_prefix("quantile=\"") {
+                    Some(v) => {
+                        q = v.trim_end_matches('"').to_string();
+                        false
+                    }
+                    None => true,
+                })
+                .collect();
+            let key = if rest.is_empty() {
+                base.to_string()
+            } else {
+                format!("{base}{{{}}}", rest.join(","))
+            };
+            let field = format!("p{}", q.strip_prefix("0.").unwrap_or(&q));
+            hists.entry(key).or_default().insert(field, value);
+        } else if let Some(base) = series_base(name, "_sum") {
+            hists.entry(base).or_default().insert("sum".into(), value);
+        } else if let Some(base) = series_base(name, "_count") {
+            hists.entry(base).or_default().insert("count".into(), value);
+        } else {
+            scalars.push((name.to_string(), value));
+        }
+    }
+
+    if !scalars.is_empty() {
+        println!("counters / gauges:");
+        for (name, v) in &scalars {
+            println!("  {name:<56} {v}");
+        }
+    }
+    if !hists.is_empty() {
+        println!("histograms:");
+        for (name, fields) in &hists {
+            let secs = name.split('{').next().unwrap_or(name).ends_with("_seconds");
+            let fmt = |k: &str| {
+                fields.get(k).map_or("-".to_string(), |&v| {
+                    if secs {
+                        format!("{:.3}ms", v * 1e3)
+                    } else {
+                        format!("{v:.1}")
+                    }
+                })
+            };
+            let count = fields.get("count").copied().unwrap_or(0.0);
+            println!(
+                "  {name}\n    p50 {:>10}  p95 {:>10}  p99 {:>10}  p999 {:>10}  count {}",
+                fmt("p5"),
+                fmt("p95"),
+                fmt("p99"),
+                fmt("p999"),
+                count as u64,
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `name` is `base_suffix{labels}` → `Some("base{labels}")`, else None.
+fn series_base(name: &str, suffix: &str) -> Option<String> {
+    let (head, labels) = match name.find('{') {
+        Some(i) => (&name[..i], &name[i..]),
+        None => (name, ""),
+    };
+    head.strip_suffix(suffix).map(|base| format!("{base}{labels}"))
+}
+
+/// Fetch a running server's retained traces (the flight-recorder /
+/// tail-sampled span trees) as Chrome trace-event JSON and write them to
+/// a file for chrome://tracing or Perfetto.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let addr = client_addr(args);
+    let out = args.flags.get("out").map(String::as_str).unwrap_or("comq_trace.json");
+    let mut client = comq::serve::NetClient::connect(addr)
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let json = client.trace_dump().map_err(|e| anyhow!("trace fetch: {e}"))?;
+    let (requests, events) = match comq::util::json::Json::parse(&json) {
+        Ok(doc) => {
+            let evs = doc.get("traceEvents").and_then(|e| e.arr()).map_or(0, |a| a.len());
+            let reqs = doc
+                .get("traceEvents")
+                .and_then(|e| e.arr())
+                .map(|a| {
+                    a.iter()
+                        .filter(|e| e.get("ph").and_then(|p| p.str()).ok() == Some("M"))
+                        .count()
+                })
+                .unwrap_or(0);
+            (reqs, evs)
+        }
+        Err(_) => (0, 0),
+    };
+    std::fs::write(out, &json)?;
+    println!(
+        "wrote {out}: {requests} retained request(s), {events} trace event(s) \
+         ({} bytes) — open in chrome://tracing or https://ui.perfetto.dev",
+        json.len()
+    );
+    if requests == 0 {
+        println!("(no traces retained — is COMQ_TRACE set on the server?)");
     }
     Ok(())
 }

@@ -18,7 +18,16 @@
 //! * [`quant`]   — quantizer-side sweep telemetry (per-pass
 //!   reconstruction-error trajectory, order stats, coordinate-update
 //!   counts), stashed by the sweep engine and surfaced through
-//!   `coordinator::report`.
+//!   `coordinator::report`;
+//! * [`trace`]   — end-to-end request tracing behind the separate
+//!   `COMQ_TRACE=off|sample:<p>|all` gate: per-request span trees cut
+//!   from the same instants as the `span` stage marks, tail-based
+//!   retention (errors + slowest-K + deterministic sample), Chrome
+//!   trace-event export;
+//! * [`recorder`] — the flight recorder: a bounded ring of the last N
+//!   control-plane events (admissions, sheds, panics, respawns, drops,
+//!   drains) dumped to the log on executor respawn or drain, with
+//!   monotonic per-kind totals for counter reconciliation.
 //!
 //! ## The `COMQ_OBS` gate
 //!
@@ -43,12 +52,15 @@ pub mod hist;
 pub mod logger;
 pub mod metrics;
 pub mod quant;
+pub mod recorder;
 pub mod span;
+pub mod trace;
 
 pub use hist::{Histogram, HistogramSnapshot};
 pub use logger::LogLevel;
 pub use metrics::{registry, Counter, Gauge, MetricsRegistry, Snapshot};
 pub use span::{Span, SpanSet, Stage};
+pub use trace::{TraceCtx, TraceMode};
 
 use std::sync::atomic::{AtomicU8, Ordering};
 

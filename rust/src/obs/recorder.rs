@@ -1,0 +1,240 @@
+//! `recorder` — the serving tier's flight recorder (crash black box).
+//!
+//! A bounded ring of the last [`CAP`] notable control-plane events —
+//! admissions, typed sheds, error frames, executor panics and respawns,
+//! dropped connections, drains — each with a monotonic timestamp on the
+//! trace epoch. When something goes wrong (executor panic, drain, a
+//! `COMQ_FAULT`-injected failure) the ring is [`dump`]ed to the log so
+//! the post-mortem shows *what led up to it*, not just final counter
+//! values.
+//!
+//! Two representations on purpose:
+//!
+//! * the **ring** holds the last N events with detail strings — it
+//!   overwrites, so it answers "what just happened";
+//! * the **per-kind counts** are monotonic atomics that never reset on
+//!   overwrite — they answer "how many, ever", and are what tests
+//!   reconcile counter-for-counter against `NetStats` (every error
+//!   frame the net tier counts must appear here as exactly one
+//!   `Shed`/`Panic`/`ErrorFrame` note).
+//!
+//! Gated on the same `COMQ_TRACE` switch as [`super::trace`]: off means
+//! every `note` is a branch-predicted no-op and the ring stays empty.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::trace;
+use crate::{log_info, log_warn};
+
+/// Ring capacity — the "last N events" a dump shows.
+pub const CAP: usize = 256;
+
+/// What kind of control-plane event a note records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecKind {
+    /// Request admitted past admission control into the batcher.
+    Admit = 0,
+    /// Per-request error frame for a protocol/validation failure
+    /// (bad payload, unknown model, bad kind...).
+    ErrorFrame = 1,
+    /// Typed shed: deadline exceeded, overloaded, shutting down.
+    Shed = 2,
+    /// Executor thread respawned after a panic.
+    Respawn = 3,
+    /// Executor panic answered by `ExecutorPanicked` error frames.
+    Panic = 4,
+    /// Connection dropped (fault-injected or accept-time).
+    DropConn = 5,
+    /// Server drain began.
+    Drain = 6,
+}
+
+const KINDS: usize = 7;
+
+impl RecKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecKind::Admit => "admit",
+            RecKind::ErrorFrame => "error_frame",
+            RecKind::Shed => "shed",
+            RecKind::Respawn => "respawn",
+            RecKind::Panic => "panic",
+            RecKind::DropConn => "drop_conn",
+            RecKind::Drain => "drain",
+        }
+    }
+}
+
+/// One recorded event: kind, detail, monotonic ns on the trace epoch.
+#[derive(Debug, Clone)]
+pub struct RecEvent {
+    pub at_ns: u64,
+    pub kind: RecKind,
+    pub detail: String,
+}
+
+struct Recorder {
+    ring: Mutex<VecDeque<RecEvent>>,
+    counts: [AtomicU64; KINDS],
+}
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        ring: Mutex::new(VecDeque::with_capacity(CAP)),
+        counts: std::array::from_fn(|_| AtomicU64::new(0)),
+    })
+}
+
+/// Record one event. No-op when `COMQ_TRACE` is off.
+#[inline]
+pub fn note(kind: RecKind, detail: &str) {
+    if !trace::enabled() {
+        return;
+    }
+    let r = recorder();
+    r.counts[kind as usize].fetch_add(1, Ordering::Relaxed);
+    let mut ring = r.ring.lock().unwrap();
+    if ring.len() >= CAP {
+        ring.pop_front();
+    }
+    ring.push_back(RecEvent { at_ns: trace::now_ns(), kind, detail: to_detail(detail) });
+}
+
+fn to_detail(d: &str) -> String {
+    // cap pathological details so the ring's memory stays bounded
+    if d.len() <= 128 {
+        return d.to_string();
+    }
+    let mut cut = 127;
+    while cut > 0 && !d.is_char_boundary(cut) {
+        cut -= 1;
+    }
+    format!("{}…", &d[..cut])
+}
+
+/// Monotonic total of events of one kind (never reset by ring
+/// overwrite — the reconciliation side of the recorder).
+pub fn count(kind: RecKind) -> u64 {
+    recorder().counts[kind as usize].load(Ordering::Relaxed)
+}
+
+/// Events currently held in the ring.
+pub fn len() -> usize {
+    recorder().ring.lock().unwrap().len()
+}
+
+/// The last `n` events, oldest first.
+pub fn last(n: usize) -> Vec<RecEvent> {
+    let ring = recorder().ring.lock().unwrap();
+    ring.iter().skip(ring.len().saturating_sub(n)).cloned().collect()
+}
+
+/// Dump the ring to the log — the black-box readout. Called on
+/// executor respawn and server drain; embedders may call it from their
+/// own panic hooks. No-op when tracing is off or nothing was recorded.
+pub fn dump(reason: &str) {
+    if !trace::enabled() {
+        return;
+    }
+    let events = last(CAP);
+    if events.is_empty() {
+        return;
+    }
+    let r = recorder();
+    let totals: Vec<String> = ALL_KINDS
+        .iter()
+        .filter_map(|k| {
+            let c = r.counts[*k as usize].load(Ordering::Relaxed);
+            (c > 0).then(|| format!("{}={c}", k.name()))
+        })
+        .collect();
+    log_warn!(
+        "flight recorder dump ({reason}): last {} events, totals [{}]",
+        events.len(),
+        totals.join(" ")
+    );
+    for e in &events {
+        log_info!("  +{:>12.3}ms {:<11} {}", e.at_ns as f64 / 1e6, e.kind.name(), e.detail);
+    }
+}
+
+const ALL_KINDS: [RecKind; KINDS] = [
+    RecKind::Admit,
+    RecKind::ErrorFrame,
+    RecKind::Shed,
+    RecKind::Respawn,
+    RecKind::Panic,
+    RecKind::DropConn,
+    RecKind::Drain,
+];
+
+/// Clear the ring and zero every count (tests).
+pub fn reset() {
+    let r = recorder();
+    r.ring.lock().unwrap().clear();
+    for c in &r.counts {
+        c.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceMode;
+    use std::sync::Mutex as StdMutex;
+
+    /// Recorder state is process-global; serialize and reset.
+    static LOCK: StdMutex<()> = StdMutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn off_mode_records_nothing() {
+        let _g = guard();
+        trace::set_mode(TraceMode::Off);
+        reset();
+        note(RecKind::Admit, "m");
+        assert_eq!(len(), 0);
+        assert_eq!(count(RecKind::Admit), 0);
+    }
+
+    #[test]
+    fn counts_survive_ring_overwrite() {
+        let _g = guard();
+        trace::set_mode(TraceMode::All);
+        reset();
+        for i in 0..(CAP + 10) {
+            note(RecKind::Shed, &format!("req {i}"));
+        }
+        assert_eq!(len(), CAP, "ring must cap at {CAP}");
+        assert_eq!(count(RecKind::Shed), (CAP + 10) as u64, "counts must not reset");
+        // the ring holds the *last* CAP events
+        let tail = last(2);
+        assert_eq!(tail[1].detail, format!("req {}", CAP + 9));
+        assert!(tail[0].at_ns <= tail[1].at_ns, "timestamps must be monotonic");
+        trace::set_mode(TraceMode::Off);
+        reset();
+    }
+
+    #[test]
+    fn last_n_and_detail_cap() {
+        let _g = guard();
+        trace::set_mode(TraceMode::All);
+        reset();
+        note(RecKind::Panic, &"x".repeat(500));
+        note(RecKind::Respawn, "model-a");
+        assert_eq!(len(), 2);
+        let evs = last(10);
+        assert_eq!(evs.len(), 2);
+        assert!(evs[0].detail.len() <= 132, "detail must be capped");
+        assert_eq!(evs[1].kind, RecKind::Respawn);
+        dump("unit test"); // smoke: must not panic on a populated ring
+        trace::set_mode(TraceMode::Off);
+        reset();
+    }
+}

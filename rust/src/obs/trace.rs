@@ -1,0 +1,755 @@
+//! `trace` — end-to-end request tracing for the serving tier.
+//!
+//! Where `span` aggregates stage latencies into histograms (what is the
+//! p99 of exec?), this module follows *one* request from the wire
+//! through admission, the coalesce window, the per-layer int8 GEMMs and
+//! back out (why was request 0x4f2a slow?). Each traced request leaves
+//! a set of [`Event`]s — `request`, `admission`, `queue_wait`,
+//! `coalesce`, `exec`, per-layer `layer:<name>` children with
+//! `{layer, kind, kernel, batch}` attributes, `epilogue`, `write_back`
+//! — cut from the **same `Instant`s** the `Stage` span marks use, so a
+//! trace's stages telescope exactly to the histogram totals.
+//!
+//! ## The `COMQ_TRACE` gate
+//!
+//! `COMQ_TRACE=off|sample:<p>|all` (default `off`). Like `COMQ_OBS` the
+//! value is read once and cached; recording sites check [`enabled`] — a
+//! relaxed atomic load and compare — so `off` keeps every event append
+//! a branch-predicted no-op, the buffers empty, and the bit-identity
+//! contracts untouched (tracing is observation-only; nothing it records
+//! feeds back into logits). Tests and embedders flip it with
+//! [`set_mode`].
+//!
+//! Under `sample:<p>` **every** request is traced into the ring buffers
+//! (events are cheap; whether a request turns out interesting is only
+//! known at the end), and *retention* decides at completion which
+//! traces survive for export:
+//!
+//! * every errored / shed / deadline-missed trace is kept,
+//! * the slowest K per window of [`WINDOW`] completions are kept
+//!   (K defaults to 8, see [`set_slow_k`]) — tail-based retention: a
+//!   faster trace that was provisionally in the window's top-K is
+//!   un-retained when a slower one bumps it, so the window converges to
+//!   exactly its K slowest,
+//! * of the rest, a deterministic `p`-fraction is kept (a hash of the
+//!   trace id against `p` — no RNG, so a given id's fate is
+//!   reproducible).
+//!
+//! `all` retains every completed trace. Either way the retained set is
+//! capped at [`RETAIN_CAP`] traces (oldest evicted) and events for
+//! unretained traces simply age out of the rings.
+//!
+//! ## Ring buffers
+//!
+//! Events land in per-thread rings: [`SHARDS`] fixed-capacity deques,
+//! each thread pinned to one shard by the same round-robin id the
+//! metric counters use. A shard's lock is therefore private to its
+//! writer thread in steady state — the hot path never contends with
+//! other request threads, only with the rare export/dump reader.
+//!
+//! ## Export
+//!
+//! [`export_chrome`] serializes the retained traces as Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto): one synthetic
+//! thread lane per trace, `"X"` complete events with µs timestamps on a
+//! shared process-uptime timebase. The `TraceDump` wire frame and the
+//! `comq trace <addr>` CLI subcommand fetch it remotely.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Tracing policy, from `COMQ_TRACE`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceMode {
+    /// Recording is a branch-predicted no-op; every buffer stays empty.
+    Off,
+    /// Trace every request; retain errors, the slowest K per window,
+    /// and a deterministic `p`-fraction of the rest.
+    Sample(f32),
+    /// Trace every request and retain every completed trace (capped).
+    All,
+}
+
+impl TraceMode {
+    pub fn name(&self) -> String {
+        match self {
+            TraceMode::Off => "off".into(),
+            TraceMode::Sample(p) => format!("sample:{p}"),
+            TraceMode::All => "all".into(),
+        }
+    }
+}
+
+/// Parsed `COMQ_TRACE` policy: `Ok(None)` = unset/blank → default
+/// (off), `Ok(Some(m))` = explicit mode, `Err(raw)` = unknown value —
+/// the caller warns once and stays off. Pure so the rules are
+/// unit-testable without touching the process environment.
+pub fn parse_mode(raw: Option<&str>) -> Result<Option<TraceMode>, String> {
+    match raw.map(str::trim) {
+        None | Some("") => Ok(None),
+        Some("off") => Ok(Some(TraceMode::Off)),
+        Some("all") => Ok(Some(TraceMode::All)),
+        Some(other) => match other.strip_prefix("sample:") {
+            Some(p) => match p.trim().parse::<f32>() {
+                Ok(p) if (0.0..=1.0).contains(&p) => Ok(Some(TraceMode::Sample(p))),
+                _ => Err(other.to_string()),
+            },
+            None => Err(other.to_string()),
+        },
+    }
+}
+
+const MODE_OFF: u8 = 0;
+const MODE_ALL: u8 = 1;
+const MODE_SAMPLE: u8 = 2;
+const MODE_UNINIT: u8 = u8::MAX;
+
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+static SAMPLE_BITS: AtomicU32 = AtomicU32::new(0);
+static SLOW_K: AtomicUsize = AtomicUsize::new(DEFAULT_SLOW_K);
+
+/// Default slowest-per-window retention count.
+pub const DEFAULT_SLOW_K: usize = 8;
+/// Completions per tail-retention window.
+pub const WINDOW: u64 = 256;
+/// Cap on retained traces (oldest evicted beyond this).
+pub const RETAIN_CAP: usize = 256;
+/// Per-shard event-ring capacity.
+pub const RING_CAP: usize = 4096;
+/// Number of per-thread event rings (matches `metrics::SHARDS`).
+pub const SHARDS: usize = 16;
+
+/// The current tracing mode (cached after the first read).
+#[inline]
+pub fn mode() -> TraceMode {
+    match MODE.load(Ordering::Relaxed) {
+        MODE_OFF => TraceMode::Off,
+        MODE_ALL => TraceMode::All,
+        MODE_SAMPLE => TraceMode::Sample(f32::from_bits(SAMPLE_BITS.load(Ordering::Relaxed))),
+        _ => init_mode(),
+    }
+}
+
+/// Whether tracing is on at all — the check every recording site makes
+/// first.
+#[inline]
+pub fn enabled() -> bool {
+    mode() != TraceMode::Off
+}
+
+#[cold]
+fn init_mode() -> TraceMode {
+    let m = match parse_mode(std::env::var("COMQ_TRACE").ok().as_deref()) {
+        Ok(v) => v.unwrap_or(TraceMode::Off),
+        Err(bad) => {
+            crate::warn_once!("COMQ_TRACE={bad}: expected off|sample:<p>|all, tracing stays off");
+            TraceMode::Off
+        }
+    };
+    store_mode(m);
+    m
+}
+
+fn store_mode(m: TraceMode) {
+    // pin the shared timebase before any event can be recorded, so
+    // every Instant a request carries is at or after the epoch
+    let _ = epoch();
+    match m {
+        TraceMode::Off => MODE.store(MODE_OFF, Ordering::Relaxed),
+        TraceMode::All => MODE.store(MODE_ALL, Ordering::Relaxed),
+        TraceMode::Sample(p) => {
+            SAMPLE_BITS.store(p.to_bits(), Ordering::Relaxed);
+            MODE.store(MODE_SAMPLE, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Override the tracing mode (tests, embedders).
+pub fn set_mode(m: TraceMode) {
+    store_mode(m);
+}
+
+/// Override the slowest-per-window retention count K (tests tune this
+/// to assert exact retention).
+pub fn set_slow_k(k: usize) {
+    SLOW_K.store(k.max(1), Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// trace context + timebase
+// ---------------------------------------------------------------------------
+
+/// Bit set in [`TraceCtx::flags`] when the client asked for the trace
+/// to be kept regardless of sampling (reserved; retention honors errors
+/// and tails first).
+pub const FLAG_SAMPLED: u8 = 1;
+
+/// The context that travels with one traced request: the 64-bit trace
+/// id (client-minted on the wire, or server-minted for old clients) and
+/// a flags byte. 9 bytes on the wire (version-2 frames).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub id: u64,
+    pub flags: u8,
+}
+
+/// High bit marks ids the server minted for clients that sent none
+/// (version-1 frames) — keeps the two id spaces disjoint.
+pub const SERVER_MINTED: u64 = 1 << 63;
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a server-side trace id (for requests that carried none).
+pub fn mint_server() -> TraceCtx {
+    TraceCtx { id: NEXT_ID.fetch_add(1, Ordering::Relaxed) | SERVER_MINTED, flags: 0 }
+}
+
+/// Mint a client-side trace id: pid in the high half, a process counter
+/// in the low — unique across the client processes of one test run
+/// without any RNG.
+pub fn mint_client() -> TraceCtx {
+    let id = ((std::process::id() as u64) << 32 | NEXT_ID.fetch_add(1, Ordering::Relaxed))
+        & !SERVER_MINTED;
+    TraceCtx { id, flags: FLAG_SAMPLED }
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The shared monotonic timebase every event timestamp is relative to.
+/// Pinned when the gate first initializes (before any request exists).
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the trace epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Map an `Instant` onto the shared timebase.
+pub fn ns_of(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------------
+// event rings
+// ---------------------------------------------------------------------------
+
+/// One recorded span of one traced request.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// The trace this event belongs to.
+    pub trace: u64,
+    /// Span name (`request`, `admission`, `queue_wait`, `coalesce`,
+    /// `exec`, `layer:<name>`, `epilogue`, `write_back`,
+    /// `shed:<reason>`, `error:<reason>`, `exec_panic`).
+    pub name: String,
+    /// Start, ns since the trace epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    /// Small attribute set rendered into the Chrome event's `args`.
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+struct Shard {
+    ring: Mutex<VecDeque<Event>>,
+}
+
+fn shards() -> &'static [Shard; SHARDS] {
+    static S: OnceLock<[Shard; SHARDS]> = OnceLock::new();
+    S.get_or_init(|| std::array::from_fn(|_| Shard { ring: Mutex::new(VecDeque::new()) }))
+}
+
+/// Stable per-thread shard id — same trick as the metric counters: each
+/// thread writes one ring, so its lock is uncontended in steady state.
+fn shard_id() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: usize = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+    }
+    SHARD.with(|s| *s)
+}
+
+fn push(ev: Event) {
+    let shard = &shards()[shard_id()];
+    let mut ring = shard.ring.lock().unwrap();
+    if ring.len() >= RING_CAP {
+        ring.pop_front();
+    }
+    ring.push_back(ev);
+}
+
+/// Record one span cut from two `Instant`s. No-op when tracing is off.
+#[inline]
+pub fn event(trace: u64, name: impl Into<String>, start: Instant, end: Instant) {
+    if !enabled() {
+        return;
+    }
+    event_ns(trace, name, ns_of(start), end.saturating_duration_since(start).as_nanos() as u64);
+}
+
+/// Record one span from raw epoch-relative nanoseconds.
+#[inline]
+pub fn event_ns(trace: u64, name: impl Into<String>, start_ns: u64, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    push(Event { trace, name: name.into(), start_ns, dur_ns, attrs: Vec::new() });
+}
+
+/// Record one span with attributes.
+#[inline]
+pub fn event_attrs(
+    trace: u64,
+    name: impl Into<String>,
+    start: Instant,
+    dur: Duration,
+    attrs: Vec<(&'static str, String)>,
+) {
+    if !enabled() {
+        return;
+    }
+    push(Event {
+        trace,
+        name: name.into(),
+        start_ns: ns_of(start),
+        dur_ns: dur.as_nanos() as u64,
+        attrs,
+    });
+}
+
+// ---------------------------------------------------------------------------
+// per-batch thread-local: carries traced ids into the per-layer hooks
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// Trace ids of the batch the current thread is executing — set by
+    /// the batcher around the model forward, read by the per-layer exec
+    /// hooks (the layer has no other route back to its requests).
+    static BATCH: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Declare the traced ids of the batch about to run on this thread.
+pub fn set_batch(ids: &[u64]) {
+    BATCH.with(|b| {
+        let mut b = b.borrow_mut();
+        b.clear();
+        b.extend_from_slice(ids);
+    });
+}
+
+/// Clear the per-thread batch trace set (after the forward).
+pub fn clear_batch() {
+    BATCH.with(|b| b.borrow_mut().clear());
+}
+
+/// Whether the current thread is executing a traced batch.
+#[inline]
+pub fn batch_active() -> bool {
+    enabled() && BATCH.with(|b| !b.borrow().is_empty())
+}
+
+/// Record one per-layer exec span for every traced request in the
+/// current batch, with the `{layer, kind, kernel, batch}` attributes.
+/// The event is duplicated per traced id so each request's lane shows
+/// its own layer breakdown (the work itself ran once, batch-wide).
+pub fn layer_event(layer: &str, kind: &'static str, batch: u64, start: Instant, dur: Duration) {
+    if !batch_active() {
+        return;
+    }
+    let kernel = crate::util::simd::Kernel::active().name();
+    BATCH.with(|b| {
+        for &id in b.borrow().iter() {
+            event_attrs(
+                id,
+                format!("layer:{layer}"),
+                start,
+                dur,
+                vec![
+                    ("layer", layer.to_string()),
+                    ("kind", kind.to_string()),
+                    ("kernel", kernel.to_string()),
+                    ("batch", batch.to_string()),
+                ],
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// tail-based retention
+// ---------------------------------------------------------------------------
+
+/// Why a trace was retained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Why {
+    /// Errored / shed / deadline-missed — always kept.
+    Error,
+    /// Among the slowest K of its window.
+    Slow,
+    /// Won the deterministic `sample:<p>` draw.
+    Sampled,
+    /// `COMQ_TRACE=all` keeps everything.
+    All,
+}
+
+/// Completion record of one retained trace.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceMeta {
+    pub total_ns: u64,
+    /// `"ok"` or the error/shed reason name.
+    pub outcome: &'static str,
+    pub why: Why,
+    /// Completion order (export sorts lanes by it).
+    pub seq: u64,
+}
+
+#[derive(Default)]
+struct Retention {
+    meta: BTreeMap<u64, TraceMeta>,
+    /// Retention order, for cap eviction.
+    order: VecDeque<u64>,
+    /// Current window's slowest-K candidates: (total_ns, id).
+    slow: Vec<(u64, u64)>,
+    completions: u64,
+}
+
+fn retention() -> &'static Mutex<Retention> {
+    static R: OnceLock<Mutex<Retention>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Retention::default()))
+}
+
+/// splitmix64 — the deterministic per-id sampling draw.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+fn sample_keep(id: u64, p: f32) -> bool {
+    // top 53 bits → a uniform fraction in [0, 1); strict < makes p=0
+    // keep nothing and p=1 keep everything
+    ((mix(id) >> 11) as f64 / (1u64 << 53) as f64) < p as f64
+}
+
+/// Mark a traced request complete and decide whether its trace is
+/// retained for export. `outcome` is `"ok"` or the error/shed reason
+/// name (anything non-ok is always retained).
+pub fn finish(trace: u64, total_ns: u64, outcome: &'static str) {
+    let m = mode();
+    if m == TraceMode::Off {
+        return;
+    }
+    let mut r = retention().lock().unwrap();
+    r.completions += 1;
+    let seq = r.completions;
+    let why = if m == TraceMode::All {
+        Some(Why::All)
+    } else if outcome != "ok" {
+        Some(Why::Error)
+    } else {
+        let k = SLOW_K.load(Ordering::Relaxed);
+        if r.slow.len() < k {
+            r.slow.push((total_ns, trace));
+            Some(Why::Slow)
+        } else {
+            // bump the window's provisional minimum if this one is
+            // slower; the bumped trace leaves the retained set (unless
+            // something else retained it), so the window converges to
+            // exactly its K slowest
+            let (imin, &(tmin, idmin)) = r
+                .slow
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (t, _))| *t)
+                .expect("non-empty slow window");
+            if total_ns > tmin {
+                r.slow[imin] = (total_ns, trace);
+                if r.meta.get(&idmin).is_some_and(|m| m.why == Why::Slow) {
+                    r.meta.remove(&idmin);
+                    r.order.retain(|&id| id != idmin);
+                }
+                Some(Why::Slow)
+            } else {
+                match m {
+                    TraceMode::Sample(p) if sample_keep(trace, p) => Some(Why::Sampled),
+                    _ => None,
+                }
+            }
+        }
+    };
+    if let Some(why) = why {
+        if r.meta.insert(trace, TraceMeta { total_ns, outcome, why, seq }).is_none() {
+            r.order.push_back(trace);
+        }
+        while r.meta.len() > RETAIN_CAP {
+            if let Some(old) = r.order.pop_front() {
+                r.meta.remove(&old);
+            } else {
+                break;
+            }
+        }
+    }
+    // rotate the tail window after WINDOW completions
+    if r.completions % WINDOW == 0 {
+        r.slow.clear();
+    }
+}
+
+/// The retained traces, oldest-completion first.
+pub fn retained() -> Vec<(u64, TraceMeta)> {
+    let r = retention().lock().unwrap();
+    let mut v: Vec<(u64, TraceMeta)> = r.meta.iter().map(|(id, m)| (*id, *m)).collect();
+    v.sort_by_key(|(_, m)| m.seq);
+    v
+}
+
+/// Total events currently buffered across all rings (tests assert the
+/// off-mode emptiness contract with this).
+pub fn events_buffered() -> usize {
+    shards().iter().map(|s| s.ring.lock().unwrap().len()).sum()
+}
+
+/// Events of one trace, start-sorted (tests).
+pub fn events_of(trace: u64) -> Vec<Event> {
+    let mut v: Vec<Event> = shards()
+        .iter()
+        .flat_map(|s| s.ring.lock().unwrap().iter().filter(|e| e.trace == trace).cloned().collect::<Vec<_>>())
+        .collect();
+    v.sort_by_key(|e| e.start_ns);
+    v
+}
+
+/// Drop every buffered event and the whole retained set (tests; also
+/// useful for embedders starting a fresh capture window).
+pub fn reset() {
+    for s in shards().iter() {
+        s.ring.lock().unwrap().clear();
+    }
+    let mut r = retention().lock().unwrap();
+    r.meta.clear();
+    r.order.clear();
+    r.slow.clear();
+    r.completions = 0;
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Serialize the retained traces as Chrome trace-event JSON (open in
+/// `chrome://tracing` or Perfetto). One synthetic thread lane per
+/// trace, `"X"` complete events, µs timestamps on the shared
+/// process-uptime timebase. Non-destructive — the buffers keep
+/// accumulating.
+pub fn export_chrome() -> String {
+    let kept = retained();
+    let lane: BTreeMap<u64, usize> =
+        kept.iter().enumerate().map(|(i, (id, _))| (*id, i + 1)).collect();
+    let mut events: Vec<Json> = Vec::new();
+    for (i, (id, meta)) in kept.iter().enumerate() {
+        let tid = (i + 1) as f64;
+        let label = format!(
+            "req {:#018x} ({}, {:.1} µs)",
+            id,
+            meta.outcome,
+            meta.total_ns as f64 / 1e3
+        );
+        events.push(Json::obj_from(vec![
+            ("ph", Json::Str("M".into())),
+            ("name", Json::Str("thread_name".into())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(tid)),
+            ("args", Json::obj_from(vec![("name", Json::Str(label))])),
+        ]));
+    }
+    // one pass over the rings, then group by retained trace
+    let mut all: Vec<Event> = Vec::new();
+    for s in shards().iter() {
+        let ring = s.ring.lock().unwrap();
+        all.extend(ring.iter().filter(|e| lane.contains_key(&e.trace)).cloned());
+    }
+    all.sort_by_key(|e| (e.trace, e.start_ns));
+    for e in &all {
+        let mut args: Vec<(&str, Json)> = vec![(
+            "trace_id",
+            Json::Str(format!("{:#018x}", e.trace)),
+        )];
+        for (k, v) in &e.attrs {
+            args.push((k, Json::Str(v.clone())));
+        }
+        events.push(Json::obj_from(vec![
+            ("ph", Json::Str("X".into())),
+            ("name", Json::Str(e.name.clone())),
+            ("ts", Json::Num(e.start_ns as f64 / 1e3)),
+            ("dur", Json::Num(e.dur_ns as f64 / 1e3)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(lane[&e.trace] as f64)),
+            ("args", Json::obj_from(args)),
+        ]));
+    }
+    Json::obj_from(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".into())),
+    ])
+    .to_string_pretty(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Retention state is process-global; these tests serialize on one
+    /// lock and reset around themselves.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn mode_parsing_rules() {
+        assert_eq!(parse_mode(None), Ok(None));
+        assert_eq!(parse_mode(Some("")), Ok(None));
+        assert_eq!(parse_mode(Some("off")), Ok(Some(TraceMode::Off)));
+        assert_eq!(parse_mode(Some("all")), Ok(Some(TraceMode::All)));
+        assert_eq!(parse_mode(Some(" sample:0.25 ")), Ok(Some(TraceMode::Sample(0.25))));
+        assert_eq!(parse_mode(Some("sample:1")), Ok(Some(TraceMode::Sample(1.0))));
+        assert!(parse_mode(Some("sample:2")).is_err());
+        assert!(parse_mode(Some("sample:")).is_err());
+        assert!(parse_mode(Some("on")).is_err());
+    }
+
+    #[test]
+    fn sampling_draw_is_deterministic_and_bounded() {
+        for id in [1u64, 42, 0xDEAD_BEEF, u64::MAX] {
+            assert!(!sample_keep(id, 0.0), "p=0 must keep nothing");
+            assert!(sample_keep(id, 1.0), "p=1 must keep everything");
+            assert_eq!(sample_keep(id, 0.5), sample_keep(id, 0.5), "draw must be stable");
+        }
+        // the draw is roughly fair (splitmix64 over 4k ids)
+        let kept = (0..4096u64).filter(|&i| sample_keep(mix(i), 0.5)).count();
+        assert!((1500..2600).contains(&kept), "p=0.5 kept {kept}/4096");
+    }
+
+    #[test]
+    fn minted_id_spaces_are_disjoint() {
+        let s = mint_server();
+        let c = mint_client();
+        assert_ne!(s.id & SERVER_MINTED, 0);
+        assert_eq!(c.id & SERVER_MINTED, 0);
+        assert_ne!(mint_server().id, s.id);
+    }
+
+    #[test]
+    fn off_mode_records_and_retains_nothing() {
+        let _g = guard();
+        set_mode(TraceMode::Off);
+        reset();
+        event_ns(7, "request", 0, 100);
+        finish(7, 100, "ok");
+        assert_eq!(events_buffered(), 0);
+        assert!(retained().is_empty());
+    }
+
+    #[test]
+    fn tail_retention_converges_to_slowest_k() {
+        let _g = guard();
+        set_mode(TraceMode::Sample(0.0));
+        set_slow_k(3);
+        reset();
+        // 20 fast completions interleaved with 3 slow ones; the window
+        // must converge to exactly the slow three, un-retaining the
+        // provisional fast entries that filled it first
+        for i in 0..10u64 {
+            finish(100 + i, 1_000 + i, "ok");
+        }
+        for s in 0..3u64 {
+            finish(900 + s, 40_000_000 + s, "ok");
+        }
+        for i in 10..20u64 {
+            finish(100 + i, 1_000 + i, "ok");
+        }
+        let kept = retained();
+        let ids: Vec<u64> = kept.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids.len(), 3, "exactly the K slowest must survive: {ids:?}");
+        for s in 0..3u64 {
+            assert!(ids.contains(&(900 + s)), "slow trace {} must be retained", 900 + s);
+        }
+        set_slow_k(DEFAULT_SLOW_K);
+        reset();
+    }
+
+    #[test]
+    fn errors_always_retained_and_all_keeps_everything() {
+        let _g = guard();
+        set_mode(TraceMode::Sample(0.0));
+        set_slow_k(1);
+        reset();
+        finish(1, 50_000, "ok"); // window seed
+        finish(2, 10, "overload"); // error: kept despite being fast
+        finish(3, 10, "ok"); // fast, p=0: dropped
+        let kept: Vec<u64> = retained().iter().map(|(id, _)| *id).collect();
+        assert!(kept.contains(&2), "errored trace must be retained");
+        assert!(!kept.contains(&3));
+        set_mode(TraceMode::All);
+        reset();
+        finish(10, 5, "ok");
+        finish(11, 5, "ok");
+        assert_eq!(retained().len(), 2, "all-mode must retain every completion");
+        set_slow_k(DEFAULT_SLOW_K);
+        set_mode(TraceMode::Off);
+        reset();
+    }
+
+    #[test]
+    fn export_is_valid_chrome_trace_json() {
+        let _g = guard();
+        set_mode(TraceMode::All);
+        reset();
+        event_ns(42, "request", 1_000, 9_000);
+        event_ns(42, "exec", 3_000, 4_000);
+        finish(42, 9_000, "ok");
+        let json = export_chrome();
+        let parsed = Json::parse(&json).expect("export must parse");
+        let evs = parsed.get("traceEvents").unwrap().arr().unwrap();
+        // one metadata lane event + two spans
+        assert_eq!(evs.len(), 3, "{json}");
+        let x: Vec<&Json> =
+            evs.iter().filter(|e| e.get("ph").unwrap().str().unwrap() == "X").collect();
+        assert_eq!(x.len(), 2);
+        assert_eq!(x[0].get("ts").unwrap().num().unwrap(), 1.0); // µs
+        assert_eq!(x[1].get("dur").unwrap().num().unwrap(), 4.0);
+        set_mode(TraceMode::Off);
+        reset();
+    }
+
+    #[test]
+    fn batch_thread_local_scopes_layer_events() {
+        let _g = guard();
+        set_mode(TraceMode::All);
+        reset();
+        assert!(!batch_active());
+        set_batch(&[5, 6]);
+        assert!(batch_active());
+        let t = Instant::now();
+        layer_event("conv1", "dense", 2, t, Duration::from_micros(10));
+        clear_batch();
+        assert!(!batch_active());
+        // one event per traced id, each carrying the attribute set
+        assert_eq!(events_of(5).len(), 1);
+        assert_eq!(events_of(6).len(), 1);
+        let ev = &events_of(5)[0];
+        assert_eq!(ev.name, "layer:conv1");
+        assert!(ev.attrs.iter().any(|(k, v)| *k == "kind" && v == "dense"));
+        assert!(ev.attrs.iter().any(|(k, v)| *k == "batch" && v == "2"));
+        set_mode(TraceMode::Off);
+        reset();
+    }
+}

@@ -45,6 +45,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::obs::metrics::with_labels;
+use crate::obs::recorder;
+use crate::obs::trace::{self, TraceCtx};
 use crate::obs::{Counter, Gauge, Histogram, SpanSet, Stage};
 use crate::serve::net::fault;
 use crate::serve::QuantizedModel;
@@ -123,16 +125,37 @@ pub type ServeResult = std::result::Result<Vec<f32>, ServeError>;
 /// waits forever. The network tier leans on this — its per-connection
 /// in-flight accounting is balanced inside the callback, so a lost
 /// reply would wedge the drain.
-pub struct Responder(Option<Box<dyn FnOnce(ServeResult) + Send + 'static>>);
+pub struct Responder {
+    f: Option<Box<dyn FnOnce(ServeResult) + Send + 'static>>,
+    /// Terminal-stamp state for the drop path: the model's stage
+    /// histograms plus the request's arrival, armed by the executor at
+    /// drain time. A request answered from `Drop` used to vanish from
+    /// the stage histograms entirely (the panic unwound before any
+    /// boundary was stamped) — now the drop stamps a terminal mark
+    /// *before* the error reply goes out, so `ExecutorPanicked` replies
+    /// are visible in the latency percentiles. The whole elapsed time
+    /// lands in `exec` (the stage the request died in; the drain
+    /// boundary is lost in the unwind) with the other stages stamped 0,
+    /// so the per-stage sums still telescope exactly to `total`.
+    terminal: Option<(SpanSet, Instant)>,
+}
 
 impl Responder {
     pub fn new<F: FnOnce(ServeResult) + Send + 'static>(f: F) -> Responder {
-        Responder(Some(Box::new(f)))
+        Responder { f: Some(Box::new(f)), terminal: None }
     }
 
-    /// Answer the request (consumes the responder).
+    /// Arm the drop-path terminal stamp (executor, at drain time).
+    fn arm_terminal(&mut self, spans: &SpanSet, arrived: Instant) {
+        self.terminal = Some((spans.clone(), arrived));
+    }
+
+    /// Answer the request (consumes the responder). The normal path —
+    /// the executor stamps this request's stages itself, so the
+    /// terminal mark is disarmed.
     pub fn reply(mut self, r: ServeResult) {
-        if let Some(f) = self.0.take() {
+        self.terminal = None;
+        if let Some(f) = self.f.take() {
             f(r);
         }
     }
@@ -140,7 +163,16 @@ impl Responder {
 
 impl Drop for Responder {
     fn drop(&mut self) {
-        if let Some(f) = self.0.take() {
+        if let Some(f) = self.f.take() {
+            if let Some((spans, arrived)) = self.terminal.take() {
+                let total =
+                    Instant::now().saturating_duration_since(arrived).as_nanos() as u64;
+                spans.record(Stage::QueueWait, 0);
+                spans.record(Stage::Coalesce, 0);
+                spans.record(Stage::Exec, total);
+                spans.record(Stage::Epilogue, 0);
+                spans.record(Stage::Total, total);
+            }
             f(Err(ServeError::ExecutorPanicked));
         }
     }
@@ -151,13 +183,16 @@ struct Pending {
     arrived: Instant,
     /// Absolute per-request deadline; `None` = wait as long as it takes.
     deadline: Option<Instant>,
+    /// End-to-end trace context, when the request is traced.
+    trace: Option<TraceCtx>,
     respond: Responder,
 }
 
 /// The micro-batcher's telemetry handles for one model. Stage
-/// histograms are recorded only for *answered* requests (a panicked
-/// batch records nothing), so all five stages always carry the same
-/// count and their sums stay coherent with the end-to-end totals.
+/// histograms are recorded for every request that reaches an executor —
+/// answered ones batch-wide on the normal path, panicked ones via the
+/// [`Responder`] terminal mark — so all five stages carry coherent
+/// counts and their sums telescope to the end-to-end totals.
 pub struct ServeObs {
     /// queue_wait / coalesce / exec / epilogue / total, per request.
     pub spans: SpanSet,
@@ -175,6 +210,10 @@ pub struct ServeObs {
     /// Executor panics — batch forwards that panicked plus panics that
     /// escaped to the respawn supervisor.
     pub panics: Arc<Counter>,
+    /// Executor respawns after an escaped panic
+    /// (`comq_serve_respawns_total{model}`, mirrors
+    /// [`ServeStats::respawns`] into the registry export).
+    pub respawns: Arc<Counter>,
     /// Requests shed before execution, deadline reason
     /// (`comq_serve_shed_total{model,reason="deadline"}`).
     pub shed_deadline: Arc<Counter>,
@@ -201,6 +240,7 @@ impl ServeObs {
             requests: reg.counter(&l("comq_serve_requests_total")),
             deadline_miss: reg.counter(&l("comq_serve_deadline_miss_total")),
             panics: reg.counter(&l("comq_serve_executor_panics_total")),
+            respawns: reg.counter(&l("comq_serve_respawns_total")),
             shed_deadline: shed("deadline"),
             shed_overload: shed("overload"),
         }
@@ -333,6 +373,19 @@ impl Server {
     /// callback after the forward; no per-request waiter blocks on a
     /// channel).
     pub fn submit_with(&self, image: Vec<f32>, deadline: Option<Instant>, respond: Responder) {
+        self.submit_traced(image, deadline, None, respond);
+    }
+
+    /// [`Server::submit_with`] plus an end-to-end trace context: the id
+    /// rides in the queue entry so the executor can cut per-stage and
+    /// per-layer events for exactly this request.
+    pub fn submit_traced(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        trace: Option<TraceCtx>,
+        respond: Responder,
+    ) {
         let elems = self.shared.side * self.shared.side * 3;
         assert_eq!(image.len(), elems, "image must be img*img*3 f32s");
         if let Some(o) = &self.shared.obs {
@@ -356,7 +409,7 @@ impl Server {
         }
         {
             let mut q = self.shared.queue.lock().unwrap();
-            q.push_back(Pending { data: image, arrived: Instant::now(), deadline, respond });
+            q.push_back(Pending { data: image, arrived: Instant::now(), deadline, trace, respond });
         }
         self.shared.cv.notify_one();
     }
@@ -449,8 +502,12 @@ fn supervise(sh: &Shared) {
                 sh.respawns.fetch_add(1, Ordering::Relaxed);
                 if let Some(o) = &sh.obs {
                     o.panics.inc();
+                    o.respawns.inc();
                 }
+                recorder::note(recorder::RecKind::Respawn, &sh.model.info().name);
                 crate::log_warn!("serve executor: panic escaped the batch guard; respawning");
+                // the black box shows what led up to the panic
+                recorder::dump("executor respawn");
                 // loop re-enters executor_loop: a shutdown in progress
                 // still drains and returns cleanly from there
             }
@@ -490,12 +547,19 @@ fn executor_loop(sh: &Shared) {
                 q = sh.cv.wait_timeout(q, window - now).unwrap().0;
             }
         };
+        let mut batch = batch;
         let drained = batch.len();
         sh.depth.fetch_sub(drained, Ordering::Relaxed);
         if let Some(o) = &sh.obs {
             o.queue_depth.add(-(drained as i64));
             if missed {
                 o.deadline_miss.inc();
+            }
+            // arm the drop-path terminal stamp before anything can
+            // panic: a request answered by Responder::drop during an
+            // unwind still lands in the stage histograms
+            for p in &mut batch {
+                p.respond.arm_terminal(&o.spans, p.arrived);
             }
         }
         // injected fault: a panic here escapes the per-batch guard below
@@ -510,6 +574,11 @@ fn executor_loop(sh: &Shared) {
         if !expired.is_empty() {
             sh.note_deadline_shed(expired.len());
             for p in expired {
+                if let Some(c) = p.trace {
+                    // the traced view of a drain-time shed: the span
+                    // covers the whole doomed wait
+                    trace::event(c.id, "shed:deadline", p.arrived, now);
+                }
                 p.respond.reply(Err(ServeError::DeadlineExceeded));
             }
         }
@@ -522,20 +591,36 @@ fn executor_loop(sh: &Shared) {
         if let Some(d) = fault::slow_for(fault::Site::Exec) {
             std::thread::sleep(d);
         }
-        // Stamp the batch's stage boundaries only when telemetry is on.
-        // Arrival times are copied out up front because the send loop
-        // consumes the batch before the epilogue boundary is known.
-        let t_drained = sh.obs.as_ref().map(|o| {
+        // Stamp the batch's stage boundaries when telemetry is on or
+        // any request in the batch is traced — spans and trace events
+        // are cut from the *same* instants, so a trace's stages
+        // telescope exactly against the histogram sums. Arrival times
+        // are copied out up front because the send loop consumes the
+        // batch before the epilogue boundary is known.
+        let traced: Vec<(u64, Instant)> = if trace::enabled() {
+            batch.iter().filter_map(|p| p.trace.map(|c| (c.id, p.arrived))).collect()
+        } else {
+            Vec::new()
+        };
+        let need_t = sh.obs.is_some() || !traced.is_empty();
+        if let Some(o) = &sh.obs {
             o.batch_size.record(b as u64);
-            Instant::now()
-        });
+        }
+        let t_drained = need_t.then(Instant::now);
         let arrivals: Vec<Instant> =
             if sh.obs.is_some() { batch.iter().map(|p| p.arrived).collect() } else { Vec::new() };
         let mut data = Vec::with_capacity(b * elems);
         for p in &batch {
             data.extend_from_slice(&p.data);
         }
-        let t_built = t_drained.map(|_| Instant::now());
+        let t_built = need_t.then(Instant::now);
+        // carry the traced ids into the per-layer exec hooks via the
+        // executor thread (the layer has no other route back to its
+        // requests)
+        if !traced.is_empty() {
+            let ids: Vec<u64> = traced.iter().map(|(id, _)| *id).collect();
+            trace::set_batch(&ids);
+        }
         // a panicking forward must not kill the executor — the queue
         // would fill forever behind a Server that still looks healthy.
         // Catch it, answer this batch's requests ExecutorPanicked, and
@@ -543,23 +628,27 @@ fn executor_loop(sh: &Shared) {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             sh.model.forward(&Tensor::new(&[b, sh.side, sh.side, 3], data))
         }));
+        if !traced.is_empty() {
+            trace::clear_batch();
+        }
+        let ns = |d: std::time::Duration| d.as_nanos() as u64;
         match result {
             Ok(logits) => {
-                let t_done = t_built.map(|_| Instant::now());
+                let t_done = need_t.then(Instant::now);
                 let classes = logits.cols();
                 for (i, p) in batch.into_iter().enumerate() {
                     // a dropped receiver is fine — the rest of the batch stands
                     p.respond.reply(Ok(logits.data()[i * classes..(i + 1) * classes].to_vec()));
                 }
                 sh.served.fetch_add(b, Ordering::Relaxed);
-                // Record spans only for answered requests, all at once,
-                // so every stage histogram carries the same count and
+                // epilogue closes here for spans and traces alike
+                let t_sent = need_t.then(Instant::now);
+                // Record spans for the whole answered batch at once, so
+                // every stage histogram carries the same count and
                 // per-stage sums stay coherent with the totals.
-                if let (Some(o), Some(ta), Some(tb), Some(td)) =
-                    (&sh.obs, t_drained, t_built, t_done)
+                if let (Some(o), Some(ta), Some(tb), Some(td), Some(ts)) =
+                    (&sh.obs, t_drained, t_built, t_done, t_sent)
                 {
-                    let ts = Instant::now();
-                    let ns = |d: std::time::Duration| d.as_nanos() as u64;
                     let n = b as u64;
                     o.spans.record_n(Stage::Coalesce, ns(tb.saturating_duration_since(ta)), n);
                     o.spans.record_n(Stage::Exec, ns(td.saturating_duration_since(tb)), n);
@@ -570,14 +659,49 @@ fn executor_loop(sh: &Shared) {
                         o.spans.record(Stage::Total, ns(ts.saturating_duration_since(*a)));
                     }
                 }
+                // the traced view of the same boundaries: four
+                // contiguous spans per request, queue_wait → epilogue,
+                // telescoping exactly to arrival → t_sent
+                if let (Some(ta), Some(tb), Some(td), Some(ts)) =
+                    (t_drained, t_built, t_done, t_sent)
+                {
+                    for (id, arrived) in &traced {
+                        trace::event(*id, "queue_wait", *arrived, ta);
+                        trace::event(*id, "coalesce", ta, tb);
+                        trace::event(*id, "exec", tb, td);
+                        trace::event(*id, "epilogue", td, ts);
+                    }
+                }
             }
             Err(_) => {
+                let t_done = need_t.then(Instant::now);
                 if let Some(o) = &sh.obs {
                     o.panics.inc();
                 }
                 crate::log_warn!(
                     "serve executor: batch forward panicked; {b} request(s) answered with error"
                 );
+                // stamp the panicked batch's stages before the error
+                // replies go out — the boundaries up to the panic are
+                // real, the epilogue never happened (0), and the sums
+                // still telescope: queue_wait+coalesce+exec = total
+                if let (Some(o), Some(ta), Some(tb), Some(td)) = (&sh.obs, t_drained, t_built, t_done) {
+                    let n = b as u64;
+                    o.spans.record_n(Stage::Coalesce, ns(tb.saturating_duration_since(ta)), n);
+                    o.spans.record_n(Stage::Exec, ns(td.saturating_duration_since(tb)), n);
+                    o.spans.record_n(Stage::Epilogue, 0, n);
+                    for a in &arrivals {
+                        o.spans.record(Stage::QueueWait, ns(ta.saturating_duration_since(*a)));
+                        o.spans.record(Stage::Total, ns(td.saturating_duration_since(*a)));
+                    }
+                }
+                if let (Some(ta), Some(tb), Some(td)) = (t_drained, t_built, t_done) {
+                    for (id, arrived) in &traced {
+                        trace::event(*id, "queue_wait", *arrived, ta);
+                        trace::event(*id, "coalesce", ta, tb);
+                        trace::event(*id, "exec_panic", tb, td);
+                    }
+                }
                 for p in batch {
                     p.respond.reply(Err(ServeError::ExecutorPanicked));
                 }

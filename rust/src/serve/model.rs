@@ -22,7 +22,7 @@ use crate::deploy::{self, PackedLayer};
 use crate::manifest::{Manifest, ModelConfig, ModelInfo};
 use crate::model::{LayerExec, Model, Tap};
 use crate::obs::metrics::with_labels;
-use crate::obs::{span, Counter, Histogram};
+use crate::obs::{span, trace, Counter, Histogram};
 use crate::quant::actq::ActQuant;
 use crate::serve::gemm::{
     dwconv_i8_fused, gemm_i8_fused, EpilogueCoeffs, GroupedQuantizedActs, QuantizedActs,
@@ -311,11 +311,13 @@ impl QuantizedModel {
 
     /// Integer forward: x [b, img, img, 3] -> logits [b, classes].
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        if let Some(o) = &self.obs {
-            let b = x.shape()[0] as u64;
+        let b = x.shape()[0] as u64;
+        if self.obs.is_some() || trace::batch_active() {
             // carry the batch size down to the per-layer exec hooks —
             // at that depth the row count is patches, not requests
             span::set_items(b);
+        }
+        if let Some(o) = &self.obs {
             o.images.add(b);
         }
         let mut tap = Tap::Exec(self);
@@ -413,19 +415,27 @@ impl QuantizedModel {
         }
     }
 
-    /// Run one integer layer, timing it when telemetry is attached.
-    /// Exec counters are weighted by the in-flight batch size
-    /// ([`span::items`]) so they count images, not forward calls.
-    fn timed<F: FnOnce() -> Tensor>(&self, name: &str, f: F) -> Tensor {
-        match self.obs.as_ref().and_then(|o| o.layers.get(name)) {
-            Some(lo) => {
+    /// Run one integer layer, timing it when telemetry is attached or
+    /// the executing batch is traced — the trace's per-layer events use
+    /// the same start/elapsed pair as the histograms. Exec counters are
+    /// weighted by the in-flight batch size ([`span::items`]) so they
+    /// count images, not forward calls; `kind` becomes the trace
+    /// event's layer-kind attribute.
+    fn timed<F: FnOnce() -> Tensor>(&self, name: &str, kind: &'static str, f: F) -> Tensor {
+        let lo = self.obs.as_ref().and_then(|o| o.layers.get(name));
+        match (lo, trace::batch_active()) {
+            (None, false) => f(),
+            (lo, _) => {
                 let t = Instant::now();
                 let y = f();
-                lo.nanos.record(t.elapsed().as_nanos() as u64);
-                lo.execs.add(span::items());
+                let elapsed = t.elapsed();
+                if let Some(lo) = lo {
+                    lo.nanos.record(elapsed.as_nanos() as u64);
+                    lo.execs.add(span::items());
+                }
+                trace::layer_event(name, kind, span::items(), t, elapsed);
                 y
             }
-            None => f(),
         }
     }
 }
@@ -436,7 +446,7 @@ impl LayerExec for QuantizedModel {
             self.note_fallback(name);
             return None;
         };
-        Some(self.timed(name, || layer.forward(x, self.act_for(name, x))))
+        Some(self.timed(name, "dense", || layer.forward(x, self.act_for(name, x))))
     }
 
     fn exec_grouped(&self, name: &str, x3: &Tensor) -> Option<Tensor> {
@@ -444,7 +454,7 @@ impl LayerExec for QuantizedModel {
             self.note_fallback(name);
             return None;
         };
-        Some(self.timed(name, || layer.forward(x3, self.act_for(name, x3))))
+        Some(self.timed(name, "grouped", || layer.forward(x3, self.act_for(name, x3))))
     }
 
     fn tap_input(&self, name: &str, x: Tensor) -> Tensor {

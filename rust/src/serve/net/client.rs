@@ -14,6 +14,7 @@ use std::io::{Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
+use crate::obs::trace::{self, TraceCtx};
 use crate::serve::net::frame::{self, ErrorReason, FrameError, FrameKind};
 
 /// Why a client call failed.
@@ -67,6 +68,9 @@ pub enum Response {
     Error { request_id: u32, reason: ErrorReason, message: String },
     /// `MetricsText`: the Prometheus exposition.
     Metrics { request_id: u32, text: String },
+    /// `TraceJson`: the server's retained traces as Chrome trace-event
+    /// JSON.
+    Trace { request_id: u32, json: String },
 }
 
 /// Blocking COMQ protocol client over one TCP connection.
@@ -93,16 +97,32 @@ impl NetClient {
     /// Send one inference request; returns its request id without
     /// waiting for the reply (pipelining). `budget` is the per-request
     /// latency deadline the server propagates into the batcher.
+    ///
+    /// When `COMQ_TRACE` is on a client-minted trace context rides
+    /// along (a v2 frame); otherwise the wire stays bit-identical v1.
     pub fn send_infer(
         &mut self,
         model: &str,
         input: &[f32],
         budget: Option<Duration>,
     ) -> Result<u32, ClientError> {
+        let ctx = if trace::enabled() { Some(trace::mint_client()) } else { None };
+        self.send_infer_traced(model, input, budget, ctx)
+    }
+
+    /// [`send_infer`](Self::send_infer) with an explicit trace context
+    /// (`None` forces an untraced v1 frame regardless of `COMQ_TRACE`).
+    pub fn send_infer_traced(
+        &mut self,
+        model: &str,
+        input: &[f32],
+        budget: Option<Duration>,
+        ctx: Option<TraceCtx>,
+    ) -> Result<u32, ClientError> {
         let id = self.next_id;
         self.next_id = self.next_id.wrapping_add(1).max(1);
         let deadline_us = budget.map_or(0, |b| b.as_micros().min(u64::MAX as u128) as u64);
-        let bytes = frame::encode_infer(id, model, deadline_us, input);
+        let bytes = frame::encode_infer_t(id, model, deadline_us, input, ctx);
         self.stream.write_all(&bytes)?;
         Ok(id)
     }
@@ -110,25 +130,37 @@ impl NetClient {
     /// Read the next reply frame (blocking, in server completion
     /// order).
     pub fn recv(&mut self) -> Result<Response, ClientError> {
+        self.recv_with_trace().map(|(r, _)| r)
+    }
+
+    /// [`recv`](Self::recv) plus the trace context the server echoed on
+    /// the reply frame (`None` on v1 replies — i.e. whenever the
+    /// request did not carry one).
+    pub fn recv_with_trace(&mut self) -> Result<(Response, Option<TraceCtx>), ClientError> {
         loop {
             match frame::decode(&self.rbuf)? {
                 Some((f, used)) => {
                     self.rbuf.drain(..used);
-                    return match f.kind {
-                        FrameKind::InferOk => Ok(Response::Logits {
-                            request_id: f.request_id,
-                            logits: f.payload_f32()?,
-                        }),
+                    let ctx = f.trace;
+                    let resp = match f.kind {
+                        FrameKind::InferOk => {
+                            Response::Logits { request_id: f.request_id, logits: f.payload_f32()? }
+                        }
                         FrameKind::Error => {
                             let (reason, message) = f.error_reason()?;
-                            Ok(Response::Error { request_id: f.request_id, reason, message })
+                            Response::Error { request_id: f.request_id, reason, message }
                         }
-                        FrameKind::MetricsText => Ok(Response::Metrics {
+                        FrameKind::MetricsText => Response::Metrics {
                             request_id: f.request_id,
                             text: String::from_utf8_lossy(&f.payload).into_owned(),
-                        }),
-                        other => Err(ClientError::Unexpected(other)),
+                        },
+                        FrameKind::TraceJson => Response::Trace {
+                            request_id: f.request_id,
+                            json: String::from_utf8_lossy(&f.payload).into_owned(),
+                        },
+                        other => return Err(ClientError::Unexpected(other)),
                     };
+                    return Ok((resp, ctx));
                 }
                 None => {
                     let mut buf = [0u8; 16384];
@@ -171,6 +203,24 @@ impl NetClient {
     /// One-shot inference with no deadline.
     pub fn infer(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>, ClientError> {
         self.infer_deadline(model, input, None)
+    }
+
+    /// Fetch the server's retained traces as Chrome trace-event JSON.
+    pub fn trace_dump(&mut self) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        self.stream.write_all(&frame::encode_trace_dump(id))?;
+        loop {
+            match self.recv()? {
+                Response::Trace { request_id, json } if request_id == id => return Ok(json),
+                Response::Error { request_id, reason, message }
+                    if request_id == id || request_id == 0 =>
+                {
+                    return Err(ClientError::Server { reason, message })
+                }
+                _ => continue,
+            }
+        }
     }
 
     /// Fetch the server's Prometheus metrics over the same transport.

@@ -4,21 +4,36 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic        0x434F4D51 ("COMQ" big-endian bytes, read LE)
-//! 4       1     version      WIRE_VERSION (currently 1)
+//! 4       1     version      1 or 2 (see below)
 //! 5       1     kind         FrameKind discriminant
 //! 6       4     request_id   client-chosen, echoed in the reply
 //! 10      8     deadline_us  per-request latency budget in µs (0 = none)
 //! 18      2     model_len    bytes of UTF-8 model id that follow
 //! 20      4     payload_len  bytes of payload that follow the model id
-//! 24      m     model id
-//! 24+m    p     payload
+//! --- version 2 only: 9-byte trace extension ---
+//! 24      8     trace_id     64-bit end-to-end trace id
+//! 32      1     trace_flags  TraceCtx flags byte
+//! --- then, at 24 (v1) / 33 (v2): ---
+//! +0      m     model id
+//! +m      p     payload
 //! ```
+//!
+//! **Version 2 = version 1 + an optional trace context.** A frame
+//! carries the 9-byte `{trace_id, flags}` extension iff its version
+//! byte says 2; encoders emit version 1 whenever no context is attached
+//! (so a tracing-aware client talking to anything still produces
+//! byte-identical v1 frames when tracing is off), and the server
+//! decodes both versions — old clients' v1 frames still work, their
+//! requests get server-minted ids, and replies carry the extension only
+//! when the request did (a v1 client is never sent a v2 frame).
 //!
 //! Payloads by kind: `Infer` carries `payload_len/4` f32 inputs (LE);
 //! `InferOk` carries the logits the same way; `Error` carries one
 //! [`ErrorReason`] byte plus a UTF-8 message; `MetricsReq` is empty and
 //! `MetricsText` carries the Prometheus text exposition — the PR 6
-//! telemetry surfaces over the same transport as inference.
+//! telemetry surfaces over the same transport as inference; `TraceDump`
+//! is empty and `TraceJson` carries the retained traces of the PR 8
+//! flight recorder as Chrome trace-event JSON.
 //!
 //! Request ids make the protocol pipelined: a client may have many
 //! requests outstanding on one connection and match replies by id (the
@@ -33,14 +48,28 @@
 
 use std::time::Duration;
 
+use crate::obs::trace::TraceCtx;
+
 /// First four bytes of every frame, "COMQ" as a LE u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"COMQ");
 
-/// Current protocol version.
-pub const WIRE_VERSION: u8 = 1;
+/// Current protocol version (v2 = v1 + the optional trace extension).
+pub const WIRE_VERSION: u8 = 2;
 
-/// Fixed header size in bytes (through `payload_len`).
+/// Oldest version this build still decodes.
+pub const WIRE_VERSION_MIN: u8 = 1;
+
+/// Fixed header size in bytes (through `payload_len`) for a v1 frame.
 pub const HEADER_LEN: usize = 24;
+
+/// Bytes the v2 trace extension adds after the fixed header:
+/// trace_id (u64) + flags (u8).
+pub const TRACE_EXT_LEN: usize = 9;
+
+/// Header length for a given wire version.
+fn header_len(version: u8) -> usize {
+    if version >= 2 { HEADER_LEN + TRACE_EXT_LEN } else { HEADER_LEN }
+}
 
 /// Hard cap on a frame's payload: a batch-1 image for any plausible
 /// model fits well under this, and it bounds the per-connection buffer
@@ -63,6 +92,10 @@ pub enum FrameKind {
     MetricsReq = 4,
     /// Server → client: Prometheus text exposition.
     MetricsText = 5,
+    /// Client → server: dump the retained traces.
+    TraceDump = 6,
+    /// Server → client: Chrome trace-event JSON.
+    TraceJson = 7,
 }
 
 impl FrameKind {
@@ -73,6 +106,8 @@ impl FrameKind {
             3 => Some(FrameKind::Error),
             4 => Some(FrameKind::MetricsReq),
             5 => Some(FrameKind::MetricsText),
+            6 => Some(FrameKind::TraceDump),
+            7 => Some(FrameKind::TraceJson),
             _ => None,
         }
     }
@@ -168,6 +203,9 @@ pub struct Frame {
     pub deadline_us: u64,
     pub model: String,
     pub payload: Vec<u8>,
+    /// End-to-end trace context — `Some` iff the frame was a version-2
+    /// frame carrying the 9-byte extension.
+    pub trace: Option<TraceCtx>,
 }
 
 impl Frame {
@@ -262,27 +300,47 @@ fn get_u64(b: &[u8]) -> u64 {
     u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
 }
 
-/// Encode a frame. Panics if model id or payload exceed the wire caps —
-/// server-side frames are always under them and the client validates
-/// before calling.
+/// Encode a frame. The version byte follows the trace field: no
+/// context → version 1 (byte-identical to the pre-trace wire), context
+/// → version 2 with the 9-byte extension. Panics if model id or payload
+/// exceed the wire caps — server-side frames are always under them and
+/// the client validates before calling.
 pub fn encode(frame: &Frame) -> Vec<u8> {
     assert!(frame.model.len() <= MAX_MODEL_ID, "model id too long for the wire");
     assert!(frame.payload.len() <= MAX_PAYLOAD, "payload too large for the wire");
-    let mut out = Vec::with_capacity(HEADER_LEN + frame.model.len() + frame.payload.len());
+    let version = if frame.trace.is_some() { 2 } else { 1 };
+    let mut out =
+        Vec::with_capacity(header_len(version) + frame.model.len() + frame.payload.len());
     put_u32(&mut out, MAGIC);
-    out.push(WIRE_VERSION);
+    out.push(version);
     out.push(frame.kind as u8);
     put_u32(&mut out, frame.request_id);
     put_u64(&mut out, frame.deadline_us);
     put_u16(&mut out, frame.model.len() as u16);
     put_u32(&mut out, frame.payload.len() as u32);
+    if let Some(ctx) = frame.trace {
+        put_u64(&mut out, ctx.id);
+        out.push(ctx.flags);
+    }
     out.extend_from_slice(frame.model.as_bytes());
     out.extend_from_slice(&frame.payload);
     out
 }
 
-/// Convenience encoders for the frames the server sends.
+/// Convenience encoders for the frames the server sends. The `_t`
+/// variants attach a trace context (emitting a version-2 frame); the
+/// plain names keep their pre-trace signatures and emit version 1.
 pub fn encode_infer(request_id: u32, model: &str, deadline_us: u64, input: &[f32]) -> Vec<u8> {
+    encode_infer_t(request_id, model, deadline_us, input, None)
+}
+
+pub fn encode_infer_t(
+    request_id: u32,
+    model: &str,
+    deadline_us: u64,
+    input: &[f32],
+    trace: Option<TraceCtx>,
+) -> Vec<u8> {
     let mut payload = Vec::with_capacity(input.len() * 4);
     for v in input {
         payload.extend_from_slice(&v.to_le_bytes());
@@ -293,10 +351,15 @@ pub fn encode_infer(request_id: u32, model: &str, deadline_us: u64, input: &[f32
         deadline_us,
         model: model.to_string(),
         payload,
+        trace,
     })
 }
 
 pub fn encode_infer_ok(request_id: u32, logits: &[f32]) -> Vec<u8> {
+    encode_infer_ok_t(request_id, logits, None)
+}
+
+pub fn encode_infer_ok_t(request_id: u32, logits: &[f32], trace: Option<TraceCtx>) -> Vec<u8> {
     let mut payload = Vec::with_capacity(logits.len() * 4);
     for v in logits {
         payload.extend_from_slice(&v.to_le_bytes());
@@ -307,10 +370,20 @@ pub fn encode_infer_ok(request_id: u32, logits: &[f32]) -> Vec<u8> {
         deadline_us: 0,
         model: String::new(),
         payload,
+        trace,
     })
 }
 
 pub fn encode_error(request_id: u32, reason: ErrorReason, msg: &str) -> Vec<u8> {
+    encode_error_t(request_id, reason, msg, None)
+}
+
+pub fn encode_error_t(
+    request_id: u32,
+    reason: ErrorReason,
+    msg: &str,
+    trace: Option<TraceCtx>,
+) -> Vec<u8> {
     let mut payload = Vec::with_capacity(1 + msg.len());
     payload.push(reason as u8);
     payload.extend_from_slice(msg.as_bytes());
@@ -320,6 +393,7 @@ pub fn encode_error(request_id: u32, reason: ErrorReason, msg: &str) -> Vec<u8> 
         deadline_us: 0,
         model: String::new(),
         payload,
+        trace,
     })
 }
 
@@ -330,6 +404,7 @@ pub fn encode_metrics_req(request_id: u32) -> Vec<u8> {
         deadline_us: 0,
         model: String::new(),
         payload: Vec::new(),
+        trace: None,
     })
 }
 
@@ -340,6 +415,29 @@ pub fn encode_metrics_text(request_id: u32, text: &str) -> Vec<u8> {
         deadline_us: 0,
         model: String::new(),
         payload: text.as_bytes().to_vec(),
+        trace: None,
+    })
+}
+
+pub fn encode_trace_dump(request_id: u32) -> Vec<u8> {
+    encode(&Frame {
+        kind: FrameKind::TraceDump,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload: Vec::new(),
+        trace: None,
+    })
+}
+
+pub fn encode_trace_json(request_id: u32, json: &str) -> Vec<u8> {
+    encode(&Frame {
+        kind: FrameKind::TraceJson,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload: json.as_bytes().to_vec(),
+        trace: None,
     })
 }
 
@@ -356,10 +454,15 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
             return Err(FrameError::BadMagic);
         }
     }
-    if buf.len() >= 5 && buf[4] != WIRE_VERSION {
+    if buf.len() >= 5 && !(WIRE_VERSION_MIN..=WIRE_VERSION).contains(&buf[4]) {
         return Err(FrameError::UnsupportedVersion(buf[4]));
     }
     if buf.len() < HEADER_LEN {
+        return Ok(None);
+    }
+    let version = buf[4];
+    let hlen = header_len(version);
+    if buf.len() < hlen {
         return Ok(None);
     }
     let kind = FrameKind::from_u8(buf[5]).ok_or(FrameError::UnknownKind(buf[5]))?;
@@ -373,15 +476,17 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, FrameError> {
     if payload_len > MAX_PAYLOAD {
         return Err(FrameError::Oversized(payload_len));
     }
-    let total = HEADER_LEN + model_len + payload_len;
+    let trace = (version >= 2)
+        .then(|| TraceCtx { id: get_u64(&buf[HEADER_LEN..HEADER_LEN + 8]), flags: buf[HEADER_LEN + 8] });
+    let total = hlen + model_len + payload_len;
     if buf.len() < total {
         return Ok(None);
     }
-    let model = std::str::from_utf8(&buf[HEADER_LEN..HEADER_LEN + model_len])
+    let model = std::str::from_utf8(&buf[hlen..hlen + model_len])
         .map_err(|_| FrameError::Malformed("model id is not UTF-8"))?
         .to_string();
-    let payload = buf[HEADER_LEN + model_len..total].to_vec();
-    Ok(Some((Frame { kind, request_id, deadline_us, model, payload }, total)))
+    let payload = buf[hlen + model_len..total].to_vec();
+    Ok(Some((Frame { kind, request_id, deadline_us, model, payload, trace }, total)))
 }
 
 #[cfg(test)]
@@ -478,10 +583,74 @@ mod tests {
             deadline_us: 0,
             model: "m".into(),
             payload: vec![0u8; 6],
+            trace: None,
         };
         assert!(f.payload_f32().is_err());
         f.payload = vec![0u8; 8];
         assert_eq!(f.payload_f32().unwrap(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn untraced_frames_stay_version_1_bit_identical() {
+        // a tracing-aware build must keep emitting the pre-trace wire
+        // for untraced frames: version byte 1, 24-byte header
+        let bytes = encode_infer(3, "m", 0, &[1.0]);
+        assert_eq!(bytes[4], 1);
+        assert_eq!(bytes.len(), HEADER_LEN + 1 + 4);
+        let (f, _) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(f.trace, None);
+    }
+
+    #[test]
+    fn traced_frame_round_trips_version_2() {
+        let ctx = TraceCtx { id: 0xABCD_EF01_2345_6789, flags: 1 };
+        let bytes = encode_infer_t(42, "tiny_plain", 1500, &[1.0, -2.5], Some(ctx));
+        assert_eq!(bytes[4], 2);
+        assert_eq!(bytes.len(), HEADER_LEN + TRACE_EXT_LEN + 10 + 8);
+        let (f, used) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(f.trace, Some(ctx));
+        assert_eq!(f.model, "tiny_plain");
+        assert_eq!(f.payload_f32().unwrap(), vec![1.0, -2.5]);
+        // the reply-side encoders carry the context back the same way
+        let (ok, _) = decode(&encode_infer_ok_t(42, &[0.5], Some(ctx))).unwrap().unwrap();
+        assert_eq!(ok.trace, Some(ctx));
+        let (err, _) =
+            decode(&encode_error_t(42, ErrorReason::Overloaded, "q", Some(ctx))).unwrap().unwrap();
+        assert_eq!(err.trace, Some(ctx));
+    }
+
+    #[test]
+    fn v2_incremental_decode_needs_more_then_completes() {
+        let ctx = TraceCtx { id: 7, flags: 0 };
+        let bytes = encode_infer_t(9, "m", 0, &[3.5; 8], Some(ctx));
+        for cut in 0..bytes.len() {
+            assert_eq!(decode(&bytes[..cut]).unwrap(), None, "prefix of {cut} bytes");
+        }
+        let (f, used) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(f.trace, Some(ctx));
+    }
+
+    #[test]
+    fn version_3_rejected_version_1_still_decodes() {
+        let mut bytes = encode_metrics_req(0);
+        assert_eq!(bytes[4], 1, "untraced frames are v1");
+        assert!(decode(&bytes).unwrap().is_some(), "v1 must keep decoding");
+        bytes[4] = 3;
+        assert_eq!(decode(&bytes), Err(FrameError::UnsupportedVersion(3)));
+    }
+
+    #[test]
+    fn trace_frames_round_trip() {
+        let (req, _) = decode(&encode_trace_dump(5)).unwrap().unwrap();
+        assert_eq!(req.kind, FrameKind::TraceDump);
+        assert!(req.payload.is_empty());
+        let json = r#"{"traceEvents":[]}"#;
+        let (resp, _) = decode(&encode_trace_json(5, json)).unwrap().unwrap();
+        assert_eq!(resp.kind, FrameKind::TraceJson);
+        assert_eq!(resp.payload, json.as_bytes());
+        assert_eq!(resp.request_id, 5);
     }
 
     #[test]

@@ -36,5 +36,7 @@ pub mod server;
 
 pub use admission::{Admission, AdmissionConfig, Permit};
 pub use client::{ClientError, NetClient, Response};
-pub use frame::{ErrorReason, Frame, FrameKind, MAX_MODEL_ID, MAX_PAYLOAD, WIRE_VERSION};
+pub use frame::{
+    ErrorReason, Frame, FrameKind, MAX_MODEL_ID, MAX_PAYLOAD, WIRE_VERSION, WIRE_VERSION_MIN,
+};
 pub use server::{NetConfig, NetServer, NetStats};

@@ -50,6 +50,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::obs::metrics::with_labels;
+use crate::obs::recorder::{self, RecKind};
+use crate::obs::trace;
 use crate::obs::{Counter, Gauge};
 use crate::serve::net::admission::{Admission, AdmissionConfig};
 use crate::serve::net::fault;
@@ -126,6 +128,12 @@ struct NetObs {
     frames: Arc<Counter>,
     rx_bytes: Arc<Counter>,
     tx_bytes: Arc<Counter>,
+    /// Connections closed right after accept (fault-injected) —
+    /// mirrors [`NetStats::dropped_conns`] into the registry export.
+    dropped: Arc<Counter>,
+    /// Requests between admission and reply — mirrors
+    /// [`NetStats::inflight`].
+    inflight: Arc<Gauge>,
 }
 
 impl NetObs {
@@ -137,6 +145,8 @@ impl NetObs {
             frames: reg.counter("comq_net_frames_total"),
             rx_bytes: reg.counter("comq_net_rx_bytes_total"),
             tx_bytes: reg.counter("comq_net_tx_bytes_total"),
+            dropped: reg.counter("comq_net_dropped_conns_total"),
+            inflight: reg.gauge("comq_net_inflight"),
         }
     }
 
@@ -181,6 +191,10 @@ impl Inner {
 
     fn note_dropped_conn(&self) {
         self.counters.dropped_conns.fetch_add(1, Ordering::Relaxed);
+        if let Some(o) = &self.obs {
+            o.dropped.inc();
+        }
+        recorder::note(RecKind::DropConn, "accept-time drop (injected fault)");
     }
 
     fn note_conn_closed(&self) {
@@ -215,6 +229,24 @@ impl Inner {
         if let Some(o) = &self.obs {
             o.error(reason);
         }
+        // every error frame lands in the flight recorder as exactly one
+        // note, so recorder counts reconcile against `error_frames`
+        recorder::note(rec_kind(reason), reason.name());
+    }
+}
+
+/// The flight-recorder kind one error frame records as: typed sheds are
+/// `Shed`, executor panics are `Panic`, protocol/validation failures
+/// are `ErrorFrame`. The partition is total, so
+/// `count(Shed) + count(Panic) + count(ErrorFrame)` equals the
+/// [`NetStats::error_frames`] counter for a run traced end to end.
+fn rec_kind(reason: ErrorReason) -> RecKind {
+    match reason {
+        ErrorReason::DeadlineExceeded | ErrorReason::Overloaded | ErrorReason::Shutdown => {
+            RecKind::Shed
+        }
+        ErrorReason::ExecutorPanicked => RecKind::Panic,
+        _ => RecKind::ErrorFrame,
     }
 }
 
@@ -222,6 +254,19 @@ impl Inner {
 fn error_reply(inner: &Inner, request_id: u32, reason: ErrorReason, msg: &str) -> Vec<u8> {
     inner.note_error(reason);
     frame::encode_error(request_id, reason, msg)
+}
+
+/// [`error_reply`] with a trace echo: `echo` is the request's wire
+/// context when it carried one (a v1 client is never sent a v2 frame).
+fn error_reply_t(
+    inner: &Inner,
+    request_id: u32,
+    reason: ErrorReason,
+    msg: &str,
+    echo: Option<trace::TraceCtx>,
+) -> Vec<u8> {
+    inner.note_error(reason);
+    frame::encode_error_t(request_id, reason, msg, echo)
 }
 
 /// What handling one frame produced.
@@ -245,28 +290,47 @@ fn dispatch(
 ) -> Handled {
     fault::maybe_panic(fault::Site::Conn);
     inner.note_frame();
+    // request ingress timestamp: the root of the traced span tree. A
+    // wire context is *ignored* when tracing is off, so `COMQ_TRACE=off`
+    // keeps every buffer empty whatever clients send.
+    let t_in = trace::enabled().then(Instant::now);
     let rid = f.request_id;
     match f.kind {
         FrameKind::MetricsReq => {
             let text = crate::obs::registry().to_prometheus();
             Handled::Reply { bytes: frame::encode_metrics_text(rid, &text), close: false }
         }
+        FrameKind::TraceDump => {
+            let json = trace::export_chrome();
+            Handled::Reply { bytes: frame::encode_trace_json(rid, &json), close: false }
+        }
         FrameKind::Infer => {
+            // the traced identity of this request: the wire context, or
+            // a server-minted id for old (v1) clients; replies echo the
+            // context only when the request carried one on the wire
+            let ctx = t_in.map(|_| f.trace.unwrap_or_else(trace::mint_server));
+            let echo = f.trace.and(ctx);
+            // a pre-admission failure still produces a (tiny) trace:
+            // one error span plus a retained-as-error completion
+            let fail = |reason: ErrorReason, msg: &str, close: bool| -> Handled {
+                if let (Some(c), Some(t0)) = (ctx, t_in) {
+                    let now = Instant::now();
+                    trace::event(c.id, format!("error:{}", reason.name()), t0, now);
+                    trace::finish(
+                        c.id,
+                        now.saturating_duration_since(t0).as_nanos() as u64,
+                        reason.name(),
+                    );
+                }
+                Handled::Reply { bytes: error_reply_t(inner, rid, reason, msg, echo), close }
+            };
             let Some(entry) = inner.models.get(&f.model) else {
                 let msg = format!("unknown model '{}'", f.model);
-                return Handled::Reply {
-                    bytes: error_reply(inner, rid, ErrorReason::UnknownModel, &msg),
-                    close: true,
-                };
+                return fail(ErrorReason::UnknownModel, &msg, true);
             };
             let input = match f.payload_f32() {
                 Ok(v) => v,
-                Err(e) => {
-                    return Handled::Reply {
-                        bytes: error_reply(inner, rid, ErrorReason::BadPayload, &e.to_string()),
-                        close: true,
-                    }
-                }
+                Err(e) => return fail(ErrorReason::BadPayload, &e.to_string(), true),
             };
             if input.len() != entry.elems {
                 let msg = format!(
@@ -275,52 +339,48 @@ fn dispatch(
                     f.model,
                     entry.elems
                 );
-                return Handled::Reply {
-                    bytes: error_reply(inner, rid, ErrorReason::BadPayload, &msg),
-                    close: true,
-                };
+                return fail(ErrorReason::BadPayload, &msg, true);
             }
             if inner.draining.load(Ordering::Acquire) {
-                return Handled::Reply {
-                    bytes: error_reply(inner, rid, ErrorReason::Shutdown, "server is draining"),
-                    close: false,
-                };
+                return fail(ErrorReason::Shutdown, "server is draining", false);
             }
             // admission: queue depth first (leading indicator), then the
             // in-flight token bucket; a shed answers Overloaded on an
             // otherwise healthy connection
             if entry.admission.queue_is_full(entry.server.queue_depth()) {
                 entry.server.note_overload_shed();
-                return Handled::Reply {
-                    bytes: error_reply(inner, rid, ErrorReason::Overloaded, "queue full, back off"),
-                    close: false,
-                };
+                return fail(ErrorReason::Overloaded, "queue full, back off", false);
             }
             let Some(permit) = entry.admission.try_acquire() else {
                 entry.server.note_overload_shed();
-                return Handled::Reply {
-                    bytes: error_reply(
-                        inner,
-                        rid,
-                        ErrorReason::Overloaded,
-                        "too many requests in flight, back off",
-                    ),
-                    close: false,
-                };
+                return fail(
+                    ErrorReason::Overloaded,
+                    "too many requests in flight, back off",
+                    false,
+                );
             };
             let deadline = f.budget().map(|b| Instant::now() + b);
             inner.inflight.fetch_add(1, Ordering::AcqRel);
+            if let Some(o) = &inner.obs {
+                o.inflight.inc();
+            }
+            if let (Some(c), Some(t0)) = (ctx, t_in) {
+                trace::event(c.id, "admission", t0, Instant::now());
+            }
+            recorder::note(RecKind::Admit, &f.model);
             let inner2 = inner.clone();
-            entry.server.submit_with(
+            entry.server.submit_traced(
                 input,
                 deadline,
+                ctx,
                 Responder::new(move |res| {
+                    let t_wb = ctx.map(|_| Instant::now());
                     let mut bytes = match &res {
-                        Ok(logits) => frame::encode_infer_ok(rid, logits),
+                        Ok(logits) => frame::encode_infer_ok_t(rid, logits, echo),
                         Err(e) => {
                             let reason: ErrorReason = (*e).into();
                             inner2.note_error(reason);
-                            frame::encode_error(rid, reason, &e.to_string())
+                            frame::encode_error_t(rid, reason, &e.to_string(), echo)
                         }
                     };
                     if fault::garbage_reply() {
@@ -330,20 +390,41 @@ fn dispatch(
                     // on inflight==0 and must find these bytes queued
                     complete(bytes);
                     inner2.inflight.fetch_sub(1, Ordering::AcqRel);
+                    if let Some(o) = &inner2.obs {
+                        o.inflight.dec();
+                    }
                     drop(permit);
+                    // close the span tree: write-back, then the root
+                    // request span, then the retention decision
+                    if let (Some(c), Some(t0), Some(tw)) = (ctx, t_in, t_wb) {
+                        let now = Instant::now();
+                        trace::event(c.id, "write_back", tw, now);
+                        trace::event(c.id, "request", t0, now);
+                        let outcome = match &res {
+                            Ok(_) => "ok",
+                            Err(e) => e.name(),
+                        };
+                        trace::finish(
+                            c.id,
+                            now.saturating_duration_since(t0).as_nanos() as u64,
+                            outcome,
+                        );
+                    }
                 }),
             );
             Handled::Async
         }
-        FrameKind::InferOk | FrameKind::Error | FrameKind::MetricsText => Handled::Reply {
-            bytes: error_reply(
-                inner,
-                rid,
-                ErrorReason::Malformed,
-                "client sent a server-only frame kind",
-            ),
-            close: true,
-        },
+        FrameKind::InferOk | FrameKind::Error | FrameKind::MetricsText | FrameKind::TraceJson => {
+            Handled::Reply {
+                bytes: error_reply(
+                    inner,
+                    rid,
+                    ErrorReason::Malformed,
+                    "client sent a server-only frame kind",
+                ),
+                close: true,
+            }
+        }
     }
 }
 
@@ -990,7 +1071,10 @@ impl NetServer {
     /// event loop and every batcher executor. Idempotent; `Drop` calls
     /// it.
     pub fn shutdown(&self) {
-        self.inner.draining.store(true, Ordering::Release);
+        let first = !self.inner.draining.swap(true, Ordering::AcqRel);
+        if first {
+            recorder::note(RecKind::Drain, "net server draining");
+        }
         match &self.kind {
             #[cfg(target_os = "linux")]
             LoopKind::Epoll(c) => c.wake.wake(),
@@ -1006,6 +1090,25 @@ impl NetServer {
         }
         for e in self.inner.models.values() {
             e.server.shutdown();
+        }
+        // black-box readout: a drain that saw incidents (error frames,
+        // sheds, panics, respawns, dropped conns) dumps the last-N ring
+        // so the post-mortem shows what led up to them; a clean drain
+        // stays quiet
+        if first {
+            let incidents = [
+                RecKind::ErrorFrame,
+                RecKind::Shed,
+                RecKind::Respawn,
+                RecKind::Panic,
+                RecKind::DropConn,
+            ]
+            .iter()
+            .map(|k| recorder::count(*k))
+            .sum::<u64>();
+            if incidents > 0 {
+                recorder::dump("drain");
+            }
         }
     }
 }

@@ -1,0 +1,369 @@
+//! Loopback integration tests for end-to-end request tracing (PR 8):
+//! wire-level trace-context propagation on both transports, tail-based
+//! retention of the slowest K, flight-recorder reconciliation against
+//! injected panics, the `COMQ_TRACE=off` bit-identity contract, and the
+//! telescoping acceptance check (span tree sums to wire latency).
+//!
+//! Trace mode, retention and the flight recorder are process-global, so
+//! every test serializes on one lock, resets the global state on entry
+//! and pins `COMQ_TRACE` back to `Off` on exit.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use comq::deploy::save_packed_with_act;
+use comq::manifest::Manifest;
+use comq::obs::recorder::{self, RecKind};
+use comq::obs::trace::{self, TraceMode, Why};
+use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::serve::net::fault::{self, Site};
+use comq::serve::net::{ClientError, ErrorReason, NetClient, NetConfig, NetServer, Response};
+use comq::serve::{load_cached, BatchConfig, QuantizedModel};
+use comq::tensor::Tensor;
+use comq::util::json::Json;
+use comq::util::Rng;
+
+const MODEL: &str = "tiny_plain";
+const ELEMS: usize = 8 * 8 * 3;
+const RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Reset every piece of process-global trace state this binary mutates.
+fn fresh(mode: TraceMode) {
+    fault::clear();
+    trace::reset();
+    recorder::reset();
+    trace::set_slow_k(trace::DEFAULT_SLOW_K);
+    trace::set_mode(mode);
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("comq_serve_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().to_string()
+}
+
+/// The W4A8 synthetic-CNN fixture the other serving tests drive.
+fn fixture(tag: &str) -> (Manifest, Arc<QuantizedModel>) {
+    let (manifest, model) = tiny_plain_cnn(7);
+    let mut rng = Rng::new(0xF00D);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * ELEMS));
+    let (packed, act, qmodel) = quantize_all_layers(&manifest, &model, 4, 8, &calib).unwrap();
+    let path = tmp(&format!("{tag}.cqm"));
+    save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act)).unwrap();
+    let qm = load_cached(&manifest, MODEL, &path).unwrap();
+    (manifest, qm)
+}
+
+fn client(server: &NetServer) -> NetClient {
+    let mut c = NetClient::connect(server.local_addr()).expect("connect");
+    c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+    c
+}
+
+fn net_config() -> NetConfig {
+    NetConfig {
+        batch: BatchConfig { max_batch: 8, max_delay: Duration::from_millis(2), executors: 1 },
+        ..NetConfig::default()
+    }
+}
+
+/// One-at-a-time batcher so injected faults map to known requests.
+fn serial_config() -> NetConfig {
+    NetConfig {
+        batch: BatchConfig { max_batch: 1, max_delay: Duration::from_millis(0), executors: 1 },
+        ..NetConfig::default()
+    }
+}
+
+/// A client-minted trace context round-trips through the wire, the
+/// server and back onto the reply frame on both transports; an untraced
+/// (v1) request gets a server-minted id and never sees a v2 reply.
+#[test]
+fn trace_id_round_trips_on_both_transports() {
+    let _g = guard();
+    let (_manifest, qm) = fixture("roundtrip");
+    for force_fallback in [false, true] {
+        fresh(TraceMode::All);
+        let server = NetServer::bind(
+            "127.0.0.1:0",
+            vec![(MODEL.to_string(), qm.clone())],
+            NetConfig { force_fallback, ..net_config() },
+        )
+        .unwrap();
+        let mut c = client(&server);
+        let mut rng = Rng::new(0x7121D + force_fallback as u64);
+        let img = rng.normal_vec(ELEMS);
+
+        // traced request: the reply echoes the exact context
+        let ctx = trace::mint_client();
+        let id = c.send_infer_traced(MODEL, &img, None, Some(ctx)).unwrap();
+        let (resp, echoed) = c.recv_with_trace().expect("traced reply");
+        match resp {
+            Response::Logits { request_id, .. } => assert_eq!(request_id, id),
+            other => panic!("expected logits, got {other:?}"),
+        }
+        assert_eq!(echoed, Some(ctx), "reply must echo the request's trace context");
+        assert!(
+            trace::retained().iter().any(|(t, m)| *t == ctx.id && m.outcome == "ok"),
+            "the traced request must be retained under its client-minted id"
+        );
+        assert!(!trace::events_of(ctx.id).is_empty(), "span tree recorded under the wire id");
+
+        // explicit None forces an untraced v1 frame: the reply is v1
+        // (no echo) and the server minted its own id for the trace
+        let before: Vec<u64> = trace::retained().iter().map(|(t, _)| *t).collect();
+        let id2 = c.send_infer_traced(MODEL, &img, None, None).unwrap();
+        let (resp2, echoed2) = c.recv_with_trace().expect("untraced reply");
+        match resp2 {
+            Response::Logits { request_id, .. } => assert_eq!(request_id, id2),
+            other => panic!("expected logits, got {other:?}"),
+        }
+        assert_eq!(echoed2, None, "a v1 request must never be answered with a v2 frame");
+        let minted: Vec<u64> = trace::retained()
+            .iter()
+            .map(|(t, _)| *t)
+            .filter(|t| !before.contains(t))
+            .collect();
+        assert_eq!(minted.len(), 1, "exactly one new retained trace");
+        assert_ne!(
+            minted[0] & trace::SERVER_MINTED,
+            0,
+            "v1 requests get server-minted ids (high bit set)"
+        );
+        server.shutdown();
+    }
+    fresh(TraceMode::Off);
+}
+
+/// Under `sample:0` only tail retention keeps traces: exactly the K
+/// slowest requests of the window survive (the injected-slow ones), and
+/// they are marked `Why::Slow`.
+#[test]
+fn tail_retention_keeps_exactly_k_slow_requests() {
+    let _g = guard();
+    let (_manifest, qm) = fixture("tailk");
+    fresh(TraceMode::Sample(0.0));
+    const K: usize = 3;
+    trace::set_slow_k(K);
+    fault::set_spec("slow:40:3").unwrap(); // first 3 single-request batches stall 40 ms
+    let server =
+        NetServer::bind("127.0.0.1:0", vec![(MODEL.to_string(), qm.clone())], serial_config())
+            .unwrap();
+    let mut c = client(&server);
+    let mut rng = Rng::new(0x51_0E);
+    let img = rng.normal_vec(ELEMS);
+    let mut ids = Vec::new();
+    for _ in 0..13 {
+        let ctx = trace::mint_client();
+        ids.push(ctx.id);
+        let rid = c.send_infer_traced(MODEL, &img, None, Some(ctx)).unwrap();
+        loop {
+            match c.recv().expect("reply") {
+                Response::Logits { request_id, .. } if request_id == rid => break,
+                Response::Logits { .. } => continue,
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+    assert_eq!(fault::fired_slow(), 3, "the slow fault must have hit the first {K} requests");
+    let retained = trace::retained();
+    assert_eq!(
+        retained.len(),
+        K,
+        "sample:0 + no errors leaves exactly the slowest-{K}: {retained:?}"
+    );
+    for (id, meta) in &retained {
+        assert!(ids[..K].contains(id), "retained id {id:#x} must be one of the slow three");
+        assert_eq!(meta.why, Why::Slow);
+        assert!(
+            meta.total_ns >= 30_000_000,
+            "a retained-slow request carries its 40 ms stall, got {} ns",
+            meta.total_ns
+        );
+    }
+    fresh(TraceMode::Off);
+}
+
+/// The flight recorder is the crash black box: injected executor panics
+/// land in it with counts that reconcile exactly against both the fault
+/// layer and `NetStats` — `Shed + Panic + ErrorFrame == error_frames`.
+#[test]
+fn flight_recorder_reconciles_injected_panics() {
+    let _g = guard();
+    let (_manifest, qm) = fixture("blackbox");
+    fresh(TraceMode::All);
+    const STORM: usize = 2;
+    fault::set_spec(&format!("panic:exec:{STORM}")).unwrap();
+    let server =
+        NetServer::bind("127.0.0.1:0", vec![(MODEL.to_string(), qm.clone())], serial_config())
+            .unwrap();
+    let mut c = client(&server);
+    let mut rng = Rng::new(0xB1AC);
+    for i in 0..STORM {
+        match c.infer(MODEL, &rng.normal_vec(ELEMS)).unwrap_err() {
+            ClientError::Server { reason, .. } => {
+                assert_eq!(reason, ErrorReason::ExecutorPanicked, "storm request {i}")
+            }
+            other => panic!("expected ExecutorPanicked, got {other:?}"),
+        }
+    }
+    const OK: usize = 3;
+    for _ in 0..OK {
+        c.infer(MODEL, &rng.normal_vec(ELEMS)).expect("recovered after the storm");
+    }
+    server.shutdown();
+
+    assert_eq!(fault::fired_panics(Site::Exec), STORM as u64);
+    let st = server.model_server(MODEL).unwrap().stats();
+    assert_eq!(st.respawns, STORM);
+    // recorder vs supervisor: one Respawn note per injected panic
+    assert_eq!(recorder::count(RecKind::Respawn), STORM as u64);
+    // recorder vs wire: the error-frame partition is total
+    let net = server.stats();
+    assert_eq!(
+        recorder::count(RecKind::Shed)
+            + recorder::count(RecKind::Panic)
+            + recorder::count(RecKind::ErrorFrame),
+        net.error_frames as u64,
+        "flight-recorder counts must reconcile counter-for-counter against NetStats"
+    );
+    assert_eq!(recorder::count(RecKind::Panic), STORM as u64);
+    // every admitted request (errored or served) left an Admit note
+    assert_eq!(recorder::count(RecKind::Admit), (STORM + OK) as u64);
+    assert_eq!(recorder::count(RecKind::Drain), 1, "shutdown notes the drain once");
+    // the ring still holds the panic events for the post-mortem
+    let tail = recorder::last(recorder::CAP);
+    assert!(tail.iter().any(|e| e.kind == RecKind::Panic));
+    fresh(TraceMode::Off);
+}
+
+/// `COMQ_TRACE=off` is the bit-identity contract: logits match the
+/// direct in-process forward exactly and every trace/recorder buffer
+/// stays empty — even when the client sends a v2 traced frame.
+#[test]
+fn trace_off_is_bit_identical_with_empty_buffers() {
+    let _g = guard();
+    let (_manifest, qm) = fixture("off");
+    fresh(TraceMode::Off);
+    let server =
+        NetServer::bind("127.0.0.1:0", vec![(MODEL.to_string(), qm.clone())], net_config())
+            .unwrap();
+    let mut c = client(&server);
+    let mut rng = Rng::new(0x0FF);
+    for _ in 0..4 {
+        let img = rng.normal_vec(ELEMS);
+        let direct = qm.forward(&Tensor::new(&[1, 8, 8, 3], img.clone()));
+        // hand-built context: even an explicitly traced wire frame must
+        // not make the server record anything while tracing is off
+        let ctx = comq::obs::TraceCtx { id: 0xDEAD_BEEF, flags: trace::FLAG_SAMPLED };
+        let rid = c.send_infer_traced(MODEL, &img, None, Some(ctx)).unwrap();
+        let (resp, echoed) = c.recv_with_trace().expect("reply");
+        match resp {
+            Response::Logits { request_id, logits } => {
+                assert_eq!(request_id, rid);
+                assert_eq!(logits.len(), direct.data().len());
+                for (a, b) in logits.iter().zip(direct.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "COMQ_TRACE=off must be bit-identical");
+                }
+            }
+            other => panic!("expected logits, got {other:?}"),
+        }
+        assert_eq!(echoed, None, "tracing off: the server ignores wire contexts entirely");
+    }
+    assert_eq!(trace::events_buffered(), 0, "no span events under COMQ_TRACE=off");
+    assert!(trace::retained().is_empty(), "nothing retained under COMQ_TRACE=off");
+    assert_eq!(recorder::len(), 0, "flight-recorder ring stays empty");
+    assert_eq!(recorder::count(RecKind::Admit), 0);
+    server.shutdown();
+    assert_eq!(recorder::count(RecKind::Drain), 0, "recorder off: even the drain is unrecorded");
+}
+
+/// The acceptance check: one traced request's span tree telescopes —
+/// batcher stages are exactly contiguous (cut from shared instants),
+/// contained in the root `request` span, which is itself bounded by the
+/// client-observed wire latency; the Chrome export parses and carries
+/// the tree.
+#[test]
+fn span_tree_telescopes_to_wire_latency() {
+    let _g = guard();
+    let (_manifest, qm) = fixture("telescope");
+    fresh(TraceMode::All);
+    let server =
+        NetServer::bind("127.0.0.1:0", vec![(MODEL.to_string(), qm.clone())], net_config())
+            .unwrap();
+    let mut c = client(&server);
+    let mut rng = Rng::new(0x7E1E);
+    let img = rng.normal_vec(ELEMS);
+    let ctx = trace::mint_client();
+    let t0 = Instant::now();
+    let rid = c.send_infer_traced(MODEL, &img, None, Some(ctx)).unwrap();
+    loop {
+        match c.recv().expect("reply") {
+            Response::Logits { request_id, .. } if request_id == rid => break,
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+
+    let evs = trace::events_of(ctx.id);
+    let span = |name: &str| -> (u64, u64) {
+        let e = evs
+            .iter()
+            .find(|e| e.name == name)
+            .unwrap_or_else(|| panic!("span '{name}' missing from {evs:?}"));
+        (e.start_ns, e.dur_ns)
+    };
+    let (req_s, req_d) = span("request");
+    let (adm_s, adm_d) = span("admission");
+    let (qw_s, qw_d) = span("queue_wait");
+    let (co_s, co_d) = span("coalesce");
+    let (ex_s, ex_d) = span("exec");
+    let (ep_s, ep_d) = span("epilogue");
+
+    // batcher stages are cut from shared instants: exactly contiguous,
+    // no gaps and no overlap (the telescoping identity, in nanoseconds)
+    assert_eq!(qw_s + qw_d, co_s, "queue_wait must end where coalesce starts");
+    assert_eq!(co_s + co_d, ex_s, "coalesce must end where exec starts");
+    assert_eq!(ex_s + ex_d, ep_s, "exec must end where epilogue starts");
+
+    // tree containment: admission and the batcher pipeline live inside
+    // the root request span; write-back ends the tree with the root
+    assert!(adm_s >= req_s && adm_s + adm_d <= req_s + req_d);
+    assert!(qw_s >= req_s, "queue wait starts after dispatch");
+    assert!(ex_s + ex_d <= req_s + req_d, "exec finishes before the reply is written back");
+    let (wb_s, wb_d) = span("write_back");
+    assert_eq!(wb_s + wb_d, req_s + req_d, "write_back and request close together");
+
+    // per-layer exec breakdown rode along, attributed with its kernel
+    let layers: Vec<_> = evs.iter().filter(|e| e.name.starts_with("layer:")).collect();
+    assert!(!layers.is_empty(), "per-layer spans must be recorded under the traced id");
+    for l in &layers {
+        assert!(l.attrs.iter().any(|(k, _)| *k == "kernel"));
+        assert!(l.attrs.iter().any(|(k, v)| *k == "batch" && v.parse::<u64>().unwrap() >= 1));
+        assert!(l.start_ns >= ex_s && l.start_ns + l.dur_ns <= ex_s + ex_d);
+    }
+
+    // ...and the whole tree is bounded by what the client measured on
+    // the wire (the µs-level slack of the acceptance criterion is free
+    // here: the client timestamps *surround* the server's)
+    assert!(
+        req_d <= wall_ns,
+        "server-side request span ({req_d} ns) cannot exceed wire latency ({wall_ns} ns)"
+    );
+
+    // the export is valid Chrome trace-event JSON carrying this tree
+    let doc = Json::parse(&trace::export_chrome()).expect("export parses");
+    let events = doc.get("traceEvents").unwrap().arr().unwrap();
+    let field = |e: &Json, k: &str| e.get(k).and_then(|v| v.str()).ok().map(str::to_string);
+    let lanes = events.iter().filter(|e| field(e, "ph").as_deref() == Some("M")).count();
+    assert!(lanes >= 1, "one metadata lane per retained trace");
+    assert!(events.iter().any(|e| field(e, "name").as_deref() == Some("request")));
+    server.shutdown();
+    fresh(TraceMode::Off);
+}
