@@ -33,6 +33,12 @@ COMQ_TRACE=all cargo test -q
 # via fault::set_spec and must never see an env spec — a full-suite run
 # under COMQ_FAULT would fire injected faults inside unrelated tests)
 COMQ_FAULT=panic:conn:1 cargo test -q --test serve_net env_spec_smoke
+# lifecycle passes (PR 9): the env-driven io_err spec must kill the
+# first atomic save and leave nothing behind, and the env-driven model
+# budget must reach the registry's eviction machinery — each runs alone
+# in a fresh process so the one-shot env parse is what's under test
+COMQ_FAULT=io_err:1 cargo test -q --test serve_net env_spec_smoke
+COMQ_MODEL_BUDGET=1 cargo test -q --test registry_lifecycle env_budget_smoke
 # the intrinsics paths must not bit-rot uncompiled: a target-cpu=native
 # build exercises the target_feature functions plus whatever the
 # autovectorizer now assumes, in a separate target dir so the cache of

@@ -27,6 +27,23 @@
 //! static (calibration-exact) activation quantization. Readers that
 //! don't know those entries skip them, so the format version is
 //! unchanged.
+//!
+//! # Integrity and crash safety (container v2)
+//!
+//! `.cqm` is a CTS container, so it inherits the tensorstore v2
+//! integrity footer (see `tensorstore` module doc for the byte layout):
+//! per-entry CRC32s plus a whole-file CRC appended after the v1 body.
+//! Saves go through `tensorstore::write_store`'s temp-file + fsync +
+//! atomic-rename path, so a crash mid-save can never leave a
+//! truncated-but-parseable checkpoint — the loader sees either the old
+//! intact file or a typed integrity error. v1 files (python-written, or
+//! pre-footer) still load but are flagged
+//! [`tensorstore::Integrity::Unverified`], surfaced on
+//! [`PackedCheckpoint::integrity`] and warned about at load time.
+//! [`read_packed`] itself is hardened against arbitrary bytes: every
+//! header index, shape field, codes length and (δ, z) length is
+//! validated with a typed error naming the offending key — malformed
+//! input never panics or over-allocates.
 
 use std::collections::BTreeMap;
 
@@ -37,7 +54,7 @@ use crate::model::Model;
 use crate::quant::actq::ActQuant;
 use crate::quant::grid::LayerQuant;
 use crate::tensor::Tensor;
-use crate::tensorstore::{self, Entry, Store};
+use crate::tensorstore::{self, Entry, Integrity, Store};
 
 pub const VERSION: i32 = 1;
 
@@ -97,6 +114,9 @@ pub struct PackedCheckpoint {
     /// Every parameter stored in f32.
     pub fp: BTreeMap<String, Tensor>,
     pub act: Option<PackedAct>,
+    /// Whether the container bytes were CRC-verified (v2 footer) or
+    /// merely structurally parsed (v1 file).
+    pub integrity: Integrity,
 }
 
 /// Save a quantized model: `layers` are the packed quantized layers; all
@@ -169,15 +189,27 @@ pub fn save_packed_with_act(
 /// i8 panels straight from this; [`load_packed`] builds an f32 `Model`
 /// on top of it.
 pub fn read_packed(path: &str) -> Result<PackedCheckpoint> {
-    let store = tensorstore::read_store(path).with_context(|| format!("loading {path}"))?;
+    let loaded =
+        tensorstore::read_store_checked(path).with_context(|| format!("loading {path}"))?;
+    if loaded.integrity == Integrity::Unverified {
+        crate::log_warn!("{path}: v1 checkpoint without integrity footer — loading unverified");
+    }
+    let store = loaded.store;
     let meta = store
         .get("__meta__")
         .ok_or_else(|| anyhow!("{path}: missing __meta__"))?
         .ints()?;
+    if meta.len() != 3 {
+        bail!("{path}: __meta__ must be i32[3], found {} values", meta.len());
+    }
     if meta[0] != VERSION {
         bail!("{path}: unsupported version {}", meta[0]);
     }
+    if meta[1] <= 0 {
+        bail!("{path}: __meta__ bits {} out of range", meta[1]);
+    }
     let bits = meta[1] as u32;
+    let n_layers = meta[2];
     let mut fp = BTreeMap::new();
     let mut layers = Vec::new();
     let mut act_raw: Vec<(String, f32, f32)> = Vec::new();
@@ -186,26 +218,52 @@ pub fn read_packed(path: &str) -> Result<PackedCheckpoint> {
             fp.insert(name.to_string(), entry.tensor()?.clone());
         } else if let Some(name) = key.strip_prefix("q/").and_then(|r| r.strip_suffix("/shape")) {
             let sh = entry.ints()?;
+            if sh.len() != 3 {
+                bail!("{path}: '{key}' must be i32[3] = [m, n, bits], found {} values", sh.len());
+            }
+            if sh[0] < 0 || sh[1] < 0 || !(1..=32).contains(&sh[2]) {
+                bail!("{path}: '{key}' has invalid [m, n, bits] = {sh:?}");
+            }
             let (m, n, lbits) = (sh[0] as usize, sh[1] as usize, sh[2] as u32);
             let get = |suffix: &str| {
                 store
                     .get(&format!("q/{name}/{suffix}"))
                     .ok_or_else(|| anyhow!("{path}: layer '{name}' missing {suffix}"))
             };
+            let code_bytes = m
+                .checked_mul(n)
+                .and_then(|mn| mn.checked_mul(lbits as usize))
+                .map(|b| b.div_ceil(8))
+                .ok_or_else(|| anyhow!("{path}: '{key}' shape overflows usize"))?;
             let words = get("codes")?.ints()?;
+            if words.len() * 4 < code_bytes {
+                bail!(
+                    "{path}: 'q/{name}/codes' holds {} bytes but shape {m}x{n}x{lbits}b \
+                     needs {code_bytes}",
+                    words.len() * 4
+                );
+            }
             let mut bytes = Vec::with_capacity(words.len() * 4);
             for w in words {
                 bytes.extend_from_slice(&(*w as u32).to_le_bytes());
             }
-            bytes.truncate((m * n * lbits as usize).div_ceil(8));
+            bytes.truncate(code_bytes);
+            let delta = get("delta")?.tensor()?.data().to_vec();
+            let zero = get("zero")?.tensor()?.data().to_vec();
+            if delta.len() != n {
+                bail!("{path}: 'q/{name}/delta' has {} values, expected n={n}", delta.len());
+            }
+            if zero.len() != n {
+                bail!("{path}: 'q/{name}/zero' has {} values, expected n={n}", zero.len());
+            }
             layers.push(PackedLayer {
                 name: name.to_string(),
                 m,
                 n,
                 bits: lbits,
                 codes: bytes,
-                delta: get("delta")?.tensor()?.data().to_vec(),
-                zero: get("zero")?.tensor()?.data().to_vec(),
+                delta,
+                zero,
             });
         } else if let Some(name) = key.strip_prefix("aq/") {
             let row = entry.tensor()?.data();
@@ -215,9 +273,16 @@ pub fn read_packed(path: &str) -> Result<PackedCheckpoint> {
             act_raw.push((name.to_string(), row[0], row[1]));
         }
     }
+    if layers.len() != n_layers as usize {
+        bail!("{path}: __meta__ declares {n_layers} packed layers, found {}", layers.len());
+    }
     let act = match store.get("__act__") {
         Some(e) => {
-            let abits = e.ints()?[0] as u32;
+            let av = e.ints()?;
+            let abits = match av.first() {
+                Some(&b) if (1..=32).contains(&b) => b as u32,
+                _ => bail!("{path}: '__act__' must hold one bit-width in 1..=32, found {av:?}"),
+            };
             let by_layer = act_raw
                 .into_iter()
                 .map(|(name, scale, zero)| (name, ActQuant { scale, zero, bits: abits }))
@@ -226,7 +291,7 @@ pub fn read_packed(path: &str) -> Result<PackedCheckpoint> {
         }
         None => None,
     };
-    Ok(PackedCheckpoint { bits, layers, fp, act })
+    Ok(PackedCheckpoint { bits, layers, fp, act, integrity: loaded.integrity })
 }
 
 /// Load a packed checkpoint into a ready-to-run `Model` (manifest

@@ -11,6 +11,8 @@
 //! comq serve    --model M --packed FILE.cqm [--addr HOST:PORT]
 //!               [--max-batch N] [--max-delay-ms MS]
 //!               [--max-inflight N] [--max-queue N]
+//! comq swap     --model M --packed FILE.cqm [ADDR]
+//! comq models   --addr ADDR        (remote listing: epochs, registry)
 //! comq metrics  [ADDR] [--raw]
 //! comq trace    [ADDR] [--out FILE]
 //! ```
@@ -75,6 +77,7 @@ fn run() -> Result<()> {
         "quantize" => cmd_quantize(&args),
         "run-packed" => cmd_run_packed(&args),
         "serve" => cmd_serve(&args),
+        "swap" => cmd_swap(&args),
         "metrics" => cmd_metrics(&args),
         "trace" => cmd_trace(&args),
         "inspect" => cmd_inspect(&args),
@@ -102,6 +105,13 @@ USAGE:
              --max-batch N / --max-delay-ms MS   micro-batcher window
              --max-inflight N / --max-queue N    admission + shedding
              --drain-timeout-ms MS               shutdown drain bound
+  comq swap --model NAME --packed FILE.cqm [ADDR]
+             hot-swap a running server's model to a new checkpoint:
+             the new weights load off-path, in-flight requests finish
+             on the old epoch, nothing is dropped
+  comq models --addr ADDR   list a running server's models (epoch,
+             bits, integrity, residency) and its registry counters
+             (without --addr: the local artifact listing below)
   comq metrics [ADDR]   fetch a running server's metrics and pretty-print
              counters, gauges and histogram quantiles (default addr
              127.0.0.1:7943); --raw dumps the Prometheus text as-is
@@ -199,6 +209,16 @@ fn build_config(args: &Args) -> Result<RunConfig> {
 }
 
 fn cmd_models(args: &Args) -> Result<()> {
+    // `--addr` asks a running server instead of the local manifest:
+    // one line per served model (epoch, bits, integrity, residency)
+    // plus the model registry's lifecycle counters
+    if let Some(addr) = args.flags.get("addr") {
+        let mut client = comq::serve::NetClient::connect(addr.as_str())
+            .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+        let text = client.models().map_err(|e| anyhow!("models fetch: {e}"))?;
+        print!("{text}");
+        return Ok(());
+    }
     let rc = build_config(args)?;
     let manifest = Manifest::load(&rc.artifacts)?;
     println!(
@@ -436,6 +456,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             b.served, b.batches, b.shed_deadline, b.shed_overload, b.respawns
         );
     }
+    Ok(())
+}
+
+/// Hot-swap a running server's model to a new packed checkpoint over
+/// the wire. The server loads + preps the new weights off its event
+/// loop, answers every in-flight request from the old epoch, then
+/// flips — the reply reports both epochs once the swap is live.
+fn cmd_swap(args: &Args) -> Result<()> {
+    let model =
+        args.flags.get("model").ok_or_else(|| anyhow!("swap needs --model NAME"))?;
+    let packed =
+        args.flags.get("packed").ok_or_else(|| anyhow!("swap needs --packed FILE.cqm"))?;
+    let addr = client_addr(args);
+    let mut client = comq::serve::NetClient::connect(addr)
+        .map_err(|e| anyhow!("connect {addr}: {e}"))?;
+    let (old_epoch, new_epoch) =
+        client.swap(model, packed).map_err(|e| anyhow!("swap: {e}"))?;
+    println!(
+        "{model}: epoch {old_epoch} -> {new_epoch} ({packed}) — swap complete, old epoch drained"
+    );
     Ok(())
 }
 

@@ -2,7 +2,8 @@
 //!
 //! A bounded ring of the last [`CAP`] notable control-plane events —
 //! admissions, typed sheds, error frames, executor panics and respawns,
-//! dropped connections, drains — each with a monotonic timestamp on the
+//! dropped connections, drains, model lifecycle (checkpoint loads,
+//! hot-swaps, evictions) — each with a monotonic timestamp on the
 //! trace epoch. When something goes wrong (executor panic, drain, a
 //! `COMQ_FAULT`-injected failure) the ring is [`dump`]ed to the log so
 //! the post-mortem shows *what led up to it*, not just final counter
@@ -49,9 +50,15 @@ pub enum RecKind {
     DropConn = 5,
     /// Server drain began.
     Drain = 6,
+    /// Checkpoint decoded + prepped into the model registry.
+    Load = 7,
+    /// Hot-swap completed: a model flipped to a new epoch.
+    Swap = 8,
+    /// Registry entry evicted (budget pressure or superseded by swap).
+    Evict = 9,
 }
 
-const KINDS: usize = 7;
+const KINDS: usize = 10;
 
 impl RecKind {
     pub fn name(&self) -> &'static str {
@@ -63,6 +70,9 @@ impl RecKind {
             RecKind::Panic => "panic",
             RecKind::DropConn => "drop_conn",
             RecKind::Drain => "drain",
+            RecKind::Load => "load",
+            RecKind::Swap => "swap",
+            RecKind::Evict => "evict",
         }
     }
 }
@@ -169,6 +179,9 @@ const ALL_KINDS: [RecKind; KINDS] = [
     RecKind::Panic,
     RecKind::DropConn,
     RecKind::Drain,
+    RecKind::Load,
+    RecKind::Swap,
+    RecKind::Evict,
 ];
 
 /// Clear the ring and zero every count (tests).

@@ -52,12 +52,16 @@ pub mod packed;
 pub use batcher::{
     BatchConfig, Responder, ServeError, ServeObs, ServeResult, ServeStats, Server,
 };
-pub use net::{NetClient, NetConfig, NetServer};
+pub use net::{ModelEpoch, NetClient, NetConfig, NetServer};
 pub use gemm::{
     dwconv_i8_fused, dwconv_i8_fused_with, gemm_i8_fused, gemm_i8_fused_with, EpilogueCoeffs,
     GroupedQuantizedActs, QuantizedActs,
 };
-pub use model::{load_cached, registry_len, ActSource, ModelObs, QuantizedModel, DEFAULT_ACT_BITS};
+pub use model::{
+    load_cached, load_with_info, note_swap, registry_clear_idle, registry_len, registry_stats,
+    retire_cached, set_budget, ActSource, ModelObs, QuantizedModel, RegistryStats,
+    DEFAULT_ACT_BITS,
+};
 pub use packed::{GroupedPanel, Int8Panel};
 
 pub use crate::util::simd::Kernel;

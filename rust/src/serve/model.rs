@@ -13,7 +13,8 @@
 //! matches the W/A-quantized reference bit-for-argmax.
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -22,6 +23,7 @@ use crate::deploy::{self, PackedLayer};
 use crate::manifest::{Manifest, ModelConfig, ModelInfo};
 use crate::model::{LayerExec, Model, Tap};
 use crate::obs::metrics::with_labels;
+use crate::obs::recorder::{self, RecKind};
 use crate::obs::{span, trace, Counter, Histogram};
 use crate::quant::actq::ActQuant;
 use crate::serve::gemm::{
@@ -29,6 +31,7 @@ use crate::serve::gemm::{
 };
 use crate::serve::packed::{GroupedPanel, Int8Panel};
 use crate::tensor::Tensor;
+use crate::tensorstore::Integrity;
 
 /// Activation bits assumed when a checkpoint carries no calibrated
 /// activation grid (dynamic per-batch quantization).
@@ -204,6 +207,10 @@ pub struct QuantizedModel {
     quantizable: BTreeSet<String>,
     /// Present only when telemetry was on at build time.
     obs: Option<ModelObs>,
+    /// Whether the source checkpoint's bytes were CRC-verified.
+    /// In-memory builds ([`QuantizedModel::from_parts`] from the
+    /// pipeline) are trusted and report `Verified`.
+    integrity: Integrity,
 }
 
 impl QuantizedModel {
@@ -293,6 +300,7 @@ impl QuantizedModel {
             weight_bits: weight_bits.unwrap_or((0, 0)),
             quantizable,
             obs,
+            integrity: Integrity::Verified,
         })
     }
 
@@ -300,13 +308,21 @@ impl QuantizedModel {
     /// architecture). Falls back to dynamic activation quantization when
     /// the checkpoint stores no calibrated grid.
     pub fn load(manifest: &Manifest, model_name: &str, path: &str) -> Result<QuantizedModel> {
+        Self::load_with_info(manifest.model(model_name)?.clone(), path)
+    }
+
+    /// [`QuantizedModel::load`] without the manifest round-trip — the
+    /// hot-swap path already holds the `ModelInfo` of the serving model
+    /// and must not depend on the manifest still being on disk.
+    pub fn load_with_info(info: ModelInfo, path: &str) -> Result<QuantizedModel> {
         let ck = deploy::read_packed(path)?;
-        let info = manifest.model(model_name)?.clone();
         let act = match ck.act {
             Some(a) => ActSource::Static { bits: a.bits, by_layer: a.by_layer },
             None => ActSource::Dynamic { bits: DEFAULT_ACT_BITS },
         };
-        QuantizedModel::from_parts(info, ck.fp, &ck.layers, act)
+        let mut qm = QuantizedModel::from_parts(info, ck.fp, &ck.layers, act)?;
+        qm.integrity = ck.integrity;
+        Ok(qm)
     }
 
     /// Integer forward: x [b, img, img, 3] -> logits [b, classes].
@@ -377,6 +393,12 @@ impl QuantizedModel {
 
     pub fn act_source(&self) -> &ActSource {
         &self.act
+    }
+
+    /// Whether the source checkpoint's bytes were CRC-verified (v2
+    /// footer) or loaded from an unverifiable v1 file.
+    pub fn integrity(&self) -> Integrity {
+        self.integrity
     }
 
     /// Whether a layer still holds an f32 `{layer}/W` entry (diagnostic
@@ -476,36 +498,378 @@ impl LayerExec for QuantizedModel {
 }
 
 // ---------------------------------------------------------------------------
-// Registry: load each checkpoint once per process
+// Registry v2: load-once, byte-budgeted, LRU-evicting
 // ---------------------------------------------------------------------------
+//
+// Keyed by `model@path`. Each key is either `Ready` (a loaded model +
+// its resident bytes + an LRU stamp) or `Loading` (a gate the single
+// loader resolves and every concurrent caller waits on — fixing the
+// old check-unlock-decode-relock race where N first requests decoded
+// the same checkpoint N times). A `COMQ_MODEL_BUDGET` byte cap (k/m/g
+// suffixes; unset or 0 = unlimited) triggers LRU eviction of idle
+// entries — an entry is idle when the registry holds the only `Arc`,
+// so a model pinned by a serving epoch is never dropped mid-request.
 
-static REGISTRY: OnceLock<Mutex<HashMap<String, Arc<QuantizedModel>>>> = OnceLock::new();
+struct LoadGate {
+    /// `None` while the loader runs; the loader publishes `Ok(model)`
+    /// or the load error (stringified — `anyhow::Error` isn't `Clone`)
+    /// and every waiter shares it.
+    done: Mutex<Option<Result<Arc<QuantizedModel>, String>>>,
+    cv: Condvar,
+}
 
-fn registry() -> &'static Mutex<HashMap<String, Arc<QuantizedModel>>> {
+struct RegEntry {
+    model: Arc<QuantizedModel>,
+    bytes: u64,
+    last_used: u64,
+}
+
+enum Slot {
+    Loading(Arc<LoadGate>),
+    Ready(RegEntry),
+}
+
+static REGISTRY: OnceLock<Mutex<HashMap<String, Slot>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<HashMap<String, Slot>> {
     REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+/// Always-on lifecycle counters (plain atomics, like `NetStats`): the
+/// reconciliation side the tests and the obs-gated metrics both check
+/// against.
+#[derive(Default)]
+struct RegCounters {
+    loads: AtomicU64,
+    load_failures: AtomicU64,
+    evictions: AtomicU64,
+    swaps: AtomicU64,
+}
+
+fn counters() -> &'static RegCounters {
+    static C: OnceLock<RegCounters> = OnceLock::new();
+    C.get_or_init(RegCounters::default)
+}
+
+/// Snapshot of the registry's lifecycle counters + current residency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Successful checkpoint loads (decode + panel prep) ever.
+    pub loads: u64,
+    /// Loads that returned an error (every waiter shares one failure).
+    pub load_failures: u64,
+    /// Entries evicted (budget pressure or superseded by a swap).
+    pub evictions: u64,
+    /// Completed hot-swaps noted by the serving tier.
+    pub swaps: u64,
+    /// Resident panel bytes across `Ready` entries right now.
+    pub resident_bytes: u64,
+    /// Entries (ready + loading) right now.
+    pub len: usize,
+}
+
+pub fn registry_stats() -> RegistryStats {
+    let c = counters();
+    let (resident, len) = match REGISTRY.get() {
+        None => (0, 0),
+        Some(r) => {
+            let reg = r.lock().unwrap();
+            let resident = reg
+                .values()
+                .map(|s| match s {
+                    Slot::Ready(e) => e.bytes,
+                    Slot::Loading(_) => 0,
+                })
+                .sum();
+            (resident, reg.len())
+        }
+    };
+    RegistryStats {
+        loads: c.loads.load(Ordering::Relaxed),
+        load_failures: c.load_failures.load(Ordering::Relaxed),
+        evictions: c.evictions.load(Ordering::Relaxed),
+        swaps: c.swaps.load(Ordering::Relaxed),
+        resident_bytes: resident,
+        len,
+    }
+}
+
+fn lru_tick() -> u64 {
+    static TICK: AtomicU64 = AtomicU64::new(0);
+    TICK.fetch_add(1, Ordering::Relaxed) + 1
+}
+
+/// Registry byte budget: `u64::MAX` = unlimited. Read once from
+/// `COMQ_MODEL_BUDGET`; tests override via [`set_budget`].
+fn budget_cell() -> &'static AtomicU64 {
+    static B: OnceLock<AtomicU64> = OnceLock::new();
+    B.get_or_init(|| {
+        let v = match std::env::var("COMQ_MODEL_BUDGET").ok().as_deref().map(str::trim) {
+            None | Some("") => u64::MAX,
+            Some(s) => match parse_model_budget(s) {
+                Some(0) => u64::MAX,
+                Some(b) => b,
+                None => {
+                    crate::warn_once!("COMQ_MODEL_BUDGET='{s}' unparseable, budget unlimited");
+                    u64::MAX
+                }
+            },
+        };
+        AtomicU64::new(v)
+    })
+}
+
+/// Parse a byte budget with optional k/m/g suffix (powers of 1024).
+fn parse_model_budget(s: &str) -> Option<u64> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, mult) = match t.as_bytes().last()? {
+        b'k' => (&t[..t.len() - 1], 1u64 << 10),
+        b'm' => (&t[..t.len() - 1], 1u64 << 20),
+        b'g' => (&t[..t.len() - 1], 1u64 << 30),
+        _ => (t.as_str(), 1),
+    };
+    digits.trim().parse::<u64>().ok()?.checked_mul(mult)
+}
+
+/// Override the registry byte budget (tests; `None` = unlimited).
+pub fn set_budget(bytes: Option<u64>) {
+    budget_cell().store(bytes.unwrap_or(u64::MAX), Ordering::Relaxed);
+}
+
 /// Load a checkpoint through the process-wide registry: the decode +
-/// panel prep runs once per (model, path); every later caller gets the
-/// same `Arc`. The serving analogue of `runtime::Engine`'s compile
-/// cache.
+/// panel prep runs exactly once per (model, path) even under
+/// concurrent first requests — one caller loads, the rest block on its
+/// gate and share the result (or its error). The serving analogue of
+/// `runtime::Engine`'s compile cache.
 pub fn load_cached(
     manifest: &Manifest,
     model_name: &str,
     path: &str,
 ) -> Result<Arc<QuantizedModel>> {
-    let key = format!("{model_name}@{path}");
-    if let Some(m) = registry().lock().unwrap().get(&key) {
-        return Ok(m.clone());
-    }
-    // prep outside the lock (it can be slow); a racing double-load is
-    // benign — first insert wins
-    let qm = Arc::new(QuantizedModel::load(manifest, model_name, path)?);
-    let mut reg = registry().lock().unwrap();
-    Ok(reg.entry(key).or_insert(qm).clone())
+    load_with_info(manifest.model(model_name)?.clone(), path)
 }
 
-/// Checkpoints currently cached (diagnostics / tests).
+/// [`load_cached`] for callers that already hold the `ModelInfo` (the
+/// hot-swap path, which must not re-read the manifest).
+pub fn load_with_info(info: ModelInfo, path: &str) -> Result<Arc<QuantizedModel>> {
+    enum Next {
+        Hit(Arc<QuantizedModel>),
+        Wait(Arc<LoadGate>),
+        Load,
+    }
+    let key = format!("{}@{path}", info.name);
+    let next = {
+        let mut reg = registry().lock().unwrap();
+        let next = match reg.get_mut(&key) {
+            Some(Slot::Ready(e)) => {
+                e.last_used = lru_tick();
+                Next::Hit(e.model.clone())
+            }
+            Some(Slot::Loading(g)) => Next::Wait(g.clone()),
+            None => Next::Load,
+        };
+        if matches!(next, Next::Load) {
+            let g = Arc::new(LoadGate { done: Mutex::new(None), cv: Condvar::new() });
+            reg.insert(key.clone(), Slot::Loading(g));
+        }
+        next
+    };
+    match next {
+        Next::Hit(m) => Ok(m),
+        Next::Load => run_loader(&key, info, path),
+        Next::Wait(gate) => {
+            // another caller owns the load: wait for its published result
+            let mut done = gate.done.lock().unwrap();
+            while done.is_none() {
+                done = gate.cv.wait(done).unwrap();
+            }
+            match done.as_ref().unwrap() {
+                Ok(m) => Ok(m.clone()),
+                Err(e) => bail!("loading {key}: {e}"),
+            }
+        }
+    }
+}
+
+/// The single loader for a key: decode off-lock, publish the result to
+/// the gate, transition the slot. A panicking decode publishes a
+/// failure (so waiters don't hang) before resuming the panic.
+fn run_loader(key: &str, info: ModelInfo, path: &str) -> Result<Arc<QuantizedModel>> {
+    let model_label = info.name.clone();
+    let path = path.to_string();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        QuantizedModel::load_with_info(info, &path).map(Arc::new)
+    }));
+    let outcome: Result<Arc<QuantizedModel>> = match result {
+        Ok(r) => r,
+        Err(payload) => {
+            finish_load(key, &model_label, Err("loader panicked".into()));
+            std::panic::resume_unwind(payload);
+        }
+    };
+    match outcome {
+        Ok(m) => {
+            finish_load(key, &model_label, Ok(m.clone()));
+            Ok(m)
+        }
+        Err(e) => {
+            finish_load(key, &model_label, Err(format!("{e:#}")));
+            Err(e)
+        }
+    }
+}
+
+/// Transition a `Loading` slot to `Ready` (or remove it on failure),
+/// bump the counters/metrics/recorder, enforce the byte budget, and
+/// wake every waiter with the shared result.
+fn finish_load(key: &str, model: &str, result: Result<Arc<QuantizedModel>, String>) {
+    let gate = {
+        let mut reg = registry().lock().unwrap();
+        let gate = match reg.get(key) {
+            Some(Slot::Loading(g)) => Some(g.clone()),
+            _ => None,
+        };
+        match &result {
+            Ok(m) => {
+                counters().loads.fetch_add(1, Ordering::Relaxed);
+                recorder::note(RecKind::Load, key);
+                if crate::obs::enabled() {
+                    crate::obs::registry()
+                        .counter(&with_labels("comq_model_loads_total", &[("model", model)]))
+                        .inc();
+                }
+                let bytes = m.resident_bytes() as u64;
+                reg.insert(
+                    key.to_string(),
+                    Slot::Ready(RegEntry { model: m.clone(), bytes, last_used: lru_tick() }),
+                );
+                enforce_budget(&mut reg, Some(key));
+            }
+            Err(e) => {
+                counters().load_failures.fetch_add(1, Ordering::Relaxed);
+                if crate::obs::enabled() {
+                    crate::obs::registry()
+                        .counter(&with_labels(
+                            "comq_model_load_failures_total",
+                            &[("model", model)],
+                        ))
+                        .inc();
+                }
+                crate::log_warn!("registry: loading {key} failed: {e}");
+                reg.remove(key);
+            }
+        }
+        gate
+    };
+    if let Some(g) = gate {
+        let mut done = g.done.lock().unwrap();
+        *done = Some(result);
+        g.cv.notify_all();
+    }
+}
+
+/// Evict LRU idle entries until residency fits the budget. `keep`
+/// (the just-loaded key) is never evicted, nor is any model some other
+/// holder still pins (`Arc::strong_count > 1`) — dropping those would
+/// free nothing and could rip a model out from under an epoch.
+fn enforce_budget(reg: &mut HashMap<String, Slot>, keep: Option<&str>) {
+    let budget = budget_cell().load(Ordering::Relaxed);
+    if budget == u64::MAX {
+        return;
+    }
+    loop {
+        let resident: u64 = reg
+            .values()
+            .map(|s| match s {
+                Slot::Ready(e) => e.bytes,
+                Slot::Loading(_) => 0,
+            })
+            .sum();
+        if resident <= budget {
+            return;
+        }
+        let victim = reg
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Ready(e)
+                    if Some(k.as_str()) != keep && Arc::strong_count(&e.model) == 1 =>
+                {
+                    Some((e.last_used, k.clone()))
+                }
+                _ => None,
+            })
+            .min();
+        match victim {
+            Some((_, k)) => evict_key(reg, &k, "budget"),
+            None => {
+                crate::warn_once!(
+                    "COMQ_MODEL_BUDGET={budget} unmeetable: {resident} resident bytes are \
+                     all pinned or loading"
+                );
+                return;
+            }
+        }
+    }
+}
+
+fn evict_key(reg: &mut HashMap<String, Slot>, key: &str, reason: &str) {
+    if let Some(Slot::Ready(_)) = reg.remove(key) {
+        counters().evictions.fetch_add(1, Ordering::Relaxed);
+        recorder::note(RecKind::Evict, &format!("{key} ({reason})"));
+        if crate::obs::enabled() {
+            let model = key.split('@').next().unwrap_or(key).to_string();
+            crate::obs::registry()
+                .counter(&with_labels(
+                    "comq_model_evictions_total",
+                    &[("model", &model), ("reason", reason)],
+                ))
+                .inc();
+        }
+        crate::log_info!("registry: evicted {key} ({reason})");
+    }
+}
+
+/// Drop a retired checkpoint from the registry after a hot-swap
+/// replaced it — counted as an eviction with reason `superseded`.
+pub fn retire_cached(model_name: &str, path: &str) {
+    let key = format!("{model_name}@{path}");
+    let mut reg = registry().lock().unwrap();
+    evict_key(&mut reg, &key, "superseded");
+}
+
+/// Count a completed hot-swap (the serving tier calls this once per
+/// epoch flip, after the new model is live).
+pub fn note_swap(model_name: &str, detail: &str) {
+    counters().swaps.fetch_add(1, Ordering::Relaxed);
+    recorder::note(RecKind::Swap, &format!("{model_name}: {detail}"));
+    if crate::obs::enabled() {
+        crate::obs::registry()
+            .counter(&with_labels("comq_model_swaps_total", &[("model", model_name)]))
+            .inc();
+    }
+}
+
+/// Checkpoints currently cached, ready or loading (diagnostics/tests).
 pub fn registry_len() -> usize {
     REGISTRY.get().map(|r| r.lock().unwrap().len()).unwrap_or(0)
+}
+
+/// Remove every idle entry (tests that assert budget/eviction behavior
+/// need a clean slate; pinned entries stay, like under budget pressure).
+pub fn registry_clear_idle() {
+    if let Some(r) = REGISTRY.get() {
+        let mut reg = r.lock().unwrap();
+        let idle: Vec<String> = reg
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Ready(e) if Arc::strong_count(&e.model) == 1 => Some(k.clone()),
+                _ => None,
+            })
+            .collect();
+        for k in idle {
+            // direct removal, not an eviction: tests resetting state
+            // must not skew the eviction counters
+            reg.remove(&k);
+        }
+    }
 }

@@ -61,8 +61,11 @@ impl From<FrameError> for ClientError {
 /// One decoded server reply.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    /// `InferOk`: the logits for `request_id`.
-    Logits { request_id: u32, logits: Vec<f32> },
+    /// `InferOk`: the logits for `request_id`. `epoch` is the weight
+    /// generation that answered (servers stamp it on every reply;
+    /// `None` from pre-epoch servers) — pin follow-ups to exactly
+    /// these weights with `model@<epoch>`.
+    Logits { request_id: u32, logits: Vec<f32>, epoch: Option<u64> },
     /// A typed error frame for `request_id` (protocol-level errors
     /// carry request id 0).
     Error { request_id: u32, reason: ErrorReason, message: String },
@@ -71,6 +74,11 @@ pub enum Response {
     /// `TraceJson`: the server's retained traces as Chrome trace-event
     /// JSON.
     Trace { request_id: u32, json: String },
+    /// `SwapOk`: the hot-swap completed; the model flipped from
+    /// `old_epoch` to `new_epoch`.
+    SwapOk { request_id: u32, old_epoch: u64, new_epoch: u64 },
+    /// `ModelsText`: the server's model/registry listing.
+    Models { request_id: u32, text: String },
 }
 
 /// Blocking COMQ protocol client over one TCP connection.
@@ -144,7 +152,14 @@ impl NetClient {
                     let ctx = f.trace;
                     let resp = match f.kind {
                         FrameKind::InferOk => {
-                            Response::Logits { request_id: f.request_id, logits: f.payload_f32()? }
+                            // the reply's model field is "@<epoch>"
+                            // from epoch-aware servers, empty otherwise
+                            let (_, epoch) = frame::split_model_pin(&f.model);
+                            Response::Logits {
+                                request_id: f.request_id,
+                                logits: f.payload_f32()?,
+                                epoch,
+                            }
                         }
                         FrameKind::Error => {
                             let (reason, message) = f.error_reason()?;
@@ -157,6 +172,14 @@ impl NetClient {
                         FrameKind::TraceJson => Response::Trace {
                             request_id: f.request_id,
                             json: String::from_utf8_lossy(&f.payload).into_owned(),
+                        },
+                        FrameKind::SwapOk => {
+                            let (old_epoch, new_epoch) = frame::swap_ok_epochs(&f.payload)?;
+                            Response::SwapOk { request_id: f.request_id, old_epoch, new_epoch }
+                        }
+                        FrameKind::ModelsText => Response::Models {
+                            request_id: f.request_id,
+                            text: String::from_utf8_lossy(&f.payload).into_owned(),
                         },
                         other => return Err(ClientError::Unexpected(other)),
                     };
@@ -188,7 +211,9 @@ impl NetClient {
         let id = self.send_infer(model, input, budget)?;
         loop {
             match self.recv()? {
-                Response::Logits { request_id, logits } if request_id == id => return Ok(logits),
+                Response::Logits { request_id, logits, .. } if request_id == id => {
+                    return Ok(logits)
+                }
                 Response::Error { request_id, reason, message }
                     if request_id == id || request_id == 0 =>
                 {
@@ -231,6 +256,48 @@ impl NetClient {
         loop {
             match self.recv()? {
                 Response::Metrics { request_id, text } if request_id == id => return Ok(text),
+                Response::Error { request_id, reason, message }
+                    if request_id == id || request_id == 0 =>
+                {
+                    return Err(ClientError::Server { reason, message })
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    /// Hot-swap `model` to the checkpoint at `path` on the server.
+    /// Blocks until the swap completes (the server loads the new
+    /// weights off its event loop; in-flight inference keeps being
+    /// answered throughout). Returns `(old_epoch, new_epoch)`.
+    pub fn swap(&mut self, model: &str, path: &str) -> Result<(u64, u64), ClientError> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        self.stream.write_all(&frame::encode_swap_req(id, model, path))?;
+        loop {
+            match self.recv()? {
+                Response::SwapOk { request_id, old_epoch, new_epoch } if request_id == id => {
+                    return Ok((old_epoch, new_epoch))
+                }
+                Response::Error { request_id, reason, message }
+                    if request_id == id || request_id == 0 =>
+                {
+                    return Err(ClientError::Server { reason, message })
+                }
+                _ => continue,
+            }
+        }
+    }
+
+    /// Fetch the server's model/registry listing (one line per model:
+    /// epoch, bit-width, integrity, residency; plus registry totals).
+    pub fn models(&mut self) -> Result<String, ClientError> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1).max(1);
+        self.stream.write_all(&frame::encode_models_req(id))?;
+        loop {
+            match self.recv()? {
+                Response::Models { request_id, text } if request_id == id => return Ok(text),
                 Response::Error { request_id, reason, message }
                     if request_id == id || request_id == 0 =>
                 {

@@ -8,6 +8,11 @@
 //! slow:<ms>[:<n>]        stretch the exec stage by <ms> milliseconds
 //! drop_conn:<p>[:<n>]    close 1-in-round(1/p) connections after accept
 //! garbage_frame[:<n>]    corrupt the magic of an outgoing reply frame
+//! io_err[:<stage>][:<n>] fail a checkpoint-save I/O op; stage is one of
+//!                        create | write | sync | rename (omitted = any)
+//! corrupt_load:<off>[:<n>]  XOR one byte of checkpoint bytes at <off>
+//!                        (clamped to the file) after read, before parse
+//! slow_load:<ms>[:<n>]   stretch a checkpoint load by <ms> milliseconds
 //! ```
 //!
 //! `[:<n>]` is a **budget**: the fault fires exactly `n` times then
@@ -64,6 +69,39 @@ impl Site {
     }
 }
 
+/// Which I/O operation of the atomic checkpoint save an `io_err` fault
+/// fails. The four stages are exactly the four syscalls of the
+/// temp-file + fsync + rename sequence in `tensorstore::write_store` —
+/// the kill-point tests iterate all of them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoStage {
+    Create,
+    Write,
+    Sync,
+    Rename,
+}
+
+impl IoStage {
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoStage::Create => "create",
+            IoStage::Write => "write",
+            IoStage::Sync => "sync",
+            IoStage::Rename => "rename",
+        }
+    }
+
+    fn parse(s: &str) -> Option<IoStage> {
+        match s {
+            "create" => Some(IoStage::Create),
+            "write" => Some(IoStage::Write),
+            "sync" => Some(IoStage::Sync),
+            "rename" => Some(IoStage::Rename),
+            _ => None,
+        }
+    }
+}
+
 /// One armed fault.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FaultKind {
@@ -74,6 +112,12 @@ pub enum FaultKind {
     DropConn { period: u64 },
     /// Corrupt the magic of an outgoing reply frame.
     GarbageFrame,
+    /// Fail a checkpoint-save I/O operation (`None` = any stage).
+    IoErr { stage: Option<IoStage> },
+    /// XOR one byte of checkpoint bytes at this offset after read.
+    CorruptLoad { off: usize },
+    /// Sleep this long at the start of a checkpoint load.
+    SlowLoad(Duration),
 }
 
 /// An armed fault: kind + firing budget + fired count. Opaque outside
@@ -179,6 +223,29 @@ pub fn parse(spec: &str) -> Result<Vec<Fault>, String> {
                 (FaultKind::DropConn { period }, parse_budget(rest.get(1))?)
             }
             "garbage_frame" => (FaultKind::GarbageFrame, parse_budget(rest.first())?),
+            "io_err" => match rest.first() {
+                // the stage is optional, so a numeric first field is the
+                // budget: `io_err:1` = any stage, fire once
+                None => (FaultKind::IoErr { stage: None }, None),
+                Some(s) => match IoStage::parse(s) {
+                    Some(st) => (FaultKind::IoErr { stage: Some(st) }, parse_budget(rest.get(1))?),
+                    None => (FaultKind::IoErr { stage: None }, parse_budget(rest.first())?),
+                },
+            },
+            "corrupt_load" => {
+                let off: usize = rest
+                    .first()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("corrupt_load needs a byte offset: '{part}'"))?;
+                (FaultKind::CorruptLoad { off }, parse_budget(rest.get(1))?)
+            }
+            "slow_load" => {
+                let ms: u64 = rest
+                    .first()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("slow_load needs milliseconds: '{part}'"))?;
+                (FaultKind::SlowLoad(Duration::from_millis(ms)), parse_budget(rest.get(1))?)
+            }
             other => return Err(format!("unknown fault kind '{other}' in '{part}'")),
         };
         out.push(Fault { kind, budget: budget.map(AtomicU64::new), fired: AtomicU64::new(0) });
@@ -233,6 +300,21 @@ pub fn fired_drops() -> u64 {
     fired_where(|k| matches!(k, FaultKind::DropConn { .. }))
 }
 
+/// Firings of `io_err` faults.
+pub fn fired_io_errors() -> u64 {
+    fired_where(|k| matches!(k, FaultKind::IoErr { .. }))
+}
+
+/// Firings of `corrupt_load` faults.
+pub fn fired_corrupt_loads() -> u64 {
+    fired_where(|k| matches!(k, FaultKind::CorruptLoad { .. }))
+}
+
+/// Firings of `slow_load` faults.
+pub fn fired_slow_loads() -> u64 {
+    fired_where(|k| matches!(k, FaultKind::SlowLoad(_)))
+}
+
 /// Panic at `site` if a matching fault is armed and in budget.
 /// The panic message names the injection so escaped ones are
 /// recognizable in logs.
@@ -278,6 +360,36 @@ pub fn garbage_reply() -> bool {
     st.faults.iter().any(|f| matches!(f.kind, FaultKind::GarbageFrame) && f.take())
 }
 
+/// Whether the checkpoint-save I/O operation at `stage` should fail.
+/// A stage-less `io_err` matches every stage (first boundary wins).
+pub fn io_error_at(stage: IoStage) -> bool {
+    let st = state().lock().unwrap();
+    st.faults.iter().any(|f| {
+        matches!(f.kind, FaultKind::IoErr { stage: s } if s.is_none() || s == Some(stage))
+            && f.take()
+    })
+}
+
+/// Byte offset to corrupt in checkpoint bytes about to be parsed, if a
+/// `corrupt_load` fault is armed and in budget.
+pub fn corrupt_load() -> Option<usize> {
+    let st = state().lock().unwrap();
+    st.faults.iter().find_map(|f| match f.kind {
+        FaultKind::CorruptLoad { off } if f.take() => Some(off),
+        _ => None,
+    })
+}
+
+/// The injected checkpoint-load delay, if a `slow_load` fault is armed
+/// and in budget.
+pub fn slow_load() -> Option<Duration> {
+    let st = state().lock().unwrap();
+    st.faults.iter().find_map(|f| match f.kind {
+        FaultKind::SlowLoad(d) if f.take() => Some(d),
+        _ => None,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -305,6 +417,44 @@ mod tests {
         assert!(parse("drop_conn:1.5").is_err());
         assert!(parse("explode:now").is_err());
         assert!(parse("panic:exec:many").is_err());
+        assert!(parse("corrupt_load").is_err());
+        assert!(parse("corrupt_load:deep").is_err());
+        assert!(parse("slow_load:soon").is_err());
+        assert!(parse("io_err:fsync").is_err()); // not a stage, not a budget
+    }
+
+    #[test]
+    fn lifecycle_spec_parsing() {
+        let fs =
+            parse("io_err, io_err:rename:2, io_err:1, corrupt_load:64:1, slow_load:20").unwrap();
+        assert_eq!(fs.len(), 5);
+        assert_eq!(fs[0].kind, FaultKind::IoErr { stage: None });
+        assert!(fs[0].budget.is_none());
+        assert_eq!(fs[1].kind, FaultKind::IoErr { stage: Some(IoStage::Rename) });
+        assert_eq!(fs[1].budget.as_ref().unwrap().load(Ordering::Relaxed), 2);
+        // a numeric first field on io_err is the budget, not a stage
+        assert_eq!(fs[2].kind, FaultKind::IoErr { stage: None });
+        assert_eq!(fs[2].budget.as_ref().unwrap().load(Ordering::Relaxed), 1);
+        assert_eq!(fs[3].kind, FaultKind::CorruptLoad { off: 64 });
+        assert_eq!(fs[3].budget.as_ref().unwrap().load(Ordering::Relaxed), 1);
+        assert_eq!(fs[4].kind, FaultKind::SlowLoad(Duration::from_millis(20)));
+        assert!(fs[4].budget.is_none());
+    }
+
+    #[test]
+    fn io_err_stage_matching() {
+        let f = Fault {
+            kind: FaultKind::IoErr { stage: Some(IoStage::Sync) },
+            budget: Some(AtomicU64::new(1)),
+            fired: AtomicU64::new(0),
+        };
+        // staged fault only matches its own stage
+        let matches = |stage: IoStage| {
+            matches!(f.kind, FaultKind::IoErr { stage: s } if s.is_none() || s == Some(stage))
+        };
+        assert!(!matches(IoStage::Create));
+        assert!(!matches(IoStage::Rename));
+        assert!(matches(IoStage::Sync));
     }
 
     #[test]

@@ -33,7 +33,16 @@
 //! `MetricsText` carries the Prometheus text exposition — the PR 6
 //! telemetry surfaces over the same transport as inference; `TraceDump`
 //! is empty and `TraceJson` carries the retained traces of the PR 8
-//! flight recorder as Chrome trace-event JSON.
+//! flight recorder as Chrome trace-event JSON; `SwapReq` carries the
+//! new checkpoint path (UTF-8) in the payload with the model field
+//! naming the model to swap, answered by `SwapOk` (`[old_epoch,
+//! new_epoch]` as two LE u64s); `ModelsReq` is empty and `ModelsText`
+//! carries a human-readable listing of the serving models.
+//!
+//! An `Infer` model field may carry an epoch pin (`name@<epoch>`,
+//! see [`split_model_pin`]); `InferOk` replies echo the answering
+//! epoch as `@<epoch>` in their model field, which pre-epoch clients
+//! already ignore.
 //!
 //! Request ids make the protocol pipelined: a client may have many
 //! requests outstanding on one connection and match replies by id (the
@@ -96,6 +105,16 @@ pub enum FrameKind {
     TraceDump = 6,
     /// Server → client: Chrome trace-event JSON.
     TraceJson = 7,
+    /// Client → server (admin): hot-swap `model` to the checkpoint
+    /// whose path is the UTF-8 payload.
+    SwapReq = 8,
+    /// Server → client: swap done; payload is `[old_epoch u64,
+    /// new_epoch u64]` LE.
+    SwapOk = 9,
+    /// Client → server (admin): list the serving models.
+    ModelsReq = 10,
+    /// Server → client: human-readable model listing (UTF-8).
+    ModelsText = 11,
 }
 
 impl FrameKind {
@@ -108,6 +127,10 @@ impl FrameKind {
             5 => Some(FrameKind::MetricsText),
             6 => Some(FrameKind::TraceDump),
             7 => Some(FrameKind::TraceJson),
+            8 => Some(FrameKind::SwapReq),
+            9 => Some(FrameKind::SwapOk),
+            10 => Some(FrameKind::ModelsReq),
+            11 => Some(FrameKind::ModelsText),
             _ => None,
         }
     }
@@ -133,6 +156,13 @@ pub enum ErrorReason {
     ExecutorPanicked = 9,
     Shutdown = 10,
     Internal = 11,
+    /// The model id names a served model, but no epoch can answer right
+    /// now — evicted, mid-load, failed verification, or the request
+    /// pinned a retired epoch. Distinct from [`ErrorReason::UnknownModel`]
+    /// (which is connection-fatal: the client asked for something this
+    /// server never serves); `ModelUnavailable` is per-request and worth
+    /// retrying after a backoff or without the stale pin.
+    ModelUnavailable = 12,
 }
 
 impl ErrorReason {
@@ -150,6 +180,7 @@ impl ErrorReason {
             9 => Some(ExecutorPanicked),
             10 => Some(Shutdown),
             11 => Some(Internal),
+            12 => Some(ModelUnavailable),
             _ => None,
         }
     }
@@ -168,6 +199,7 @@ impl ErrorReason {
             ExecutorPanicked => "executor_panicked",
             Shutdown => "shutdown",
             Internal => "internal",
+            ModelUnavailable => "model_unavailable",
         }
     }
 
@@ -360,6 +392,19 @@ pub fn encode_infer_ok(request_id: u32, logits: &[f32]) -> Vec<u8> {
 }
 
 pub fn encode_infer_ok_t(request_id: u32, logits: &[f32], trace: Option<TraceCtx>) -> Vec<u8> {
+    encode_infer_ok_pinned(request_id, logits, trace, None)
+}
+
+/// `InferOk` carrying the serving epoch that produced the logits in
+/// the (otherwise unused) model field, as `@<epoch>` — old clients
+/// ignore the field, epoch-aware ones surface the pin. `None` keeps
+/// the pre-swap bytes bit-identical.
+pub fn encode_infer_ok_pinned(
+    request_id: u32,
+    logits: &[f32],
+    trace: Option<TraceCtx>,
+    epoch: Option<u64>,
+) -> Vec<u8> {
     let mut payload = Vec::with_capacity(logits.len() * 4);
     for v in logits {
         payload.extend_from_slice(&v.to_le_bytes());
@@ -368,7 +413,7 @@ pub fn encode_infer_ok_t(request_id: u32, logits: &[f32], trace: Option<TraceCtx
         kind: FrameKind::InferOk,
         request_id,
         deadline_us: 0,
-        model: String::new(),
+        model: epoch.map(|e| format!("@{e}")).unwrap_or_default(),
         payload,
         trace,
     })
@@ -439,6 +484,75 @@ pub fn encode_trace_json(request_id: u32, json: &str) -> Vec<u8> {
         payload: json.as_bytes().to_vec(),
         trace: None,
     })
+}
+
+pub fn encode_swap_req(request_id: u32, model: &str, path: &str) -> Vec<u8> {
+    encode(&Frame {
+        kind: FrameKind::SwapReq,
+        request_id,
+        deadline_us: 0,
+        model: model.to_string(),
+        payload: path.as_bytes().to_vec(),
+        trace: None,
+    })
+}
+
+pub fn encode_swap_ok(request_id: u32, old_epoch: u64, new_epoch: u64) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(16);
+    payload.extend_from_slice(&old_epoch.to_le_bytes());
+    payload.extend_from_slice(&new_epoch.to_le_bytes());
+    encode(&Frame {
+        kind: FrameKind::SwapOk,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload,
+        trace: None,
+    })
+}
+
+pub fn encode_models_req(request_id: u32) -> Vec<u8> {
+    encode(&Frame {
+        kind: FrameKind::ModelsReq,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload: Vec::new(),
+        trace: None,
+    })
+}
+
+pub fn encode_models_text(request_id: u32, text: &str) -> Vec<u8> {
+    encode(&Frame {
+        kind: FrameKind::ModelsText,
+        request_id,
+        deadline_us: 0,
+        model: String::new(),
+        payload: text.as_bytes().to_vec(),
+        trace: None,
+    })
+}
+
+/// Split a `SwapOk` payload into `(old_epoch, new_epoch)`.
+pub fn swap_ok_epochs(payload: &[u8]) -> Result<(u64, u64), FrameError> {
+    if payload.len() != 16 {
+        return Err(FrameError::Malformed("SwapOk payload must be 16 bytes"));
+    }
+    Ok((get_u64(&payload[..8]), get_u64(&payload[8..])))
+}
+
+/// Split a request's model field into `(name, epoch pin)`: a trailing
+/// `@<integer>` is a version pin; everything else is a bare name.
+/// Splitting at the *last* `@` keeps names containing `@` unambiguous
+/// as long as the final segment is numeric.
+pub fn split_model_pin(model: &str) -> (&str, Option<u64>) {
+    match model.rsplit_once('@') {
+        Some((name, e)) if !e.is_empty() => match e.parse::<u64>() {
+            Ok(epoch) => (name, Some(epoch)),
+            Err(_) => (model, None),
+        },
+        _ => (model, None),
+    }
 }
 
 /// Incremental decode: `Ok(Some((frame, consumed)))` when `buf` starts
@@ -655,11 +769,62 @@ mod tests {
 
     #[test]
     fn reason_codes_round_trip() {
-        for code in 1..=11u8 {
+        for code in 1..=12u8 {
             let r = ErrorReason::from_u8(code).unwrap();
             assert_eq!(r as u8, code, "{}", r.name());
         }
         assert_eq!(ErrorReason::from_u8(0), None);
-        assert_eq!(ErrorReason::from_u8(12), None);
+        assert_eq!(ErrorReason::from_u8(13), None);
+    }
+
+    #[test]
+    fn model_unavailable_is_per_request() {
+        // the whole point of the reason: a retryable failure, unlike
+        // UnknownModel which is connection-fatal
+        assert!(!ErrorReason::ModelUnavailable.closes_connection());
+        assert!(ErrorReason::UnknownModel.closes_connection());
+    }
+
+    #[test]
+    fn swap_frames_round_trip() {
+        let (req, _) = decode(&encode_swap_req(3, "tiny", "/ckpt/new.cqm")).unwrap().unwrap();
+        assert_eq!(req.kind, FrameKind::SwapReq);
+        assert_eq!(req.model, "tiny");
+        assert_eq!(req.payload, b"/ckpt/new.cqm");
+        let (ok, _) = decode(&encode_swap_ok(3, 1, 2)).unwrap().unwrap();
+        assert_eq!(ok.kind, FrameKind::SwapOk);
+        assert_eq!(swap_ok_epochs(&ok.payload).unwrap(), (1, 2));
+        assert!(swap_ok_epochs(&[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn models_frames_round_trip() {
+        let (req, _) = decode(&encode_models_req(4)).unwrap().unwrap();
+        assert_eq!(req.kind, FrameKind::ModelsReq);
+        assert!(req.payload.is_empty());
+        let (txt, _) = decode(&encode_models_text(4, "tiny epoch=2\n")).unwrap().unwrap();
+        assert_eq!(txt.kind, FrameKind::ModelsText);
+        assert_eq!(txt.payload, b"tiny epoch=2\n");
+    }
+
+    #[test]
+    fn model_pin_parsing() {
+        assert_eq!(split_model_pin("tiny"), ("tiny", None));
+        assert_eq!(split_model_pin("tiny@3"), ("tiny", Some(3)));
+        assert_eq!(split_model_pin("tiny@"), ("tiny@", None));
+        assert_eq!(split_model_pin("tiny@next"), ("tiny@next", None));
+        assert_eq!(split_model_pin("a@b@7"), ("a@b", Some(7)));
+        assert_eq!(split_model_pin(""), ("", None));
+    }
+
+    #[test]
+    fn pinned_infer_ok_carries_epoch_and_stays_v1() {
+        let bytes = encode_infer_ok_pinned(8, &[0.5, 1.5], None, Some(4));
+        assert_eq!(bytes[4], 1, "pin must not force the v2 extension");
+        let (f, _) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(f.model, "@4");
+        assert_eq!(split_model_pin(&f.model), ("", Some(4)));
+        // un-pinned replies stay byte-identical to the pre-epoch wire
+        assert_eq!(encode_infer_ok_pinned(8, &[0.5], None, None), encode_infer_ok(8, &[0.5]));
     }
 }

@@ -39,4 +39,4 @@ pub use client::{ClientError, NetClient, Response};
 pub use frame::{
     ErrorReason, Frame, FrameKind, MAX_MODEL_ID, MAX_PAYLOAD, WIRE_VERSION, WIRE_VERSION_MIN,
 };
-pub use server::{NetConfig, NetServer, NetStats};
+pub use server::{ModelEpoch, NetConfig, NetServer, NetStats};

@@ -35,6 +35,14 @@
 //!   answers everything already submitted (bounded by
 //!   [`NetConfig::drain_timeout`]), flushes, then joins the loop and
 //!   the batcher executors.
+//! * **Hot-swap without drops** — a `SwapReq` loads the new checkpoint
+//!   off the event loop while the old epoch keeps serving, flips the
+//!   model's current [`ModelEpoch`] atomically, then drains the old
+//!   epoch so every request it admitted is answered from the weights
+//!   it was admitted under. Replies carry the answering epoch; a
+//!   client that pins `model@<epoch>` gets a retryable
+//!   `ModelUnavailable` error once that epoch is retired, never
+//!   silently different weights.
 //! * **Fault containment** — a panic while handling a frame
 //!   (`COMQ_FAULT=panic:conn`) is caught per-frame; the client gets an
 //!   `Internal` error frame and loses only its own connection.
@@ -43,16 +51,18 @@ use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::manifest::ModelInfo;
 use crate::obs::metrics::with_labels;
 use crate::obs::recorder::{self, RecKind};
 use crate::obs::trace;
 use crate::obs::{Counter, Gauge};
+use crate::serve::model;
 use crate::serve::net::admission::{Admission, AdmissionConfig};
 use crate::serve::net::fault;
 use crate::serve::net::frame::{self, ErrorReason, Frame, FrameKind};
@@ -159,11 +169,80 @@ impl NetObs {
     }
 }
 
-struct ModelEntry {
-    server: Server,
-    admission: Arc<Admission>,
+/// One live generation of a served model: a micro-batcher bound to one
+/// set of weights, tagged with the epoch clients may pin
+/// (`model@<epoch>` on the wire). A hot-swap builds the next
+/// `ModelEpoch` off-path, atomically flips the entry's `current` Arc,
+/// then drains this one — every request it admitted is answered from
+/// the weights the client saw at admission time.
+///
+/// `Deref`s to the inner [`Server`], so handles returned by
+/// [`NetServer::model_server`] keep their `.stats()` /
+/// `.queue_depth()` call shape.
+pub struct ModelEpoch {
+    /// Monotonic per-model generation; the first bind is epoch 1.
+    pub epoch: u64,
     /// f32 elements one image must carry (`side·side·3`).
     elems: usize,
+    /// Registry key path this epoch was loaded from (`None` for models
+    /// handed to [`NetServer::bind`] as already-built Arcs). Retired
+    /// from the registry as `superseded` when a swap replaces it.
+    source: Option<String>,
+    /// One-line description for the `comq models` listing, captured at
+    /// build time (the batcher owns the model afterwards).
+    desc: String,
+    server: Server,
+}
+
+impl std::ops::Deref for ModelEpoch {
+    type Target = Server;
+
+    fn deref(&self) -> &Server {
+        &self.server
+    }
+}
+
+impl ModelEpoch {
+    fn build(
+        epoch: u64,
+        qm: Arc<QuantizedModel>,
+        source: Option<String>,
+        batch: BatchConfig,
+    ) -> ModelEpoch {
+        let side = qm.input_side();
+        let desc = format!(
+            "bits={} act={} integrity={} resident={}B",
+            qm.weight_bits_label(),
+            qm.act_source().bits(),
+            qm.integrity().name(),
+            qm.resident_bytes()
+        );
+        ModelEpoch {
+            epoch,
+            elems: side * side * 3,
+            source,
+            desc,
+            server: Server::start(qm, batch),
+        }
+    }
+}
+
+struct ModelEntry {
+    /// Architecture/config identity reused to decode swapped-in
+    /// checkpoints — a swap replaces weights, never the architecture.
+    info: ModelInfo,
+    current: Mutex<Arc<ModelEpoch>>,
+    /// Shared across epochs on purpose: a swap must not reset the
+    /// in-flight token bucket underneath admitted requests.
+    admission: Arc<Admission>,
+    batch: BatchConfig,
+    next_epoch: AtomicU64,
+}
+
+impl ModelEntry {
+    fn current(&self) -> Arc<ModelEpoch> {
+        self.current.lock().unwrap().clone()
+    }
 }
 
 /// State shared between the listener loop, connection handlers and
@@ -324,20 +403,37 @@ fn dispatch(
                 }
                 Handled::Reply { bytes: error_reply_t(inner, rid, reason, msg, echo), close }
             };
-            let Some(entry) = inner.models.get(&f.model) else {
-                let msg = format!("unknown model '{}'", f.model);
+            // `model@<epoch>` pins the request to one weight
+            // generation; a bare name takes whatever is current
+            let (mname, pin) = frame::split_model_pin(&f.model);
+            let Some(entry) = inner.models.get(mname) else {
+                let msg = format!("unknown model '{mname}'");
                 return fail(ErrorReason::UnknownModel, &msg, true);
             };
+            // hold the epoch lock through the submit: a concurrent
+            // swap can only flip before this pin check or after the
+            // request is safely in the old epoch's queue (which the
+            // swap then drains and answers) — never in between. No
+            // admitted request ever lands on a dead batcher.
+            let cur = entry.current.lock().unwrap();
+            if let Some(p) = pin {
+                if p != cur.epoch {
+                    let msg = format!(
+                        "model '{mname}' epoch {p} retired; current is {}",
+                        cur.epoch
+                    );
+                    return fail(ErrorReason::ModelUnavailable, &msg, false);
+                }
+            }
             let input = match f.payload_f32() {
                 Ok(v) => v,
                 Err(e) => return fail(ErrorReason::BadPayload, &e.to_string(), true),
             };
-            if input.len() != entry.elems {
+            if input.len() != cur.elems {
                 let msg = format!(
-                    "payload carries {} f32s; model '{}' wants {}",
+                    "payload carries {} f32s; model '{mname}' wants {}",
                     input.len(),
-                    f.model,
-                    entry.elems
+                    cur.elems
                 );
                 return fail(ErrorReason::BadPayload, &msg, true);
             }
@@ -347,12 +443,12 @@ fn dispatch(
             // admission: queue depth first (leading indicator), then the
             // in-flight token bucket; a shed answers Overloaded on an
             // otherwise healthy connection
-            if entry.admission.queue_is_full(entry.server.queue_depth()) {
-                entry.server.note_overload_shed();
+            if entry.admission.queue_is_full(cur.server.queue_depth()) {
+                cur.server.note_overload_shed();
                 return fail(ErrorReason::Overloaded, "queue full, back off", false);
             }
             let Some(permit) = entry.admission.try_acquire() else {
-                entry.server.note_overload_shed();
+                cur.server.note_overload_shed();
                 return fail(
                     ErrorReason::Overloaded,
                     "too many requests in flight, back off",
@@ -367,16 +463,21 @@ fn dispatch(
             if let (Some(c), Some(t0)) = (ctx, t_in) {
                 trace::event(c.id, "admission", t0, Instant::now());
             }
-            recorder::note(RecKind::Admit, &f.model);
+            recorder::note(RecKind::Admit, mname);
             let inner2 = inner.clone();
-            entry.server.submit_traced(
+            // replies carry the answering epoch (`@<n>` in the model
+            // field) so clients can pin follow-ups to these weights
+            let epoch = cur.epoch;
+            cur.server.submit_traced(
                 input,
                 deadline,
                 ctx,
                 Responder::new(move |res| {
                     let t_wb = ctx.map(|_| Instant::now());
                     let mut bytes = match &res {
-                        Ok(logits) => frame::encode_infer_ok_t(rid, logits, echo),
+                        Ok(logits) => {
+                            frame::encode_infer_ok_pinned(rid, logits, echo, Some(epoch))
+                        }
                         Err(e) => {
                             let reason: ErrorReason = (*e).into();
                             inner2.note_error(reason);
@@ -414,18 +515,142 @@ fn dispatch(
             );
             Handled::Async
         }
-        FrameKind::InferOk | FrameKind::Error | FrameKind::MetricsText | FrameKind::TraceJson => {
-            Handled::Reply {
-                bytes: error_reply(
-                    inner,
-                    rid,
-                    ErrorReason::Malformed,
-                    "client sent a server-only frame kind",
-                ),
-                close: true,
+        FrameKind::ModelsReq => {
+            let mut text = String::new();
+            for (name, e) in &inner.models {
+                let cur = e.current();
+                text.push_str(&format!("{name}\tepoch={}\t{}\n", cur.epoch, cur.desc));
+            }
+            let st = model::registry_stats();
+            text.push_str(&format!(
+                "registry\tentries={}\tresident={}B\tloads={}\tload_failures={}\tswaps={}\t\
+                 evictions={}\n",
+                st.len, st.resident_bytes, st.loads, st.load_failures, st.swaps, st.evictions
+            ));
+            Handled::Reply { bytes: frame::encode_models_text(rid, &text), close: false }
+        }
+        FrameKind::SwapReq => {
+            if inner.draining.load(Ordering::Acquire) {
+                return Handled::Reply {
+                    bytes: error_reply(inner, rid, ErrorReason::Shutdown, "server is draining"),
+                    close: false,
+                };
+            }
+            let name = f.model;
+            let path = match String::from_utf8(f.payload) {
+                Ok(p) if !p.trim().is_empty() => p,
+                _ => {
+                    return Handled::Reply {
+                        bytes: error_reply(
+                            inner,
+                            rid,
+                            ErrorReason::Malformed,
+                            "SwapReq payload must be a utf-8 checkpoint path",
+                        ),
+                        close: true,
+                    }
+                }
+            };
+            if !inner.models.contains_key(&name) {
+                let msg = format!("unknown model '{name}'");
+                return Handled::Reply {
+                    bytes: error_reply(inner, rid, ErrorReason::UnknownModel, &msg),
+                    close: true,
+                };
+            }
+            // the load + flip runs on its own thread: decode + panel
+            // prep can take arbitrarily long (COMQ_FAULT=slow_load) and
+            // must never stall the event loop. The reply rides the
+            // normal completion path, so it mirrors an async infer's
+            // in-flight accounting and the drain loop waits for it.
+            inner.inflight.fetch_add(1, Ordering::AcqRel);
+            if let Some(o) = &inner.obs {
+                o.inflight.inc();
+            }
+            let inner2 = inner.clone();
+            let spawned = std::thread::Builder::new().name("comq-swap".into()).spawn(move || {
+                let done = catch_unwind(AssertUnwindSafe(|| swap_model(&inner2, &name, &path)));
+                let bytes = match done {
+                    Ok(Ok((old, new))) => frame::encode_swap_ok(rid, old, new),
+                    Ok(Err(msg)) => {
+                        error_reply(&inner2, rid, ErrorReason::ModelUnavailable, &msg)
+                    }
+                    Err(_) => error_reply(
+                        &inner2,
+                        rid,
+                        ErrorReason::Internal,
+                        "panic during hot-swap; old model still serving",
+                    ),
+                };
+                complete(bytes);
+                inner2.inflight.fetch_sub(1, Ordering::AcqRel);
+                if let Some(o) = &inner2.obs {
+                    o.inflight.dec();
+                }
+            });
+            match spawned {
+                Ok(_) => Handled::Async,
+                Err(_) => {
+                    inner.inflight.fetch_sub(1, Ordering::AcqRel);
+                    if let Some(o) = &inner.obs {
+                        o.inflight.dec();
+                    }
+                    Handled::Reply {
+                        bytes: error_reply(
+                            inner,
+                            rid,
+                            ErrorReason::Internal,
+                            "cannot spawn the swap thread",
+                        ),
+                        close: false,
+                    }
+                }
             }
         }
+        FrameKind::InferOk
+        | FrameKind::Error
+        | FrameKind::MetricsText
+        | FrameKind::TraceJson
+        | FrameKind::SwapOk
+        | FrameKind::ModelsText => Handled::Reply {
+            bytes: error_reply(
+                inner,
+                rid,
+                ErrorReason::Malformed,
+                "client sent a server-only frame kind",
+            ),
+            close: true,
+        },
     }
+}
+
+/// The hot-swap itself: load `path` through the model registry (the
+/// old epoch keeps serving during the decode + panel prep), start a
+/// fresh batcher, flip the entry's `current` Arc, then drain the old
+/// epoch — everything it admitted is answered from the old weights, so
+/// a swap under live traffic drops nothing. The retired epoch's
+/// registry entry is evicted as `superseded`.
+fn swap_model(inner: &Inner, name: &str, path: &str) -> Result<(u64, u64), String> {
+    let entry =
+        inner.models.get(name).ok_or_else(|| format!("unknown model '{name}'"))?;
+    // a swap must pick up the bytes on disk *now* (the common case is
+    // re-quantizing in place), so any cached entry for this exact
+    // key is retired before the load rather than short-circuiting it
+    model::retire_cached(name, path);
+    let qm = model::load_with_info(entry.info.clone(), path)
+        .map_err(|e| format!("loading '{path}': {e:#}"))?;
+    let epoch = entry.next_epoch.fetch_add(1, Ordering::Relaxed);
+    let fresh =
+        Arc::new(ModelEpoch::build(epoch, qm, Some(path.to_string()), entry.batch.clone()));
+    let old = std::mem::replace(&mut *entry.current.lock().unwrap(), fresh);
+    // drain-and-answer: joins the old epoch's executors after every
+    // queued request replies from the weights it was admitted under
+    old.server.shutdown();
+    if let Some(src) = &old.source {
+        model::retire_cached(name, src);
+    }
+    model::note_swap(name, &format!("epoch {} -> {epoch} ({path})", old.epoch));
+    Ok((old.epoch, epoch))
 }
 
 /// Result of feeding buffered bytes through decode + dispatch.
@@ -984,11 +1209,18 @@ impl NetServer {
         let local = listener.local_addr().map_err(|e| anyhow!("local_addr: {e}"))?;
         let mut map = BTreeMap::new();
         for (name, model) in models {
-            let side = model.input_side();
+            let info = model.info().clone();
             let entry = ModelEntry {
-                server: Server::start(model, cfg.batch.clone()),
+                info,
+                current: Mutex::new(Arc::new(ModelEpoch::build(
+                    1,
+                    model,
+                    None,
+                    cfg.batch.clone(),
+                ))),
                 admission: Admission::new(cfg.admission.clone()),
-                elems: side * side * 3,
+                batch: cfg.batch.clone(),
+                next_epoch: AtomicU64::new(2),
             };
             map.insert(name, entry);
         }
@@ -1041,10 +1273,19 @@ impl NetServer {
         self.local
     }
 
-    /// The micro-batcher behind `name` (tests reconcile its stats and
-    /// queue depth against wire-level behavior).
-    pub fn model_server(&self, name: &str) -> Option<&Server> {
-        self.inner.models.get(name).map(|e| &e.server)
+    /// The live epoch serving `name`: its epoch number plus (via
+    /// `Deref`) the micro-batcher — tests reconcile its stats and
+    /// queue depth against wire-level behavior. The handle stays valid
+    /// across a hot-swap; it keeps pointing at the epoch it captured.
+    pub fn model_server(&self, name: &str) -> Option<Arc<ModelEpoch>> {
+        self.inner.models.get(name).map(|e| e.current())
+    }
+
+    /// Hot-swap `name` to the checkpoint at `path` in-process — the
+    /// wire `SwapReq` runs exactly this, off the event loop. Returns
+    /// `(old_epoch, new_epoch)`; on error the old epoch keeps serving.
+    pub fn swap_model(&self, name: &str, path: &str) -> Result<(u64, u64)> {
+        swap_model(&self.inner, name, path).map_err(|e| anyhow!(e))
     }
 
     /// The admission gate behind `name`.
@@ -1089,7 +1330,7 @@ impl NetServer {
             }
         }
         for e in self.inner.models.values() {
-            e.server.shutdown();
+            e.current().server.shutdown();
         }
         // black-box readout: a drain that saw incidents (error frames,
         // sheds, panics, respawns, dropped conns) dumps the last-N ring

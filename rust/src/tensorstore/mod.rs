@@ -1,7 +1,7 @@
 //! CTS ("Comq Tensor Store") reader/writer — the python→rust interchange
 //! format for checkpoints, calibration and validation data.
 //!
-//! Mirrors python/compile/export.py byte-for-byte:
+//! The v1 body mirrors python/compile/export.py byte-for-byte:
 //!
 //! ```text
 //! magic  b"CTS1"
@@ -13,15 +13,58 @@
 //!     u32  dims[ndim]
 //!     raw  data (C-contiguous)
 //! ```
+//!
+//! # v2 integrity footer
+//!
+//! Files written by this module append a footer after the v1 body:
+//!
+//! ```text
+//! magic  b"CQI2"
+//! u32    entry count n      (must equal the body's tensor count)
+//! u32    entry_crc[n]       CRC32 (IEEE) of each entry's record bytes
+//!                           (name length through data), in file order
+//! u32    file_crc           CRC32 of every byte before this field
+//!                           (body + footer magic + n + entry CRCs)
+//! u32    entry count n      (trailing copy, for end-first discovery)
+//! magic  b"CQI2"
+//! ```
+//!
+//! Compatibility rules:
+//!
+//! * **v1 files still load** (python's `write_cts` has no footer): a
+//!   file not ending in the footer magic parses as a bare v1 body and
+//!   is flagged [`Integrity::Unverified`].
+//! * **python still reads v2 files**: `read_cts` consumes exactly
+//!   `count` records and ignores trailing bytes, so the footer is
+//!   invisible to it.
+//! * A file that *does* end in the footer magic must carry a fully
+//!   valid footer — a torn or corrupt footer is a typed error, never a
+//!   silent downgrade to unverified. (A v1 file whose last four bytes
+//!   coincide with the magic is misclassified with probability 2⁻³²;
+//!   we accept that.)
+//!
+//! [`write_store`] is crash-safe: the full byte image (body + footer)
+//! is serialized in memory, written to a temp file in the destination
+//! directory, fsynced, then atomically renamed over the target. A kill
+//! at any point leaves either the intact old file or a temp file the
+//! loader never looks at — never a truncated-but-parseable checkpoint.
+//! The `COMQ_FAULT` sites `io_err[:<stage>]`, `corrupt_load:<off>` and
+//! `slow_load:<ms>` let tests drive every failure boundary.
 
 use std::collections::BTreeMap;
 use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::serve::net::fault::{self, IoStage};
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"CTS1";
+const FOOTER_MAGIC: &[u8; 4] = b"CQI2";
+/// Fixed footer overhead: leading magic + n + file_crc + trailing n +
+/// trailing magic (the entry CRCs add 4 bytes each).
+const FOOTER_FIXED: usize = 20;
 
 /// One stored tensor: f32 payloads become `Tensor`; i32 payloads (labels)
 /// are kept as raw vectors.
@@ -50,19 +93,163 @@ impl Entry {
 /// An ordered name -> tensor map.
 pub type Store = BTreeMap<String, Entry>;
 
+/// Whether a loaded store's bytes were checksum-verified.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Integrity {
+    /// v2 footer present; every entry CRC and the whole-file CRC match.
+    Verified,
+    /// v1 file (no footer) — parsed structurally, but bit flips in the
+    /// payload are undetectable.
+    Unverified,
+}
+
+impl Integrity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Integrity::Verified => "verified",
+            Integrity::Unverified => "unverified",
+        }
+    }
+}
+
+/// A parsed store plus what we know about its integrity.
+#[derive(Debug)]
+pub struct LoadedStore {
+    pub store: Store,
+    pub integrity: Integrity,
+}
+
+/// CRC32 (IEEE 802.3, reflected, poly 0xEDB88320) — the checksum both
+/// footer fields use. Hand-rolled: no crates in the vendor set.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = crc_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
 pub fn read_store(path: &str) -> Result<Store> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
-    parse_store(&bytes).with_context(|| format!("parsing {path}"))
+    Ok(read_store_checked(path)?.store)
+}
+
+/// Read + verify a store, reporting whether its bytes were covered by
+/// a v2 footer. The `slow_load` / `corrupt_load` fault sites fire here
+/// — every checkpoint load in the crate funnels through this function.
+pub fn read_store_checked(path: &str) -> Result<LoadedStore> {
+    if let Some(d) = fault::slow_load() {
+        std::thread::sleep(d);
+    }
+    let mut bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if let Some(off) = fault::corrupt_load() {
+        if !bytes.is_empty() {
+            let i = off.min(bytes.len() - 1);
+            bytes[i] ^= 0xFF;
+        }
+    }
+    parse_store_checked(&bytes).with_context(|| format!("parsing {path}"))
 }
 
 pub fn parse_store(bytes: &[u8]) -> Result<Store> {
+    Ok(parse_store_checked(bytes)?.store)
+}
+
+pub fn parse_store_checked(bytes: &[u8]) -> Result<LoadedStore> {
+    match split_footer(bytes)? {
+        Some((body, entry_crcs)) => {
+            let (store, spans) = parse_body(body)?;
+            if spans.len() != entry_crcs.len() {
+                bail!(
+                    "integrity: footer lists {} entries but the body has {}",
+                    entry_crcs.len(),
+                    spans.len()
+                );
+            }
+            for (i, (&(start, end), &want)) in spans.iter().zip(&entry_crcs).enumerate() {
+                let got = crc32(&body[start..end]);
+                if got != want {
+                    bail!(
+                        "integrity: entry #{i} CRC mismatch \
+                         (stored {want:#010x}, computed {got:#010x})"
+                    );
+                }
+            }
+            Ok(LoadedStore { store, integrity: Integrity::Verified })
+        }
+        None => {
+            let (store, _) = parse_body(bytes)?;
+            Ok(LoadedStore { store, integrity: Integrity::Unverified })
+        }
+    }
+}
+
+/// If `bytes` end in a v2 footer, verify the whole-file CRC and return
+/// the body slice + per-entry CRCs. `Ok(None)` means a v1 file; any
+/// footer defect once the trailing magic matched is an error.
+fn split_footer(bytes: &[u8]) -> Result<Option<(&[u8], Vec<u32>)>> {
+    let len = bytes.len();
+    if len < 8 || &bytes[len - 4..] != FOOTER_MAGIC {
+        return Ok(None);
+    }
+    let n = u32::from_le_bytes(bytes[len - 8..len - 4].try_into().unwrap()) as usize;
+    let footer_len = n
+        .checked_mul(4)
+        .and_then(|c| c.checked_add(FOOTER_FIXED))
+        .ok_or_else(|| anyhow!("integrity: absurd footer entry count {n}"))?;
+    if footer_len > len {
+        bail!("integrity: footer claims {n} entries but the file is only {len} bytes");
+    }
+    let foot = &bytes[len - footer_len..];
+    if &foot[..4] != FOOTER_MAGIC {
+        bail!("integrity: trailing footer magic without a leading one (torn footer?)");
+    }
+    let n_lead = u32::from_le_bytes(foot[4..8].try_into().unwrap()) as usize;
+    if n_lead != n {
+        bail!("integrity: footer entry counts disagree ({n_lead} leading vs {n} trailing)");
+    }
+    let stored = u32::from_le_bytes(bytes[len - 12..len - 8].try_into().unwrap());
+    let got = crc32(&bytes[..len - 12]);
+    if got != stored {
+        bail!("integrity: whole-file CRC mismatch (stored {stored:#010x}, computed {got:#010x})");
+    }
+    let entry_crcs = foot[8..8 + 4 * n]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Some((&bytes[..len - footer_len], entry_crcs)))
+}
+
+/// Parse a v1 body, recording each entry's byte span (start of the
+/// name-length field through the end of its data) for CRC checking.
+/// Every length is validated before use — malformed input is a typed
+/// error, never a panic or an unbounded allocation.
+fn parse_body(bytes: &[u8]) -> Result<(Store, Vec<(usize, usize)>)> {
     let mut r = Cursor { b: bytes, i: 0 };
     if r.take(4)? != MAGIC {
         bail!("bad magic");
     }
     let count = r.u32()? as usize;
     let mut out = Store::new();
+    let mut spans = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
+        let start = r.i;
         let nlen = r.u16()? as usize;
         let name = std::str::from_utf8(r.take(nlen)?)
             .map_err(|e| anyhow!("bad tensor name: {e}"))?
@@ -73,10 +260,21 @@ pub fn parse_store(bytes: &[u8]) -> Result<Store> {
         for _ in 0..ndim {
             shape.push(r.u32()? as usize);
         }
-        let numel: usize = shape.iter().product::<usize>().max(1);
+        let mut numel: usize = 1;
+        for &d in &shape {
+            numel = numel
+                .checked_mul(d)
+                .ok_or_else(|| anyhow!("tensor '{name}': shape overflows usize"))?;
+        }
+        let numel = numel.max(1);
+        let nbytes = numel
+            .checked_mul(4)
+            .ok_or_else(|| anyhow!("tensor '{name}': byte size overflows usize"))?;
         let entry = match dtype {
             0 => {
-                let raw = r.take(numel * 4)?;
+                // take() bounds-checks against the file before the
+                // allocation, so numel can never exceed the byte count
+                let raw = r.take(nbytes)?;
                 let mut data = vec![0.0f32; numel];
                 for (i, c) in raw.chunks_exact(4).enumerate() {
                     data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
@@ -85,7 +283,7 @@ pub fn parse_store(bytes: &[u8]) -> Result<Store> {
                 Entry::F32(Tensor::new(&shp, data))
             }
             1 => {
-                let raw = r.take(numel * 4)?;
+                let raw = r.take(nbytes)?;
                 let mut data = vec![0i32; numel];
                 for (i, c) in raw.chunks_exact(4).enumerate() {
                     data[i] = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
@@ -94,6 +292,7 @@ pub fn parse_store(bytes: &[u8]) -> Result<Store> {
             }
             d => bail!("unknown dtype {d} for '{name}'"),
         };
+        spans.push((start, r.i));
         if out.insert(name.clone(), entry).is_some() {
             bail!("duplicate tensor '{name}'");
         }
@@ -101,41 +300,103 @@ pub fn parse_store(bytes: &[u8]) -> Result<Store> {
     if r.i != bytes.len() {
         bail!("{} trailing bytes", bytes.len() - r.i);
     }
-    Ok(out)
+    Ok((out, spans))
 }
 
-pub fn write_store(path: &str, store: &Store) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {path}"))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&(store.len() as u32).to_le_bytes())?;
+/// Serialize a store to its full v2 byte image: v1 body + integrity
+/// footer. Entry CRCs are computed over exactly the spans
+/// [`parse_body`] records on the way back in.
+pub fn serialize_store(store: &Store) -> Vec<u8> {
+    let mut b: Vec<u8> = Vec::new();
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&(store.len() as u32).to_le_bytes());
+    let mut entry_crcs = Vec::with_capacity(store.len());
     for (name, entry) in store {
+        let start = b.len();
         let nb = name.as_bytes();
-        f.write_all(&(nb.len() as u16).to_le_bytes())?;
-        f.write_all(nb)?;
+        b.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        b.extend_from_slice(nb);
         match entry {
             Entry::F32(t) => {
-                f.write_all(&[0u8, t.ndim() as u8])?;
+                b.push(0u8);
+                b.push(t.ndim() as u8);
                 for &d in t.shape() {
-                    f.write_all(&(d as u32).to_le_bytes())?;
+                    b.extend_from_slice(&(d as u32).to_le_bytes());
                 }
                 for &x in t.data() {
-                    f.write_all(&x.to_le_bytes())?;
+                    b.extend_from_slice(&x.to_le_bytes());
                 }
             }
             Entry::I32 { shape, data } => {
-                f.write_all(&[1u8, shape.len() as u8])?;
+                b.push(1u8);
+                b.push(shape.len() as u8);
                 for &d in shape {
-                    f.write_all(&(d as u32).to_le_bytes())?;
+                    b.extend_from_slice(&(d as u32).to_le_bytes());
                 }
                 for &x in data {
-                    f.write_all(&x.to_le_bytes())?;
+                    b.extend_from_slice(&x.to_le_bytes());
                 }
             }
         }
+        entry_crcs.push(crc32(&b[start..]));
     }
-    f.flush()?;
+    b.extend_from_slice(FOOTER_MAGIC);
+    b.extend_from_slice(&(store.len() as u32).to_le_bytes());
+    for c in &entry_crcs {
+        b.extend_from_slice(&c.to_le_bytes());
+    }
+    let file_crc = crc32(&b);
+    b.extend_from_slice(&file_crc.to_le_bytes());
+    b.extend_from_slice(&(store.len() as u32).to_le_bytes());
+    b.extend_from_slice(FOOTER_MAGIC);
+    b
+}
+
+/// Crash-safe write: serialize in memory, write a temp file in the
+/// destination directory, fsync, rename over the target, then
+/// best-effort fsync the directory so the rename itself is durable.
+/// On any failure the temp file is removed and the old file (if any)
+/// is untouched.
+pub fn write_store(path: &str, store: &Store) -> Result<()> {
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    let bytes = serialize_store(store);
+    let tmp = format!(
+        "{path}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    );
+    let result = write_atomic(path, &tmp, &bytes);
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+fn write_atomic(path: &str, tmp: &str, bytes: &[u8]) -> Result<()> {
+    if fault::io_error_at(IoStage::Create) {
+        bail!("injected io_err at create ({tmp})");
+    }
+    let mut f = std::fs::File::create(tmp).with_context(|| format!("creating {tmp}"))?;
+    if fault::io_error_at(IoStage::Write) {
+        bail!("injected io_err at write ({tmp})");
+    }
+    f.write_all(bytes).with_context(|| format!("writing {tmp}"))?;
+    if fault::io_error_at(IoStage::Sync) {
+        bail!("injected io_err at sync ({tmp})");
+    }
+    f.sync_all().with_context(|| format!("syncing {tmp}"))?;
+    drop(f);
+    if fault::io_error_at(IoStage::Rename) {
+        bail!("injected io_err at rename ({tmp} -> {path})");
+    }
+    std::fs::rename(tmp, path).with_context(|| format!("renaming {tmp} -> {path}"))?;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
     Ok(())
 }
 
@@ -146,11 +407,16 @@ struct Cursor<'a> {
 
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.i + n > self.b.len() {
+        // checked_add: a near-usize::MAX n must not wrap past the bound
+        let end = self
+            .i
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("length overflow at byte {}", self.i))?;
+        if end > self.b.len() {
             bail!("truncated file at byte {} (wanted {n} more)", self.i);
         }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
+        let s = &self.b[self.i..end];
+        self.i = end;
         Ok(s)
     }
 
@@ -191,18 +457,45 @@ mod tests {
         dir.join(name).to_string_lossy().to_string()
     }
 
-    #[test]
-    fn roundtrip() {
+    fn sample() -> Store {
         let mut s = Store::new();
         s.insert("a/W".into(), Entry::F32(Tensor::new(&[2, 3], vec![1., -2., 3., 0.5, 0., 9.])));
         s.insert(
             "labels".into(),
             Entry::I32 { shape: vec![4], data: vec![1, 2, 3, -7] },
         );
+        s
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = sample();
         let p = tmpfile("roundtrip.cts");
         write_store(&p, &s).unwrap();
         let r = read_store(&p).unwrap();
         assert_eq!(r, s);
+    }
+
+    #[test]
+    fn v2_files_verify() {
+        let s = sample();
+        let p = tmpfile("verified.cts");
+        write_store(&p, &s).unwrap();
+        let loaded = read_store_checked(&p).unwrap();
+        assert_eq!(loaded.integrity, Integrity::Verified);
+        assert_eq!(loaded.store, s);
+    }
+
+    #[test]
+    fn v1_files_load_unverified() {
+        // serialize, then strip the footer: a v1 file as python writes it
+        let s = sample();
+        let bytes = serialize_store(&s);
+        let footer_len = FOOTER_FIXED + 4 * s.len();
+        let v1 = &bytes[..bytes.len() - footer_len];
+        let loaded = parse_store_checked(v1).unwrap();
+        assert_eq!(loaded.integrity, Integrity::Unverified);
+        assert_eq!(loaded.store, s);
     }
 
     #[test]
@@ -226,6 +519,34 @@ mod tests {
     }
 
     #[test]
+    fn corruption_is_detected_everywhere() {
+        // flip one byte at every offset of a small v2 file: every flip
+        // must be a typed error (the footer CRCs leave no blind spots)
+        let bytes = serialize_store(&sample());
+        for off in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0xFF;
+            assert!(
+                parse_store_checked(&bad).is_err(),
+                "flip at byte {off} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn torn_footer_is_an_error_not_a_downgrade() {
+        // keep the trailing magic but corrupt the leading one: a file
+        // that advertises v2 with a broken footer must not silently
+        // load as unverified v1
+        let bytes = serialize_store(&sample());
+        let footer_start = bytes.len() - (FOOTER_FIXED + 4 * 2);
+        let mut bad = bytes.clone();
+        bad[footer_start] ^= 0xFF; // leading "CQI2" -> garbage
+        let err = parse_store_checked(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("integrity"), "{err:#}");
+    }
+
+    #[test]
     fn python_written_fixture() {
         // Byte layout written by hand matching export.py
         let mut b: Vec<u8> = b"CTS1".to_vec();
@@ -240,5 +561,22 @@ mod tests {
         let s = parse_store(&b).unwrap();
         let t = s["x"].tensor().unwrap();
         assert_eq!(t.data(), &[1.5, -0.25]);
+        assert_eq!(parse_store_checked(&b).unwrap().integrity, Integrity::Unverified);
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the standard IEEE check value plus the empty string
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn failed_write_leaves_old_file_intact() {
+        // no fault needed: target a path whose parent doesn't exist so
+        // File::create fails, and check nothing appeared
+        let p = tmpfile("no_such_dir/out.cts");
+        assert!(write_store(&p, &sample()).is_err());
+        assert!(!std::path::Path::new(&p).exists());
     }
 }

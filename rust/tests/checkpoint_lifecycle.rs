@@ -1,0 +1,226 @@
+//! Crash-safety and integrity tests for the `.cqm` checkpoint
+//! lifecycle (PR 9): kill-point injection at every stage of the atomic
+//! save, a torn-bytes property sweep over the v2 container, and the
+//! deploy-level v1-downgrade / corruption surface.
+//!
+//! The `COMQ_FAULT` state is process-global, so every test serializes
+//! on one lock, and faults are armed via `fault::set_spec`, never the
+//! environment.
+
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use comq::deploy::{read_packed, save_packed_with_act};
+use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::serve::net::fault;
+use comq::tensor::Tensor;
+use comq::tensorstore::{
+    parse_store_checked, read_store_checked, serialize_store, write_store, Entry, Integrity,
+    Store,
+};
+use comq::util::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("comq_ckpt_lifecycle_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().to_string()
+}
+
+/// A store small enough to byte-sweep but exercising both dtypes,
+/// multi-dim shapes, and a scalar.
+fn sample_store(marker: f32) -> Store {
+    let mut s = Store::new();
+    s.insert(
+        "w0".into(),
+        Entry::F32(Tensor::new(&[2, 3], vec![marker, -1.25, 3.0, 0.0, 9.5, -2.0])),
+    );
+    s.insert("codes".into(), Entry::I32 { shape: vec![4], data: vec![1, -7, 0, 42] });
+    s.insert("z".into(), Entry::F32(Tensor::new(&[1], vec![0.125])));
+    s
+}
+
+fn marker_of(path: &str) -> (f32, Integrity) {
+    let loaded = read_store_checked(path).expect("store must load");
+    let w0 = loaded.store.get("w0").unwrap().tensor().unwrap().data()[0];
+    (w0, loaded.integrity)
+}
+
+/// No `.tmp.` litter next to `path` — a failed atomic save cleans up.
+fn assert_no_tmp_litter(path: &str) {
+    let p = std::path::Path::new(path);
+    let dir = p.parent().unwrap();
+    let stem = p.file_name().unwrap().to_string_lossy().to_string();
+    for e in std::fs::read_dir(dir).unwrap() {
+        let name = e.unwrap().file_name().to_string_lossy().to_string();
+        assert!(
+            !name.starts_with(&format!("{stem}.tmp.")),
+            "temp file left behind: {name}"
+        );
+    }
+}
+
+/// Kill the save at every stage of the atomic write path. Whatever
+/// stage dies, the previous checkpoint must still load bit-verified,
+/// and no temp file may be left behind — the ISSUE's kill-point
+/// guarantee.
+#[test]
+fn save_killed_at_every_stage_leaves_old_file_intact() {
+    let _g = guard();
+    fault::clear();
+    let path = tmp("killpoint.cqm");
+    // a previously killed *process* may have left temp litter behind;
+    // start clean so the no-litter assertion checks this run only
+    let dir = std::path::Path::new(&path).parent().unwrap().to_path_buf();
+    for e in std::fs::read_dir(&dir).unwrap() {
+        let e = e.unwrap();
+        if e.file_name().to_string_lossy().contains(".tmp.") {
+            let _ = std::fs::remove_file(e.path());
+        }
+    }
+    let old = sample_store(1.0);
+    let new = sample_store(2.0);
+    write_store(&path, &old).unwrap();
+    assert_eq!(marker_of(&path), (1.0, Integrity::Verified));
+
+    for stage in ["create", "write", "sync", "rename"] {
+        fault::set_spec(&format!("io_err:{stage}:1")).unwrap();
+        let err = write_store(&path, &new)
+            .expect_err("the armed stage must fail the save");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(&format!("injected io_err at {stage}")),
+            "error names the killed stage: {msg}"
+        );
+        assert_eq!(
+            marker_of(&path),
+            (1.0, Integrity::Verified),
+            "old checkpoint intact after a {stage}-stage kill"
+        );
+        assert_no_tmp_litter(&path);
+        fault::clear();
+    }
+
+    // budgets are exact: the stage-less spec fires once, then the
+    // very next save goes through and the new bytes are live
+    let io0 = fault::fired_io_errors();
+    fault::set_spec("io_err:1").unwrap();
+    write_store(&path, &new).expect_err("first save dies");
+    write_store(&path, &new).expect("second save succeeds: budget spent");
+    assert_eq!(fault::fired_io_errors() - io0, 1);
+    assert_eq!(marker_of(&path), (2.0, Integrity::Verified));
+    fault::clear();
+}
+
+/// Torn-bytes property sweep: truncate the v2 image at *every* byte
+/// boundary and flip *every* byte. Each mutation must yield a typed
+/// error — never a panic, never a silently-wrong store. The single
+/// exception is documented: cutting exactly at the body/footer seam
+/// leaves a structurally-valid v1 file, which loads flagged
+/// `Unverified` (the v1-compat downgrade `read_packed` warns about).
+#[test]
+fn torn_bytes_never_parse_clean() {
+    let _g = guard();
+    fault::clear();
+    let store = sample_store(3.5);
+    let bytes = serialize_store(&store);
+    // footer = magic(4) + n(4) + 4n entry CRCs + file CRC(4) + n(4) + magic(4)
+    let body_len = bytes.len() - (20 + 4 * store.len());
+
+    let full = parse_store_checked(&bytes).expect("pristine image parses");
+    assert_eq!(full.integrity, Integrity::Verified);
+
+    for cut in 0..bytes.len() {
+        let r = parse_store_checked(&bytes[..cut]);
+        if cut == body_len {
+            let l = r.expect("footer torn off entirely = valid v1 file");
+            assert_eq!(l.integrity, Integrity::Unverified, "v1 downgrade must be flagged");
+        } else {
+            assert!(r.is_err(), "truncation at byte {cut}/{} must fail", bytes.len());
+        }
+    }
+
+    let mut work = bytes.clone();
+    for i in 0..work.len() {
+        work[i] ^= 0xFF;
+        assert!(
+            parse_store_checked(&work).is_err(),
+            "flipped byte {i}/{} must fail the integrity check",
+            work.len()
+        );
+        work[i] ^= 0xFF;
+    }
+}
+
+/// The load-side fault sites fire inside `read_store_checked`, where
+/// every checkpoint load funnels: `corrupt_load` flips a byte after
+/// the disk read (caught by the footer), `slow_load` stretches the
+/// read (caught by nothing — it must still verify).
+#[test]
+fn load_faults_fire_in_the_read_path() {
+    let _g = guard();
+    fault::clear();
+    let path = tmp("loadfault.cqm");
+    write_store(&path, &sample_store(4.0)).unwrap();
+
+    let c0 = fault::fired_corrupt_loads();
+    fault::set_spec("corrupt_load:37:1").unwrap();
+    let err = read_store_checked(&path).expect_err("injected flip must be detected");
+    assert!(format!("{err:#}").contains("integrity"), "typed integrity error: {err:#}");
+    assert_eq!(fault::fired_corrupt_loads() - c0, 1);
+    // budget spent: the same file now loads clean
+    assert_eq!(marker_of(&path), (4.0, Integrity::Verified));
+    fault::clear();
+
+    let s0 = fault::fired_slow_loads();
+    fault::set_spec("slow_load:30:1").unwrap();
+    let t0 = Instant::now();
+    assert_eq!(marker_of(&path), (4.0, Integrity::Verified));
+    assert!(t0.elapsed() >= Duration::from_millis(30), "slow_load must actually stall");
+    assert_eq!(fault::fired_slow_loads() - s0, 1);
+    fault::clear();
+}
+
+/// Deploy-level surface on a real quantized checkpoint: a fresh save
+/// is `verified`; stripping the footer downgrades the same bytes to a
+/// loadable-but-`unverified` v1 file; corrupting one byte mid-file is
+/// a typed load error, not a model with silently wrong weights.
+#[test]
+fn deploy_checkpoints_verify_downgrade_and_reject() {
+    let _g = guard();
+    fault::clear();
+    let (manifest, model) = tiny_plain_cnn(7);
+    let mut rng = Rng::new(0xF00D);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * 8 * 8 * 3));
+    let (packed, act, qmodel) = quantize_all_layers(&manifest, &model, 4, 8, &calib).unwrap();
+    let path = tmp("deploy_v2.cqm");
+    save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act)).unwrap();
+
+    let ckpt = read_packed(&path).unwrap();
+    assert_eq!(ckpt.integrity, Integrity::Verified);
+    assert_eq!(ckpt.layers.len(), packed.len());
+
+    // strip the footer: entry count sits 8 bytes from the end
+    let bytes = std::fs::read(&path).unwrap();
+    let n = u32::from_le_bytes(bytes[bytes.len() - 8..bytes.len() - 4].try_into().unwrap());
+    let body_len = bytes.len() - (20 + 4 * n as usize);
+    let v1_path = tmp("deploy_v1.cqm");
+    std::fs::write(&v1_path, &bytes[..body_len]).unwrap();
+    let v1 = read_packed(&v1_path).unwrap();
+    assert_eq!(v1.integrity, Integrity::Unverified, "v1 files load, flagged");
+    assert_eq!(v1.layers.len(), ckpt.layers.len(), "same payload either way");
+
+    // one flipped byte in the middle of the body: typed refusal
+    let mut evil = bytes.clone();
+    let mid = body_len / 2;
+    evil[mid] ^= 0x01;
+    let evil_path = tmp("deploy_evil.cqm");
+    std::fs::write(&evil_path, &evil).unwrap();
+    let err = read_packed(&evil_path).expect_err("corrupt checkpoint must not load");
+    assert!(format!("{err:#}").contains("integrity"), "typed integrity error: {err:#}");
+}

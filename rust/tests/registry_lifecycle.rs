@@ -1,0 +1,259 @@
+//! Registry v2 lifecycle tests (PR 9): byte-budgeted eviction,
+//! single-flight loading under racing first requests, shared load
+//! failures, and counter-for-counter reconciliation between
+//! `registry_stats()` and the flight recorder.
+//!
+//! The registry, its budget, and the fault state are process-global,
+//! so every test serializes on one lock, sets the budget it needs, and
+//! restores "unlimited" on the way out. The env-driven budget path is
+//! covered by `env_budget_smoke`, which ci.sh runs alone under
+//! `COMQ_MODEL_BUDGET=1`.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use comq::deploy::save_packed_with_act;
+use comq::manifest::Manifest;
+use comq::obs::recorder::{self, RecKind};
+use comq::obs::trace::{self, TraceMode};
+use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::serve::net::fault;
+use comq::serve::{
+    load_cached, load_with_info, note_swap, registry_clear_idle, registry_len, registry_stats,
+    set_budget,
+};
+use comq::tensor::Tensor;
+use comq::util::Rng;
+
+const MODEL: &str = "tiny_plain";
+const ELEMS: usize = 8 * 8 * 3;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn guard() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("comq_registry_lifecycle_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name).to_string_lossy().to_string()
+}
+
+/// Save the W4A8 fixture checkpoint under `tag` and hand back the
+/// manifest + path (loading is each test's business).
+fn checkpoint(tag: &str) -> (Manifest, String) {
+    let (manifest, model) = tiny_plain_cnn(7);
+    let mut rng = Rng::new(0xF00D);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * ELEMS));
+    let (packed, act, qmodel) = quantize_all_layers(&manifest, &model, 4, 8, &calib).unwrap();
+    let path = tmp(&format!("{tag}.cqm"));
+    save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act)).unwrap();
+    (manifest, path)
+}
+
+/// Budget pressure evicts the least-recently-used *idle* entry and
+/// never a model some holder still pins — and an unmeetable budget
+/// degrades to a warning, not an eviction of live weights.
+#[test]
+fn budget_evicts_idle_lru_never_pinned() {
+    let _g = guard();
+    fault::clear();
+    set_budget(None);
+    registry_clear_idle();
+    let (manifest, path_a) = checkpoint("budget_a");
+    let (_, path_b) = checkpoint("budget_b");
+    let (_, path_c) = checkpoint("budget_c");
+    let st0 = registry_stats();
+    let len0 = registry_len();
+
+    let a = load_cached(&manifest, MODEL, &path_a).unwrap();
+    set_budget(Some(a.resident_bytes() as u64)); // exactly one model fits
+
+    // over budget, but A is pinned (we hold it) and B is the fresh
+    // load: nothing is evictable, both must survive
+    let b = load_cached(&manifest, MODEL, &path_b).unwrap();
+    assert_eq!(registry_len() - len0, 2, "pinned entries never evicted");
+    assert_eq!(registry_stats().evictions, st0.evictions);
+
+    // A goes idle; the next load must reclaim it (LRU among idle) and
+    // still keep pinned B resident
+    drop(a);
+    let _c = load_cached(&manifest, MODEL, &path_c).unwrap();
+    let st = registry_stats();
+    assert_eq!(st.evictions - st0.evictions, 1, "exactly the idle A evicted");
+    assert_eq!(registry_len() - len0, 2, "B (pinned) + C (fresh)");
+    assert!(Arc::strong_count(&b) >= 2, "B never left the registry");
+
+    // A is really gone: loading it again is a fresh disk read
+    let loads_before = registry_stats().loads;
+    let _a2 = load_cached(&manifest, MODEL, &path_a).unwrap();
+    assert_eq!(registry_stats().loads - loads_before, 1, "evicted entry reloads from disk");
+
+    set_budget(None);
+}
+
+/// Racing first requests for one (model, path) key: exactly one
+/// caller decodes + preps, everyone shares the same `Arc`. Proven two
+/// ways — a barrier race (the loads counter can only move once) and a
+/// `slow_load`-wedged loader with a waiter provably blocked on its
+/// gate.
+#[test]
+fn double_load_race_is_single_flight() {
+    let _g = guard();
+    fault::clear();
+    set_budget(None);
+    registry_clear_idle();
+    let (manifest, path) = checkpoint("race");
+    let st0 = registry_stats();
+
+    // Manifest isn't Clone; racing threads carry the (Clone) ModelInfo
+    let info = manifest.model(MODEL).unwrap().clone();
+    let barrier = Arc::new(std::sync::Barrier::new(8));
+    let arcs: Vec<_> = (0..8)
+        .map(|_| {
+            let (i, p, bar) = (info.clone(), path.clone(), barrier.clone());
+            std::thread::spawn(move || {
+                bar.wait();
+                load_with_info(i, &p).unwrap()
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|t| t.join().unwrap())
+        .collect();
+    for w in &arcs[1..] {
+        assert!(Arc::ptr_eq(&arcs[0], w), "all racers share one model");
+    }
+    assert_eq!(registry_stats().loads - st0.loads, 1, "one decode, 8 winners");
+
+    // waiter path, deterministically: wedge the loader in the disk
+    // read, start a second caller mid-wedge, require it to share
+    drop(arcs);
+    registry_clear_idle();
+    let slow0 = fault::fired_slow_loads();
+    fault::set_spec("slow_load:200:1").unwrap();
+    let loader = {
+        let (i, p) = (info.clone(), path.clone());
+        std::thread::spawn(move || load_with_info(i, &p).unwrap())
+    };
+    std::thread::sleep(Duration::from_millis(60));
+    let waited = load_cached(&manifest, MODEL, &path).unwrap();
+    let loaded = loader.join().unwrap();
+    assert!(Arc::ptr_eq(&waited, &loaded), "the waiter shares the wedged loader's result");
+    assert_eq!(fault::fired_slow_loads() - slow0, 1, "only the loader touched the disk");
+    assert_eq!(registry_stats().loads - st0.loads, 2, "barrier race + wedged load");
+    fault::clear();
+}
+
+/// A failed load is shared with every waiter (one disk attempt, one
+/// counted failure) and does not poison the key: once the file exists
+/// the next call loads clean.
+#[test]
+fn load_failure_is_shared_then_retryable() {
+    let _g = guard();
+    fault::clear();
+    set_budget(None);
+    registry_clear_idle();
+    let (manifest, good_path) = checkpoint("shared_fail");
+    let missing = tmp("not_written_yet.cqm");
+    let _ = std::fs::remove_file(&missing);
+    let st0 = registry_stats();
+
+    fault::set_spec("slow_load:200:1").unwrap();
+    let loader = {
+        let (i, p) = (manifest.model(MODEL).unwrap().clone(), missing.clone());
+        std::thread::spawn(move || load_with_info(i, &p))
+    };
+    std::thread::sleep(Duration::from_millis(60));
+    let waited = load_cached(&manifest, MODEL, &missing);
+    let loaded = loader.join().unwrap();
+    let e1 = format!("{:#}", loaded.expect_err("missing file must fail the loader"));
+    let e2 = format!("{:#}", waited.expect_err("…and its waiter"));
+    assert!(e1.contains("not_written_yet.cqm"), "error names the path: {e1}");
+    assert!(e2.contains("not_written_yet.cqm"), "the waiter gets the same story: {e2}");
+    let st = registry_stats();
+    assert_eq!(st.load_failures - st0.load_failures, 1, "one failure, shared");
+    assert_eq!(st.loads - st0.loads, 0);
+    fault::clear();
+
+    // the key is not poisoned: put real bytes there and load clean
+    std::fs::copy(&good_path, &missing).unwrap();
+    let qm = load_cached(&manifest, MODEL, &missing).expect("retry after the file appears");
+    assert_eq!(qm.integrity().name(), "verified");
+    assert_eq!(registry_stats().loads - st0.loads, 1);
+}
+
+/// The ISSUE's reconciliation clause: with the recorder on, every
+/// loader/swap/evict counter movement has a matching flight-recorder
+/// event — counter-for-counter, no silent paths.
+#[test]
+fn registry_counters_reconcile_with_recorder() {
+    let _g = guard();
+    fault::clear();
+    set_budget(None);
+    registry_clear_idle();
+    let (manifest, path_a) = checkpoint("rec_a");
+    let (_, path_b) = checkpoint("rec_b");
+
+    trace::set_mode(TraceMode::All);
+    recorder::reset();
+    let st0 = registry_stats();
+
+    let a = load_cached(&manifest, MODEL, &path_a).unwrap(); // Load
+    set_budget(Some(a.resident_bytes() as u64));
+    drop(a);
+    let _b = load_cached(&manifest, MODEL, &path_b).unwrap(); // Load + Evict(a)
+    note_swap(MODEL, "epoch 1 -> 2 (test)"); // Swap
+
+    let st = registry_stats();
+    assert_eq!(st.loads - st0.loads, 2);
+    assert_eq!(st.evictions - st0.evictions, 1);
+    assert_eq!(st.swaps - st0.swaps, 1);
+    assert_eq!(recorder::count(RecKind::Load), st.loads - st0.loads);
+    assert_eq!(recorder::count(RecKind::Evict), st.evictions - st0.evictions);
+    assert_eq!(recorder::count(RecKind::Swap), st.swaps - st0.swaps);
+    // and the ring carries the human-readable trail
+    let tail = recorder::last(recorder::CAP);
+    assert!(tail.iter().any(|e| e.kind == RecKind::Evict && e.detail.contains("budget")));
+    assert!(tail.iter().any(|e| e.kind == RecKind::Swap && e.detail.contains("epoch 1 -> 2")));
+
+    trace::set_mode(TraceMode::Off);
+    recorder::reset();
+    set_budget(None);
+}
+
+/// The env-driven `COMQ_MODEL_BUDGET` path. Under a plain `cargo
+/// test` the variable is unset and the budget is armed via
+/// `set_budget`; ci.sh runs this test alone as `COMQ_MODEL_BUDGET=1
+/// cargo test --test registry_lifecycle env_budget_smoke`, proving
+/// the one-shot env parse reaches the eviction machinery.
+#[test]
+fn env_budget_smoke() {
+    let _g = guard();
+    fault::clear();
+    registry_clear_idle();
+    match std::env::var("COMQ_MODEL_BUDGET").ok().filter(|s| !s.trim().is_empty()).as_deref() {
+        Some("1") => {} // one byte: the env init armed it before any set_budget
+        Some(other) => panic!("env_budget_smoke only understands a budget of 1, got '{other}'"),
+        None => set_budget(Some(1)),
+    }
+    let (manifest, path_a) = checkpoint("env_a");
+    let (_, path_b) = checkpoint("env_b");
+    let st0 = registry_stats();
+    let len0 = registry_len();
+
+    // a pinned sole resident over budget survives (unmeetable budget
+    // warns instead of ripping weights out from under a holder)...
+    let a = load_cached(&manifest, MODEL, &path_a).unwrap();
+    assert_eq!(registry_len() - len0, 1);
+    // ...but once idle, the next load reclaims it immediately
+    drop(a);
+    let _b = load_cached(&manifest, MODEL, &path_b).unwrap();
+    let st = registry_stats();
+    assert_eq!(registry_len() - len0, 1, "one-byte budget keeps exactly the live model");
+    assert_eq!(st.evictions - st0.evictions, 1);
+    assert_eq!(st.loads - st0.loads, 2);
+
+    set_budget(None);
+}

@@ -7,7 +7,7 @@
 //! serializes on one lock and arms faults through `fault::set_spec` /
 //! `fault::clear` rather than the environment (the env-driven path is
 //! covered by `env_spec_smoke`, which ci.sh runs alone under
-//! `COMQ_FAULT=panic:conn:1`).
+//! `COMQ_FAULT=panic:conn:1` and again under `COMQ_FAULT=io_err:1`).
 //!
 //! No test blocks unboundedly: every client read carries a timeout, so
 //! a server that wedges fails the assertion instead of hanging the
@@ -122,7 +122,7 @@ fn loopback_parity_with_direct_forward() {
         let mut got = 0;
         while got < ids.len() {
             match c.recv().expect("pipelined reply") {
-                Response::Logits { request_id, logits } => {
+                Response::Logits { request_id, logits, .. } => {
                     let idx = ids.iter().position(|&i| i == request_id).expect("known id");
                     let direct = qm.forward(&Tensor::new(&[1, 8, 8, 3], imgs[idx].clone()));
                     for (a, b) in logits.iter().zip(direct.data()) {
@@ -620,11 +620,154 @@ fn batcher_shutdown_is_immediate_and_stale_requests_shed() {
     assert_eq!(server.queue_depth(), 0);
 }
 
+/// Hot-swap under live traffic: in-flight requests are answered from
+/// the epoch that admitted them (zero drops), new requests ride the
+/// new weights, pins to the retired epoch get a typed retryable
+/// error, and the registry's swap/evict/load counters reconcile
+/// exactly against the staged sequence.
+#[test]
+fn hot_swap_serves_both_epochs_without_drops() {
+    let _g = guard();
+    fault::clear();
+    // two checkpoints of one architecture with different weights (4-
+    // vs 2-bit quantization of the same float model)
+    let (manifest, model) = tiny_plain_cnn(7);
+    let mut rng = Rng::new(0xF00D);
+    let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * ELEMS));
+    let (packed_a, act_a, qmodel_a) =
+        quantize_all_layers(&manifest, &model, 4, 8, &calib).unwrap();
+    let (packed_b, act_b, qmodel_b) =
+        quantize_all_layers(&manifest, &model, 2, 8, &calib).unwrap();
+    let path_a = tmp("swap_a.cqm");
+    let path_b = tmp("swap_b.cqm");
+    save_packed_with_act(&path_a, &qmodel_a, &packed_a, 4, Some(&act_a)).unwrap();
+    save_packed_with_act(&path_b, &qmodel_b, &packed_b, 2, Some(&act_b)).unwrap();
+    let qm_a = load_cached(&manifest, MODEL, &path_a).unwrap();
+    let qm_b = load_cached(&manifest, MODEL, &path_b).unwrap();
+    let img = rng.normal_vec(ELEMS);
+    let direct_a = qm_a.forward(&Tensor::new(&[1, 8, 8, 3], img.clone())).data().to_vec();
+    let direct_b = qm_b.forward(&Tensor::new(&[1, 8, 8, 3], img.clone())).data().to_vec();
+    assert_ne!(direct_a, direct_b, "fixture must actually change the weights");
+    let st0 = comq::serve::registry_stats();
+
+    let server =
+        NetServer::bind("127.0.0.1:0", vec![(MODEL.to_string(), qm_a.clone())], net_config())
+            .unwrap();
+    assert_eq!(server.model_server(MODEL).unwrap().epoch, 1);
+
+    // a swap to a missing file is a typed error; epoch 1 keeps serving
+    let mut c = client(&server);
+    match c.swap(MODEL, &tmp("no_such.cqm")).unwrap_err() {
+        ClientError::Server { reason, message } => {
+            assert_eq!(reason, ErrorReason::ModelUnavailable);
+            assert!(message.contains("no_such.cqm"), "error names the path: {message}");
+        }
+        other => panic!("expected a typed swap failure, got {other:?}"),
+    }
+    assert_eq!(c.infer(MODEL, &img).unwrap(), direct_a, "old weights keep serving");
+    assert_eq!(server.model_server(MODEL).unwrap().epoch, 1);
+
+    // wedge one request inside epoch 1's single executor so the swap
+    // provably overlaps in-flight work...
+    let slow0 = fault::fired_slow();
+    fault::set_spec("slow:400:1").unwrap();
+    let mut c_slow = client(&server);
+    let slow_id = c_slow.send_infer(MODEL, &img, None).unwrap();
+    let t0 = Instant::now();
+    while fault::fired_slow() == slow0 {
+        assert!(t0.elapsed() < RECV_TIMEOUT, "slow fault never fired");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // ...and hammer from a second connection while the flip happens.
+    // Every reply must be bit-exact for the epoch that answered it —
+    // never a blend, never an error, never a drop.
+    let addr = server.local_addr();
+    let (img2, da, db) = (img.clone(), direct_a.clone(), direct_b.clone());
+    let hammer = std::thread::spawn(move || {
+        let mut c = NetClient::connect(addr).unwrap();
+        c.set_read_timeout(Some(RECV_TIMEOUT)).unwrap();
+        let (mut n_a, mut n_b) = (0u32, 0u32);
+        for i in 0..2000 {
+            let id = c.send_infer(MODEL, &img2, None).unwrap();
+            match c.recv().unwrap() {
+                Response::Logits { request_id, logits, epoch } if request_id == id => {
+                    match epoch {
+                        Some(1) => {
+                            assert_eq!(logits, da, "epoch-1 reply = old weights (iter {i})");
+                            n_a += 1;
+                        }
+                        Some(2) => {
+                            assert_eq!(logits, db, "epoch-2 reply = new weights (iter {i})");
+                            n_b += 1;
+                        }
+                        e => panic!("reply from unknown epoch {e:?} (iter {i})"),
+                    }
+                }
+                other => panic!("hammer got a non-logits reply: {other:?}"),
+            }
+            if n_b > 0 {
+                break; // observed the new weights — overlap proven
+            }
+        }
+        (n_a, n_b)
+    });
+
+    let mut c_swap = client(&server);
+    let (old_e, new_e) = c_swap.swap(MODEL, &path_b).expect("swap succeeds");
+    assert_eq!((old_e, new_e), (1, 2));
+    // the wedged request was answered from the epoch that admitted it
+    match c_slow.recv().unwrap() {
+        Response::Logits { request_id, logits, epoch } => {
+            assert_eq!(request_id, slow_id);
+            assert_eq!(epoch, Some(1), "in-flight request answered by its admitting epoch");
+            assert_eq!(logits, direct_a);
+        }
+        other => panic!("wedged request must be answered, got {other:?}"),
+    }
+    let (_n_a, n_b) = hammer.join().unwrap();
+    assert!(n_b > 0, "hammer never saw the new weights");
+
+    // pins: the retired epoch is a typed, non-fatal error on a still-
+    // usable connection; the current epoch pin works
+    match c.infer(&format!("{MODEL}@1"), &img).unwrap_err() {
+        ClientError::Server { reason, message } => {
+            assert_eq!(reason, ErrorReason::ModelUnavailable);
+            assert!(message.contains("retired"), "says why: {message}");
+        }
+        other => panic!("expected ModelUnavailable, got {other:?}"),
+    }
+    assert_eq!(c.infer(&format!("{MODEL}@2"), &img).unwrap(), direct_b, "current-epoch pin");
+    assert_eq!(c.infer(MODEL, &img).unwrap(), direct_b, "bare name takes the new weights");
+
+    // the listing reflects the flip and carries the registry ledger
+    let listing = c.models().unwrap();
+    assert!(listing.contains("epoch=2"), "listing: {listing}");
+    assert!(listing.contains("registry\t"), "listing: {listing}");
+
+    // swap back: epoch 3 serves the original weights again
+    assert_eq!(c_swap.swap(MODEL, &path_a).unwrap(), (2, 3));
+    assert_eq!(c.infer(MODEL, &img).unwrap(), direct_a, "epoch 3 = original weights");
+
+    // exact ledger: 2 flips, each a fresh disk read; 1 failed swap;
+    // evictions = stale cached B before swap 1, stale cached A before
+    // swap 2, then epoch 2's source B once it drained
+    let st = comq::serve::registry_stats();
+    assert_eq!(st.swaps - st0.swaps, 2);
+    assert_eq!(st.loads - st0.loads, 2, "each swap re-reads its checkpoint from disk");
+    assert_eq!(st.load_failures - st0.load_failures, 1, "the missing-file swap");
+    assert_eq!(st.evictions - st0.evictions, 3);
+
+    server.shutdown();
+    assert_eq!(server.stats().inflight, 0, "zero dropped requests across both swaps");
+    fault::clear();
+}
+
 /// The env-driven `COMQ_FAULT` path. Under a plain `cargo test` the
 /// variable is unset and this only exercises the pure parser; ci.sh
 /// runs it alone as `COMQ_FAULT=panic:conn:1 cargo test --test
-/// serve_net env_spec_smoke` and then it asserts the injected fault
-/// actually fires from the environment spec.
+/// serve_net env_spec_smoke` (and again under `COMQ_FAULT=io_err:1`)
+/// and then it asserts the injected fault actually fires from the
+/// environment spec.
 #[test]
 fn env_spec_smoke() {
     let _g = guard();
@@ -650,10 +793,40 @@ fn env_spec_smoke() {
             let mut c = client(&server);
             c.infer(MODEL, &img).expect("contained: fresh connections serve");
         }
-        Some(other) => panic!("env_spec_smoke only understands panic:conn:1, got '{other}'"),
+        Some("io_err:1") => {
+            // the first atomic save must fail with the injected io
+            // error and leave nothing behind; the second (budget
+            // exhausted) succeeds and loads back verified
+            let (manifest, model) = tiny_plain_cnn(7);
+            let mut rng = Rng::new(0xF00D);
+            let calib = Tensor::new(&[64, 8, 8, 3], rng.normal_vec(64 * ELEMS));
+            let (packed, act, qmodel) =
+                quantize_all_layers(&manifest, &model, 4, 8, &calib).unwrap();
+            let path = tmp("envfault_io.cqm");
+            let _ = std::fs::remove_file(&path);
+            let err = save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act))
+                .expect_err("env-armed io_err must fail the first save");
+            assert!(
+                format!("{err:#}").contains("injected io_err"),
+                "typed injection, not a silent skip: {err:#}"
+            );
+            assert!(
+                !std::path::Path::new(&path).exists(),
+                "a failed save must leave no file behind"
+            );
+            assert_eq!(fault::fired_io_errors(), 1, "env spec must arm exactly once");
+            save_packed_with_act(&path, &qmodel, &packed, 4, Some(&act))
+                .expect("budget exhausted: the second save succeeds");
+            let qm = load_cached(&manifest, MODEL, &path).expect("and loads back");
+            assert_eq!(qm.integrity().name(), "verified");
+        }
+        Some(other) => {
+            panic!("env_spec_smoke only understands panic:conn:1 or io_err:1, got '{other}'")
+        }
         None => {
             // parser-only smoke: same grammar the env init uses
             assert!(fault::parse("panic:conn:1").is_ok());
+            assert!(fault::parse("io_err:rename:2").is_ok());
             assert!(fault::parse("panic:gpu").is_err());
         }
     }

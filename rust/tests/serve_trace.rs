@@ -265,7 +265,7 @@ fn trace_off_is_bit_identical_with_empty_buffers() {
         let rid = c.send_infer_traced(MODEL, &img, None, Some(ctx)).unwrap();
         let (resp, echoed) = c.recv_with_trace().expect("reply");
         match resp {
-            Response::Logits { request_id, logits } => {
+            Response::Logits { request_id, logits, .. } => {
                 assert_eq!(request_id, rid);
                 assert_eq!(logits.len(), direct.data().len());
                 for (a, b) in logits.iter().zip(direct.data()) {
