@@ -213,6 +213,65 @@ fn main() -> anyhow::Result<()> {
     table.save_json("micro_threads");
     report.add(&table);
 
+    // -- scheduler: work-stealing vs chunked fork-join ---------------------
+    // An imbalanced task set — a cluster of heavy tasks at the front,
+    // the straggler shape chunked fork-join is worst at: the chunk that
+    // lands the heavy cluster serializes it while every other worker
+    // idles. The work-stealing pool is measured; the fork-join column is
+    // the analytic straggler bound of the old chunked partition on the
+    // same measured single-thread time (the chunked scheduler no longer
+    // exists to measure).
+    let mut table = Table::new(
+        "micro — scheduler, imbalanced tasks (4 heavy + 252 light), work-stealing vs fork-join bound",
+        &["threads", "stealing ms", "speedup", "fork-join bound ms"],
+    );
+    {
+        let (m_small, m_big, n_tasks, n_big) = (24usize, 96usize, 256usize, 4usize);
+        let mut rng = Rng::new(5);
+        let a_small = Tensor::new(&[m_small, m_small], rng.normal_vec(m_small * m_small));
+        let a_big = Tensor::new(&[m_big, m_big], rng.normal_vec(m_big * m_big));
+        // one task = one m×m GEMM; tasks 0..4 are 4× the dimension
+        // (~64× the flops) of the rest
+        let work = |i: usize| {
+            let a = if i < n_big { &a_big } else { &a_small };
+            std::hint::black_box(matmul(a, a));
+        };
+        // flop-weighted units for the analytic bound: heavy = 64 light
+        let heavy_units = 64usize;
+        let total_units = n_big * heavy_units + (n_tasks - n_big);
+        let mut t1 = 0.0;
+        for threads in [1usize, 2, 4, 8] {
+            std::env::set_var("COMQ_THREADS", threads.to_string());
+            let t = time_budget(0.5, 20, || {
+                comq::util::pool::parallel_ranges(n_tasks, 1, |_, r| {
+                    for i in r {
+                        work(i);
+                    }
+                });
+            });
+            if threads == 1 {
+                t1 = t.mean;
+            }
+            // chunked fork-join: chunk = ceil(n/threads); the first
+            // chunk holds the heavy cluster and bounds the whole join
+            let chunk = n_tasks.div_ceil(threads);
+            let heavy_in_first = n_big.min(chunk);
+            let straggler =
+                heavy_in_first * heavy_units + (chunk - heavy_in_first);
+            let bound = t1 * (straggler.max(chunk) as f64) / (total_units as f64);
+            table.row(vec![
+                threads.to_string(),
+                format!("{:.2}", t.mean * 1e3),
+                format!("{:.2}x", t1 / t.mean),
+                format!("{:.2}", bound * 1e3),
+            ]);
+        }
+        std::env::remove_var("COMQ_THREADS");
+    }
+    table.print();
+    table.save_json("micro_scheduler");
+    report.add(&table);
+
     // -- PJRT kernel dispatch vs native ------------------------------------
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if root.join("manifest.json").exists() {

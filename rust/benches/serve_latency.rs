@@ -27,6 +27,7 @@ use comq::quant::actq::ActQuant;
 use comq::quant::grid::LayerQuant;
 use comq::serve::{ActSource, BatchConfig, GroupedPanel, Int8Panel, Kernel, QuantizedModel, Server};
 use comq::tensor::{matmul, Tensor};
+use comq::util::topo::{self, NumaMode};
 use comq::util::{stats, Rng, Timer};
 
 /// f32 reference depthwise conv over grouped patches [rows, c, kk] —
@@ -97,6 +98,49 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     table.save_json("serve_gemm");
+    report.add(&table);
+
+    // -- NUMA: flat panel vs per-node shards ------------------------------
+    // The sharded panel is built under a forced 2-node layout and keeps
+    // its shards after the override is cleared, so this measures the
+    // sharded dispatch itself. On a UMA host the interesting number is
+    // the overhead (should be ~1.00x — same strips, same reductions);
+    // the cross-socket bandwidth win only exists on a real multi-node
+    // machine and is tagged projected in BENCH_serve_latency.json.
+    let mut table = Table::new(
+        "serve — dense GEMM, flat panel vs forced 2-node shards (nodes=1 vs N)",
+        &["shape (m,n)", "batch", "kernel", "flat ms", "sharded ms", "sharded vs flat"],
+    );
+    for &(m, n) in &[(768usize, 768usize), (768, 3072)] {
+        let mut rng = Rng::new(7);
+        let pl = random_packed(&mut rng, m, n, 8);
+        topo::set_mode_override(Some(NumaMode::Off));
+        let flat = Int8Panel::from_packed(&pl)?;
+        topo::set_mode_override(Some(NumaMode::Force(2)));
+        let sharded = Int8Panel::from_packed(&pl)?;
+        topo::set_mode_override(None);
+        let bias = vec![0.0f32; n];
+        for &rows in &[1usize, 16] {
+            let x = Tensor::new(&[rows, m], rng.normal_vec(rows * m));
+            let aq = ActQuant::from_range(x.min(), x.max(), 8, 1.0);
+            let t_flat = time_budget(0.3, 400, || {
+                std::hint::black_box(flat.matmul_i8(&x, aq, Some(&bias)));
+            });
+            let t_shard = time_budget(0.3, 400, || {
+                std::hint::black_box(sharded.matmul_i8(&x, aq, Some(&bias)));
+            });
+            table.row(vec![
+                format!("({m},{n})"),
+                rows.to_string(),
+                Kernel::active().name().to_string(),
+                format!("{:.3}", t_flat.mean * 1e3),
+                format!("{:.3}", t_shard.mean * 1e3),
+                format!("{:.2}x", t_flat.mean / t_shard.mean),
+            ]);
+        }
+    }
+    table.print();
+    table.save_json("serve_numa");
     report.add(&table);
 
     // -- depthwise conv, f32 loop vs grouped i8 kernel -------------------
@@ -285,7 +329,12 @@ fn main() -> anyhow::Result<()> {
     {
         let server = Arc::new(Server::start(
             qm.clone(),
-            BatchConfig { max_batch: 16, max_delay: Duration::from_millis(1), executors: 1 },
+            BatchConfig {
+                max_batch: 16,
+                max_delay: Duration::from_millis(1),
+                executors: 1,
+                pipeline: false,
+            },
         ));
         let mut lat = Vec::new();
         for wave in 0..50 {

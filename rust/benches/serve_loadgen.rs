@@ -141,7 +141,12 @@ fn main() -> anyhow::Result<()> {
         "127.0.0.1:0",
         vec![(MODEL.to_string(), qm)],
         NetConfig {
-            batch: BatchConfig { max_batch: 32, max_delay: Duration::from_millis(1), executors: 2 },
+            batch: BatchConfig {
+                max_batch: 32,
+                max_delay: Duration::from_millis(1),
+                executors: 2,
+                pipeline: false,
+            },
             ..NetConfig::default()
         },
     )?;

@@ -23,6 +23,10 @@ cargo test -q
 COMQ_KERNEL=scalar cargo test -q
 COMQ_THREADS=1 cargo test -q
 COMQ_OBS=off cargo test -q
+# NUMA pinned off: panels stay flat (no per-node shards), workers stay
+# unpinned — the suite's bit-identity asserts must hold against the
+# same logits the auto-probed layout produces (PR 10)
+COMQ_NUMA=off cargo test -q
 # fifth env pass: every request traced end to end — the whole suite must
 # stay green (and bit-exact where it asserts parity) while span trees,
 # tail retention and the flight recorder record everything; clients

@@ -2,23 +2,29 @@
 //! (layer l's calibration features come from the *full-precision* model,
 //! per the paper: "the matrix input X ... does not depend on the
 //! quantized weights from the previous layer"), so they run concurrently
-//! on a small worker pool with work-stealing via an atomic cursor.
+//! with work-stealing via an atomic cursor.
 //!
-//! Each quantizer already parallelizes across output channels internally,
-//! so the default worker count is deliberately small; `workers = 1`
-//! degenerates to a deterministic sequential loop.
+//! The runners are tasks on the process-wide `util::pool` scheduler —
+//! not dedicated threads — so a layer job that parallelizes internally
+//! (every quantizer does) nests onto the same workers via the pool's
+//! helping join, and panic propagation is the pool's single
+//! latch-carried path instead of a second `thread::scope` copy of it.
+//! Effective concurrency is therefore capped by the pool width;
+//! `workers = 1` (or `COMQ_THREADS=1`) degenerates to a deterministic
+//! sequential loop.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::util::pool::SendPtr;
+use crate::util::pool::{self, SendPtr};
 
-/// Run `job(i)` for i in 0..n on `workers` threads; results returned in
-/// index order. Panics in jobs are propagated.
+/// Run `job(i)` for i in 0..n on up to `workers` concurrent pool
+/// runners; results returned in index order. Panics in jobs are
+/// propagated.
 ///
 /// Results land in a pre-allocated disjoint-write buffer (the pool's
-/// `SendPtr` idiom): the cursor hands each index to exactly one worker,
+/// `SendPtr` idiom): the cursor hands each index to exactly one runner,
 /// which writes slot `i` through the raw base pointer — no per-item
-/// `Mutex` traffic on the result path. The scope join publishes every
+/// `Mutex` traffic on the result path. The pool join publishes every
 /// write before the buffer is read, and on a propagated panic the
 /// `Vec<Option<T>>` drops whatever did complete.
 pub fn run_jobs<T, F>(n: usize, workers: usize, job: F) -> Vec<T>
@@ -33,19 +39,18 @@ where
     let cursor = AtomicUsize::new(0);
     let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let base = SendPtr::new(results.as_mut_ptr());
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = job(i);
-                // the cursor gave index i to this worker alone, so the
-                // slot write is unaliased; overwritten None has no drop
-                unsafe { *base.ptr().add(i) = Some(r) };
-            });
+    // one pool task per runner slot; each drains the shared cursor, so
+    // the split of jobs across runners is load-balanced regardless of
+    // how the pool schedules (or steals) the tasks themselves
+    pool::parallel_ranges(workers, 1, |_, _runners| loop {
+        let i = cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
         }
+        let r = job(i);
+        // the cursor gave index i to this runner alone, so the
+        // slot write is unaliased; overwritten None has no drop
+        unsafe { *base.ptr().add(i) = Some(r) };
     });
     results
         .into_iter()

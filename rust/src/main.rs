@@ -419,6 +419,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let f = &args.flags;
     let addr = f.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7943");
     let mut cfg = comq::serve::NetConfig::default();
+    // pipelined stage execution is a deployment decision, not a client
+    // one: resolved from COMQ_PIPELINE (off|on|auto) at startup
+    cfg.batch.pipeline = comq::serve::pipeline_from_env();
     if let Some(v) = f.get("max-batch") {
         cfg.batch.max_batch = v.parse()?;
     }

@@ -1,5 +1,8 @@
 //! Native CNN forward — operation-for-operation mirror of
-//! python/compile/nets/cnn.py (resnet_lite, cnn_s, mobilenet_lite).
+//! python/compile/nets/cnn.py (resnet_lite, cnn_s, mobilenet_lite),
+//! expressed as a stage plan (see [`super::Stage`]). `cnn_forward` is
+//! the sequential fold of the plan; the pipelined serving executor runs
+//! the same plan stage-by-stage across batches.
 
 use std::collections::BTreeMap;
 
@@ -7,7 +10,7 @@ use crate::manifest::CnnConfig;
 use crate::tensor::ops::{avg_pool2, global_avg_pool, relu_inplace, stride_slice};
 use crate::tensor::Tensor;
 
-use super::{conv2d, dwconv2d, linear, Tap};
+use super::{conv2d, dwconv2d, linear, Stage, Tap};
 
 /// x [b, img, img, 3] -> logits [b, classes].
 pub fn cnn_forward(
@@ -16,100 +19,122 @@ pub fn cnn_forward(
     x: &Tensor,
     tap: &mut Tap,
 ) -> Tensor {
+    let mut h = x.clone();
+    for stage in cnn_stages(cfg) {
+        h = stage.run(params, h, tap);
+    }
+    h
+}
+
+/// The CNN forward cut at its natural boundaries: stem, one stage per
+/// (residual / conv / depthwise-separable) block, head. Stage order and
+/// the ops inside each stage are exactly the pre-refactor statement
+/// order, so the fold is operation-for-operation identical.
+pub fn cnn_stages(cfg: &CnnConfig) -> Vec<Stage> {
     match cfg.kind.as_str() {
-        "resnet" => resnet_forward(cfg, params, x, tap),
-        "plain" => plain_forward(cfg, params, x, tap),
-        "mobile" => mobile_forward(cfg, params, x, tap),
+        "resnet" => resnet_stages(cfg),
+        "plain" => plain_stages(),
+        "mobile" => mobile_stages(cfg),
         k => panic!("unknown cnn kind '{k}'"),
     }
 }
 
-fn resnet_forward(
-    cfg: &CnnConfig,
-    params: &BTreeMap<String, Tensor>,
-    x: &Tensor,
-    tap: &mut Tap,
-) -> Tensor {
-    let mut h = conv2d(params, "stem", x, 3, 1, 1, tap);
-    relu_inplace(&mut h);
+fn resnet_stages(cfg: &CnnConfig) -> Vec<Stage> {
+    let mut stages = vec![Stage::new("stem", |params, x, tap| {
+        let mut h = conv2d(params, "stem", &x, 3, 1, 1, tap);
+        relu_inplace(&mut h);
+        h
+    })];
     let mut cin = cfg.width;
     for s in 0..3 {
         let cout = cfg.width * (1 << s);
         for b in 0..cfg.blocks {
             let nm = format!("s{s}/b{b}");
             let stride = if s > 0 && b == 0 { 2 } else { 1 };
-            let mut y = conv2d(params, &format!("{nm}/conv1"), &h, 3, stride, 1, tap);
-            relu_inplace(&mut y);
-            let y2 = conv2d(params, &format!("{nm}/conv2"), &y, 3, 1, 1, tap);
-            let sk = if cin != cout {
-                // 1x1 projection shortcut on the strided input
-                let skx = if stride > 1 { stride_slice(&h, stride) } else { h.clone() };
-                let (bsz, oh, ow) = (skx.shape()[0], skx.shape()[1], skx.shape()[2]);
-                let flat = skx.reshape(&[bsz * oh * ow, cin]);
-                linear(params, &format!("{nm}/skip"), flat, tap)
-                    .reshape(&[bsz, oh, ow, cout])
-            } else if stride > 1 {
-                stride_slice(&h, stride)
-            } else {
-                h.clone()
-            };
-            let mut hn = y2;
-            hn.add_assign(&sk);
-            relu_inplace(&mut hn);
-            h = hn;
+            let block_cin = cin;
+            stages.push(Stage::new(nm.clone(), move |params, h, tap| {
+                let mut y = conv2d(params, &format!("{nm}/conv1"), &h, 3, stride, 1, tap);
+                relu_inplace(&mut y);
+                let y2 = conv2d(params, &format!("{nm}/conv2"), &y, 3, 1, 1, tap);
+                let sk = if block_cin != cout {
+                    // 1x1 projection shortcut on the strided input
+                    let skx = if stride > 1 { stride_slice(&h, stride) } else { h.clone() };
+                    let (bsz, oh, ow) = (skx.shape()[0], skx.shape()[1], skx.shape()[2]);
+                    let flat = skx.reshape(&[bsz * oh * ow, block_cin]);
+                    linear(params, &format!("{nm}/skip"), flat, tap)
+                        .reshape(&[bsz, oh, ow, cout])
+                } else if stride > 1 {
+                    stride_slice(&h, stride)
+                } else {
+                    h.clone()
+                };
+                let mut hn = y2;
+                hn.add_assign(&sk);
+                relu_inplace(&mut hn);
+                hn
+            }));
             cin = cout;
         }
     }
-    let pooled = global_avg_pool(&h);
-    linear(params, "head", pooled, tap)
+    stages.push(Stage::new("head", |params, h, tap| {
+        let pooled = global_avg_pool(&h);
+        linear(params, "head", pooled, tap)
+    }));
+    stages
 }
 
-fn plain_forward(
-    _cfg: &CnnConfig,
-    params: &BTreeMap<String, Tensor>,
-    x: &Tensor,
-    tap: &mut Tap,
-) -> Tensor {
-    let mut h = conv2d(params, "conv0", x, 3, 1, 1, tap);
-    relu_inplace(&mut h);
-    h = conv2d(params, "conv1", &h, 3, 1, 1, tap);
-    relu_inplace(&mut h);
-    h = avg_pool2(&h);
-    h = conv2d(params, "conv2", &h, 3, 1, 1, tap);
-    relu_inplace(&mut h);
-    h = conv2d(params, "conv3", &h, 3, 1, 1, tap);
-    relu_inplace(&mut h);
-    h = avg_pool2(&h);
-    h = conv2d(params, "conv4", &h, 3, 1, 1, tap);
-    relu_inplace(&mut h);
-    let pooled = global_avg_pool(&h);
-    let mut fc = linear(params, "fc", pooled, tap);
-    relu_inplace(&mut fc);
-    linear(params, "head", fc, tap)
+fn plain_stages() -> Vec<Stage> {
+    // Pool placement rides with the preceding conv so the op order of
+    // the fold matches the old straight-line body exactly.
+    let mut stages = Vec::new();
+    for i in 0..5usize {
+        let name = format!("conv{i}");
+        let pooled_after = i == 1 || i == 3;
+        stages.push(Stage::new(name.clone(), move |params, h, tap| {
+            let mut h = conv2d(params, &name, &h, 3, 1, 1, tap);
+            relu_inplace(&mut h);
+            if pooled_after {
+                h = avg_pool2(&h);
+            }
+            h
+        }));
+    }
+    stages.push(Stage::new("fc", |params, h, tap| {
+        let pooled = global_avg_pool(&h);
+        let mut fc = linear(params, "fc", pooled, tap);
+        relu_inplace(&mut fc);
+        fc
+    }));
+    stages.push(Stage::new("head", |params, h, tap| linear(params, "head", h, tap)));
+    stages
 }
 
-fn mobile_forward(
-    cfg: &CnnConfig,
-    params: &BTreeMap<String, Tensor>,
-    x: &Tensor,
-    tap: &mut Tap,
-) -> Tensor {
-    let mut h = conv2d(params, "stem", x, 3, 2, 1, tap);
-    relu_inplace(&mut h);
+fn mobile_stages(cfg: &CnnConfig) -> Vec<Stage> {
+    let mut stages = vec![Stage::new("stem", |params, x, tap| {
+        let mut h = conv2d(params, "stem", &x, 3, 2, 1, tap);
+        relu_inplace(&mut h);
+        h
+    })];
     let mut cin = cfg.width;
     for i in 0..3 {
         let cout = cfg.width * (1 << i);
         let nm = format!("dsb{i}");
         let stride = if i > 0 { 2 } else { 1 };
-        h = dwconv2d(params, &format!("{nm}/dw"), &h, 3, stride, 1, tap);
-        relu_inplace(&mut h);
-        let (bsz, oh, ow) = (h.shape()[0], h.shape()[1], h.shape()[2]);
-        let flat = h.reshape(&[bsz * oh * ow, cin]);
-        let mut pw = linear(params, &format!("{nm}/pw"), flat, tap);
-        relu_inplace(&mut pw);
-        h = pw.reshape(&[bsz, oh, ow, cout]);
+        let block_cin = cin;
+        stages.push(Stage::new(nm.clone(), move |params, h, tap| {
+            let mut h = dwconv2d(params, &format!("{nm}/dw"), &h, 3, stride, 1, tap);
+            relu_inplace(&mut h);
+            let (bsz, oh, ow) = (h.shape()[0], h.shape()[1], h.shape()[2]);
+            let flat = h.reshape(&[bsz * oh * ow, block_cin]);
+            let mut pw = linear(params, &format!("{nm}/pw"), flat, tap);
+            relu_inplace(&mut pw);
+            pw.reshape(&[bsz, oh, ow, cout])
+        }));
         cin = cout;
     }
-    let pooled = global_avg_pool(&h);
-    linear(params, "head", pooled, tap)
+    stages.push(Stage::new("head", |params, h, tap| {
+        let pooled = global_avg_pool(&h);
+        linear(params, "head", pooled, tap)
+    }));
+    stages
 }

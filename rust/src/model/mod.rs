@@ -17,8 +17,8 @@
 mod cnn;
 mod vit;
 
-pub use cnn::cnn_forward;
-pub use vit::vit_forward;
+pub use cnn::{cnn_forward, cnn_stages};
+pub use vit::{vit_forward, vit_stages};
 
 use std::collections::BTreeMap;
 
@@ -155,6 +155,44 @@ fn apply_actq(params: &BTreeMap<String, ActQuant>, name: &str, mut x: Tensor) ->
     x
 }
 
+/// One step of a model's forward pass: a named, boxed transform
+/// `h -> h'` over the activation tensor. The per-architecture stage
+/// builders ([`cnn_stages`], [`vit_stages`]) cut each network at its
+/// natural layer boundaries (stem / residual block / transformer block /
+/// head), and [`Model::forward`] is *defined* as the sequential fold of
+/// the plan — so the pipelined executor in `serve/batcher.rs`, which
+/// runs different stages of different batches concurrently, is
+/// bit-identical to the single-threaded forward by construction: both
+/// run the exact same closures in the exact same order per batch.
+pub struct Stage {
+    name: String,
+    f: Box<dyn Fn(&BTreeMap<String, Tensor>, Tensor, &mut Tap) -> Tensor + Send + Sync>,
+}
+
+impl Stage {
+    pub(crate) fn new(
+        name: impl Into<String>,
+        f: impl Fn(&BTreeMap<String, Tensor>, Tensor, &mut Tap) -> Tensor + Send + Sync + 'static,
+    ) -> Stage {
+        Stage { name: name.into(), f: Box::new(f) }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Run this stage: consumes the activation, returns the next one.
+    pub fn run(&self, params: &BTreeMap<String, Tensor>, h: Tensor, tap: &mut Tap) -> Tensor {
+        (self.f)(params, h, tap)
+    }
+}
+
+impl std::fmt::Debug for Stage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Stage({})", self.name)
+    }
+}
+
 /// A loaded model: manifest metadata + named parameter tensors.
 #[derive(Debug, Clone)]
 pub struct Model {
@@ -199,12 +237,25 @@ impl Model {
         self.info.params.iter().map(|k| &self.params[k]).collect()
     }
 
-    /// Native forward: x [b, img, img, 3] -> logits [b, classes].
-    pub fn forward(&self, x: &Tensor, tap: &mut Tap) -> Tensor {
+    /// The forward pass as an ordered list of named stages. Building a
+    /// plan is cheap (a few boxed closures); the serving tier builds it
+    /// once per loaded model and reuses it across requests.
+    pub fn stage_plan(&self) -> Vec<Stage> {
         match &self.info.config {
-            ModelConfig::ViT(cfg) => vit_forward(cfg, &self.params, x, tap),
-            ModelConfig::Cnn(cfg) => cnn_forward(cfg, &self.params, x, tap),
+            ModelConfig::ViT(cfg) => vit_stages(cfg),
+            ModelConfig::Cnn(cfg) => cnn_stages(cfg),
         }
+    }
+
+    /// Native forward: x [b, img, img, 3] -> logits [b, classes].
+    /// Defined as the fold of [`Model::stage_plan`] — the single source
+    /// of truth the pipelined serving executor shares.
+    pub fn forward(&self, x: &Tensor, tap: &mut Tap) -> Tensor {
+        let mut h = x.clone();
+        for stage in self.stage_plan() {
+            h = stage.run(&self.params, h, tap);
+        }
+        h
     }
 
     /// Total parameter count.

@@ -1,5 +1,8 @@
 //! Native ViT forward — operation-for-operation mirror of
-//! python/compile/nets/vit.py (including Swin-style shifted windows).
+//! python/compile/nets/vit.py (including Swin-style shifted windows),
+//! expressed as a stage plan (see [`super::Stage`]). `vit_forward` is
+//! the sequential fold of the plan; the pipelined serving executor runs
+//! the same plan stage-by-stage across batches.
 
 use std::collections::BTreeMap;
 
@@ -7,7 +10,7 @@ use crate::manifest::ViTConfig;
 use crate::tensor::ops::{gelu_inplace, layer_norm, mean_axis1, shift_tokens, softmax_lastdim};
 use crate::tensor::{im2col, matmul_into, Tensor};
 
-use super::{linear, ln_params, Tap};
+use super::{linear, ln_params, Stage, Tap};
 
 /// x [b, img, img, 3] -> logits [b, classes].
 pub fn vit_forward(
@@ -16,62 +19,81 @@ pub fn vit_forward(
     x: &Tensor,
     tap: &mut Tap,
 ) -> Tensor {
-    let b = x.shape()[0];
+    let mut h = x.clone();
+    for stage in vit_stages(cfg) {
+        h = stage.run(params, h, tap);
+    }
+    h
+}
+
+/// The ViT forward cut at its natural boundaries: patch embedding, one
+/// stage per transformer block, head. Stage order and the ops inside
+/// each stage are exactly the pre-refactor statement order, so the fold
+/// is operation-for-operation identical.
+pub fn vit_stages(cfg: &ViTConfig) -> Vec<Stage> {
+    let cfg = *cfg;
     let grid = cfg.img / cfg.patch;
     let t = grid * grid;
-    let (patches, oh, ow) = im2col(x, cfg.patch, cfg.patch, 0);
-    debug_assert_eq!(oh * ow, t);
-    // embed
-    let mut h = linear(params, "embed/proj", patches, tap); // [b*t, dim]
-    let pos = &params["embed/pos"]; // [t, dim]
-    for bt in 0..b * t {
-        let ti = bt % t;
-        let hrow = &mut h.data_mut()[bt * cfg.dim..(bt + 1) * cfg.dim];
-        for (hv, pv) in hrow.iter_mut().zip(pos.row(ti)) {
-            *hv += pv;
+    let mut stages = vec![Stage::new("embed", move |params, x, tap| {
+        let b = x.shape()[0];
+        let (patches, oh, ow) = im2col(&x, cfg.patch, cfg.patch, 0);
+        debug_assert_eq!(oh * ow, t);
+        let mut h = linear(params, "embed/proj", patches, tap); // [b*t, dim]
+        let pos = &params["embed/pos"]; // [t, dim]
+        for bt in 0..b * t {
+            let ti = bt % t;
+            let hrow = &mut h.data_mut()[bt * cfg.dim..(bt + 1) * cfg.dim];
+            for (hv, pv) in hrow.iter_mut().zip(pos.row(ti)) {
+                *hv += pv;
+            }
         }
-    }
-    let mut h = h.reshape(&[b, t, cfg.dim]);
-
+        h.reshape(&[b, t, cfg.dim])
+    })];
     for i in 0..cfg.depth {
         let nm = format!("blk{i}");
-        // -- attention sublayer --
-        let mut a_in = h.clone();
-        let (g, be) = ln_params(params, &format!("{nm}/ln1"));
-        layer_norm(&mut a_in, g, be);
-        let a = if cfg.window > 0 {
-            let shift = if i % 2 == 1 { cfg.window / 2 } else { 0 };
-            let mut a = if shift > 0 {
-                shift_tokens(&a_in, grid, shift as isize)
+        stages.push(Stage::new(nm.clone(), move |params, mut h, tap| {
+            let b = h.shape()[0];
+            // -- attention sublayer --
+            let mut a_in = h.clone();
+            let (g, be) = ln_params(params, &format!("{nm}/ln1"));
+            layer_norm(&mut a_in, g, be);
+            let a = if cfg.window > 0 {
+                let shift = if i % 2 == 1 { cfg.window / 2 } else { 0 };
+                let mut a = if shift > 0 {
+                    shift_tokens(&a_in, grid, shift as isize)
+                } else {
+                    a_in
+                };
+                a = window_partition(&a, grid, cfg.window);
+                a = attention(&cfg, params, &nm, &a, tap);
+                a = window_merge(&a, b, grid, cfg.window);
+                if shift > 0 {
+                    a = shift_tokens(&a, grid, -(shift as isize));
+                }
+                a
             } else {
-                a_in
+                attention(&cfg, params, &nm, &a_in, tap)
             };
-            a = window_partition(&a, grid, cfg.window);
-            a = attention(cfg, params, &nm, &a, tap);
-            a = window_merge(&a, b, grid, cfg.window);
-            if shift > 0 {
-                a = shift_tokens(&a, grid, -(shift as isize));
-            }
-            a
-        } else {
-            attention(cfg, params, &nm, &a_in, tap)
-        };
-        h.add_assign(&a);
-        // -- MLP sublayer --
-        let mut m_in = h.clone();
-        let (g, be) = ln_params(params, &format!("{nm}/ln2"));
-        layer_norm(&mut m_in, g, be);
-        let m_in = m_in.reshape(&[b * t, cfg.dim]);
-        let mut mlp = linear(params, &format!("{nm}/fc1"), m_in, tap);
-        gelu_inplace(&mut mlp);
-        let mlp = linear(params, &format!("{nm}/fc2"), mlp, tap).reshape(&[b, t, cfg.dim]);
-        h.add_assign(&mlp);
+            h.add_assign(&a);
+            // -- MLP sublayer --
+            let mut m_in = h.clone();
+            let (g, be) = ln_params(params, &format!("{nm}/ln2"));
+            layer_norm(&mut m_in, g, be);
+            let m_in = m_in.reshape(&[b * t, cfg.dim]);
+            let mut mlp = linear(params, &format!("{nm}/fc1"), m_in, tap);
+            gelu_inplace(&mut mlp);
+            let mlp = linear(params, &format!("{nm}/fc2"), mlp, tap).reshape(&[b, t, cfg.dim]);
+            h.add_assign(&mlp);
+            h
+        }));
     }
-
-    let (g, be) = ln_params(params, "norm");
-    layer_norm(&mut h, g, be);
-    let pooled = mean_axis1(&h);
-    linear(params, "head", pooled, tap)
+    stages.push(Stage::new("head", |params, mut h, tap| {
+        let (g, be) = ln_params(params, "norm");
+        layer_norm(&mut h, g, be);
+        let pooled = mean_axis1(&h);
+        linear(params, "head", pooled, tap)
+    }));
+    stages
 }
 
 /// Multi-head self-attention on x [b, t, d] (global within each "batch"

@@ -36,6 +36,23 @@
 //!   at once (the old code polled on a 20 ms timeout to paper over
 //!   exactly this lost-wakeup race). Queued requests are still drained
 //!   and answered before the executors exit.
+//!
+//! ## Pipelined execution (PR 10)
+//!
+//! With [`BatchConfig::pipeline`] on (CLI: `COMQ_PIPELINE=off|on|auto`)
+//! the forward is cut along the model's stage plan
+//! ([`QuantizedModel::stages`]) into contiguous *lanes*, each owned by
+//! one thread: a head thread coalesces batches exactly like the classic
+//! executor, then hands each batch down the lane chain, so batch A's
+//! dense GEMM overlaps batch B's depthwise stage instead of serializing
+//! behind one executor loop. Bit-identity is by construction — every
+//! lane runs the same stage closures, in the same order per batch, that
+//! the sequential forward folds over; only *which thread* runs a stage
+//! changes. Lane queues are bounded (backpressure reaches the coalescer,
+//! which is where the classic path applies it implicitly), shutdown
+//! cascades a `Quit` marker down the chain after the last drained batch,
+//! and a panicking stage drops the batch's [`Responder`]s, which answer
+//! `Err(ExecutorPanicked)` with their terminal stamps already armed.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -62,13 +79,43 @@ pub struct BatchConfig {
     /// Executor threads (0 = derive from the shared COMQ_THREADS
     /// parallelism knob, see `util::effective_threads`). Each executor
     /// runs whole batches; the GEMM inside parallelizes further over the
-    /// worker pool.
+    /// worker pool. Ignored when `pipeline` is on — the pipeline has
+    /// exactly one coalescing head plus its stage lanes.
     pub executors: usize,
+    /// Run the forward as a pipeline of stage lanes (see the module
+    /// docs). Off by default: every embedded caller keeps the classic
+    /// single-loop executor unless it opts in; the `comq serve` CLI
+    /// derives it from `COMQ_PIPELINE` via [`pipeline_from_env`].
+    pub pipeline: bool,
 }
 
 impl Default for BatchConfig {
     fn default() -> Self {
-        BatchConfig { max_batch: 32, max_delay: Duration::from_millis(2), executors: 1 }
+        BatchConfig {
+            max_batch: 32,
+            max_delay: Duration::from_millis(2),
+            executors: 1,
+            pipeline: false,
+        }
+    }
+}
+
+/// Resolve `COMQ_PIPELINE` for the serving CLI: `on`/`1` forces the
+/// pipelined executor, `off`/`0` forces the classic loop, `auto` (or
+/// unset) enables it exactly when the process has parallelism to spend
+/// (`COMQ_THREADS=1` therefore reproduces the classic single-thread
+/// behavior with no env gymnastics). Library callers who construct a
+/// [`BatchConfig`] directly are unaffected.
+pub fn pipeline_from_env() -> bool {
+    let auto = crate::util::effective_threads() > 1;
+    match std::env::var("COMQ_PIPELINE").ok().as_deref().map(str::trim) {
+        Some("on") | Some("1") => true,
+        Some("off") | Some("0") => false,
+        None | Some("") | Some("auto") => auto,
+        Some(other) => {
+            crate::warn_once!("COMQ_PIPELINE='{other}' not off|on|auto; using auto");
+            auto
+        }
     }
 }
 
@@ -221,6 +268,11 @@ pub struct ServeObs {
     /// (`comq_serve_shed_total{model,reason="overload"}`, incremented by
     /// the network tier via [`Server::note_overload_shed`]).
     pub shed_overload: Arc<Counter>,
+    /// Busy-lane count sampled at every pipeline dispatch
+    /// (`comq_serve_pipeline_occupancy{model}`) — a full pipeline
+    /// records `lanes` every time, an under-fed one records 1s. Empty
+    /// unless the pipelined executor is on.
+    pub pipe_occupancy: Arc<Histogram>,
 }
 
 impl ServeObs {
@@ -243,6 +295,7 @@ impl ServeObs {
             respawns: reg.counter(&l("comq_serve_respawns_total")),
             shed_deadline: shed("deadline"),
             shed_overload: shed("overload"),
+            pipe_occupancy: reg.histogram(&l("comq_serve_pipeline_occupancy")),
         }
     }
 }
@@ -273,6 +326,94 @@ impl Shared {
         self.shed_deadline.fetch_add(n, Ordering::Relaxed);
         if let Some(o) = &self.obs {
             o.shed_deadline.add(n as u64);
+        }
+    }
+}
+
+/// Most stage lanes a pipelined server will spawn — beyond this the
+/// per-lane batches are too thin to cover the hand-off cost.
+const MAX_LANES: usize = 8;
+
+/// Bound on each lane's inbox. Small on purpose: once every lane holds
+/// `LANE_CAP` batches the head blocks in [`PipeShared::send_work`], so
+/// backpressure reaches the coalescer — the same place the classic path
+/// applies it implicitly by running the forward on the coalescing
+/// thread.
+const LANE_CAP: usize = 4;
+
+/// A coalesced batch traveling the lane chain: the activation plus
+/// everything the epilogue needs (reply paths, trace ids, span
+/// instants). The head moves each request's input bytes into the batch
+/// tensor and leaves `Pending::data` empty, so an in-flight batch is
+/// resident once, not twice.
+struct StageBatch {
+    /// Current activation; `take`n by each lane for the forward slice.
+    h: Option<Tensor>,
+    pending: Vec<Pending>,
+    /// (trace id, arrival) per traced request.
+    traced: Vec<(u64, Instant)>,
+    /// Arrival instants (obs only — queue_wait/total spans).
+    arrivals: Vec<Instant>,
+    /// Requests in the batch.
+    b: usize,
+    t_drained: Option<Instant>,
+    t_built: Option<Instant>,
+}
+
+enum LaneMsg {
+    Work(Box<StageBatch>),
+    Quit,
+}
+
+#[derive(Default)]
+struct LaneQ {
+    q: Mutex<VecDeque<LaneMsg>>,
+    cv: Condvar,
+}
+
+/// The lane chain: one bounded inbox per lane plus the stage split.
+struct PipeShared {
+    lanes: Vec<LaneQ>,
+    /// Half-open stage range each lane executes (`bounds[i] = (lo, hi)`,
+    /// contiguous, covering the whole plan).
+    bounds: Vec<(usize, usize)>,
+    /// Lanes currently executing a slice (feeds the occupancy histogram).
+    busy: AtomicUsize,
+}
+
+impl PipeShared {
+    /// Enqueue a batch for `lane`, blocking while its inbox is full —
+    /// the head's backpressure path.
+    fn send_work(&self, lane: usize, sb: Box<StageBatch>) {
+        let l = &self.lanes[lane];
+        let mut q = l.q.lock().unwrap();
+        while q.len() >= LANE_CAP {
+            q = l.cv.wait(q).unwrap();
+        }
+        q.push_back(LaneMsg::Work(sb));
+        drop(q);
+        l.cv.notify_all();
+    }
+
+    /// Enqueue the shutdown marker unconditionally (it must never block
+    /// behind the cap, or a full pipeline could deadlock the drain).
+    fn send_quit(&self, lane: usize) {
+        self.lanes[lane].q.lock().unwrap().push_back(LaneMsg::Quit);
+        self.lanes[lane].cv.notify_all();
+    }
+
+    fn recv(&self, lane: usize) -> LaneMsg {
+        let l = &self.lanes[lane];
+        let mut q = l.q.lock().unwrap();
+        loop {
+            if let Some(m) = q.pop_front() {
+                drop(q);
+                // a slot freed: the blocked sender (head or upstream
+                // lane) shares this condvar
+                l.cv.notify_all();
+                return m;
+            }
+            q = l.cv.wait(q).unwrap();
         }
     }
 }
@@ -328,15 +469,53 @@ impl Server {
             respawns: AtomicUsize::new(0),
             obs,
         });
-        let workers = (0..executors)
-            .map(|i| {
-                let sh = shared.clone();
+        // Pipeline sizing: one lane per stage up to the parallelism
+        // budget; fewer than two lanes is just the classic loop with
+        // extra hand-offs, so fall back.
+        let n_stages = shared.model.stages().len();
+        let lanes = if cfg.pipeline {
+            n_stages.min(crate::util::effective_threads()).min(MAX_LANES)
+        } else {
+            0
+        };
+        let workers = if lanes >= 2 {
+            let bounds = (0..lanes)
+                .map(|i| (i * n_stages / lanes, (i + 1) * n_stages / lanes))
+                .collect();
+            let ps = Arc::new(PipeShared {
+                lanes: (0..lanes).map(|_| LaneQ::default()).collect(),
+                bounds,
+                busy: AtomicUsize::new(0),
+            });
+            let mut ws = Vec::with_capacity(lanes + 1);
+            let (sh, p) = (shared.clone(), ps.clone());
+            ws.push(
                 std::thread::Builder::new()
-                    .name(format!("comq-serve-{i}"))
-                    .spawn(move || supervise(&sh))
-                    .expect("spawning serve executor")
-            })
-            .collect();
+                    .name("comq-serve-head".into())
+                    .spawn(move || supervise(&sh, || pipeline_head_loop(&sh, &p)))
+                    .expect("spawning pipeline head"),
+            );
+            for i in 0..lanes {
+                let (sh, p) = (shared.clone(), ps.clone());
+                ws.push(
+                    std::thread::Builder::new()
+                        .name(format!("comq-lane-{i}"))
+                        .spawn(move || supervise(&sh, || lane_loop(&sh, &p, i)))
+                        .expect("spawning pipeline lane"),
+                );
+            }
+            ws
+        } else {
+            (0..executors)
+                .map(|i| {
+                    let sh = shared.clone();
+                    std::thread::Builder::new()
+                        .name(format!("comq-serve-{i}"))
+                        .spawn(move || supervise(&sh, || executor_loop(&sh)))
+                        .expect("spawning serve executor")
+                })
+                .collect()
+        };
         Server { shared, workers: Mutex::new(workers) }
     }
 
@@ -488,15 +667,16 @@ impl Drop for Server {
     }
 }
 
-/// Run the executor loop, respawning it (in place, same OS thread) when
-/// a panic escapes the per-batch guard — a single poisoned request or
-/// an injected `COMQ_FAULT=panic:exec` must not permanently shrink exec
-/// capacity. In-flight requests of the poisoned iteration are answered
-/// `Err(ExecutorPanicked)` by their [`Responder`] drops during the
-/// unwind.
-fn supervise(sh: &Shared) {
+/// Run an executor/head/lane loop, respawning it (in place, same OS
+/// thread) when a panic escapes the per-batch guard — a single poisoned
+/// request or an injected `COMQ_FAULT=panic:exec` must not permanently
+/// shrink exec capacity (for a pipeline lane, an unrespawned panic
+/// would wedge the whole chain). In-flight requests of the poisoned
+/// iteration are answered `Err(ExecutorPanicked)` by their
+/// [`Responder`] drops during the unwind.
+fn supervise<F: Fn()>(sh: &Shared, run: F) {
     loop {
-        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| executor_loop(sh))) {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(&run)) {
             Ok(()) => return, // clean shutdown
             Err(_) => {
                 sh.respawns.fetch_add(1, Ordering::Relaxed);
@@ -515,75 +695,219 @@ fn supervise(sh: &Shared) {
     }
 }
 
-fn executor_loop(sh: &Shared) {
+/// Coalesce the next batch out of the shared queue — the one drain path
+/// both the classic executor and the pipeline head run. Blocks for
+/// work; closes the window on full / deadline / shutdown; decrements
+/// the depth accounting; arms the drop-path terminal stamps; runs the
+/// injected exec fault; sheds requests whose deadline passed while
+/// queued. Returns the executable batch (possibly empty when everything
+/// drained had expired) — `None` means shutdown with an empty queue and
+/// the caller exits.
+fn next_batch(sh: &Shared) -> Option<Vec<Pending>> {
+    // coalesce: wait for work, then until full / deadline / shutdown.
+    // The window is the oldest request's batching deadline tightened
+    // by any queued per-request deadline (a tight-budget request
+    // must not be held for company it cannot afford). `missed` marks
+    // a window closed by a deadline rather than by a full batch
+    // (shutdown drains don't count as misses).
+    let (batch, missed): (Vec<Pending>, bool) = {
+        let mut q = sh.queue.lock().unwrap();
+        loop {
+            if q.is_empty() {
+                if sh.shutdown.load(Ordering::Acquire) {
+                    return None;
+                }
+                // no timeout needed: push and shutdown both happen
+                // under this mutex before their notify, so the
+                // wakeup cannot be lost
+                q = sh.cv.wait(q).unwrap();
+                continue;
+            }
+            let window = coalesce_window(&q, sh.max_delay, sh.max_batch);
+            let now = Instant::now();
+            let full = q.len() >= sh.max_batch;
+            if full || now >= window || sh.shutdown.load(Ordering::Acquire) {
+                let take = q.len().min(sh.max_batch);
+                break (q.drain(..take).collect(), !full && now >= window);
+            }
+            q = sh.cv.wait_timeout(q, window - now).unwrap().0;
+        }
+    };
+    let mut batch = batch;
+    let drained = batch.len();
+    sh.depth.fetch_sub(drained, Ordering::Relaxed);
+    if let Some(o) = &sh.obs {
+        o.queue_depth.add(-(drained as i64));
+        if missed {
+            o.deadline_miss.inc();
+        }
+        // arm the drop-path terminal stamp before anything can
+        // panic: a request answered by Responder::drop during an
+        // unwind still lands in the stage histograms
+        for p in &mut batch {
+            p.respond.arm_terminal(&o.spans, p.arrived);
+        }
+    }
+    // injected fault: a panic here escapes the per-batch guard below
+    // and exercises the supervisor respawn (the batch's responders
+    // answer ExecutorPanicked from their drops during the unwind)
+    fault::maybe_panic(fault::Site::Exec);
+    // pre-exec shed: anything whose deadline passed while queued is
+    // answered DeadlineExceeded instead of burning a GEMM slot
+    let now = Instant::now();
+    let (batch, expired): (Vec<Pending>, Vec<Pending>) =
+        batch.into_iter().partition(|p| p.deadline.map_or(true, |d| now < d));
+    if !expired.is_empty() {
+        sh.note_deadline_shed(expired.len());
+        for p in expired {
+            if let Some(c) = p.trace {
+                // the traced view of a drain-time shed: the span
+                // covers the whole doomed wait
+                trace::event(c.id, "shed:deadline", p.arrived, now);
+            }
+            p.respond.reply(Err(ServeError::DeadlineExceeded));
+        }
+    }
+    Some(batch)
+}
+
+/// Turn a drained batch into a [`StageBatch`]: stamp the stage
+/// boundaries when telemetry is on or any request is traced — spans and
+/// trace events are cut from the *same* instants, so a trace's stages
+/// telescope exactly against the histogram sums — and concatenate the
+/// request images into the batch tensor (moving, not copying: each
+/// `Pending` is left with an empty data vec).
+fn build_stage_batch(sh: &Shared, mut batch: Vec<Pending>) -> Box<StageBatch> {
+    let b = batch.len();
+    let traced: Vec<(u64, Instant)> = if trace::enabled() {
+        batch.iter().filter_map(|p| p.trace.map(|c| (c.id, p.arrived))).collect()
+    } else {
+        Vec::new()
+    };
+    let need_t = sh.obs.is_some() || !traced.is_empty();
+    if let Some(o) = &sh.obs {
+        o.batch_size.record(b as u64);
+    }
+    let t_drained = need_t.then(Instant::now);
+    let arrivals: Vec<Instant> =
+        if sh.obs.is_some() { batch.iter().map(|p| p.arrived).collect() } else { Vec::new() };
     let elems = sh.side * sh.side * 3;
+    let mut data = Vec::with_capacity(b * elems);
+    for p in &mut batch {
+        data.extend_from_slice(&p.data);
+        p.data = Vec::new();
+    }
+    let t_built = need_t.then(Instant::now);
+    Box::new(StageBatch {
+        h: Some(Tensor::new(&[b, sh.side, sh.side, 3], data)),
+        pending: batch,
+        traced,
+        arrivals,
+        b,
+        t_drained,
+        t_built,
+    })
+}
+
+fn ns(d: Duration) -> u64 {
+    d.as_nanos() as u64
+}
+
+/// The epilogue: reply logits, count the batch, and stamp spans/trace
+/// events against the boundaries carried in the [`StageBatch`]. Runs on
+/// the classic executor after its forward, or on the *last* lane of the
+/// pipeline — either way `Exec` spans `t_built → now`, so on the
+/// pipelined path it covers the whole lane traversal (hand-off queueing
+/// included), which is the honest per-request exec time.
+fn finish_batch(sh: &Shared, sb: Box<StageBatch>, logits: &Tensor) {
+    let sb = *sb;
+    let b = sb.b;
+    let need_t = sh.obs.is_some() || !sb.traced.is_empty();
+    let t_done = need_t.then(Instant::now);
+    let classes = logits.cols();
+    for (i, p) in sb.pending.into_iter().enumerate() {
+        // a dropped receiver is fine — the rest of the batch stands
+        p.respond.reply(Ok(logits.data()[i * classes..(i + 1) * classes].to_vec()));
+    }
+    sh.served.fetch_add(b, Ordering::Relaxed);
+    // epilogue closes here for spans and traces alike
+    let t_sent = need_t.then(Instant::now);
+    // Record spans for the whole answered batch at once, so every stage
+    // histogram carries the same count and per-stage sums stay coherent
+    // with the totals.
+    if let (Some(o), Some(ta), Some(tb), Some(td), Some(ts)) =
+        (&sh.obs, sb.t_drained, sb.t_built, t_done, t_sent)
+    {
+        let n = b as u64;
+        o.spans.record_n(Stage::Coalesce, ns(tb.saturating_duration_since(ta)), n);
+        o.spans.record_n(Stage::Exec, ns(td.saturating_duration_since(tb)), n);
+        o.spans.record_n(Stage::Epilogue, ns(ts.saturating_duration_since(td)), n);
+        for a in &sb.arrivals {
+            o.spans.record(Stage::QueueWait, ns(ta.saturating_duration_since(*a)));
+            o.spans.record(Stage::Total, ns(ts.saturating_duration_since(*a)));
+        }
+    }
+    // the traced view of the same boundaries: four contiguous spans per
+    // request, queue_wait → epilogue, telescoping exactly to
+    // arrival → t_sent
+    if let (Some(ta), Some(tb), Some(td), Some(ts)) = (sb.t_drained, sb.t_built, t_done, t_sent)
+    {
+        for (id, arrived) in &sb.traced {
+            trace::event(*id, "queue_wait", *arrived, ta);
+            trace::event(*id, "coalesce", ta, tb);
+            trace::event(*id, "exec", tb, td);
+            trace::event(*id, "epilogue", td, ts);
+        }
+    }
+    sh.batches.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The failure epilogue for a batch whose forward panicked (classic
+/// executor or any pipeline lane): stamp the stages that really
+/// happened — the epilogue never did (0), and the sums still telescope:
+/// queue_wait+coalesce+exec = total — then answer every request
+/// `ExecutorPanicked`.
+fn fail_batch(sh: &Shared, sb: Box<StageBatch>) {
+    let sb = *sb;
+    let b = sb.b;
+    let need_t = sh.obs.is_some() || !sb.traced.is_empty();
+    let t_done = need_t.then(Instant::now);
+    if let Some(o) = &sh.obs {
+        o.panics.inc();
+    }
+    crate::log_warn!(
+        "serve executor: batch forward panicked; {b} request(s) answered with error"
+    );
+    if let (Some(o), Some(ta), Some(tb), Some(td)) = (&sh.obs, sb.t_drained, sb.t_built, t_done)
+    {
+        let n = b as u64;
+        o.spans.record_n(Stage::Coalesce, ns(tb.saturating_duration_since(ta)), n);
+        o.spans.record_n(Stage::Exec, ns(td.saturating_duration_since(tb)), n);
+        o.spans.record_n(Stage::Epilogue, 0, n);
+        for a in &sb.arrivals {
+            o.spans.record(Stage::QueueWait, ns(ta.saturating_duration_since(*a)));
+            o.spans.record(Stage::Total, ns(td.saturating_duration_since(*a)));
+        }
+    }
+    if let (Some(ta), Some(tb), Some(td)) = (sb.t_drained, sb.t_built, t_done) {
+        for (id, arrived) in &sb.traced {
+            trace::event(*id, "queue_wait", *arrived, ta);
+            trace::event(*id, "coalesce", ta, tb);
+            trace::event(*id, "exec_panic", tb, td);
+        }
+    }
+    for p in sb.pending {
+        p.respond.reply(Err(ServeError::ExecutorPanicked));
+    }
+    sh.batches.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The classic executor: coalesce, run the whole stage plan, reply.
+fn executor_loop(sh: &Shared) {
+    let n_stages = sh.model.stages().len();
     loop {
-        // coalesce: wait for work, then until full / deadline / shutdown.
-        // The window is the oldest request's batching deadline tightened
-        // by any queued per-request deadline (a tight-budget request
-        // must not be held for company it cannot afford). `missed` marks
-        // a window closed by a deadline rather than by a full batch
-        // (shutdown drains don't count as misses).
-        let (batch, missed): (Vec<Pending>, bool) = {
-            let mut q = sh.queue.lock().unwrap();
-            loop {
-                if q.is_empty() {
-                    if sh.shutdown.load(Ordering::Acquire) {
-                        return;
-                    }
-                    // no timeout needed: push and shutdown both happen
-                    // under this mutex before their notify, so the
-                    // wakeup cannot be lost
-                    q = sh.cv.wait(q).unwrap();
-                    continue;
-                }
-                let window = coalesce_window(&q, sh.max_delay, sh.max_batch);
-                let now = Instant::now();
-                let full = q.len() >= sh.max_batch;
-                if full || now >= window || sh.shutdown.load(Ordering::Acquire) {
-                    let take = q.len().min(sh.max_batch);
-                    break (q.drain(..take).collect(), !full && now >= window);
-                }
-                q = sh.cv.wait_timeout(q, window - now).unwrap().0;
-            }
-        };
-        let mut batch = batch;
-        let drained = batch.len();
-        sh.depth.fetch_sub(drained, Ordering::Relaxed);
-        if let Some(o) = &sh.obs {
-            o.queue_depth.add(-(drained as i64));
-            if missed {
-                o.deadline_miss.inc();
-            }
-            // arm the drop-path terminal stamp before anything can
-            // panic: a request answered by Responder::drop during an
-            // unwind still lands in the stage histograms
-            for p in &mut batch {
-                p.respond.arm_terminal(&o.spans, p.arrived);
-            }
-        }
-        // injected fault: a panic here escapes the per-batch guard below
-        // and exercises the supervisor respawn (the batch's responders
-        // answer ExecutorPanicked from their drops during the unwind)
-        fault::maybe_panic(fault::Site::Exec);
-        // pre-exec shed: anything whose deadline passed while queued is
-        // answered DeadlineExceeded instead of burning a GEMM slot
-        let now = Instant::now();
-        let (batch, expired): (Vec<Pending>, Vec<Pending>) =
-            batch.into_iter().partition(|p| p.deadline.map_or(true, |d| now < d));
-        if !expired.is_empty() {
-            sh.note_deadline_shed(expired.len());
-            for p in expired {
-                if let Some(c) = p.trace {
-                    // the traced view of a drain-time shed: the span
-                    // covers the whole doomed wait
-                    trace::event(c.id, "shed:deadline", p.arrived, now);
-                }
-                p.respond.reply(Err(ServeError::DeadlineExceeded));
-            }
-        }
-        let b = batch.len();
-        if b == 0 {
+        let Some(batch) = next_batch(sh) else { return };
+        if batch.is_empty() {
             continue; // whole batch expired — nothing to execute
         }
         // injected fault: stretch the exec stage (overload / deadline
@@ -591,123 +915,114 @@ fn executor_loop(sh: &Shared) {
         if let Some(d) = fault::slow_for(fault::Site::Exec) {
             std::thread::sleep(d);
         }
-        // Stamp the batch's stage boundaries when telemetry is on or
-        // any request in the batch is traced — spans and trace events
-        // are cut from the *same* instants, so a trace's stages
-        // telescope exactly against the histogram sums. Arrival times
-        // are copied out up front because the send loop consumes the
-        // batch before the epilogue boundary is known.
-        let traced: Vec<(u64, Instant)> = if trace::enabled() {
-            batch.iter().filter_map(|p| p.trace.map(|c| (c.id, p.arrived))).collect()
-        } else {
-            Vec::new()
-        };
-        let need_t = sh.obs.is_some() || !traced.is_empty();
-        if let Some(o) = &sh.obs {
-            o.batch_size.record(b as u64);
-        }
-        let t_drained = need_t.then(Instant::now);
-        let arrivals: Vec<Instant> =
-            if sh.obs.is_some() { batch.iter().map(|p| p.arrived).collect() } else { Vec::new() };
-        let mut data = Vec::with_capacity(b * elems);
-        for p in &batch {
-            data.extend_from_slice(&p.data);
-        }
-        let t_built = need_t.then(Instant::now);
+        let mut sb = build_stage_batch(sh, batch);
         // carry the traced ids into the per-layer exec hooks via the
         // executor thread (the layer has no other route back to its
         // requests)
-        if !traced.is_empty() {
-            let ids: Vec<u64> = traced.iter().map(|(id, _)| *id).collect();
+        let ids: Vec<u64> = sb.traced.iter().map(|(id, _)| *id).collect();
+        if !ids.is_empty() {
             trace::set_batch(&ids);
         }
+        let h = sb.h.take().expect("fresh batch tensor");
+        let items = sb.b as u64;
         // a panicking forward must not kill the executor — the queue
         // would fill forever behind a Server that still looks healthy.
         // Catch it, answer this batch's requests ExecutorPanicked, and
         // keep serving.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            sh.model.forward(&Tensor::new(&[b, sh.side, sh.side, 3], data))
+            sh.model.forward_stages(0, n_stages, h, items)
         }));
-        if !traced.is_empty() {
+        if !ids.is_empty() {
             trace::clear_batch();
         }
-        let ns = |d: std::time::Duration| d.as_nanos() as u64;
         match result {
-            Ok(logits) => {
-                let t_done = need_t.then(Instant::now);
-                let classes = logits.cols();
-                for (i, p) in batch.into_iter().enumerate() {
-                    // a dropped receiver is fine — the rest of the batch stands
-                    p.respond.reply(Ok(logits.data()[i * classes..(i + 1) * classes].to_vec()));
-                }
-                sh.served.fetch_add(b, Ordering::Relaxed);
-                // epilogue closes here for spans and traces alike
-                let t_sent = need_t.then(Instant::now);
-                // Record spans for the whole answered batch at once, so
-                // every stage histogram carries the same count and
-                // per-stage sums stay coherent with the totals.
-                if let (Some(o), Some(ta), Some(tb), Some(td), Some(ts)) =
-                    (&sh.obs, t_drained, t_built, t_done, t_sent)
-                {
-                    let n = b as u64;
-                    o.spans.record_n(Stage::Coalesce, ns(tb.saturating_duration_since(ta)), n);
-                    o.spans.record_n(Stage::Exec, ns(td.saturating_duration_since(tb)), n);
-                    o.spans.record_n(Stage::Epilogue, ns(ts.saturating_duration_since(td)), n);
-                    for a in &arrivals {
-                        o.spans
-                            .record(Stage::QueueWait, ns(ta.saturating_duration_since(*a)));
-                        o.spans.record(Stage::Total, ns(ts.saturating_duration_since(*a)));
-                    }
-                }
-                // the traced view of the same boundaries: four
-                // contiguous spans per request, queue_wait → epilogue,
-                // telescoping exactly to arrival → t_sent
-                if let (Some(ta), Some(tb), Some(td), Some(ts)) =
-                    (t_drained, t_built, t_done, t_sent)
-                {
-                    for (id, arrived) in &traced {
-                        trace::event(*id, "queue_wait", *arrived, ta);
-                        trace::event(*id, "coalesce", ta, tb);
-                        trace::event(*id, "exec", tb, td);
-                        trace::event(*id, "epilogue", td, ts);
-                    }
-                }
-            }
-            Err(_) => {
-                let t_done = need_t.then(Instant::now);
-                if let Some(o) = &sh.obs {
-                    o.panics.inc();
-                }
-                crate::log_warn!(
-                    "serve executor: batch forward panicked; {b} request(s) answered with error"
-                );
-                // stamp the panicked batch's stages before the error
-                // replies go out — the boundaries up to the panic are
-                // real, the epilogue never happened (0), and the sums
-                // still telescope: queue_wait+coalesce+exec = total
-                if let (Some(o), Some(ta), Some(tb), Some(td)) = (&sh.obs, t_drained, t_built, t_done) {
-                    let n = b as u64;
-                    o.spans.record_n(Stage::Coalesce, ns(tb.saturating_duration_since(ta)), n);
-                    o.spans.record_n(Stage::Exec, ns(td.saturating_duration_since(tb)), n);
-                    o.spans.record_n(Stage::Epilogue, 0, n);
-                    for a in &arrivals {
-                        o.spans.record(Stage::QueueWait, ns(ta.saturating_duration_since(*a)));
-                        o.spans.record(Stage::Total, ns(td.saturating_duration_since(*a)));
-                    }
-                }
-                if let (Some(ta), Some(tb), Some(td)) = (t_drained, t_built, t_done) {
-                    for (id, arrived) in &traced {
-                        trace::event(*id, "queue_wait", *arrived, ta);
-                        trace::event(*id, "coalesce", ta, tb);
-                        trace::event(*id, "exec_panic", tb, td);
-                    }
-                }
-                for p in batch {
-                    p.respond.reply(Err(ServeError::ExecutorPanicked));
-                }
-            }
+            Ok(logits) => finish_batch(sh, sb, &logits),
+            Err(_) => fail_batch(sh, sb),
         }
-        sh.batches.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// The pipeline's coalescing head: same drain path as the classic
+/// executor, but each built batch is handed to lane 0 instead of being
+/// executed in place. On shutdown (queue fully drained) it starts the
+/// `Quit` cascade down the lane chain.
+fn pipeline_head_loop(sh: &Shared, ps: &PipeShared) {
+    loop {
+        let Some(batch) = next_batch(sh) else {
+            ps.send_quit(0);
+            return;
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        if let Some(d) = fault::slow_for(fault::Site::Exec) {
+            std::thread::sleep(d);
+        }
+        ps.send_work(0, build_stage_batch(sh, batch));
+    }
+}
+
+/// One pipeline lane: pull a batch, run this lane's stage slice with
+/// the trace batch-context set on *this* thread (the per-layer exec
+/// hooks read it thread-locally), pass the batch on — or, on the last
+/// lane, run the shared epilogue. `Quit` is forwarded after all queued
+/// work (FIFO), so shutdown still answers everything.
+fn lane_loop(sh: &Shared, ps: &PipeShared, lane: usize) {
+    let (lo, hi) = ps.bounds[lane];
+    let last = lane + 1 == ps.lanes.len();
+    let lane_nanos = sh.obs.as_ref().map(|_| {
+        crate::obs::registry().histogram(&with_labels(
+            "comq_serve_lane_seconds",
+            &[("model", &sh.model.info().name), ("lane", &lane.to_string())],
+        ))
+    });
+    loop {
+        let mut sb = match ps.recv(lane) {
+            LaneMsg::Quit => {
+                if !last {
+                    ps.send_quit(lane + 1);
+                }
+                return;
+            }
+            LaneMsg::Work(sb) => sb,
+        };
+        let busy = ps.busy.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(o) = &sh.obs {
+            o.pipe_occupancy.record(busy as u64);
+        }
+        let ids: Vec<u64> = sb.traced.iter().map(|(id, _)| *id).collect();
+        if !ids.is_empty() {
+            trace::set_batch(&ids);
+        }
+        let t0 = Instant::now();
+        let h = sb.h.take().expect("upstream lane left the activation");
+        let items = sb.b as u64;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sh.model.forward_stages(lo, hi, h, items)
+        }));
+        let elapsed = t0.elapsed();
+        if !ids.is_empty() {
+            trace::clear_batch();
+        }
+        if let Some(hist) = &lane_nanos {
+            hist.record(ns(elapsed));
+        }
+        ps.busy.fetch_sub(1, Ordering::Relaxed);
+        match result {
+            Ok(h) => {
+                // the traced view of this lane's slice of the exec span
+                for (id, _) in &sb.traced {
+                    trace::event(*id, &format!("pipe:lane{lane}"), t0, t0 + elapsed);
+                }
+                if last {
+                    finish_batch(sh, sb, &h);
+                } else {
+                    sb.h = Some(h);
+                    ps.send_work(lane + 1, sb);
+                }
+            }
+            Err(_) => fail_batch(sh, sb),
+        }
     }
 }
 

@@ -43,7 +43,7 @@
 
 use crate::quant::actq::ActQuant;
 use crate::tensor::{Tensor, MR, NR};
-use crate::util::pool::{parallel_ranges, SendPtr};
+use crate::util::pool::{parallel_ranges, parallel_sharded, SendPtr};
 use crate::util::simd::{self, Kernel, K4};
 
 /// At this k extent the worst-case i32 sum hits exactly 2^31
@@ -296,6 +296,85 @@ pub fn gemm_i8_fused_with(
             let j0 = s * NR;
             let cols = NR.min(n - j0);
             for blk in blocks.clone() {
+                let i0 = blk * MR;
+                let rmax = MR.min(rows - i0);
+                micro_i8(kern, a, strip, kg, wide, out, i0, rmax, j0, cols, n, co);
+            }
+        }
+    });
+}
+
+/// One NUMA node's slice of a K4-packed weight panel: a contiguous
+/// range of column strips with its own byte copy, allocated (and so
+/// first-touched) by a pool task hinted to that node — which is what
+/// places the pages in that node's local memory under first-touch NUMA
+/// policy. Built by `Int8Panel` at weight prep when `util::topo`
+/// reports a multi-node layout; shard `i` is consumed by node `i`'s
+/// workers via [`crate::util::pool::parallel_sharded`].
+pub struct PanelShard {
+    /// Strip indices `[start, end)` of the full panel this shard holds.
+    pub strips: std::ops::Range<usize>,
+    /// `strips.len() * strip_len` panel bytes, node-local.
+    pub bytes: Vec<i8>,
+}
+
+/// NUMA-sharded [`gemm_i8_fused`]: identical math over per-node panel
+/// shards. Each shard's strips are dispatched as node-hinted tasks, so
+/// the i8 panel bytes stream from node-local memory and every i32
+/// accumulator (an MR×NR stack tile inside [`micro_i8`]) is node-local
+/// by construction. Bit-identity with the flat entry is structural:
+/// per-(strip, row-block) tiles see the exact same bytes in the exact
+/// same K4 order regardless of which shard copy — or which thread —
+/// serves them, and the integer accumulation is exact.
+pub fn gemm_i8_fused_sharded(
+    a: &QuantizedActs,
+    shards: &[PanelShard],
+    n: usize,
+    wbits: u32,
+    co: &EpilogueCoeffs,
+    out: &mut [f32],
+) {
+    let kern = Kernel::active();
+    let kern = if kern.supported() { kern } else { Kernel::Scalar };
+    if crate::obs::enabled() {
+        crate::obs::metrics::kernel_counter(kern).inc();
+    }
+    let (rows, k) = (a.rows, a.m);
+    assert!(k < MAX_K, "k={k} would overflow the i32 accumulator");
+    assert_eq!(out.len(), rows * n);
+    assert_eq!(co.scale.len(), n);
+    assert_eq!(co.zc.len(), n);
+    assert_eq!(co.fixed.len(), n);
+    assert_eq!(co.bias.len(), n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    let kg = k.div_ceil(K4);
+    let strip_len = kg * NR * K4;
+    let n_strips = n.div_ceil(NR);
+    let covered: usize = shards.iter().map(|s| s.strips.len()).sum();
+    assert_eq!(covered, n_strips, "shards must cover every strip exactly once");
+    for s in shards {
+        assert_eq!(s.bytes.len(), s.strips.len() * strip_len, "shard not K4-packed for [{k}, {n}]");
+    }
+    let wide = !simd::maddubs_safe(a.aq.bits, wbits);
+    let row_blocks = rows.div_ceil(MR);
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    // Column-strip split in every regime: strips are what the shards
+    // partition, and strips write disjoint output columns (the SendPtr
+    // contract). Within a task: strip-outer / row-block-inner, the same
+    // per-tile order as the flat entry.
+    let min_strips = (MIN_OPS_PER_THREAD / (2 * k * NR * rows).max(1)).max(1);
+    let ranges: Vec<std::ops::Range<usize>> = shards.iter().map(|s| s.strips.clone()).collect();
+    parallel_sharded(&ranges, min_strips, |si, strips| {
+        let sh = &shards[si];
+        let out = unsafe { std::slice::from_raw_parts_mut(out_ptr.ptr(), rows * n) };
+        for s in strips {
+            let off = (s - sh.strips.start) * strip_len;
+            let strip = &sh.bytes[off..off + strip_len];
+            let j0 = s * NR;
+            let cols = NR.min(n - j0);
+            for blk in 0..row_blocks {
                 let i0 = blk * MR;
                 let rmax = MR.min(rows - i0);
                 micro_i8(kern, a, strip, kg, wide, out, i0, rmax, j0, cols, n, co);
@@ -624,6 +703,53 @@ mod tests {
                     let tol = 1e-3 * acc.abs().max(1.0);
                     assert!((got - acc).abs() <= tol, "({rows},{kk},{c}) r={r} j={j}: {got} vs {acc}");
                 }
+            }
+        }
+    }
+
+    /// Sharded GEMM must be bit-identical to the flat entry: same
+    /// bytes, same per-tile order, exact integer accumulation — the
+    /// contract that lets NUMA sharding ride under the parity tests.
+    #[test]
+    fn sharded_gemm_bit_identical_to_flat() {
+        let mut rng = Rng::new(13);
+        for &(rows, k, n) in &[(1usize, 8usize, 48usize), (5, 33, 40), (9, 16, 64)] {
+            let wbits = 4u32;
+            let cw = 1i32 << (wbits - 1);
+            let s: Vec<i8> = (0..k * n).map(|_| (rng.below(16) as i32 - cw) as i8).collect();
+            let x = Tensor::new(&[rows, k], rng.normal_vec(rows * k));
+            let aq = ActQuant::from_range(x.min(), x.max(), 8, 1.0);
+            let acts = QuantizedActs::quantize(&x, aq);
+            let co = EpilogueCoeffs {
+                scale: (0..n).map(|_| rng.range_f32(0.01, 0.2) as f64).collect(),
+                zc: (0..n).map(|_| rng.below(17) as f64 - 8.0).collect(),
+                fixed: (0..n).map(|_| rng.below(100) as f64).collect(),
+                bias: (0..n).map(|_| rng.range_f32(-1.0, 1.0) as f64).collect(),
+            };
+            let panel = pack_panel_k4(&s, k, n);
+            let mut flat = vec![0.0f32; rows * n];
+            gemm_i8_fused(&acts, &panel, n, wbits, &co, &mut flat);
+
+            // split the strips into 1, 2 and 3 hand-built shards
+            let kg = k.div_ceil(K4);
+            let strip_len = kg * NR * K4;
+            let n_strips = n.div_ceil(NR);
+            for parts in 1..=3usize.min(n_strips) {
+                let per = n_strips.div_ceil(parts);
+                let shards: Vec<PanelShard> = (0..parts)
+                    .map(|i| {
+                        let r = (i * per).min(n_strips)..((i + 1) * per).min(n_strips);
+                        let bytes = panel[r.start * strip_len..r.end * strip_len].to_vec();
+                        PanelShard { strips: r, bytes }
+                    })
+                    .filter(|sh| !sh.strips.is_empty())
+                    .collect();
+                let mut sharded = vec![0.0f32; rows * n];
+                gemm_i8_fused_sharded(&acts, &shards, n, wbits, &co, &mut sharded);
+                assert!(
+                    flat.iter().zip(&sharded).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "({rows},{k},{n}) parts={parts}: sharded GEMM diverged from flat"
+                );
             }
         }
     }

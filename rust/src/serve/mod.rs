@@ -50,12 +50,13 @@ pub mod net;
 pub mod packed;
 
 pub use batcher::{
-    BatchConfig, Responder, ServeError, ServeObs, ServeResult, ServeStats, Server,
+    pipeline_from_env, BatchConfig, Responder, ServeError, ServeObs, ServeResult, ServeStats,
+    Server,
 };
 pub use net::{ModelEpoch, NetClient, NetConfig, NetServer};
 pub use gemm::{
-    dwconv_i8_fused, dwconv_i8_fused_with, gemm_i8_fused, gemm_i8_fused_with, EpilogueCoeffs,
-    GroupedQuantizedActs, QuantizedActs,
+    dwconv_i8_fused, dwconv_i8_fused_with, gemm_i8_fused, gemm_i8_fused_sharded,
+    gemm_i8_fused_with, EpilogueCoeffs, GroupedQuantizedActs, PanelShard, QuantizedActs,
 };
 pub use model::{
     load_cached, load_with_info, note_swap, registry_clear_idle, registry_len, registry_stats,

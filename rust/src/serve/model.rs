@@ -21,13 +21,13 @@ use anyhow::{bail, Result};
 
 use crate::deploy::{self, PackedLayer};
 use crate::manifest::{Manifest, ModelConfig, ModelInfo};
-use crate::model::{LayerExec, Model, Tap};
+use crate::model::{LayerExec, Model, Stage, Tap};
 use crate::obs::metrics::with_labels;
 use crate::obs::recorder::{self, RecKind};
 use crate::obs::{span, trace, Counter, Histogram};
 use crate::quant::actq::ActQuant;
 use crate::serve::gemm::{
-    dwconv_i8_fused, gemm_i8_fused, EpilogueCoeffs, GroupedQuantizedActs, QuantizedActs,
+    dwconv_i8_fused, EpilogueCoeffs, GroupedQuantizedActs, QuantizedActs,
 };
 use crate::serve::packed::{GroupedPanel, Int8Panel};
 use crate::tensor::Tensor;
@@ -79,14 +79,10 @@ impl Int8Layer {
             Some((saq, co)) => {
                 let acts = QuantizedActs::quantize(x, *saq);
                 let mut out = Tensor::zeros(&[x.rows(), self.panel.n]);
-                gemm_i8_fused(
-                    &acts,
-                    self.panel.panel(),
-                    self.panel.n,
-                    self.panel.bits,
-                    co,
-                    out.data_mut(),
-                );
+                // `Int8Panel::gemm` dispatches flat vs NUMA-sharded;
+                // both reduce identically, so the grid the coefficients
+                // were built from is the only thing that matters here.
+                self.panel.gemm(&acts, co, out.data_mut());
                 out
             }
             None => self.panel.matmul_i8(x, aq, self.bias.as_deref()),
@@ -197,6 +193,11 @@ pub struct QuantizedModel {
     /// norms, kept-FP layers). Has NO `{l}/W` entry for any
     /// integer-served layer, dense or grouped.
     base: Model,
+    /// The stage plan [`QuantizedModel::forward`] folds over — built
+    /// once at load so the pipelined executor (which runs stage slices
+    /// of different batches concurrently) shares the exact closures the
+    /// sequential forward runs.
+    plan: Vec<Stage>,
     int8: BTreeMap<String, Int8Layer>,
     grouped: BTreeMap<String, GroupedInt8Layer>,
     act: ActSource,
@@ -292,8 +293,11 @@ impl QuantizedModel {
                 .set(resident as i64);
             m
         });
+        let base = Model { info, params };
+        let plan = base.stage_plan();
         Ok(QuantizedModel {
-            base: Model { info, params },
+            base,
+            plan,
             int8,
             grouped,
             act,
@@ -326,18 +330,40 @@ impl QuantizedModel {
     }
 
     /// Integer forward: x [b, img, img, 3] -> logits [b, classes].
+    /// Defined as the full-plan case of [`QuantizedModel::forward_stages`],
+    /// so the sequential and pipelined paths run the same code.
     pub fn forward(&self, x: &Tensor) -> Tensor {
-        let b = x.shape()[0] as u64;
+        self.forward_stages(0, self.plan.len(), x.clone(), x.shape()[0] as u64)
+    }
+
+    /// The cached stage plan (for the pipelined executor, which needs
+    /// the stage count to size its lanes).
+    pub fn stages(&self) -> &[Stage] {
+        &self.plan
+    }
+
+    /// Run stages `lo..hi` of the plan with the integer execution tap
+    /// attached. `items` is the in-flight batch size in *requests* —
+    /// re-stamped on every slice because pipeline lanes are distinct
+    /// threads and [`span::set_items`] is thread-local. Images are
+    /// counted once per batch, on the slice that starts the plan.
+    pub fn forward_stages(&self, lo: usize, hi: usize, h: Tensor, items: u64) -> Tensor {
         if self.obs.is_some() || trace::batch_active() {
             // carry the batch size down to the per-layer exec hooks —
             // at that depth the row count is patches, not requests
-            span::set_items(b);
+            span::set_items(items);
         }
-        if let Some(o) = &self.obs {
-            o.images.add(b);
+        if lo == 0 {
+            if let Some(o) = &self.obs {
+                o.images.add(items);
+            }
         }
         let mut tap = Tap::Exec(self);
-        self.base.forward(x, &mut tap)
+        let mut h = h;
+        for st in &self.plan[lo..hi] {
+            h = st.run(&self.base.params, h, &mut tap);
+        }
+        h
     }
 
     /// Per-layer telemetry, when `COMQ_OBS` was on at build time.

@@ -17,10 +17,12 @@ use anyhow::{bail, Result};
 use crate::deploy::PackedLayer;
 use crate::quant::actq::ActQuant;
 use crate::serve::gemm::{
-    dwconv_i8_fused, gemm_i8_fused, pack_panel_k4, EpilogueCoeffs, GroupedQuantizedActs,
-    QuantizedActs,
+    dwconv_i8_fused, gemm_i8_fused, gemm_i8_fused_sharded, pack_panel_k4, EpilogueCoeffs,
+    GroupedQuantizedActs, PanelShard, QuantizedActs,
 };
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, NR};
+use crate::util::simd::K4;
+use crate::util::{pool, topo};
 
 /// A layer's weights prepped for integer execution.
 pub struct Int8Panel {
@@ -39,6 +41,12 @@ pub struct Int8Panel {
     delta: Vec<f32>,
     /// Per-column zero point z_j.
     zero: Vec<f32>,
+    /// Per-NUMA-node strip shards (empty on single-node layouts — the
+    /// common case, where `panel` alone serves). Shard `i` holds a
+    /// contiguous strip range first-touched on node `i`; the full
+    /// contiguous `panel` stays authoritative for tests, the grouped
+    /// path, and any future flat consumer.
+    shards: Vec<PanelShard>,
 }
 
 impl Int8Panel {
@@ -67,19 +75,40 @@ impl Int8Panel {
             s[idx] = c as i8;
             csum[idx % n] += c;
         });
+        let panel = pack_panel_k4(&s, m, n);
+        let shards = build_shards(&panel, m, n);
         Ok(Int8Panel {
             m,
             n,
             bits: pl.bits,
-            panel: pack_panel_k4(&s, m, n),
+            panel,
             csum,
             delta: pl.delta.clone(),
             zero: pl.zero.clone(),
+            shards,
         })
     }
 
     pub(crate) fn panel(&self) -> &[i8] {
         &self.panel
+    }
+
+    /// Number of per-node shards (0 = flat single-node layout).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The serving GEMM over this panel: the NUMA-sharded entry when
+    /// per-node shards exist, the flat entry otherwise. Outputs are
+    /// bit-identical either way (exact integer accumulation over the
+    /// same bytes in the same per-tile order); only memory locality
+    /// differs. This is the one entry `Int8Layer::forward` calls.
+    pub fn gemm(&self, acts: &QuantizedActs, co: &EpilogueCoeffs, out: &mut [f32]) {
+        if self.shards.is_empty() {
+            gemm_i8_fused(acts, &self.panel, self.n, self.bits, co, out);
+        } else {
+            gemm_i8_fused_sharded(acts, &self.shards, self.n, self.bits, co, out);
+        }
     }
 
     /// `y = x@W (+ bias)` through the integer path: quantize `x` on the
@@ -92,7 +121,7 @@ impl Int8Panel {
         let acts = QuantizedActs::quantize(x, aq);
         let co = self.coeffs(&acts.aq, bias);
         let mut out = Tensor::zeros(&[rows, self.n]);
-        gemm_i8_fused(&acts, &self.panel, self.n, self.bits, &co, out.data_mut());
+        self.gemm(&acts, &co, out.data_mut());
         out
     }
 
@@ -123,10 +152,42 @@ impl Int8Panel {
         EpilogueCoeffs { scale, zc, fixed, bias: bv }
     }
 
-    /// Serving-resident bytes (panel + column sums + grid scalars).
+    /// Serving-resident bytes (panel + per-node shard copies + column
+    /// sums + grid scalars). Shards are honest residency: a 2-node
+    /// layout holds the panel bytes twice over (once flat, once split).
     pub fn resident_bytes(&self) -> usize {
-        self.panel.len() + 4 * self.csum.len() + 8 * self.n
+        let shard_bytes: usize = self.shards.iter().map(|s| s.bytes.len()).sum();
+        self.panel.len() + shard_bytes + 4 * self.csum.len() + 8 * self.n
     }
+}
+
+/// Split a packed panel's column strips into per-node contiguous shards
+/// when `util::topo` reports a multi-node layout. Each shard's byte
+/// copy is allocated inside a task hinted to its node, so first-touch
+/// places the pages node-locally. Returns empty (no shards, flat
+/// serving) on single-node layouts or panels too narrow to split.
+fn build_shards(panel: &[i8], m: usize, n: usize) -> Vec<PanelShard> {
+    let nodes = topo::nodes();
+    let n_strips = n.div_ceil(NR);
+    if nodes <= 1 || n_strips < 2 {
+        return Vec::new();
+    }
+    let strip_len = m.div_ceil(K4) * NR * K4;
+    let nodes = nodes.min(n_strips);
+    let per = n_strips.div_ceil(nodes);
+    let ranges: Vec<std::ops::Range<usize>> = (0..nodes)
+        .map(|i| (i * per).min(n_strips)..((i + 1) * per).min(n_strips))
+        .filter(|r| !r.is_empty())
+        .collect();
+    let slots: Vec<std::sync::Mutex<Option<PanelShard>>> =
+        ranges.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    // One whole-shard task per node (min_per_task ≥ shard len keeps the
+    // range unsplit): the to_vec() below is the first touch.
+    pool::parallel_sharded(&ranges, n_strips, |si, r| {
+        let bytes = panel[r.start * strip_len..r.end * strip_len].to_vec();
+        *slots[si].lock().unwrap() = Some(PanelShard { strips: r, bytes });
+    });
+    slots.into_iter().map(|s| s.into_inner().unwrap().expect("shard task ran")).collect()
 }
 
 /// A grouped (depthwise) layer's weights prepped for integer execution:

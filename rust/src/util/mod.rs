@@ -8,6 +8,7 @@ pub mod rng;
 pub mod simd;
 pub mod stats;
 pub mod timer;
+pub mod topo;
 
 pub use json::Json;
 pub use rng::Rng;

@@ -1,54 +1,86 @@
-//! Persistent data-parallel worker pool over std threads.
+//! Persistent work-stealing worker pool over std threads.
 //!
 //! No rayon in the vendored set, so every parallel region in the crate
-//! (the COMQ sweeps, matmul, the baseline quantizers) funnels through the
-//! two helpers here. Until PR 2 they spawned fresh OS threads per call;
-//! at sweep granularity (three calls per quantized layer, plus two
-//! matmuls) the ~50–100 µs spawn+join tax was a visible constant factor
-//! on small and medium layers. The pool below is spawned lazily on first
-//! use and then reused for the life of the process.
+//! (the COMQ sweeps, matmul, the serving GEMMs, the layer scheduler)
+//! funnels through the helpers here. PR 2 replaced spawn-per-call
+//! threading with a persistent pool behind one global FIFO; this PR
+//! replaces that single queue with a work-stealing scheduler so the
+//! serving hot path can keep every core busy across concurrent
+//! submissions (pipeline stages, nested quantizer jobs) instead of
+//! convoying behind one mutex.
 //!
-//! ## Lifecycle
+//! ## Scheduler shape
 //!
-//! * Workers are spawned on demand, the first time a call needs them,
-//!   and never exit; they park on a condvar when the job queue is empty.
-//!   The pool holds at most `MAX_WORKERS` threads, ever.
-//! * `COMQ_THREADS` is re-read on **every** call (see [`num_threads`]),
-//!   so callers (and the thread-scaling bench) can change the effective
-//!   parallelism between calls without restarting the process. The pool
-//!   never shrinks; a call that wants fewer threads than exist simply
-//!   enqueues fewer chunks.
-//! * `COMQ_THREADS=1` (or work below `min_per_thread`) runs inline on
-//!   the calling thread and never touches — or creates — the pool.
+//! * Every worker owns a bounded lock-free Chase–Lev deque. The owner
+//!   pushes and pops at the bottom (LIFO — nested submissions run their
+//!   own freshest work first, while it is still cache-hot); thieves take
+//!   from the top (FIFO — they get the oldest, largest-remaining chunk,
+//!   which amortizes the steal).
+//! * Per-NUMA-node injector queues (`util/topo.rs` decides the node
+//!   count) receive submissions from non-worker threads and node-hinted
+//!   work ([`parallel_sharded`]); a worker looks for work in order: own
+//!   deque → own node's injector → other injectors → steal same-node
+//!   victims → steal cross-node. Hints and topology bias *placement
+//!   only*; every queue is visible to every worker, so a wrong or stale
+//!   topology costs locality, never correctness.
+//! * Workers never exit; when no work is visible anywhere they park on a
+//!   condvar with a timeout backstop, and publishers wake them only when
+//!   an idle worker exists. Wakeups are a latency optimization, not a
+//!   correctness dependency — see the helping join below.
 //!
-//! ## Execution model
+//! ## Determinism and bit-identity
 //!
-//! A call to [`parallel_ranges`] splits `0..n` into contiguous chunks,
-//! enqueues one job per chunk, and then *helps*: the calling thread
-//! drains the queue alongside the workers until its own jobs are done.
-//! Helping makes correctness independent of pool capacity (with zero
-//! spawnable threads the caller just runs everything itself) and makes
-//! nested/concurrent calls — e.g. the layer scheduler running several
-//! quantizers at once — deadlock-free: no thread ever blocks while
-//! runnable work exists in the queue.
+//! [`parallel_ranges`] computes the *same contiguous chunking* of
+//! `0..n` as the fork-join pool did (`chunk = n.div_ceil(threads)`).
+//! Stealing redistributes whole chunks across threads but never splits
+//! one, so per-chunk iteration order — and therefore every in-chunk
+//! reduction order — is unchanged. Which OS thread runs a chunk is the
+//! only thing that varies, and no kernel in the crate keys on that.
+//! `COMQ_THREADS=1` (or work below `min_per_thread`) still runs inline
+//! on the calling thread as a single chunk and never touches — or
+//! creates — the pool.
+//!
+//! ## Lifecycle and joining
+//!
+//! A call to [`parallel_ranges`] publishes one task per chunk and then
+//! *helps*: the calling thread pops/steals alongside the workers until
+//! its own completion latch opens. Helping makes correctness independent
+//! of pool capacity (with zero spawnable threads the caller just runs
+//! everything itself) and makes nested/concurrent calls deadlock-free:
+//! no thread ever blocks while runnable work is visible, and when a
+//! joiner does block, every one of its outstanding tasks is already in
+//! flight on some other thread, which will open the latch.
 //!
 //! Closures are handed to workers by reference with the lifetime erased;
 //! this is sound because the submitting call cannot return until its
 //! completion latch opens, i.e. strictly after the last worker touching
-//! the closure finished. A panic inside any chunk is caught on the
-//! worker, stored in the latch, and re-thrown on the calling thread once
-//! the remaining chunks finish; the worker itself survives and keeps
-//! serving jobs.
+//! the closure finished. A panic inside any task is caught on the
+//! executing thread, stored in the latch, and re-thrown on the calling
+//! thread once the remaining tasks finish; workers survive and keep
+//! serving work.
 
+use std::cell::{Cell, UnsafeCell};
 use std::collections::VecDeque;
+use std::mem::MaybeUninit;
 use std::ops::Range;
+use std::sync::atomic::{fence, AtomicIsize, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::obs::{self, Counter, Gauge, Histogram};
+use crate::util::topo;
 
 /// Hard cap on persistent workers, independent of `COMQ_THREADS`.
 const MAX_WORKERS: usize = 64;
+
+/// Per-worker deque capacity (power of two). Overflow is not loss: a
+/// push that finds the ring full diverts to the owner's node injector.
+const DEQUE_CAP: usize = 256;
+
+/// How long a worker with no visible work sleeps before rescanning. A
+/// backstop only — publishers notify the condvar when idle workers
+/// exist, and joining callers never depend on worker wakeups at all.
+const PARK_TIMEOUT: Duration = Duration::from_millis(50);
 
 /// Number of worker threads to use for the *current* call: respects
 /// COMQ_THREADS (re-read every call via [`crate::util::comq_threads`]),
@@ -58,10 +90,10 @@ pub fn num_threads() -> usize {
 }
 
 // ---------------------------------------------------------------------------
-// Pool internals
+// Latch + task
 // ---------------------------------------------------------------------------
 
-/// Completion latch shared by all jobs of one submission.
+/// Completion latch shared by all tasks of one submission.
 struct Latch {
     state: Mutex<LatchState>,
     cv: Condvar,
@@ -72,10 +104,21 @@ struct LatchState {
     panic: Option<Box<dyn std::any::Any + Send + 'static>>,
 }
 
-/// One enqueued chunk. `func` is the submitting call's closure with its
-/// lifetime erased; the latch-wait in `parallel_ranges` keeps it alive
-/// until every job referencing it has run.
-struct Job {
+impl Latch {
+    fn new(remaining: usize) -> Arc<Latch> {
+        Arc::new(Latch {
+            state: Mutex::new(LatchState { remaining, panic: None }),
+            cv: Condvar::new(),
+        })
+    }
+}
+
+/// One published chunk of one submission. `func` is the submitting
+/// call's closure with its lifetime erased; the latch-wait in the
+/// submitter keeps it alive until every task referencing it has run.
+/// `chunk` is the chunk index for [`parallel_ranges`] and the shard
+/// index for [`parallel_sharded`].
+struct Task {
     func: &'static (dyn Fn(usize, Range<usize>) + Sync),
     chunk: usize,
     lo: usize,
@@ -83,17 +126,163 @@ struct Job {
     latch: Arc<Latch>,
     /// Enqueue timestamp, taken only when telemetry is on — queue wait
     /// is the gap until a participant (worker or helping submitter)
-    /// picks the job up.
+    /// picks the task up.
     enqueued: Option<Instant>,
 }
 
+// ---------------------------------------------------------------------------
+// Chase–Lev deque (bounded)
+// ---------------------------------------------------------------------------
+
+/// Bounded lock-free work-stealing deque (Chase & Lev, with the
+/// C11-memory-model orderings of Lê et al.). The owner worker pushes
+/// and pops at `bottom`; thieves CAS `top` upward. Bounded on purpose:
+/// a thief's speculative `ptr::read` of slot `t` is safe because the
+/// owner cannot wrap around and overwrite index `t` until `top` has
+/// advanced past it (`push` refuses when `bottom - top == capacity`),
+/// and a full deque simply diverts the push to an injector.
+struct Deque {
+    top: AtomicIsize,
+    bottom: AtomicIsize,
+    buf: Box<[UnsafeCell<MaybeUninit<Task>>]>,
+}
+
+// Slots are only read/written under the top/bottom index protocol below.
+unsafe impl Sync for Deque {}
+unsafe impl Send for Deque {}
+
+enum Steal {
+    Empty,
+    /// Lost a race; the queue may still be non-empty. Callers must not
+    /// treat this as proof of emptiness.
+    Retry,
+    Task(Task),
+}
+
+impl Deque {
+    fn new() -> Deque {
+        debug_assert!(DEQUE_CAP.is_power_of_two());
+        Deque {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: (0..DEQUE_CAP).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect(),
+        }
+    }
+
+    #[inline]
+    fn slot(&self, i: isize) -> *mut MaybeUninit<Task> {
+        self.buf[(i & (DEQUE_CAP as isize - 1)) as usize].get()
+    }
+
+    /// Owner only. Returns the task back when the ring is full.
+    fn push(&self, t: Task) -> Result<(), Task> {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let top = self.top.load(Ordering::Acquire);
+        if b.wrapping_sub(top) >= DEQUE_CAP as isize {
+            return Err(t);
+        }
+        unsafe { (*self.slot(b)).write(t) };
+        self.bottom.store(b.wrapping_add(1), Ordering::Release);
+        Ok(())
+    }
+
+    /// Owner only: LIFO pop from the bottom.
+    fn pop(&self) -> Option<Task> {
+        let b = self.bottom.load(Ordering::Relaxed).wrapping_sub(1);
+        self.bottom.store(b, Ordering::Relaxed);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t <= b {
+            if t == b {
+                // Last element: race the thieves for it via `top`.
+                let won = self
+                    .top
+                    .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+                    .is_ok();
+                self.bottom.store(b.wrapping_add(1), Ordering::Relaxed);
+                won.then(|| unsafe { (*self.slot(b)).assume_init_read() })
+            } else {
+                // More than one element: thieves can reach at most b-1
+                // (they read `bottom` after their fence), slot b is ours.
+                Some(unsafe { (*self.slot(b)).assume_init_read() })
+            }
+        } else {
+            self.bottom.store(b.wrapping_add(1), Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// Any thread: FIFO steal from the top.
+    fn steal(&self) -> Steal {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        // Speculative read; see the type-level comment for why the slot
+        // cannot be overwritten before the CAS resolves.
+        let task = unsafe { (*self.slot(t)).assume_init_read() };
+        if self
+            .top
+            .compare_exchange(t, t.wrapping_add(1), Ordering::SeqCst, Ordering::Relaxed)
+            .is_ok()
+        {
+            Steal::Task(task)
+        } else {
+            // Someone else owns the value now; forget our copy.
+            std::mem::forget(task);
+            Steal::Retry
+        }
+    }
+
+    /// Approximate — used only for park heuristics, never correctness.
+    fn maybe_nonempty(&self) -> bool {
+        self.top.load(Ordering::Relaxed) < self.bottom.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry
+// ---------------------------------------------------------------------------
+
 /// Pool-wide telemetry handles, resolved once (the registry lock is too
-/// slow for per-job lookups).
+/// slow for per-task lookups). Per-node counters/gauges are created
+/// lazily so single-node processes don't export phantom node series.
 struct PoolObs {
     wait: Arc<Histogram>,
     busy: Arc<Histogram>,
     jobs: Arc<Counter>,
     workers: Arc<Gauge>,
+    steals: Arc<Counter>,
+    /// `comq_pool_tasks_total{node=...}`; index MAX_NODES = "ext"
+    /// (tasks run by helping non-worker threads).
+    tasks_node: Vec<OnceLock<Arc<Counter>>>,
+    /// `comq_pool_workers{node=...}` gauges.
+    workers_node: Vec<OnceLock<Arc<Gauge>>>,
+}
+
+impl PoolObs {
+    fn tasks(&self, node: Option<usize>) -> &Arc<Counter> {
+        let idx = match node {
+            Some(n) => n.min(topo::MAX_NODES - 1),
+            None => topo::MAX_NODES,
+        };
+        self.tasks_node[idx].get_or_init(|| {
+            let label = if idx == topo::MAX_NODES { "ext".to_string() } else { idx.to_string() };
+            obs::registry()
+                .counter(&obs::metrics::with_labels("comq_pool_tasks_total", &[("node", &label)]))
+        })
+    }
+
+    fn node_workers(&self, node: usize) -> &Arc<Gauge> {
+        let idx = node.min(topo::MAX_NODES - 1);
+        self.workers_node[idx].get_or_init(|| {
+            let node = idx.to_string();
+            let name = obs::metrics::with_labels("comq_pool_workers", &[("node", &node)]);
+            obs::registry().gauge(&name)
+        })
+    }
 }
 
 fn pool_obs() -> &'static PoolObs {
@@ -103,51 +292,202 @@ fn pool_obs() -> &'static PoolObs {
         busy: obs::registry().histogram("comq_pool_job_seconds"),
         jobs: obs::registry().counter("comq_pool_jobs_total"),
         workers: obs::registry().gauge("comq_pool_workers"),
+        steals: obs::registry().counter("comq_pool_steals_total"),
+        tasks_node: (0..=topo::MAX_NODES).map(|_| OnceLock::new()).collect(),
+        workers_node: (0..topo::MAX_NODES).map(|_| OnceLock::new()).collect(),
     })
 }
 
-struct PoolState {
-    queue: VecDeque<Job>,
-    workers: usize,
+// ---------------------------------------------------------------------------
+// Pool
+// ---------------------------------------------------------------------------
+
+struct WorkerSlot {
+    deque: Deque,
+    /// NUMA node this worker was assigned at spawn (placement bias only).
+    node: AtomicUsize,
+}
+
+/// One node-local FIFO for external and node-hinted submissions.
+struct Injector {
+    q: Mutex<VecDeque<Task>>,
+    /// Fast non-empty check for scan/park paths.
+    len: AtomicUsize,
+}
+
+impl Injector {
+    fn push(&self, t: Task) {
+        let mut q = self.q.lock().unwrap();
+        q.push_back(t);
+        self.len.store(q.len(), Ordering::Release);
+    }
+
+    fn pop(&self) -> Option<Task> {
+        if self.len.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        let mut q = self.q.lock().unwrap();
+        let t = q.pop_front();
+        self.len.store(q.len(), Ordering::Release);
+        t
+    }
 }
 
 struct Pool {
-    state: Mutex<PoolState>,
-    cv: Condvar,
+    workers: Vec<WorkerSlot>,
+    /// Spawned worker count; slots `0..live` are active.
+    live: AtomicUsize,
+    injectors: Vec<Injector>,
+    spawn_mx: Mutex<()>,
+    sleep_mx: Mutex<()>,
+    sleep_cv: Condvar,
+    /// Workers currently parked (wake-throttling heuristic).
+    idle: AtomicUsize,
+    /// Round-robin cursor spreading unhinted external submissions
+    /// across node injectors.
+    rr: AtomicUsize,
 }
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| Pool {
-        state: Mutex::new(PoolState { queue: VecDeque::new(), workers: 0 }),
-        cv: Condvar::new(),
+        workers: (0..MAX_WORKERS)
+            .map(|_| WorkerSlot { deque: Deque::new(), node: AtomicUsize::new(0) })
+            .collect(),
+        live: AtomicUsize::new(0),
+        injectors: (0..topo::MAX_NODES)
+            .map(|_| Injector { q: Mutex::new(VecDeque::new()), len: AtomicUsize::new(0) })
+            .collect(),
+        spawn_mx: Mutex::new(()),
+        sleep_mx: Mutex::new(()),
+        sleep_cv: Condvar::new(),
+        idle: AtomicUsize::new(0),
+        rr: AtomicUsize::new(0),
     })
+}
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread; `None` on every
+    /// other thread. Distinguishes "push to own deque" (workers, nested
+    /// submissions) from "push to an injector" (external submitters).
+    static WORKER_ID: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+fn current_worker() -> Option<usize> {
+    WORKER_ID.with(|c| c.get())
 }
 
 /// Persistent workers currently alive (diagnostics / tests). Zero until
 /// the first out-of-line parallel call.
 pub fn pool_workers() -> usize {
-    POOL.get().map(|p| p.state.lock().unwrap().workers).unwrap_or(0)
+    POOL.get().map(|p| p.live.load(Ordering::Acquire)).unwrap_or(0)
 }
 
-/// Run one job and report its outcome to the job's latch. Panics are
-/// caught here so workers survive and the submitter can re-throw.
-fn run_job(job: Job) {
-    let started = job.enqueued.map(|t| {
+impl Pool {
+    /// Any task visible in an injector or a worker deque? Approximate;
+    /// used only to decide whether a worker should park.
+    fn maybe_work(&self) -> bool {
+        if self.injectors.iter().any(|i| i.len.load(Ordering::Acquire) > 0) {
+            return true;
+        }
+        let live = self.live.load(Ordering::Acquire);
+        self.workers[..live].iter().any(|w| w.deque.maybe_nonempty())
+    }
+
+    /// Wake parked workers iff any exist. Publishers call this after
+    /// every push; the lock closes the scan-then-park race and the
+    /// park timeout backstops the rest.
+    fn wake(&self) {
+        if self.idle.load(Ordering::Relaxed) > 0 {
+            let _g = self.sleep_mx.lock().unwrap();
+            self.sleep_cv.notify_all();
+        }
+    }
+}
+
+enum Find {
+    Task(Task, /* stolen: */ bool),
+    Retry,
+    None,
+}
+
+/// One scan for runnable work. `me` is the calling worker's id (None for
+/// helping external threads); `home` is the preferred injector to drain
+/// first. Scan order: own deque (LIFO) → home injector → remaining
+/// injectors → steal same-node workers → steal the rest.
+fn try_find(p: &Pool, me: Option<usize>, home: usize) -> Find {
+    if let Some(w) = me {
+        if let Some(t) = p.workers[w].deque.pop() {
+            return Find::Task(t, false);
+        }
+    }
+    let n_inj = p.injectors.len();
+    for k in 0..n_inj {
+        if let Some(t) = p.injectors[(home + k) % n_inj].pop() {
+            return Find::Task(t, false);
+        }
+    }
+    let live = p.live.load(Ordering::Acquire);
+    if live == 0 {
+        return Find::None;
+    }
+    let my_node = me.map(|w| p.workers[w].node.load(Ordering::Relaxed));
+    let start = me.map(|w| w + 1).unwrap_or_else(|| p.rr.load(Ordering::Relaxed));
+    let mut saw_retry = false;
+    // Two passes: same-node victims first, then everyone else.
+    for pass in 0..2 {
+        for k in 0..live {
+            let v = (start + k) % live;
+            if Some(v) == me {
+                continue;
+            }
+            let v_node = p.workers[v].node.load(Ordering::Relaxed);
+            let same = my_node.map(|n| n == v_node).unwrap_or(true);
+            if (pass == 0) != same {
+                continue;
+            }
+            match p.workers[v].deque.steal() {
+                Steal::Task(t) => return Find::Task(t, true),
+                Steal::Retry => saw_retry = true,
+                Steal::Empty => {}
+            }
+        }
+        if my_node.is_none() {
+            break; // helpers have no node: one pass covers everyone
+        }
+    }
+    if saw_retry {
+        Find::Retry
+    } else {
+        Find::None
+    }
+}
+
+/// Run one task and report its outcome to the task's latch. Panics are
+/// caught here so the executing thread survives and the submitter can
+/// re-throw.
+fn run_task(task: Task, me: Option<usize>, stolen: bool) {
+    let started = task.enqueued.map(|t| {
         let now = Instant::now();
-        pool_obs().wait.record(now.saturating_duration_since(t).as_nanos() as u64);
+        let o = pool_obs();
+        o.wait.record(now.saturating_duration_since(t).as_nanos() as u64);
+        if stolen {
+            o.steals.inc();
+        }
         now
     });
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        (job.func)(job.chunk, job.lo..job.hi)
+        (task.func)(task.chunk, task.lo..task.hi)
     }));
     if let Some(t) = started {
         let o = pool_obs();
         o.busy.record(t.elapsed().as_nanos() as u64);
         o.jobs.inc();
+        let node = me.map(|w| pool().workers[w].node.load(Ordering::Relaxed));
+        o.tasks(node).inc();
     }
-    let mut st = job.latch.state.lock().unwrap();
+    let mut st = task.latch.state.lock().unwrap();
     if let Err(payload) = result {
         if st.panic.is_none() {
             st.panic = Some(payload);
@@ -155,55 +495,131 @@ fn run_job(job: Job) {
     }
     st.remaining -= 1;
     if st.remaining == 0 {
-        job.latch.cv.notify_all();
+        task.latch.cv.notify_all();
     }
 }
 
-fn worker_loop(pool: &'static Pool) {
+fn worker_loop(p: &'static Pool, id: usize) {
+    WORKER_ID.with(|c| c.set(Some(id)));
+    let node = p.workers[id].node.load(Ordering::Relaxed);
+    if topo::pin_enabled() {
+        topo::pin_to_node(node);
+    }
     loop {
-        let job = {
-            let mut st = pool.state.lock().unwrap();
-            loop {
-                if let Some(j) = st.queue.pop_front() {
-                    break j;
+        match try_find(p, Some(id), node) {
+            Find::Task(t, stolen) => run_task(t, Some(id), stolen),
+            Find::Retry => std::hint::spin_loop(),
+            Find::None => {
+                p.idle.fetch_add(1, Ordering::Relaxed);
+                {
+                    let g = p.sleep_mx.lock().unwrap();
+                    // Re-check under the lock: a publisher that pushed
+                    // after our scan but before we parked holds this
+                    // lock in `wake()` and will notify.
+                    if !p.maybe_work() {
+                        let _ = p.sleep_cv.wait_timeout(g, PARK_TIMEOUT).unwrap();
+                    }
                 }
-                st = pool.cv.wait(st).unwrap();
+                p.idle.fetch_sub(1, Ordering::Relaxed);
             }
-        };
-        run_job(job);
+        }
     }
 }
 
-/// Grow the pool to at least `wanted` workers (capped). Spawn failure is
+/// Grow the pool to at least `wanted` workers (capped). Workers are
+/// assigned to NUMA nodes round-robin at spawn and pinned to their
+/// node's CPUs when a multi-node layout is in effect. Spawn failure is
 /// tolerated: helping-join keeps submissions correct with any number of
 /// workers, including zero.
-fn ensure_workers(pool: &'static Pool, wanted: usize) {
+fn ensure_workers(p: &'static Pool, wanted: usize) {
     let wanted = wanted.min(MAX_WORKERS);
-    let mut st = pool.state.lock().unwrap();
-    while st.workers < wanted {
-        let id = st.workers;
+    if p.live.load(Ordering::Acquire) >= wanted {
+        return;
+    }
+    let _g = p.spawn_mx.lock().unwrap();
+    let mut live = p.live.load(Ordering::Acquire);
+    let n_nodes = topo::nodes().min(topo::MAX_NODES).max(1);
+    while live < wanted {
+        let id = live;
+        let node = id % n_nodes;
+        p.workers[id].node.store(node, Ordering::Relaxed);
         let spawned = std::thread::Builder::new()
             .name(format!("comq-pool-{id}"))
-            .spawn(move || worker_loop(pool))
+            .spawn(move || worker_loop(pool(), id))
             .is_ok();
         if !spawned {
             break;
         }
-        st.workers += 1;
+        live += 1;
+        p.live.store(live, Ordering::Release);
+        if obs::enabled() {
+            pool_obs().node_workers(node).add(1);
+        }
     }
     if obs::enabled() {
-        pool_obs().workers.set(st.workers as i64);
+        pool_obs().workers.set(live as i64);
+    }
+}
+
+/// Publish one task: workers push to their own deque (overflow diverts
+/// to their node's injector); other threads push to `home`'s injector.
+fn publish(p: &'static Pool, me: Option<usize>, home: usize, task: Task) {
+    match me {
+        Some(w) => {
+            if let Err(t) = p.workers[w].deque.push(task) {
+                let node = p.workers[w].node.load(Ordering::Relaxed);
+                p.injectors[node.min(p.injectors.len() - 1)].push(t);
+            }
+        }
+        None => p.injectors[home % p.injectors.len()].push(task),
+    }
+}
+
+/// Helping join: pop/steal alongside the workers until `latch` opens,
+/// then re-throw any stored panic on this thread.
+fn join(p: &'static Pool, latch: &Arc<Latch>, me: Option<usize>, home: usize) {
+    loop {
+        {
+            let mut st = latch.state.lock().unwrap();
+            if st.remaining == 0 {
+                if let Some(payload) = st.panic.take() {
+                    drop(st);
+                    std::panic::resume_unwind(payload);
+                }
+                return;
+            }
+        }
+        match try_find(p, me, home) {
+            Find::Task(t, stolen) => run_task(t, me, stolen),
+            Find::Retry => std::hint::spin_loop(),
+            Find::None => {
+                // Nothing visible anywhere => every one of our
+                // outstanding tasks is in flight on another thread;
+                // those threads will notify the latch.
+                let mut st = latch.state.lock().unwrap();
+                while st.remaining != 0 {
+                    st = latch.cv.wait(st).unwrap();
+                }
+                if let Some(payload) = st.panic.take() {
+                    drop(st);
+                    std::panic::resume_unwind(payload);
+                }
+                return;
+            }
+        }
     }
 }
 
 // ---------------------------------------------------------------------------
-// Public API (unchanged signatures from the spawn-per-call era)
+// Public API (signatures unchanged from the fork-join era)
 // ---------------------------------------------------------------------------
 
 /// Run `f(chunk_index, item_range)` over `n` items split into contiguous
 /// ranges across up to `num_threads()` participants (pool workers plus
 /// the calling thread). Runs inline when the work is too small to
-/// amortize handing off, or when `COMQ_THREADS=1`.
+/// amortize handing off, or when `COMQ_THREADS=1`. The chunk partition
+/// is a pure function of `(n, min_per_thread, num_threads())` — see the
+/// module docs for why that preserves bit-identity under stealing.
 pub fn parallel_ranges<F>(n: usize, min_per_thread: usize, f: F)
 where
     F: Fn(usize, Range<usize>) + Sync,
@@ -213,75 +629,104 @@ where
         f(0, 0..n);
         return;
     }
-    let pool = pool();
-    ensure_workers(pool, threads - 1);
+    let p = pool();
+    ensure_workers(p, threads - 1);
 
     // Erase the closure lifetime. Sound: this frame only returns after
-    // the latch confirms every job referencing `f` has completed.
+    // the latch confirms every task referencing `f` has completed.
     let func: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
     let func: &'static (dyn Fn(usize, Range<usize>) + Sync) =
         unsafe { std::mem::transmute(func) };
 
     let chunk = n.div_ceil(threads);
     let jobs = n.div_ceil(chunk); // number of non-empty chunks
-    let latch = Arc::new(Latch {
-        state: Mutex::new(LatchState { remaining: jobs, panic: None }),
-        cv: Condvar::new(),
-    });
+    let latch = Latch::new(jobs);
     let enqueued = obs::enabled().then(Instant::now);
-    {
-        let mut st = pool.state.lock().unwrap();
-        for t in 0..jobs {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            st.queue.push_back(Job { func, chunk: t, lo, hi, latch: latch.clone(), enqueued });
-        }
+    let me = current_worker();
+    let home = match me {
+        Some(w) => p.workers[w].node.load(Ordering::Relaxed),
+        None => p.rr.fetch_add(1, Ordering::Relaxed) % topo::nodes().min(topo::MAX_NODES).max(1),
+    };
+    for t in 0..jobs {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        publish(p, me, home, Task { func, chunk: t, lo, hi, latch: latch.clone(), enqueued });
     }
-    pool.cv.notify_all();
+    p.wake();
+    join(p, &latch, me, home);
+}
 
-    // Helping join: drain the queue until our latch opens. Our own jobs
-    // are at the front unless a concurrent call got there first; running
-    // a stranger's job is still progress and prevents deadlock under
-    // nested parallelism. We re-check our latch before every pop so a
-    // call whose own jobs are already done never starts a (possibly
-    // long) stranger chunk it doesn't have to.
-    loop {
-        {
-            let mut st = latch.state.lock().unwrap();
-            if st.remaining == 0 {
-                if let Some(p) = st.panic.take() {
-                    drop(st);
-                    std::panic::resume_unwind(p);
-                }
-                return;
-            }
+/// Run `f(shard_index, item_subrange)` over node-affine shards: shard
+/// `i`'s tasks are published to node `i`'s injector, so the workers
+/// pinned to that node consume them first and any i32 accumulation
+/// stays node-local. Each shard is split into whole contiguous
+/// sub-ranges (never below `min_per_task` items except for the
+/// remainder), so per-item reduction order is unchanged no matter who
+/// executes — the same bit-identity argument as [`parallel_ranges`].
+///
+/// With `COMQ_THREADS=1` (or an empty shard set) the shards run inline,
+/// sequentially, in index order — the exact pre-NUMA behavior. Unlike
+/// [`parallel_ranges`] there is no small-work inline shortcut: placement
+/// is the point (first-touch shard builds must run *on their node*), so
+/// `min_per_task` only bounds how finely one shard is subdivided.
+/// Hints bias placement only: any worker (or the helping caller) can
+/// take any shard's tasks, so a stale topology never strands work.
+pub fn parallel_sharded<F>(shards: &[Range<usize>], min_per_task: usize, f: F)
+where
+    F: Fn(usize, Range<usize>) + Sync,
+{
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    let threads = num_threads();
+    if threads <= 1 || total == 0 {
+        for (i, s) in shards.iter().enumerate() {
+            f(i, s.clone());
         }
-        let job = pool.state.lock().unwrap().queue.pop_front();
-        match job {
-            Some(j) => run_job(j),
-            None => {
-                // Queue empty => all our jobs are done or in flight on
-                // workers; those workers will notify the latch.
-                let mut st = latch.state.lock().unwrap();
-                while st.remaining != 0 {
-                    st = latch.cv.wait(st).unwrap();
-                }
-                if let Some(p) = st.panic.take() {
-                    drop(st);
-                    std::panic::resume_unwind(p);
-                }
-                return;
-            }
+        return;
+    }
+    let p = pool();
+    ensure_workers(p, threads - 1);
+
+    let func: &(dyn Fn(usize, Range<usize>) + Sync) = &f;
+    let func: &'static (dyn Fn(usize, Range<usize>) + Sync) =
+        unsafe { std::mem::transmute(func) };
+
+    // Split each shard into at most its fair share of the thread budget.
+    let nonempty = shards.iter().filter(|s| !s.is_empty()).count().max(1);
+    let per_shard = (threads / nonempty).max(1);
+    let mut pieces: Vec<(usize, usize, usize)> = Vec::new(); // (shard, lo, hi)
+    for (i, s) in shards.iter().enumerate() {
+        let len = s.len();
+        if len == 0 {
+            continue;
+        }
+        let tasks = per_shard.min(len / min_per_task.max(1)).max(1);
+        let chunk = len.div_ceil(tasks);
+        for c in 0..len.div_ceil(chunk) {
+            let lo = s.start + c * chunk;
+            let hi = (s.start + (c + 1) * chunk).min(s.end);
+            pieces.push((i, lo, hi));
         }
     }
+    let latch = Latch::new(pieces.len());
+    let enqueued = obs::enabled().then(Instant::now);
+    let n_inj = p.injectors.len();
+    for (i, lo, hi) in pieces {
+        // Node hint = shard index: the panels for shard i live on node i.
+        p.injectors[i.min(n_inj - 1)]
+            .push(Task { func, chunk: i, lo, hi, latch: latch.clone(), enqueued });
+    }
+    p.wake();
+    let me = current_worker();
+    let home = me.map(|w| p.workers[w].node.load(Ordering::Relaxed)).unwrap_or(0);
+    join(p, &latch, me, home);
 }
 
 /// Shared mutable base pointer for disjoint-region writes across pool
 /// threads. The one crate-wide copy of this unsafe pattern: every
-/// parallel caller (matmul, the sweep engines, `parallel_chunks_mut`)
-/// splits a buffer into ranges that each participant owns exclusively,
-/// which is what makes the `Send + Sync` promise sound. Keep that
-/// contract in mind at every use site.
+/// parallel caller (matmul, the sweep engines, `parallel_chunks_mut`,
+/// the layer scheduler) splits a buffer into ranges that each
+/// participant owns exclusively, which is what makes the `Send + Sync`
+/// promise sound. Keep that contract in mind at every use site.
 pub(crate) struct SendPtr<T>(*mut T);
 
 impl<T> SendPtr<T> {
@@ -306,9 +751,13 @@ unsafe impl<T> Sync for SendPtr<T> {}
 
 /// Map over mutable disjoint chunks of `data` (each `chunk_len` long) in
 /// parallel: `f(chunk_index, chunk_slice)`. Built on [`parallel_ranges`],
-/// so it shares the persistent pool, helping join and panic behaviour.
-pub fn parallel_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, min_chunks_per_thread: usize, f: F)
-where
+/// so it shares the work-stealing pool, helping join and panic behaviour.
+pub fn parallel_chunks_mut<T, F>(
+    data: &mut [T],
+    chunk_len: usize,
+    min_chunks_per_thread: usize,
+    f: F,
+) where
     T: Send,
     F: Fn(usize, &mut [T]) + Sync,
 {
@@ -318,7 +767,8 @@ where
     parallel_ranges(n_chunks, min_chunks_per_thread, |_, range| {
         for i in range {
             // Ranges are disjoint, hence so are the chunk slices.
-            let chunk = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(i * chunk_len), chunk_len) };
+            let p = unsafe { base.ptr().add(i * chunk_len) };
+            let chunk = unsafe { std::slice::from_raw_parts_mut(p, chunk_len) };
             f(i, chunk);
         }
     });
@@ -425,10 +875,77 @@ mod tests {
             assert_eq!(r, 0..1000);
             hits.fetch_add(r.len(), Ordering::Relaxed);
         });
+        // the sharded entry must likewise run inline, sequentially, in
+        // shard index order under COMQ_THREADS=1
+        let order = Mutex::new(Vec::new());
+        parallel_sharded(&[0..2, 2..4, 4..6], 1, |shard, r| {
+            order.lock().unwrap().push((shard, r));
+        });
+        assert_eq!(*order.lock().unwrap(), vec![(0, 0..2), (1, 2..4), (2, 4..6)]);
         match pinned {
             Some(v) => std::env::set_var("COMQ_THREADS", v),
             None => std::env::remove_var("COMQ_THREADS"),
         }
         assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn sharded_covers_every_item_once_per_shard() {
+        let hits: Vec<AtomicUsize> = (0..300).map(|_| AtomicUsize::new(0)).collect();
+        let owner: Vec<AtomicUsize> = (0..300).map(|_| AtomicUsize::new(usize::MAX)).collect();
+        let shards = vec![0..100, 100..200, 200..300];
+        parallel_sharded(&shards, 1, |shard, r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+                owner[i].store(shard, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        for (i, o) in owner.iter().enumerate() {
+            assert_eq!(o.load(Ordering::Relaxed), i / 100, "item {i} ran under the wrong shard");
+        }
+    }
+
+    #[test]
+    fn sharded_panic_propagates() {
+        let res = std::panic::catch_unwind(|| {
+            parallel_sharded(&[0..50, 50..100], 1, |_, r| {
+                if r.contains(&73) {
+                    panic!("boom in shard");
+                }
+            });
+        });
+        assert!(res.is_err(), "shard panic must reach the caller");
+        let hits = AtomicUsize::new(0);
+        parallel_sharded(&[0..50, 50..100], 1, |_, r| {
+            hits.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn concurrent_submissions_stress() {
+        // Many submitters × (many small + few huge tasks): every item
+        // must run exactly once per submission while stealing is active.
+        let submitters = 4;
+        std::thread::scope(|s| {
+            for _ in 0..submitters {
+                s.spawn(|| {
+                    for round in 0..20 {
+                        let n = if round % 5 == 0 { 4096 } else { 64 };
+                        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                        parallel_ranges(n, 1, |_, r| {
+                            for i in r {
+                                hits[i].fetch_add(1, Ordering::Relaxed);
+                            }
+                        });
+                        assert!(
+                            hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                            "lost or duplicated a chunk under concurrent stealing"
+                        );
+                    }
+                });
+            }
+        });
     }
 }

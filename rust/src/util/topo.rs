@@ -1,0 +1,330 @@
+//! NUMA topology probe for the work-stealing pool and panel sharding.
+//!
+//! The serving hot path wants two things from the machine layout: worker
+//! threads grouped by memory domain (so steals prefer same-node victims
+//! and a panel shard is consumed by the cores next to it), and a node
+//! count for sharding each layer's packed panels with node-local i32
+//! accumulation (`serve/packed.rs`). Both are answered here.
+//!
+//! ## Sources, in priority order
+//!
+//! 1. A test override installed via [`set_mode_override`] — dynamic, so
+//!    bit-identity tests can flip between `off` and a synthetic node
+//!    count without touching the process environment.
+//! 2. `COMQ_NUMA` (read once, at first use):
+//!    * `off`  — single node, no pinning. The compatibility setting:
+//!      scheduling and sharding behave exactly like the pre-NUMA build.
+//!    * `auto` (or unset) — probe `/sys/devices/system/node` on Linux;
+//!      single-node fallback anywhere else or when the probe fails.
+//!    * `<n>`  — force `n` synthetic nodes by splitting the detected
+//!      CPUs round-robin. A test/bench knob: it exercises the sharded
+//!      code paths on machines that are physically single-node.
+//!    Invalid values warn once and fall back to `auto`, the same
+//!    contract as `COMQ_THREADS` / `COMQ_KERNEL`.
+//!
+//! Nothing in the crate depends on the probe being *right* for
+//! correctness: node ids only bias task placement and shard layout, and
+//! the pool's find-work order always falls through to every queue in the
+//! system. A wrong (or stale, under a test override) topology costs
+//! locality, never results.
+
+use std::sync::{Mutex, OnceLock};
+
+/// Hard cap on distinguishable nodes. Keeps per-node arrays in the pool
+/// fixed-size; machines with more domains than this fold the excess into
+/// node `MAX_NODES - 1` (locality loss only).
+pub const MAX_NODES: usize = 8;
+
+/// Effective NUMA policy, after env parsing / override.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumaMode {
+    /// Single node, no pinning — bit-for-bit the pre-NUMA behavior.
+    Off,
+    /// Use the probed topology.
+    Auto,
+    /// Force a synthetic node count (testing / benching the sharded paths).
+    Force(usize),
+}
+
+fn parse_mode(raw: Option<&str>) -> Result<NumaMode, String> {
+    match raw.map(str::trim) {
+        None | Some("") => Ok(NumaMode::Auto),
+        Some(s) if s.eq_ignore_ascii_case("off") => Ok(NumaMode::Off),
+        Some(s) if s.eq_ignore_ascii_case("auto") => Ok(NumaMode::Auto),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(NumaMode::Force(n)),
+            _ => Err(s.to_string()),
+        },
+    }
+}
+
+fn env_mode() -> NumaMode {
+    static MODE: OnceLock<NumaMode> = OnceLock::new();
+    *MODE.get_or_init(|| {
+        let raw = std::env::var("COMQ_NUMA").ok();
+        match parse_mode(raw.as_deref()) {
+            Ok(m) => m,
+            Err(bad) => {
+                crate::warn_once!("COMQ_NUMA={bad}: expected off|auto|<nodes>, using auto");
+                NumaMode::Auto
+            }
+        }
+    })
+}
+
+/// Test hook: override the NUMA mode for the rest of the process (or
+/// until cleared with `None`). Consulted before `COMQ_NUMA` on every
+/// call to [`mode`] — dynamic so bit-identity tests can compare layouts
+/// in a single process without env races.
+pub fn set_mode_override(m: Option<NumaMode>) {
+    *mode_override().lock().unwrap() = m;
+}
+
+fn mode_override() -> &'static Mutex<Option<NumaMode>> {
+    static OV: OnceLock<Mutex<Option<NumaMode>>> = OnceLock::new();
+    OV.get_or_init(|| Mutex::new(None))
+}
+
+/// The NUMA policy in effect right now.
+pub fn mode() -> NumaMode {
+    if let Some(m) = *mode_override().lock().unwrap() {
+        return m;
+    }
+    env_mode()
+}
+
+// ---------------------------------------------------------------------------
+// Probe
+// ---------------------------------------------------------------------------
+
+/// Physical topology as probed once at first use: one CPU list per node.
+/// Empty node lists never appear; a failed or trivial probe yields one
+/// node holding every detected CPU.
+struct Probe {
+    nodes: Vec<Vec<usize>>,
+}
+
+fn detected_cpus() -> Vec<usize> {
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (0..n).collect()
+}
+
+/// Parse a sysfs cpulist like `0-3,8-11,17`.
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                if a <= b && b - a < 4096 {
+                    out.extend(a..=b);
+                }
+            }
+        } else if let Ok(v) = part.parse::<usize>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(target_os = "linux")]
+fn probe_sysfs() -> Option<Vec<Vec<usize>>> {
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    for entry in std::fs::read_dir("/sys/devices/system/node").ok()? {
+        let entry = entry.ok()?;
+        let name = entry.file_name();
+        let name = name.to_str()?;
+        let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+            continue;
+        };
+        let cpulist = std::fs::read_to_string(entry.path().join("cpulist")).ok()?;
+        let cpus = parse_cpulist(&cpulist);
+        if !cpus.is_empty() {
+            nodes.push((idx, cpus));
+        }
+    }
+    if nodes.is_empty() {
+        return None;
+    }
+    nodes.sort_by_key(|&(idx, _)| idx);
+    Some(nodes.into_iter().map(|(_, cpus)| cpus).collect())
+}
+
+#[cfg(not(target_os = "linux"))]
+fn probe_sysfs() -> Option<Vec<Vec<usize>>> {
+    None
+}
+
+fn probe() -> &'static Probe {
+    static PROBE: OnceLock<Probe> = OnceLock::new();
+    PROBE.get_or_init(|| {
+        let mut nodes = probe_sysfs().unwrap_or_else(|| vec![detected_cpus()]);
+        if nodes.len() > MAX_NODES {
+            // Fold the tail into the last kept node: locality loss only.
+            let tail: Vec<usize> = nodes.drain(MAX_NODES..).flatten().collect();
+            nodes[MAX_NODES - 1].extend(tail);
+        }
+        Probe { nodes }
+    })
+}
+
+/// Split `cpus` into `n` synthetic round-robin groups (for
+/// `COMQ_NUMA=<n>`). Never returns an empty group: `n` is clamped to the
+/// CPU count.
+fn synthetic_split(cpus: &[usize], n: usize) -> Vec<Vec<usize>> {
+    let n = n.clamp(1, cpus.len().max(1));
+    let mut groups = vec![Vec::new(); n];
+    for (i, &c) in cpus.iter().enumerate() {
+        groups[i % n].push(c);
+    }
+    groups
+}
+
+/// Effective node layout under the current mode: one CPU list per node,
+/// `1..=MAX_NODES` entries, none empty.
+fn layout() -> Vec<Vec<usize>> {
+    match mode() {
+        NumaMode::Off => vec![detected_cpus()],
+        NumaMode::Auto => probe().nodes.clone(),
+        NumaMode::Force(n) => {
+            let all: Vec<usize> = probe().nodes.iter().flatten().copied().collect();
+            synthetic_split(&all, n.min(MAX_NODES))
+        }
+    }
+}
+
+/// Number of NUMA nodes in effect (≥ 1, ≤ [`MAX_NODES`]). This is the
+/// shard count for packed panels and the grouping factor for pool
+/// workers. `COMQ_NUMA=off` always returns 1.
+pub fn nodes() -> usize {
+    layout().len().max(1)
+}
+
+/// CPUs belonging to `node` under the current mode (empty if the node id
+/// is out of range, which callers treat as "don't pin").
+pub fn node_cpus(node: usize) -> Vec<usize> {
+    layout().get(node).cloned().unwrap_or_default()
+}
+
+/// Whether worker pinning should happen at all: only when a multi-node
+/// layout is in effect. `off` and single-node machines never pin, so the
+/// default path is identical to the pre-NUMA build.
+pub fn pin_enabled() -> bool {
+    mode() != NumaMode::Off && nodes() > 1
+}
+
+// ---------------------------------------------------------------------------
+// Affinity
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod affinity {
+    // Raw syscall wrapper against the C library std already links — the
+    // same no-libc-crate idiom as `serve/net/epoll.rs`. The mask is a
+    // 1024-bit cpu_set_t expressed as 16 u64 words.
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
+    pub fn pin_current_thread(cpus: &[usize]) -> bool {
+        const WORDS: usize = 16; // 1024 CPUs
+        let mut mask = [0u64; WORDS];
+        let mut any = false;
+        for &c in cpus {
+            if c < WORDS * 64 {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        // pid 0 = calling thread.
+        unsafe { sched_setaffinity(0, WORDS * 8, mask.as_ptr()) == 0 }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod affinity {
+    pub fn pin_current_thread(_cpus: &[usize]) -> bool {
+        false
+    }
+}
+
+/// Pin the calling thread to the CPUs of `node`. Best-effort: failure
+/// (empty node, non-Linux, syscall error — e.g. a cpuset-restricted
+/// container) warns once and leaves the thread unpinned; scheduling
+/// correctness never depends on affinity.
+pub fn pin_to_node(node: usize) -> bool {
+    let cpus = node_cpus(node);
+    if cpus.is_empty() {
+        return false;
+    }
+    let ok = affinity::pin_current_thread(&cpus);
+    if !ok {
+        crate::warn_once!("NUMA: pinning to node {node} failed; continuing unpinned");
+    }
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing_rules() {
+        assert_eq!(parse_mode(None), Ok(NumaMode::Auto));
+        assert_eq!(parse_mode(Some("")), Ok(NumaMode::Auto));
+        assert_eq!(parse_mode(Some("  auto ")), Ok(NumaMode::Auto));
+        assert_eq!(parse_mode(Some("off")), Ok(NumaMode::Off));
+        assert_eq!(parse_mode(Some("OFF")), Ok(NumaMode::Off));
+        assert_eq!(parse_mode(Some("2")), Ok(NumaMode::Force(2)));
+        assert_eq!(parse_mode(Some("0")), Err("0".to_string()));
+        assert_eq!(parse_mode(Some("lots")), Err("lots".to_string()));
+        assert_eq!(parse_mode(Some("-1")), Err("-1".to_string()));
+    }
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,4-5"), vec![0, 1, 4, 5]);
+        assert_eq!(parse_cpulist("7"), vec![7]);
+        assert_eq!(parse_cpulist(" 0 , 2-3 \n"), vec![0, 2, 3]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("garbage"), Vec::<usize>::new());
+        // inverted / absurd ranges are dropped, not expanded
+        assert_eq!(parse_cpulist("5-2"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn synthetic_split_covers_all_cpus() {
+        let cpus: Vec<usize> = (0..8).collect();
+        let groups = synthetic_split(&cpus, 2);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], vec![0, 2, 4, 6]);
+        assert_eq!(groups[1], vec![1, 3, 5, 7]);
+        // n > cpu count clamps: never an empty group
+        let groups = synthetic_split(&[0, 1], 5);
+        assert_eq!(groups.len(), 2);
+        assert!(groups.iter().all(|g| !g.is_empty()));
+    }
+
+    #[test]
+    fn override_is_dynamic_and_off_is_single_node() {
+        // Other tests in this binary may run concurrently; keep the
+        // override window short and restore it before asserting on the
+        // ambient mode.
+        set_mode_override(Some(NumaMode::Off));
+        assert_eq!(mode(), NumaMode::Off);
+        assert_eq!(nodes(), 1);
+        assert!(!pin_enabled());
+        set_mode_override(Some(NumaMode::Force(2)));
+        let n = nodes();
+        assert!(n >= 1 && n <= 2, "forced split clamps to cpu count, got {n}");
+        set_mode_override(None);
+        assert!(nodes() >= 1);
+    }
+}

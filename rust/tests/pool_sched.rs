@@ -1,0 +1,185 @@
+//! Bit-identity contract of the work-stealing / NUMA / pipeline
+//! executor rebuild (PR 10): parallel execution may redistribute whole
+//! disjoint strips across workers and nodes and may slice the forward
+//! across pipeline lanes, but it must never change a single reduction
+//! order — so logits are equal *bit for bit* across `COMQ_NUMA=off`
+//! vs a forced multi-node layout, across the stealing pool vs
+//! `COMQ_THREADS=1`, and across the pipelined server vs the direct
+//! forward.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use comq::proptest::{quantize_all_layers, tiny_plain_cnn};
+use comq::serve::{ActSource, BatchConfig, QuantizedModel, Server};
+use comq::tensor::Tensor;
+use comq::util::topo::{self, NumaMode};
+use comq::util::Rng;
+
+/// Serializes the tests that rewire process-global knobs (the topo
+/// override, `COMQ_THREADS`). A knob flipped mid-forward in a sibling
+/// test would not break bit-identity — that is the point of the design
+/// — but restoring one racily would leak state between tests.
+fn knob_lock() -> MutexGuard<'static, ()> {
+    static L: OnceLock<Mutex<()>> = OnceLock::new();
+    L.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Restores the topology override even if an assertion unwinds.
+struct RestoreTopo;
+impl Drop for RestoreTopo {
+    fn drop(&mut self) {
+        topo::set_mode_override(None);
+    }
+}
+
+/// W4A8-quantize the synthetic plain CNN end to end, in memory — the
+/// same fixture the int8 parity tests drive. Panel prep happens inside,
+/// so the NUMA layout active *now* decides whether panels are sharded.
+fn build_model(seed: u64) -> (Arc<QuantizedModel>, usize) {
+    let (manifest, model) = tiny_plain_cnn(seed);
+    let mut rng = Rng::new(seed ^ 0xA5);
+    let calib = Tensor::new(&[24, 8, 8, 3], rng.normal_vec(24 * 8 * 8 * 3));
+    let (packed, act, qmodel) = quantize_all_layers(&manifest, &model, 4, 8, &calib).unwrap();
+    let qm = QuantizedModel::from_parts(
+        model.info.clone(),
+        qmodel.params.clone(),
+        &packed,
+        ActSource::Static { bits: 8, by_layer: act.by_layer },
+    )
+    .unwrap();
+    (Arc::new(qm), manifest.classes)
+}
+
+fn images(rng: &mut Rng, n: usize) -> Tensor {
+    Tensor::new(&[n, 8, 8, 3], rng.normal_vec(n * 8 * 8 * 3))
+}
+
+fn assert_bits_equal(a: &Tensor, b: &Tensor, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: logit {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// NUMA sharding splits each panel into per-node strip ranges and
+/// accumulates node-locally — rebuilding the model under a forced
+/// 2-node layout must reproduce the single-node logits exactly, because
+/// sharding only changes *where* a strip's reduction runs, never how
+/// it reduces.
+#[test]
+fn numa_off_vs_forced_nodes_logits_bit_identical() {
+    let _g = knob_lock();
+    let _restore = RestoreTopo;
+    let mut rng = Rng::new(0x91A);
+    let x = images(&mut rng, 5);
+
+    topo::set_mode_override(Some(NumaMode::Off));
+    let (qm_off, classes) = build_model(910);
+    let y_off = qm_off.forward(&x);
+    assert_eq!(y_off.shape(), &[5, classes]);
+
+    topo::set_mode_override(Some(NumaMode::Force(2)));
+    let (qm_numa, _) = build_model(910);
+    let y_numa = qm_numa.forward(&x);
+
+    assert_bits_equal(&y_off, &y_numa, "COMQ_NUMA=off vs forced 2-node");
+}
+
+/// The stealing scheduler redistributes whole chunks between workers;
+/// `COMQ_THREADS=1` bypasses the pool entirely and runs every chunk
+/// inline. Same chunk partition, same per-chunk reduction order — same
+/// bits.
+#[test]
+fn work_stealing_matches_single_thread_exec() {
+    let _g = knob_lock();
+    let (qm, _) = build_model(920);
+    let mut rng = Rng::new(0x92B);
+    let x = images(&mut rng, 6);
+    // stealing path: whatever parallelism the environment grants
+    let y_mt = qm.forward(&x);
+    // pinned path: pure inline execution, no pool involvement at all
+    let pinned = std::env::var("COMQ_THREADS").ok();
+    std::env::set_var("COMQ_THREADS", "1");
+    let y_st = qm.forward(&x);
+    match pinned {
+        Some(v) => std::env::set_var("COMQ_THREADS", v),
+        None => std::env::remove_var("COMQ_THREADS"),
+    }
+    assert_bits_equal(&y_mt, &y_st, "work-stealing vs COMQ_THREADS=1");
+}
+
+/// The pipelined server slices the same stage plan across lane threads;
+/// every request must get the logits the direct forward produces, bit
+/// for bit (with fewer than two lanes available it falls back to the
+/// classic executor, which this test then covers instead).
+#[test]
+fn pipelined_server_matches_direct_forward() {
+    let (qm, classes) = build_model(930);
+    let mut rng = Rng::new(0x93C);
+    let n_req = 16;
+    let singles: Vec<Vec<f32>> = (0..n_req).map(|_| rng.normal_vec(8 * 8 * 3)).collect();
+    let mut flat = Vec::new();
+    for im in &singles {
+        flat.extend_from_slice(im);
+    }
+    let direct = qm.forward(&Tensor::new(&[n_req, 8, 8, 3], flat));
+
+    let server = Server::start(
+        qm.clone(),
+        BatchConfig {
+            max_batch: 4,
+            max_delay: Duration::from_millis(25),
+            executors: 1,
+            pipeline: true,
+        },
+    );
+    let rxs: Vec<_> = singles.iter().map(|im| server.submit(im.clone())).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let logits = rx.recv().unwrap().expect("request must be served, not shed");
+        assert_eq!(logits.len(), classes);
+        for (a, b) in logits.iter().zip(direct.row(i)) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "request {i}: pipelined logits differ from direct forward"
+            );
+        }
+    }
+    let st = server.stats();
+    assert_eq!(st.served, n_req, "every request answered");
+    // joins the head and every lane through the Quit cascade — a wedged
+    // lane would hang right here
+    drop(server);
+}
+
+/// Shutdown with work still queued drains through the lane chain: every
+/// queued request is answered before the threads exit.
+#[test]
+fn pipelined_shutdown_drains_queued_requests() {
+    let (qm, _) = build_model(940);
+    let mut rng = Rng::new(0x94D);
+    let server = Server::start(
+        qm,
+        BatchConfig {
+            max_batch: 2,
+            // a long window: requests are still queued when shutdown
+            // lands, so the drain path (not the window close) answers
+            max_delay: Duration::from_millis(250),
+            executors: 1,
+            pipeline: true,
+        },
+    );
+    let rxs: Vec<_> = (0..6).map(|_| server.submit(rng.normal_vec(8 * 8 * 3))).collect();
+    server.shutdown();
+    for rx in rxs {
+        // drained requests are answered with logits; a request that
+        // raced the flag itself gets a typed Shutdown error — either
+        // way the reply arrives
+        let _ = rx.recv().expect("reply must arrive through the drain");
+    }
+}

@@ -317,7 +317,12 @@ fn micro_batcher_coalesces_and_matches_direct_forward() {
 
     let server = Server::start(
         qm.clone(),
-        BatchConfig { max_batch: 8, max_delay: Duration::from_millis(25), executors: 1 },
+        BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(25),
+            executors: 1,
+            pipeline: false,
+        },
     );
     let rxs: Vec<_> = singles.iter().map(|im| server.submit(im.clone())).collect();
     for (i, rx) in rxs.into_iter().enumerate() {

@@ -66,7 +66,12 @@ fn client(server: &NetServer) -> NetClient {
 
 fn net_config() -> NetConfig {
     NetConfig {
-        batch: BatchConfig { max_batch: 8, max_delay: Duration::from_millis(2), executors: 1 },
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            executors: 1,
+            pipeline: false,
+        },
         ..NetConfig::default()
     }
 }
@@ -165,6 +170,7 @@ fn overload_and_deadline_shed_are_typed() {
                     max_batch: 1,
                     max_delay: Duration::from_millis(0),
                     executors: 1,
+                    pipeline: false,
                 },
                 admission: AdmissionConfig { max_inflight: 1, max_queue: 64 },
                 ..NetConfig::default()
@@ -235,6 +241,7 @@ fn overload_and_deadline_shed_are_typed() {
                     max_batch: 1,
                     max_delay: Duration::from_millis(0),
                     executors: 1,
+                    pipeline: false,
                 },
                 ..NetConfig::default()
             },
@@ -433,7 +440,12 @@ fn executor_panic_storm_recovers() {
         "127.0.0.1:0",
         vec![(MODEL.to_string(), qm.clone())],
         NetConfig {
-            batch: BatchConfig { max_batch: 1, max_delay: Duration::from_millis(0), executors: 1 },
+            batch: BatchConfig {
+                max_batch: 1,
+                max_delay: Duration::from_millis(0),
+                executors: 1,
+                pipeline: false,
+            },
             ..NetConfig::default()
         },
     )
@@ -590,7 +602,12 @@ fn batcher_shutdown_is_immediate_and_stale_requests_shed() {
     // a hang.
     let server = Server::start(
         qm.clone(),
-        BatchConfig { max_batch: 8, max_delay: Duration::from_millis(50), executors: 2 },
+        BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(50),
+            executors: 2,
+            pipeline: false,
+        },
     );
     std::thread::sleep(Duration::from_millis(30)); // let executors park
     let t = Instant::now();
@@ -604,7 +621,12 @@ fn batcher_shutdown_is_immediate_and_stale_requests_shed() {
     // shutdown with work queued: drained and answered, not dropped
     let server = Server::start(
         qm.clone(),
-        BatchConfig { max_batch: 8, max_delay: Duration::from_secs(5), executors: 1 },
+        BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_secs(5),
+            executors: 1,
+            pipeline: false,
+        },
     );
     let mut rng = Rng::new(0x57A1E);
     let rx = server.submit(rng.normal_vec(ELEMS));

@@ -64,7 +64,12 @@ fn telemetry_snapshot_is_coherent_end_to_end() {
 
     let server = Server::start(
         qm.clone(),
-        BatchConfig { max_batch: 8, max_delay: Duration::from_millis(2), executors: 1 },
+        BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            executors: 1,
+            pipeline: false,
+        },
     );
     // clone the handles out so the assertions can outlive the server
     // (dropping it joins the executors, making every count final)

@@ -68,7 +68,12 @@ fn client(server: &NetServer) -> NetClient {
 
 fn net_config() -> NetConfig {
     NetConfig {
-        batch: BatchConfig { max_batch: 8, max_delay: Duration::from_millis(2), executors: 1 },
+        batch: BatchConfig {
+            max_batch: 8,
+            max_delay: Duration::from_millis(2),
+            executors: 1,
+            pipeline: false,
+        },
         ..NetConfig::default()
     }
 }
@@ -76,7 +81,12 @@ fn net_config() -> NetConfig {
 /// One-at-a-time batcher so injected faults map to known requests.
 fn serial_config() -> NetConfig {
     NetConfig {
-        batch: BatchConfig { max_batch: 1, max_delay: Duration::from_millis(0), executors: 1 },
+        batch: BatchConfig {
+            max_batch: 1,
+            max_delay: Duration::from_millis(0),
+            executors: 1,
+            pipeline: false,
+        },
         ..NetConfig::default()
     }
 }
